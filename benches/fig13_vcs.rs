@@ -1,0 +1,24 @@
+//! Fig 13 bench: vertical computation sharing on/off (4-CC / 5-CC).
+
+use kudu::bench::Group;
+use kudu::config::RunConfig;
+use kudu::graph::gen;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+fn main() {
+    let mut group = Group::new("fig13_vertical_sharing");
+    group.sample_size(10);
+    let g = gen::rmat(10, 10, 3);
+    for app in [App::Cc(4), App::Cc(5)] {
+        for vcs in [true, false] {
+            let mut cfg = RunConfig::with_machines(8);
+            cfg.engine.vertical_sharing = vcs;
+            let label = if vcs { "vcs-on" } else { "vcs-off" };
+            group.bench(&format!("{label}/{}", app.name()), || {
+                run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg).total_count()
+            });
+        }
+    }
+    group.finish();
+}

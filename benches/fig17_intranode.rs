@@ -1,0 +1,26 @@
+//! Fig 17 bench: intra-node thread scalability (virtual threads 1..12) +
+//! the single-thread COST reference.
+
+use kudu::bench::Group;
+use kudu::config::RunConfig;
+use kudu::graph::gen;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+fn main() {
+    let mut group = Group::new("fig17_intranode");
+    group.sample_size(10);
+    let g = gen::rmat(10, 10, 13);
+    group.bench("single-thread-reference", || {
+        run_app(&g, App::Tc, EngineKind::SingleMachine, &RunConfig::single_machine())
+            .total_count()
+    });
+    for t in [1usize, 4, 12] {
+        let mut cfg = RunConfig::single_machine();
+        cfg.engine.threads = t;
+        group.bench(&format!("k-automine-threads/{t}"), || {
+            run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::Automine), &cfg).total_count()
+        });
+    }
+    group.finish();
+}

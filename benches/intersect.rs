@@ -1,0 +1,48 @@
+//! Micro-bench for the intersection kernels — the L3 hot path. Drives the
+//! GALLOP_RATIO tuning recorded in EXPERIMENTS.md §Perf.
+
+use kudu::bench::Group;
+use kudu::exec::{intersect, intersect_gallop, intersect_merge};
+
+/// The short list is spread across the long list's whole range (realistic
+/// for adjacency intersections; clustering it at the front would let merge
+/// exit early and bias the comparison).
+fn lists(n_small: usize, n_big: usize) -> (Vec<u32>, Vec<u32>) {
+    let stride = (n_big / n_small).max(1) as u32 * 2;
+    let small: Vec<u32> = (0..n_small as u32).map(|i| i * stride + 1).collect();
+    let big: Vec<u32> = (0..n_big as u32).map(|i| i * 2).collect();
+    (small, big)
+}
+
+fn main() {
+    let mut group = Group::new("intersect");
+    group.sample_size(30);
+    for (s, b_) in
+        [(64usize, 64usize), (64, 1024), (64, 4096), (64, 16384), (1024, 16384), (1024, 65536)]
+    {
+        let (a, b) = lists(s, b_);
+        let mut out = Vec::new();
+        group.bench(&format!("merge/{s}x{b_}"), || {
+            // Repeat to get above timer resolution.
+            for _ in 0..100 {
+                intersect_merge(&a, &b, &mut out);
+            }
+            out.len()
+        });
+        let mut out = Vec::new();
+        group.bench(&format!("gallop/{s}x{b_}"), || {
+            for _ in 0..100 {
+                intersect_gallop(&a, &b, &mut out);
+            }
+            out.len()
+        });
+        let mut out = Vec::new();
+        group.bench(&format!("adaptive/{s}x{b_}"), || {
+            for _ in 0..100 {
+                intersect(&a, &b, &mut out);
+            }
+            out.len()
+        });
+    }
+    group.finish();
+}

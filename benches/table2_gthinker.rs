@@ -1,0 +1,28 @@
+//! Table 2 bench: Kudu vs G-thinker (triangle counting, 8 machines).
+//! End-to-end wall time of the execution models that generate the table;
+//! the table itself (virtual times) comes from `bin/tables.rs table2`.
+
+use kudu::bench::Group;
+use kudu::config::RunConfig;
+use kudu::graph::gen;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+fn main() {
+    let mut group = Group::new("table2_tc_8machines");
+    group.sample_size(10);
+    let graphs = [("mc", gen::rmat(10, 10, 1)), ("pt", gen::erdos_renyi(8_000, 32_000, 2))];
+    for (name, g) in &graphs {
+        let cfg = RunConfig::with_machines(8);
+        for (engine, label) in [
+            (EngineKind::Kudu(ClientSystem::Automine), "k-automine"),
+            (EngineKind::Kudu(ClientSystem::GraphPi), "k-graphpi"),
+            (EngineKind::GThinker, "g-thinker"),
+        ] {
+            group.bench(&format!("{label}/{name}"), || {
+                run_app(g, App::Tc, engine, &cfg).total_count()
+            });
+        }
+    }
+    group.finish();
+}

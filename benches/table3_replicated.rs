@@ -1,0 +1,26 @@
+//! Table 3 bench: Kudu (partitioned) vs GraphPi-style replicated across
+//! the paper's four applications.
+
+use kudu::bench::Group;
+use kudu::config::RunConfig;
+use kudu::graph::gen;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+fn main() {
+    let mut group = Group::new("table3_vs_replicated");
+    group.sample_size(10);
+    let g = gen::rmat(10, 10, 3); // lj-like, bench-sized
+    let cfg = RunConfig::with_machines(8);
+    for app in [App::Tc, App::Mc(3), App::Cc(4), App::Cc(5)] {
+        for (engine, label) in [
+            (EngineKind::Kudu(ClientSystem::GraphPi), "k-graphpi"),
+            (EngineKind::Replicated, "replicated"),
+        ] {
+            group.bench(&format!("{label}/{}", app.name()), || {
+                run_app(&g, app, engine, &cfg).total_count()
+            });
+        }
+    }
+    group.finish();
+}

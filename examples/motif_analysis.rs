@@ -1,0 +1,41 @@
+//! Network-motif significance analysis (paper §1's bio/software-network
+//! application family): count all 3- and 4-vertex motifs on a graph and
+//! compare against a degree-matched random control to find over-represented
+//! shapes.
+//!
+//! Run: `cargo run --release --example motif_analysis`
+
+use kudu::config::RunConfig;
+use kudu::graph::gen;
+use kudu::metrics::fmt_time;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+fn main() {
+    // "Real" network: skewed RMAT. Control: ER with identical edge count.
+    let real = gen::rmat(11, 10, 7);
+    let control = gen::erdos_renyi(real.num_vertices(), real.num_edges(), 8);
+    let cfg = RunConfig::with_machines(4);
+
+    for (k, app) in [(3usize, App::Mc(3)), (4, App::Mc(4))] {
+        let patterns = kudu::pattern::motifs::all_motifs(k);
+        let r = run_app(&real, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        let c = run_app(&control, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        println!("\n{k}-motifs ({} patterns), virtual time {}:", patterns.len(), fmt_time(r.virtual_time_s));
+        println!("{:<28} {:>12} {:>12} {:>8}", "pattern", "real", "control", "ratio");
+        for (i, p) in patterns.iter().enumerate() {
+            let real_n = r.counts[i];
+            let ctrl_n = c.counts[i].max(1);
+            println!(
+                "{:<28} {:>12} {:>12} {:>8.2}",
+                format!("{:?}", p.edges()),
+                real_n,
+                ctrl_n,
+                real_n as f64 / ctrl_n as f64
+            );
+        }
+    }
+    println!("\nmotifs over-represented vs the degree-flat control (ratio >> 1)");
+    println!("indicate local clustering structure — the GPM signal the");
+    println!("paper's motivating applications mine for.");
+}

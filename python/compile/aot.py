@@ -1,0 +1,68 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the Rust
+runtime (L3).
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Run: ``python -m compile.aot --out ../artifacts`` (or ``make artifacts``).
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Must match rust/src/runtime/mod.rs::DENSE_N.
+DENSE_N = 256
+# Batch size for the pair-intersect artifact.
+PAIR_BATCH = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--dense-n", type=int, default=DENSE_N)
+    parser.add_argument("--pair-batch", type=int, default=PAIR_BATCH)
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    n = args.dense_n
+    adj_spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    emit(model.dense_core, (adj_spec,), os.path.join(args.out, f"dense_core_{n}.hlo.txt"))
+
+    b = args.pair_batch
+    rows_spec = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    emit(
+        model.pair_intersect,
+        (rows_spec, rows_spec),
+        os.path.join(args.out, f"pair_intersect_{b}x{n}.hlo.txt"),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""L1 Pallas kernels: dense-tile pattern counting on the hot-vertex core.
+
+Hardware adaptation (DESIGN.md section 2): Kudu's compute hot-spot is sorted
+edge-list intersection on a CPU cluster. On a TPU the equivalent insight --
+hot high-degree vertices dominate the work -- maps the hot-vertex induced
+subgraph to dense adjacency *tiles* and replaces per-pair merges with an
+MXU-shaped contraction ``C = A @ A`` followed by an elementwise mask
+``C * A``:
+
+* BlockSpec tiles are ``TILE x TILE`` f32 (128 x 128 = 64 KiB per operand
+  buffer, 3 operands + accumulator << 16 MiB VMEM), the MXU-native shape.
+* The grid is ``(n/T, n/T, n/T)``: program (i, j, k) multiplies tile
+  ``A[i,k] @ A[k,j]``, accumulating over k into tile ``C[i,j]`` -- the
+  HBM<->VMEM schedule the paper's CPU version expressed with per-thread
+  L1-cache-sized buffers.
+* Kernels MUST run with ``interpret=True`` here: the CPU PJRT plugin
+  cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+
+All kernels are checked against ``ref.py`` by ``python/tests/``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. The artifact's n (256) is 2 tiles per side.
+TILE = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j].
+
+    The k-loop is the innermost grid dimension, so the output tile stays
+    resident in VMEM across the accumulation (revisiting schedule).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def tiled_matmul(x, y, *, tile=TILE, interpret=True):
+    """``x @ y`` via the Pallas tile kernel. Shapes must divide `tile`."""
+    n, k = x.shape
+    k2, m = y.shape
+    assert k == k2 and n % tile == 0 and m % tile == 0 and k % tile == 0, (
+        f"shapes {x.shape} x {y.shape} must divide tile {tile}"
+    )
+    grid = (n // tile, m // tile, k // tile)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, kk: (i, j)),
+        interpret=interpret,
+    )(x, y)
+
+
+def _masked_sum_kernel(c_ref, a_ref, o_ref):
+    """Elementwise mask + tile-local reduction: o += sum(c * a).
+
+    The triangle closure count: wedge paths (A@A) that close an edge (A).
+    """
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        o_ref[0, 0] = 0.0
+
+    o_ref[0, 0] += jnp.sum(c_ref[...] * a_ref[...])
+
+
+def masked_sum(c, a, *, tile=TILE, interpret=True):
+    """``sum(c * a)`` via tile-local reductions into a scalar accumulator."""
+    n, m = c.shape
+    assert c.shape == a.shape and n % tile == 0 and m % tile == 0
+    grid = (n // tile, m // tile)
+    out = pl.pallas_call(
+        _masked_sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        interpret=interpret,
+    )(c, a)
+    return out[0, 0]
+
+
+def _rowsum_kernel(a_ref, o_ref):
+    """Row sums per tile, accumulated over the column grid axis."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(a_ref[...], axis=1, keepdims=True)
+
+
+def rowsums(a, *, tile=TILE, interpret=True):
+    """Degree vector (row sums) as f32[n, 1]."""
+    n, m = a.shape
+    assert n % tile == 0 and m % tile == 0
+    grid = (n // tile, m // tile)
+    return pl.pallas_call(
+        _rowsum_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile, 1), lambda i, j: (i, 0)),
+        interpret=interpret,
+    )(a)
+
+
+def pair_intersect_counts(rows_u, rows_v, *, tile=TILE, interpret=True):
+    """|N(u) & N(v)| for a batch of vertex pairs given 0/1 bitmap rows.
+
+    The direct TPU analogue of the paper's per-pair edge-list intersection:
+    one VPU pass over two VMEM-resident rows per pair, no sorted-merge
+    control flow.
+    """
+    b, n = rows_u.shape
+    assert rows_v.shape == (b, n) and n % tile == 0
+    grid = (b, n // tile)
+    out = pl.pallas_call(
+        _pair_intersect_partial_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        interpret=interpret,
+    )(rows_u, rows_v)
+    return out[:, 0]
+
+
+def _pair_intersect_partial_kernel(u_ref, v_ref, o_ref):
+    """Per-(pair, column-tile) partial intersection accumulation."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(u_ref[...] * v_ref[...], axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dense_counts(adj, *, interpret=True):
+    """(triangles, wedges, edges) of a dense 0/1 adjacency via the tile
+    kernels -- the L2 composition lowered into the AOT artifact.
+
+    triangles = sum((A@A) * A) / 6     (closed wedges / orientations)
+    wedges    = sum_v C(deg v, 2)      (from the rowsum kernel)
+    edges     = sum(A) / 2
+    """
+    a2 = tiled_matmul(adj, adj, interpret=interpret)
+    tri = masked_sum(a2, adj, interpret=interpret) / 6.0
+    deg = rowsums(adj, interpret=interpret)[:, 0]
+    wedge = jnp.sum(deg * (deg - 1.0)) / 2.0
+    edge = jnp.sum(deg) / 2.0
+    return tri, wedge, edge

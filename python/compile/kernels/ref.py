@@ -1,0 +1,42 @@
+"""Pure-jnp reference oracle for the dense-core pattern counters.
+
+Correctness anchor for the Pallas kernels (L1): every kernel must
+``assert_allclose`` against these functions at build time (pytest) before
+``aot.py`` is allowed to emit artifacts.
+
+Inputs are dense row-major ``f32[n, n]`` adjacency matrices with entries
+0.0/1.0, zero diagonal, symmetric -- the hot-vertex induced subgraph
+extracted by the Rust engine (``runtime::HotCore``).
+"""
+
+import jax.numpy as jnp
+
+
+def triangles_ref(adj):
+    """Triangle count: trace(A^3) / 6 = sum((A@A) * A) / 6."""
+    a2 = adj @ adj
+    return jnp.sum(a2 * adj) / 6.0
+
+
+def wedges_ref(adj):
+    """Wedge (2-edge path) count: sum_v C(deg v, 2).
+
+    Counts each unordered wedge once (centre + unordered endpoints).
+    """
+    deg = jnp.sum(adj, axis=1)
+    return jnp.sum(deg * (deg - 1.0)) / 2.0
+
+
+def edges_ref(adj):
+    """Edge count: sum(A) / 2."""
+    return jnp.sum(adj) / 2.0
+
+
+def dense_counts_ref(adj):
+    """The (triangles, wedges, edges) tuple the artifact must produce."""
+    return triangles_ref(adj), wedges_ref(adj), edges_ref(adj)
+
+
+def pair_common_neighbors_ref(rows_u, rows_v):
+    """Batched |N(u) & N(v)| over bitmap rows: sum_j U[b,j]*V[b,j]."""
+    return jnp.sum(rows_u * rows_v, axis=-1)

@@ -1,0 +1,35 @@
+"""L2: the JAX compute graph composed from the L1 Pallas kernels.
+
+This is the module ``aot.py`` lowers to HLO text for the Rust runtime.
+The "model" of this systems paper is the dense hot-core counter: the Rust
+engine extracts the top-degree induced adjacency (``runtime::HotCore``),
+and this graph produces the (triangles, wedges, edges) scalars consumed by
+the hybrid TC path (``workloads::tc_hybrid``).
+
+Exports one more entry point, ``pair_intersect``, the batched bitmap
+intersection counter -- the TPU analogue of Kudu's per-pair edge-list
+intersections, compiled for fixed batch sizes.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dense_tiles
+
+
+def dense_core(adj):
+    """(tri, wedge, edge) as a 3-tuple of f32 scalars.
+
+    Returns a tuple so ``return_tuple=True`` lowering gives the Rust side
+    a single tuple literal to unpack.
+    """
+    tri, wedge, edge = dense_tiles.dense_counts(adj, interpret=True)
+    return (
+        jnp.asarray(tri, jnp.float32),
+        jnp.asarray(wedge, jnp.float32),
+        jnp.asarray(edge, jnp.float32),
+    )
+
+
+def pair_intersect(rows_u, rows_v):
+    """Batched |N(u) & N(v)| over 0/1 bitmap rows: f32[b]."""
+    return (dense_tiles.pair_intersect_counts(rows_u, rows_v, interpret=True),)

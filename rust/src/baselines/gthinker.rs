@@ -1,0 +1,257 @@
+//! G-thinker-style baseline: "Think Like a Subgraph" over a partitioned
+//! graph (paper §3.2, Table 2).
+//!
+//! One coarse task per start vertex. Each task first *pulls its whole
+//! working set* — every edge list the full nested enumeration from that
+//! vertex might touch (for the patterns here, the start vertex plus its
+//! 1-hop neighbourhood) — then computes entirely locally. Data reuse goes
+//! through a reference-counted software cache whose per-request management
+//! cost is charged explicitly; that overhead, not bandwidth, is what makes
+//! G-thinker catastrophically slow on low-skew graphs like Patents
+//! (Table 2's 1289.8× gap): each request touches a tiny edge list, so the
+//! cache bookkeeping cannot be amortised.
+
+use crate::cluster::{Timeline, Transport};
+use crate::graph::{Graph, VertexId};
+use crate::metrics::{ComputeModel, RunStats};
+use crate::plan::Plan;
+use std::collections::HashMap;
+
+/// Software-cache management cost per request, in work units. Covers hash
+/// lookup, reference-count update, lock, and GC amortisation — the "high
+/// overhead" mechanisms of §3.2/§6.3.
+pub const CACHE_REQUEST_OVERHEAD_UNITS: u64 = 400;
+/// Additional per-task setup/teardown (task objects are heap-allocated,
+/// queued, possibly spilled to disk in G-thinker).
+pub const TASK_OVERHEAD_UNITS: u64 = 2_000;
+
+/// G-thinker-like distributed miner.
+pub struct GThinker;
+
+impl GThinker {
+    pub fn run(
+        g: &Graph,
+        plan: &Plan,
+        threads: usize,
+        compute: &ComputeModel,
+        transport: &mut Transport,
+    ) -> RunStats {
+        let wall = std::time::Instant::now();
+        let spu = compute.seconds_per_unit / threads.max(1) as f64;
+        let n = transport.num_machines();
+        let mut stats = RunStats::default();
+        let mut total = 0u64;
+        let mut worst: f64 = 0.0;
+        let mut worst_exposed = 0.0f64;
+
+        for machine in 0..n {
+            let mut timeline = Timeline::default();
+            let mut work = 0u64;
+            // Ref-counted software cache: vertex -> refcount. Capacity is
+            // generous (G-thinker caches aggressively); the cost is the
+            // per-request management, not misses.
+            let mut cache: HashMap<VertexId, u32> = HashMap::new();
+            let starts = transport.partitioned().owned_vertices(machine);
+            let mut count = 0u64;
+
+            for &v0 in &starts {
+                work += TASK_OVERHEAD_UNITS;
+                // Working set: v0 and its full 1-hop neighbourhood ("users
+                // specify the subgraph, e.g. the start vertex and its
+                // 1-hop neighbours"). Coarse: fetched whether or not the
+                // enumeration will use each list (paper: "not all data in
+                // the subgraph are used ... some communication is wasted").
+                let mut to_fetch: Vec<VertexId> = Vec::with_capacity(g.degree(v0) + 1);
+                for &u in std::iter::once(&v0).chain(g.neighbors(v0)) {
+                    work += CACHE_REQUEST_OVERHEAD_UNITS;
+                    match cache.get_mut(&u) {
+                        Some(rc) => *rc += 1,
+                        None => {
+                            cache.insert(u, 1);
+                            if transport.partitioned().owner(u) != machine {
+                                to_fetch.push(u);
+                            }
+                        }
+                    }
+                }
+                // One batched pull per remote machine for this task.
+                let mut by_owner: HashMap<usize, Vec<VertexId>> = HashMap::new();
+                for u in to_fetch {
+                    by_owner.entry(transport.partitioned().owner(u)).or_default().push(u);
+                }
+                let mut gate = 0.0f64;
+                for (owner, verts) in by_owner {
+                    let (_b, t) = transport.fetch_batch(machine, owner, &verts);
+                    gate = gate.max(timeline.post_comm(t));
+                    work += verts.iter().map(|&u| g.degree(u) as u64 / 4 + 1).sum::<u64>();
+                }
+                // Local enumeration over the pulled subgraph.
+                let (c, w) = enumerate_local(g, plan, v0);
+                count += c;
+                work += w;
+                timeline.post_compute(gate, w as f64 * spu);
+                // Release references (GC bookkeeping charged per entry).
+                work += CACHE_REQUEST_OVERHEAD_UNITS / 4 * (g.degree(v0) as u64 + 1);
+                for &u in std::iter::once(&v0).chain(g.neighbors(v0)) {
+                    if let Some(rc) = cache.get_mut(&u) {
+                        *rc -= 1;
+                        if *rc == 0 {
+                            cache.remove(&u);
+                        }
+                    }
+                }
+            }
+            total += count;
+            stats.work_units += work;
+            // The per-task posts covered only the enumeration compute;
+            // charge the cache/task management overhead (it runs on the
+            // same compute threads) as the remainder.
+            let posted: f64 = timeline.compute_busy();
+            let all = work as f64 * spu;
+            if all > posted {
+                timeline.post_compute(0.0, all - posted);
+            }
+            if timeline.finish() > worst {
+                worst = timeline.finish();
+                worst_exposed = timeline.exposed_comm();
+            }
+        }
+        stats.counts = vec![total];
+        stats.virtual_time_s = worst;
+        stats.exposed_comm_s = worst_exposed;
+        stats.network_bytes = transport.traffic.total_bytes();
+        stats.network_messages = transport.traffic.total_messages();
+        stats.wall_s = wall.elapsed().as_secs_f64();
+        stats
+    }
+}
+
+/// Local nested-loop enumeration rooted at `v0` (the user-written
+/// pattern-specific code G-thinker requires).
+fn enumerate_local(g: &Graph, plan: &Plan, v0: VertexId) -> (u64, u64) {
+    use crate::exec;
+    use crate::pattern::MAX_PATTERN;
+    use crate::plan::Source;
+
+    let mut vertices = [0 as VertexId; MAX_PATTERN];
+    vertices[0] = v0;
+    let mut count = 0u64;
+    let mut work = 0u64;
+    let depth = plan.depth();
+    let mut stored: Vec<Vec<VertexId>> = vec![Vec::new(); depth];
+    fn rec(
+        g: &Graph,
+        plan: &Plan,
+        vertices: &mut [VertexId; MAX_PATTERN],
+        stored: &mut Vec<Vec<VertexId>>,
+        level: usize,
+        count: &mut u64,
+        work: &mut u64,
+    ) {
+        let depth = plan.depth();
+        let step = &plan.steps[level - 1];
+        let mut cand: Vec<VertexId> = Vec::new();
+        {
+            let slices: Vec<&[VertexId]> = step
+                .sources
+                .iter()
+                .map(|s| match *s {
+                    Source::Adj(j) => g.neighbors(vertices[j]),
+                    Source::Stored(j) => stored[j].as_slice(),
+                })
+                .collect();
+            let w = match slices.len() {
+                1 => {
+                    cand.extend_from_slice(slices[0]);
+                    exec::Work(1)
+                }
+                2 => exec::intersect(slices[0], slices[1], &mut cand),
+                _ => exec::intersect_many(slices[0], &slices[1..], &mut cand),
+            };
+            *work += w.0;
+        }
+        if !step.exclude.is_empty() {
+            let mut tmp = Vec::new();
+            for &j in &step.exclude {
+                let w = exec::difference(&cand, g.neighbors(vertices[j]), &mut tmp);
+                *work += w.0;
+                std::mem::swap(&mut cand, &mut tmp);
+            }
+        }
+        let mut lo: VertexId = 0;
+        let mut hi: VertexId = VertexId::MAX;
+        for &j in &step.greater_than {
+            lo = lo.max(vertices[j].saturating_add(1));
+        }
+        for &j in &step.less_than {
+            hi = hi.min(vertices[j]);
+        }
+        let start = cand.partition_point(|&v| v < lo);
+        let end = cand.partition_point(|&v| v < hi);
+        if level == depth - 1 {
+            let mut c = (end.max(start) - start) as u64;
+            for &u in &vertices[..level] {
+                if u >= lo && u < hi && cand[start..end].binary_search(&u).is_ok() {
+                    c -= 1;
+                }
+            }
+            *count += c;
+            *work += (end.max(start) - start) as u64 + 1;
+        } else {
+            if plan.store_set[level] {
+                stored[level] = cand.clone();
+            }
+            for k in start..end {
+                let v = cand[k];
+                if vertices[..level].contains(&v) {
+                    continue;
+                }
+                vertices[level] = v;
+                rec(g, plan, vertices, stored, level + 1, count, work);
+            }
+        }
+    }
+    rec(g, plan, &mut vertices, &mut stored, 1, &mut count, &mut work);
+    (count, work)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::metrics::NetModel;
+    use crate::partition::PartitionedGraph;
+    use crate::pattern::brute::{count_embeddings, Induced};
+    use crate::pattern::Pattern;
+    use crate::plan::automine_plan;
+
+    #[test]
+    fn matches_oracle() {
+        let g = gen::erdos_renyi(120, 500, 59);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
+        let pg = PartitionedGraph::new(&g, 4);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let st = GThinker::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+        assert_eq!(st.total_count(), expect);
+        assert!(st.network_bytes > 0);
+    }
+
+    #[test]
+    fn overhead_dominates_on_flat_graphs() {
+        // ER graph = pt-like: tiny tasks, cache overhead unamortised.
+        let g = gen::erdos_renyi(300, 900, 61);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let pg = PartitionedGraph::new(&g, 4);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let gt = GThinker::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+        // Work must massively exceed the pure enumeration work.
+        let pure = crate::baselines::SingleMachine::run(&g, &plan, &ComputeModel::default());
+        assert!(
+            gt.work_units > 10 * pure.work_units,
+            "gthinker {} !>> pure {}",
+            gt.work_units,
+            pure.work_units
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Comparator execution models (paper §3.2 and §8 evaluation).
+//!
+//! Every baseline mines over the same graph/pattern/plan substrates as the
+//! Kudu engine, so the tables isolate exactly what the paper credits: task
+//! granularity, scheduling, and data-reuse cost.
+//!
+//! * [`single_machine`] — AutomineIH-style nested-loop DFS on one machine
+//!   (also the COST-metric reference, Fig 17).
+//! * [`replicated`] — GraphPi-style distributed mining with the graph
+//!   replicated on every machine: coarse first-loop parallelism plus a
+//!   startup workload-partitioning cost, no communication.
+//! * [`gthinker`] — "think like a subgraph" over a partitioned graph:
+//!   coarse per-start-vertex tasks that pull their whole working set
+//!   through a reference-counted software cache with per-request
+//!   management overhead.
+//! * [`moving_comp`] — Arabesque-style "moving computation to data":
+//!   level-synchronous BFS where partial embeddings are shipped to the
+//!   owner of the data they need next.
+
+pub mod gthinker;
+pub mod moving_comp;
+pub mod replicated;
+pub mod single_machine;
+
+pub use gthinker::GThinker;
+pub use moving_comp::MovingComputation;
+pub use replicated::Replicated;
+pub use single_machine::SingleMachine;

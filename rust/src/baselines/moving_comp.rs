@@ -1,0 +1,249 @@
+//! "Moving computation to data" baseline (Arabesque-style, paper §3.2,
+//! Fig 4a).
+//!
+//! Level-synchronous BFS over partial embeddings: each extension step is
+//! performed on the machine that *owns* the data it needs, so partial
+//! embeddings are shipped between machines — together with the extra edge
+//! lists the next intersection requires (Fig 4a ships N(0) along with
+//! subgraphs (0,2) and (0,3)). The paper's three criticisms are visible
+//! directly in this implementation: extensions scatter across machines,
+//! extra edge-list payloads ride along, and the synchronous shuffle leaves
+//! little room to overlap communication with computation.
+
+use crate::cluster::Transport;
+use crate::exec;
+use crate::graph::{Graph, VertexId};
+use crate::metrics::{ComputeModel, RunStats};
+use crate::pattern::MAX_PATTERN;
+use crate::plan::{Plan, Source};
+
+/// A partial embedding in flight. Carries the matched vertices plus the
+/// *piggybacked* edge-list bytes the destination needs but does not own.
+#[derive(Clone, Debug)]
+struct Partial {
+    vertices: [VertexId; MAX_PATTERN],
+    level: usize,
+}
+
+/// Moving-computation-to-data distributed miner.
+pub struct MovingComputation;
+
+impl MovingComputation {
+    pub fn run(
+        g: &Graph,
+        plan: &Plan,
+        threads: usize,
+        compute: &ComputeModel,
+        transport: &mut Transport,
+    ) -> RunStats {
+        let wall = std::time::Instant::now();
+        let spu = compute.seconds_per_unit / threads.max(1) as f64;
+        let n = transport.num_machines();
+        let depth = plan.depth();
+
+        // Per-machine frontiers of partial embeddings at the current level.
+        let mut frontiers: Vec<Vec<Partial>> = vec![Vec::new(); n];
+        for m in 0..n {
+            for v in transport.partitioned().owned_vertices(m) {
+                let mut vs = [0 as VertexId; MAX_PATTERN];
+                vs[0] = v;
+                frontiers[m].push(Partial { vertices: vs, level: 0 });
+            }
+        }
+        let mut count = 0u64;
+        let mut per_machine_work = vec![0u64; n];
+        let mut per_machine_comm_s = vec![0f64; n];
+        let mut peak = 0u64;
+
+        for level in 0..depth - 1 {
+            let step = &plan.steps[level];
+            // The extension at `level+1` is computed on the machine owning
+            // the *newest* required adjacency (paper Fig 4a: subgraphs
+            // (0,2),(0,3) move to the machine owning N(2),N(3)); earlier
+            // sources are piggybacked bytes if not owned there (drawback 2).
+            let anchor = step.backward.iter().copied().max().unwrap_or(0);
+            // Shuffle phase.
+            let mut next_frontiers: Vec<Vec<Partial>> = vec![Vec::new(); n];
+            let mut shipped: Vec<Vec<u64>> = vec![vec![0u64; n]; n]; // counts
+            let mut extra_bytes: Vec<Vec<u64>> = vec![vec![0u64; n]; n];
+            for (m, frontier) in frontiers.iter().enumerate() {
+                for p in frontier {
+                    let dest = transport.partitioned().owner(p.vertices[anchor]);
+                    if dest != m {
+                        shipped[m][dest] += 1;
+                        // Piggyback every other Adj source the destination
+                        // does not own.
+                        for s in &step.sources {
+                            if let Source::Adj(j) = s {
+                                if *j != anchor
+                                    && transport.partitioned().owner(p.vertices[*j]) != dest
+                                {
+                                    extra_bytes[m][dest] +=
+                                        g.degree(p.vertices[*j]) as u64 * 4;
+                                }
+                            }
+                        }
+                    }
+                    next_frontiers[dest].push(p.clone());
+                }
+            }
+            for m in 0..n {
+                for d in 0..n {
+                    if shipped[m][d] > 0 || extra_bytes[m][d] > 0 {
+                        let (_b, t) = transport.ship_embeddings(
+                            m,
+                            d,
+                            shipped[m][d],
+                            level + 1,
+                            extra_bytes[m][d],
+                        );
+                        per_machine_comm_s[m] += t;
+                    }
+                }
+            }
+            // Synchronous barrier: everyone waits for the shuffle.
+            // Extension phase (local on each machine).
+            frontiers = vec![Vec::new(); n];
+            for (m, frontier) in next_frontiers.into_iter().enumerate() {
+                peak = peak
+                    .max(frontier.len() as u64 * std::mem::size_of::<Partial>() as u64);
+                for p in frontier {
+                    debug_assert_eq!(p.level, level);
+                    let (c, w) =
+                        extend_partial(g, plan, &p, level, &mut frontiers[m]);
+                    count += c;
+                    per_machine_work[m] += w;
+                }
+            }
+        }
+
+        // Virtual time: level-synchronous => per level, slowest machine's
+        // compute plus its shuffle time, summed across levels. We
+        // approximate with totals (conservative for the baseline).
+        let slowest_work = per_machine_work.iter().copied().max().unwrap_or(0);
+        let slowest_comm =
+            per_machine_comm_s.iter().copied().fold(0.0f64, f64::max);
+        let mut out = RunStats::default();
+        out.counts = vec![count];
+        out.work_units = per_machine_work.iter().sum();
+        out.virtual_time_s = slowest_work as f64 * spu + slowest_comm;
+        out.exposed_comm_s = slowest_comm; // no overlap in BSP shuffles
+        out.network_bytes = transport.traffic.total_bytes();
+        out.network_messages = transport.traffic.total_messages();
+        out.peak_embedding_bytes = peak;
+        out.wall_s = wall.elapsed().as_secs_f64();
+        out
+    }
+}
+
+/// Extend one partial embedding by one level; complete embeddings are
+/// counted, interior ones pushed to `out`.
+fn extend_partial(
+    g: &Graph,
+    plan: &Plan,
+    p: &Partial,
+    level: usize,
+    out: &mut Vec<Partial>,
+) -> (u64, u64) {
+    let step = &plan.steps[level];
+    let depth = plan.depth();
+    let mut work = 0u64;
+    let mut cand: Vec<VertexId> = Vec::new();
+    {
+        // All sources resolve to plain adjacency here: stored-set reuse
+        // does not survive shipping (Arabesque ships raw embeddings) — one
+        // of the efficiency gaps versus Kudu's hierarchical sharing.
+        let slices: Vec<&[VertexId]> = step
+            .backward
+            .iter()
+            .map(|&j| g.neighbors(p.vertices[j]))
+            .collect();
+        let w = match slices.len() {
+            1 => {
+                cand.extend_from_slice(slices[0]);
+                exec::Work(1)
+            }
+            2 => exec::intersect(slices[0], slices[1], &mut cand),
+            _ => exec::intersect_many(slices[0], &slices[1..], &mut cand),
+        };
+        work += w.0;
+    }
+    if !step.exclude.is_empty() {
+        let mut tmp = Vec::new();
+        for &j in &step.exclude {
+            let w = exec::difference(&cand, g.neighbors(p.vertices[j]), &mut tmp);
+            work += w.0;
+            std::mem::swap(&mut cand, &mut tmp);
+        }
+    }
+    let mut lo: VertexId = 0;
+    let mut hi: VertexId = VertexId::MAX;
+    for &j in &step.greater_than {
+        lo = lo.max(p.vertices[j].saturating_add(1));
+    }
+    for &j in &step.less_than {
+        hi = hi.min(p.vertices[j]);
+    }
+    let start = cand.partition_point(|&v| v < lo);
+    let end = cand.partition_point(|&v| v < hi);
+    let new_level = level + 1;
+    if new_level == depth - 1 {
+        let mut c = (end.max(start) - start) as u64;
+        for &u in &p.vertices[..new_level] {
+            if u >= lo && u < hi && cand[start..end].binary_search(&u).is_ok() {
+                c -= 1;
+            }
+        }
+        work += (end.max(start) - start) as u64 + 1;
+        (c, work)
+    } else {
+        let mut created = 0u64;
+        for k in start..end {
+            let v = cand[k];
+            if p.vertices[..new_level].contains(&v) {
+                continue;
+            }
+            let mut vs = p.vertices;
+            vs[new_level] = v;
+            out.push(Partial { vertices: vs, level: new_level });
+            created += 1;
+        }
+        work += created * 8; // embedding materialisation cost
+        (0, work)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::metrics::NetModel;
+    use crate::partition::PartitionedGraph;
+    use crate::pattern::brute::{count_embeddings, Induced};
+    use crate::pattern::Pattern;
+    use crate::plan::automine_plan;
+
+    #[test]
+    fn matches_oracle() {
+        let g = gen::erdos_renyi(100, 400, 67);
+        for p in [Pattern::triangle(), Pattern::chain(3)] {
+            let plan = automine_plan(&p, Induced::Edge);
+            let expect = count_embeddings(&g, &p, Induced::Edge);
+            let pg = PartitionedGraph::new(&g, 3);
+            let mut tr = Transport::new(pg, NetModel::default());
+            let st = MovingComputation::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+            assert_eq!(st.total_count(), expect, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn ships_embeddings() {
+        let g = gen::rmat(8, 8, 71);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let pg = PartitionedGraph::new(&g, 4);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let st = MovingComputation::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+        assert!(st.network_bytes > 0, "shuffling must generate traffic");
+        assert!(st.exposed_comm_s > 0.0, "BSP shuffle exposes its comm");
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal criterion-style benchmark harness (the image vendors only the
+//! `xla` crate closure, so the bench runner is in-tree).
+//!
+//! Provides warmup, repeated timed samples, and median/min/mean reporting
+//! in a stable, grep-friendly format:
+//!
+//! ```text
+//! bench <group>/<name>  median 12.34ms  min 11.98ms  mean 12.50ms  (n=10)
+//! ```
+
+use std::time::Instant;
+
+/// One benchmark group; mirrors criterion's `benchmark_group` surface
+/// closely enough that the bench files read the same.
+pub struct Group {
+    name: String,
+    samples: usize,
+    warmup: usize,
+}
+
+impl Group {
+    pub fn new(name: &str) -> Self {
+        Group { name: name.to_string(), samples: 10, warmup: 2 }
+    }
+
+    /// Number of timed samples per benchmark (default 10).
+    pub fn sample_size(&mut self, n: usize) -> &mut Self {
+        self.samples = n.max(3);
+        self
+    }
+
+    /// Run and report one benchmark. `f` is the operation under test; its
+    /// result is passed through `std::hint::black_box`.
+    pub fn bench<R>(&self, name: &str, mut f: impl FnMut() -> R) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let min = times[0];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        println!(
+            "bench {}/{}  median {}  min {}  mean {}  (n={})",
+            self.name,
+            name,
+            fmt(median),
+            fmt(min),
+            fmt(mean),
+            self.samples
+        );
+    }
+
+    pub fn finish(&self) {
+        println!("group {} done", self.name);
+    }
+}
+
+fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut g = Group::new("test");
+        g.sample_size(3);
+        let mut calls = 0u32;
+        g.bench("noop", || {
+            calls += 1;
+            calls
+        });
+        // warmup 2 + samples 3
+        assert_eq!(calls, 5);
+        g.finish();
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt(2e-9).ends_with("ns"));
+        assert!(fmt(2e-6).ends_with("µs"));
+        assert!(fmt(2e-3).ends_with("ms"));
+        assert!(fmt(2.0).ends_with('s'));
+    }
+}

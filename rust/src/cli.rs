@@ -1,0 +1,92 @@
+//! Tiny flag parser (the image vendors only the `xla` crate closure, so
+//! CLI parsing is in-tree). Supports `--flag value`, `--flag=value`, and
+//! boolean `--flag`.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positional values plus `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (without argv[0]).
+    pub fn parse(raw: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let raw: Vec<String> = raw.collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(flag.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parsed flag with default.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean switch (present, `=true`, or `true` value).
+    pub fn has(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--graph", "mc", "--machines=4", "--no-cache"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("graph", "x"), "mc");
+        assert_eq!(a.get_as::<usize>("machines", 1), 4);
+        assert!(a.has("no-cache"));
+        assert!(!a.has("no-hds"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get("engine", "k-graphpi"), "k-graphpi");
+        assert_eq!(a.get_as::<usize>("threads", 1), 1);
+    }
+
+    #[test]
+    fn bool_then_positional() {
+        let a = parse(&["--verbose", "stats"]);
+        // "stats" follows a flag without value and does not start with
+        // "--": it is consumed as the flag's value by design; callers put
+        // the subcommand first.
+        assert_eq!(a.get("verbose", ""), "stats");
+    }
+}

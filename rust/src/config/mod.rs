@@ -1,0 +1,92 @@
+//! Run configuration: which engine features are on, cluster shape, chunk
+//! sizes — everything the ablation tables toggle.
+
+use crate::metrics::{ComputeModel, NetModel};
+
+/// Kudu engine feature toggles and sizing (paper §5–§6 knobs).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Chunk capacity: number of extendable embeddings per level chunk
+    /// (the paper pre-allocates ~1 GB per level; we size by count).
+    pub chunk_capacity: usize,
+    /// Mini-batch size for work distribution (paper §7: 64).
+    pub mini_batch: usize,
+    /// Vertical computation sharing (paper §6.1 / Fig 13).
+    pub vertical_sharing: bool,
+    /// Horizontal data sharing (paper §6.2 / Fig 14).
+    pub horizontal_sharing: bool,
+    /// Static cache size as a fraction of graph CSR bytes (paper §6.3:
+    /// 5–10%); `0.0` disables the cache (Table 6 "no cache").
+    pub cache_frac: f64,
+    /// Degree threshold for cache insertion (the paper uses 64 at
+    /// billion-edge scale; scaled to 16 for the laptop-scale stand-ins so
+    /// the cached set covers the same fraction of traffic).
+    pub cache_degree_threshold: usize,
+    /// NUMA sockets per machine; `1` disables NUMA modelling.
+    pub sockets: usize,
+    /// NUMA-aware exploration (Table 7); irrelevant when `sockets == 1`.
+    pub numa_aware: bool,
+    /// Computation threads per machine (virtual; Fig 17).
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            chunk_capacity: 1024,
+            mini_batch: 64,
+            vertical_sharing: true,
+            horizontal_sharing: true,
+            cache_frac: 0.10,
+            cache_degree_threshold: 16,
+            sockets: 1,
+            numa_aware: true,
+            threads: 1,
+        }
+    }
+}
+
+/// Full run configuration: cluster shape + engine + cost models.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub num_machines: usize,
+    pub engine: EngineConfig,
+    pub net: NetModel,
+    pub compute: ComputeModel,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            num_machines: 8,
+            engine: EngineConfig::default(),
+            net: NetModel::default(),
+            compute: ComputeModel::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn single_machine() -> Self {
+        RunConfig { num_machines: 1, ..Default::default() }
+    }
+
+    pub fn with_machines(n: usize) -> Self {
+        RunConfig { num_machines: n, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.num_machines, 8);
+        assert!(c.engine.vertical_sharing && c.engine.horizontal_sharing);
+        assert!(c.engine.cache_frac > 0.0);
+        assert_eq!(RunConfig::single_machine().num_machines, 1);
+        assert_eq!(RunConfig::with_machines(4).num_machines, 4);
+    }
+}

@@ -1,0 +1,732 @@
+//! The Kudu engine: "Think Like an Extendable Embedding" (paper §4–§6).
+//!
+//! Each machine of the (simulated) cluster enumerates pattern embeddings
+//! rooted at its owned vertices by interpreting a [`Plan`]. Exploration is
+//! the paper's **BFS-DFS hybrid** (§5.2): per-level chunks are filled
+//! breadth-first until full, then the engine descends depth-first at chunk
+//! granularity; chunks are released bottom-up, matching the hierarchical
+//! representation's lifetime rules and avoiding fragmentation.
+//!
+//! Remote active edge lists are fetched per chunk with **circulant
+//! scheduling** (§5.3): embeddings are grouped into batches by the owner
+//! machine of their pending vertex, starting from the local machine, and
+//! the fetch of batch *b+1* overlaps the extension of batch *b* on the
+//! virtual timeline.
+//!
+//! Data reuse (§6): **vertical** — intersection results stored in the
+//! chunk arena and reused by all children (plan-directed); **horizontal**
+//! — a collision-dropping hash table shares identical active edge lists
+//! within a chunk; **static cache** — hot high-degree vertices are cached
+//! once, no eviction.
+
+pub mod cache;
+pub mod chunk;
+pub mod sink;
+
+use crate::cluster::{Timeline, Transport};
+use crate::config::EngineConfig;
+use crate::exec;
+use crate::graph::{Graph, VertexId};
+use crate::metrics::{ComputeModel, RunStats};
+use crate::pattern::MAX_PATTERN;
+use crate::plan::{Plan, Source};
+use cache::StaticCache;
+use chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
+use sink::{CountSink, EmbeddingSink};
+
+/// The distributed Kudu engine. Stateless facade: each [`KuduEngine::run`]
+/// simulates all machines of the cluster over a shared transport.
+pub struct KuduEngine;
+
+impl KuduEngine {
+    /// Mine `plan`'s pattern over `graph` partitioned across
+    /// `transport.num_machines()` machines. Returns merged statistics
+    /// (count, traffic, virtual time, …).
+    pub fn run<'g>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+    ) -> RunStats {
+        let mut sinks: Vec<CountSink> = Vec::new();
+        let stats = Self::run_with_sinks(graph, plan, cfg, compute, transport, |_m| {
+            CountSink::default()
+        }, &mut sinks);
+        let mut stats = stats;
+        stats.counts = vec![sinks.iter().map(|s| s.count).sum()];
+        stats
+    }
+
+    /// Generic entry point: one sink per machine, produced by `make_sink`.
+    /// Sinks are returned through `out_sinks` for inspection.
+    pub fn run_with_sinks<'g, S: EmbeddingSink>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        mut make_sink: impl FnMut(usize) -> S,
+        out_sinks: &mut Vec<S>,
+    ) -> RunStats {
+        assert!(plan.depth() >= 2, "patterns must have at least one edge");
+        let n = transport.num_machines();
+        let wall_start = std::time::Instant::now();
+        let mut stats = RunStats::default();
+        let mut worst_finish = 0.0f64;
+        let mut worst_exposed = 0.0f64;
+
+        for machine in 0..n {
+            let mut sink = make_sink(machine);
+            let mut m = MachineRun::new(machine, graph, plan, cfg, compute, transport);
+            m.run(&mut sink);
+            // Merge.
+            stats.work_units += m.units_cpu + m.units_mem;
+            stats.embeddings_created += m.embeddings_created;
+            stats.peak_embedding_bytes = stats.peak_embedding_bytes.max(m.peak_bytes);
+            stats.numa_remote_accesses += m.numa_remote;
+            stats.cache_hits += m.cache.hits;
+            stats.cache_misses += m.cache.misses;
+            let finish = m.timeline.finish();
+            if finish > worst_finish {
+                worst_finish = finish;
+                worst_exposed = m.timeline.exposed_comm();
+            }
+            out_sinks.push(sink);
+        }
+        stats.virtual_time_s = worst_finish;
+        stats.exposed_comm_s = worst_exposed;
+        stats.network_bytes = transport.traffic.total_bytes();
+        stats.network_messages = transport.traffic.total_messages();
+        stats.wall_s = wall_start.elapsed().as_secs_f64();
+        stats
+    }
+}
+
+/// Per-machine execution state.
+struct MachineRun<'a, 'g> {
+    machine: usize,
+    graph: &'g Graph,
+    plan: &'a Plan,
+    cfg: &'a EngineConfig,
+    compute: ComputeModel,
+    transport: &'a mut Transport<'g>,
+    chunks: Vec<Chunk>,
+    cache: StaticCache,
+    timeline: Timeline,
+    // Work accumulators (flushed to the timeline per circulant batch).
+    units_cpu: u64,
+    units_mem: u64,
+    pending_cpu: u64,
+    pending_mem: u64,
+    embeddings_created: u64,
+    peak_bytes: u64,
+    numa_remote: u64,
+    // Scratch buffers (reused across extensions — no hot-loop allocation).
+    cand: Vec<VertexId>,
+    tmp: Vec<VertexId>,
+    emb_buf: Vec<VertexId>,
+    /// Per-level circulant batch buffers, reused across chunks.
+    batch_pool: Vec<Vec<Vec<u32>>>,
+}
+
+impl<'a, 'g> MachineRun<'a, 'g> {
+    fn new(
+        machine: usize,
+        graph: &'g Graph,
+        plan: &'a Plan,
+        cfg: &'a EngineConfig,
+        compute: &ComputeModel,
+        transport: &'a mut Transport<'g>,
+    ) -> Self {
+        let depth = plan.depth();
+        let cache = if cfg.cache_frac > 0.0 {
+            StaticCache::new(graph, cfg.cache_frac, cfg.cache_degree_threshold)
+        } else {
+            StaticCache::disabled()
+        };
+        MachineRun {
+            machine,
+            graph,
+            plan,
+            cfg,
+            compute: *compute,
+            transport,
+            chunks: (0..depth).map(|_| Chunk::new(cfg.chunk_capacity)).collect(),
+            cache,
+            timeline: Timeline::default(),
+            units_cpu: 0,
+            units_mem: 0,
+            pending_cpu: 0,
+            pending_mem: 0,
+            embeddings_created: 0,
+            peak_bytes: 0,
+            numa_remote: 0,
+            cand: Vec::new(),
+            tmp: Vec::new(),
+            emb_buf: Vec::new(),
+            batch_pool: vec![Vec::new(); depth],
+        }
+    }
+
+    /// NUMA memory-access multiplier (DESIGN.md §1: Table 7's policy
+    /// effect modelled as a penalty on memory-bound work). NUMA-aware
+    /// exploration keeps embedding memory socket-local except for residual
+    /// cross-socket fetches and work stealing.
+    fn numa_mult(&self) -> f64 {
+        let s = self.cfg.sockets;
+        if s <= 1 {
+            return 1.0;
+        }
+        let remote_frac =
+            if self.cfg.numa_aware { 0.08 } else { (s - 1) as f64 / s as f64 };
+        1.0 + remote_frac * (self.compute.numa_remote_penalty - 1.0)
+    }
+
+    /// Convert accumulated pending work to virtual seconds and post it,
+    /// gated on `gate` (the batch's data-arrival time). Thread scaling:
+    /// mini-batches are distributed dynamically over `threads` workers;
+    /// a small serial fraction covers chunk management (paper §7).
+    fn flush_compute(&mut self, gate: f64, emb_count: usize) {
+        if self.pending_cpu == 0 && self.pending_mem == 0 {
+            return;
+        }
+        let numa = self.numa_mult();
+        let remote_bump = if self.cfg.sockets > 1 {
+            let frac = if self.cfg.numa_aware { 0.08 } else { (self.cfg.sockets - 1) as f64 / self.cfg.sockets as f64 };
+            (self.pending_mem as f64 * frac) as u64
+        } else {
+            0
+        };
+        self.numa_remote += remote_bump;
+        let units = self.pending_cpu as f64 + self.pending_mem as f64 * numa;
+        let t = self.cfg.threads.max(1);
+        let minibatches = (emb_count / self.cfg.mini_batch).max(1);
+        let t_eff = t.min(minibatches.max(1)) as f64;
+        const SERIAL_FRAC: f64 = 0.012;
+        let secs =
+            units * self.compute.seconds_per_unit * (SERIAL_FRAC + (1.0 - SERIAL_FRAC) / t_eff);
+        self.timeline.post_compute(gate, secs);
+        self.units_cpu += self.pending_cpu;
+        self.units_mem += self.pending_mem;
+        self.pending_cpu = 0;
+        self.pending_mem = 0;
+    }
+
+    fn run<S: EmbeddingSink>(&mut self, sink: &mut S) {
+        let mut starts = self.transport.partitioned().owned_vertices(self.machine);
+        // Labelled mining: only start from vertices matching level-0's label.
+        let l0 = self.plan.pattern.label(0);
+        if l0 != 0 {
+            starts.retain(|&v| self.graph.label(v) == l0);
+        }
+        let cap = self.cfg.chunk_capacity;
+        let needs0 = self.plan.needs_adj[0];
+        let mut block_start = 0usize;
+        while block_start < starts.len() {
+            let block_end = (block_start + cap).min(starts.len());
+            self.chunks[0].clear();
+            for &v in &starts[block_start..block_end] {
+                let mut vs = [0 as VertexId; MAX_PATTERN];
+                vs[0] = v;
+                let list = if needs0 { ListRef::Local(v) } else { ListRef::None };
+                self.chunks[0].embs.push(Emb::new(vs, 0, list));
+                self.pending_mem += self.compute.per_embedding_overhead_units;
+                self.embeddings_created += 1;
+            }
+            self.process_chunk(0, sink);
+            block_start = block_end;
+        }
+        // Trailing work not yet flushed.
+        self.flush_compute(0.0, 1);
+    }
+
+    /// Process a filled (or final partial) chunk at `level`: circulant
+    /// fetch + extend, descending into `level+1` whenever it fills.
+    fn process_chunk<S: EmbeddingSink>(&mut self, level: usize, sink: &mut S) {
+        let n = self.transport.num_machines();
+        // Group embedding indices into circulant batches: index 0 = ready
+        // (local/cached/shared-resolved/no-list), then owner machines in
+        // circulant order starting after self. Buffers are pooled per
+        // level and reused across chunks.
+        let mut batches = std::mem::take(&mut self.batch_pool[level]);
+        batches.resize(n + 1, Vec::new());
+        for b in batches.iter_mut() {
+            b.clear();
+        }
+        for (i, e) in self.chunks[level].embs.iter().enumerate() {
+            let target = match e.list {
+                ListRef::Pending { owner, .. } => Some(owner as usize),
+                ListRef::Shared(other) => match self.chunks[level].embs[other as usize].list {
+                    ListRef::Pending { owner, .. } => Some(owner as usize),
+                    _ => None,
+                },
+                _ => None,
+            };
+            match target {
+                None => batches[0].push(i as u32),
+                Some(o) => {
+                    // circulant position of owner o relative to self
+                    let pos = (o + n - self.machine) % n;
+                    batches[pos.max(1)].push(i as u32) // pos 0 impossible: own vertices are Local
+                }
+            }
+        }
+        self.peak_bytes =
+            self.peak_bytes.max(self.chunks.iter().map(|c| c.bytes()).sum::<u64>());
+
+        for pos in 0..batches.len() {
+            let batch = std::mem::take(&mut batches[pos]);
+            if batch.is_empty() {
+                continue;
+            }
+            // Fetch phase for this batch (no-op for the ready batch).
+            let gate = if pos == 0 {
+                0.0
+            } else {
+                let owner = (self.machine + pos) % n;
+                self.fetch_batch(level, owner, &batch)
+            };
+            // Extend phase, overlapping the next batch's fetch on the
+            // virtual timeline (comm channel free-runs ahead). Thread
+            // parallelism is bounded by the whole chunk's mini-batch pool
+            // (workers pull 64-embedding mini-batches from a shared queue,
+            // §7), not by this circulant batch alone.
+            let chunk_len = self.chunks[level].len();
+            for &idx in &batch {
+                self.extend_one(level, idx, sink);
+                if level + 1 < self.plan.depth() - 1 && self.chunks[level + 1].is_full() {
+                    self.flush_compute(gate, chunk_len);
+                    self.process_chunk(level + 1, sink);
+                    self.chunks[level + 1].clear();
+                }
+            }
+            self.flush_compute(gate, chunk_len);
+            batches[pos] = batch;
+        }
+        self.batch_pool[level] = batches;
+        // Descend into the remaining partial child chunk.
+        if level + 1 < self.plan.depth() - 1 && !self.chunks[level + 1].is_empty() {
+            self.process_chunk(level + 1, sink);
+            self.chunks[level + 1].clear();
+        }
+    }
+
+    /// Fetch the pending edge lists of `batch` (all owned by `owner`) as
+    /// one batched message; returns the data-arrival gate time.
+    fn fetch_batch(&mut self, level: usize, owner: usize, batch: &[u32]) -> f64 {
+        // Collect unique pending vertices (HDS made them unique already
+        // when enabled; when disabled, duplicates are fetched redundantly —
+        // exactly the Fig 14 ablation).
+        let mut verts: Vec<VertexId> = Vec::with_capacity(batch.len());
+        for &i in batch {
+            if let ListRef::Pending { vertex, .. } = self.chunks[level].embs[i as usize].list {
+                verts.push(vertex);
+            }
+        }
+        if verts.is_empty() {
+            return 0.0;
+        }
+        let (_bytes, time) = self.transport.fetch_batch(self.machine, owner, &verts);
+        let gate = self.timeline.post_comm(time);
+        // Materialise the lists into the chunk arena ("receive").
+        for &i in batch {
+            let e = self.chunks[level].embs[i as usize];
+            if let ListRef::Pending { vertex, .. } = e.list {
+                let deg = self.graph.degree(vertex);
+                let nb = self.graph.neighbors(vertex);
+                // Copy = receive; charge memory work.
+                let r = {
+                    let c = &mut self.chunks[level];
+                    c.arena_push(nb)
+                };
+                self.chunks[level].embs[i as usize].list = r;
+                self.pending_mem += deg as u64 / 4 + 1;
+                self.cache.offer(vertex, deg);
+            }
+        }
+        gate
+    }
+
+    /// Extend one embedding at `level` to `level+1` (paper Algorithm 1's
+    /// EXTEND, interpreted from the plan).
+    fn extend_one<S: EmbeddingSink>(&mut self, level: usize, idx: u32, sink: &mut S) {
+        let depth = self.plan.depth();
+        let step = &self.plan.steps[level]; // describes level+1
+        let new_level = level + 1;
+        let e = self.chunks[level].embs[idx as usize];
+        let vertices = e.vertices;
+
+        // --- Candidate set: intersect the plan's sources. ---
+        {
+            let (parents, _rest) = self.chunks.split_at_mut(new_level);
+            let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
+            for s in &step.sources {
+                let sl: &[VertexId] = match *s {
+                    Source::Adj(j) => {
+                        let a = ancestor_idx(parents, level, idx, j);
+                        resolve_list(parents, j, a, self.graph)
+                    }
+                    Source::Stored(j) => {
+                        let a = ancestor_idx(parents, level, idx, j);
+                        resolve_stored(parents, j, a)
+                    }
+                };
+                slices.push(sl);
+            }
+            let w = match slices.len() {
+                1 => {
+                    self.cand.clear();
+                    self.cand.extend_from_slice(slices[0]);
+                    exec::Work(1)
+                }
+                2 => exec::intersect(slices[0], slices[1], &mut self.cand),
+                _ => exec::intersect_many(slices[0], &slices[1..], &mut self.cand),
+            };
+            self.pending_cpu += w.0;
+        }
+
+        // --- Vertical sharing: store the raw intersection for children. ---
+        let stored_ref = if self.plan.store_set[new_level] && new_level < depth - 1 {
+            let c = &mut self.chunks[new_level];
+            let off = c.arena.len() as u32;
+            c.arena.extend_from_slice(&self.cand);
+            self.pending_mem += self.cand.len() as u64 / 4 + 1;
+            Some((off, self.cand.len() as u32))
+        } else {
+            None
+        };
+
+        // --- Vertex-induced exclusions. ---
+        if !step.exclude.is_empty() {
+            let (parents, _rest) = self.chunks.split_at_mut(new_level);
+            for &j in &step.exclude {
+                let a = ancestor_idx(parents, level, idx, j);
+                let ex = resolve_list(parents, j, a, self.graph);
+                let w = exec::difference(&self.cand, ex, &mut self.tmp);
+                self.pending_cpu += w.0;
+                std::mem::swap(&mut self.cand, &mut self.tmp);
+            }
+        }
+
+        // --- Symmetry-breaking restriction window [lo, hi). ---
+        let mut lo: VertexId = 0;
+        let mut hi: VertexId = VertexId::MAX;
+        for &j in &step.greater_than {
+            lo = lo.max(vertices[j].saturating_add(1));
+        }
+        for &j in &step.less_than {
+            hi = hi.min(vertices[j]);
+        }
+        let start = self.cand.partition_point(|&v| v < lo);
+        let end = self.cand.partition_point(|&v| v < hi);
+        self.pending_cpu += 2 * (self.cand.len().max(2).ilog2() as u64);
+        if start >= end {
+            return;
+        }
+
+        // Earlier matched vertices that could collide with candidates in
+        // the [lo, hi) window — usually none, so the per-candidate
+        // duplicate check below reduces to a single integer compare.
+        let mut dups = [0 as VertexId; MAX_PATTERN];
+        let mut ndups = 0usize;
+        for &u in &vertices[..new_level] {
+            if u >= lo && u < hi {
+                dups[ndups] = u;
+                ndups += 1;
+            }
+        }
+        let dups = &dups[..ndups];
+
+        if new_level == depth - 1 {
+            // --- Last level: process embeddings (Algorithm 1, l.13-14). ---
+            if sink.bulk_count() && step.label == 0 {
+                let mut count = (end - start) as u64;
+                // Remove earlier vertices that slipped into the window.
+                for &u in &vertices[..new_level] {
+                    if u >= lo && u < hi && self.cand[start..end].binary_search(&u).is_ok() {
+                        count -= 1;
+                    }
+                }
+                sink.add_count(count);
+            } else if sink.bulk_count() {
+                // Labelled: iterate and filter by label.
+                let mut count = 0u64;
+                for k in start..end {
+                    let v = self.cand[k];
+                    if self.graph.label(v) == step.label && !dups.contains(&v) {
+                        count += 1;
+                    }
+                }
+                self.pending_cpu += (end - start) as u64;
+                sink.add_count(count);
+            } else {
+                self.emb_buf.clear();
+                self.emb_buf.extend_from_slice(&vertices[..new_level]);
+                self.emb_buf.push(0);
+                // Iterate the window, skipping earlier vertices. Clone the
+                // window out to release the borrow on self.cand cheaply.
+                for k in start..end {
+                    let v = self.cand[k];
+                    if dups.contains(&v)
+                        || (step.label != 0 && self.graph.label(v) != step.label)
+                    {
+                        continue;
+                    }
+                    *self.emb_buf.last_mut().unwrap() = v;
+                    sink.emit(&self.emb_buf);
+                }
+            }
+            self.pending_cpu += (end - start) as u64;
+            return;
+        }
+
+        // --- Interior level: create child extendable embeddings. ---
+        let needs = self.plan.needs_adj[new_level];
+        let hds = self.cfg.horizontal_sharing;
+        for k in start..end {
+            let v = self.cand[k];
+            if (!dups.is_empty() && dups.contains(&v))
+                || (step.label != 0 && self.graph.label(v) != step.label)
+            {
+                continue;
+            }
+            let mut vs = vertices;
+            vs[new_level] = v;
+            let list = if !needs {
+                ListRef::None
+            } else if self.transport.partitioned().is_local(self.machine, v) {
+                ListRef::Local(v)
+            } else if self.cache.lookup(v) {
+                ListRef::Cached(v)
+            } else {
+                let child = &mut self.chunks[new_level];
+                let next_idx = child.embs.len() as u32;
+                if hds {
+                    match child.hds_lookup(v) {
+                        Some(other) => ListRef::Shared(other),
+                        None => {
+                            child.hds_insert(v, next_idx);
+                            ListRef::Pending {
+                                vertex: v,
+                                owner: self.transport.partitioned().owner(v) as u8,
+                            }
+                        }
+                    }
+                } else {
+                    ListRef::Pending {
+                        vertex: v,
+                        owner: self.transport.partitioned().owner(v) as u8,
+                    }
+                }
+            };
+            let mut emb = Emb::new(vs, idx, list);
+            if let Some((off, len)) = stored_ref {
+                emb.stored_off = off;
+                emb.stored_len = len;
+            }
+            self.chunks[new_level].embs.push(emb);
+            self.pending_mem += self.compute.per_embedding_overhead_units;
+            self.embeddings_created += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Transport;
+    use crate::config::EngineConfig;
+    use crate::graph::gen;
+    use crate::metrics::NetModel;
+    use crate::partition::PartitionedGraph;
+    use crate::pattern::brute::{count_embeddings, Induced};
+    use crate::pattern::Pattern;
+    use crate::plan::{automine_plan, graphpi_plan};
+
+    fn run_count(
+        g: &Graph,
+        plan: &Plan,
+        machines: usize,
+        cfg: &EngineConfig,
+    ) -> (u64, RunStats) {
+        let pg = PartitionedGraph::new(g, machines);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let stats = KuduEngine::run(g, plan, cfg, &ComputeModel::default(), &mut tr);
+        (stats.total_count(), stats)
+    }
+
+    #[test]
+    fn triangle_count_matches_oracle() {
+        let g = gen::erdos_renyi(200, 900, 3);
+        let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let (got, _) = run_count(&g, &plan, 4, &EngineConfig::default());
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn cliques_match_oracle() {
+        let g = gen::rmat(8, 10, 5);
+        for k in 3..=5 {
+            let expect = count_embeddings(&g, &Pattern::clique(k), Induced::Edge);
+            let plan = graphpi_plan(&Pattern::clique(k), Induced::Edge);
+            let (got, _) = run_count(&g, &plan, 3, &EngineConfig::default());
+            assert_eq!(got, expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn chains_and_cycles_match_oracle() {
+        let g = gen::erdos_renyi(80, 240, 7);
+        for p in [Pattern::chain(3), Pattern::chain(4), Pattern::cycle(4), Pattern::star(4)] {
+            let expect = count_embeddings(&g, &p, Induced::Edge);
+            let plan = automine_plan(&p, Induced::Edge);
+            let (got, _) = run_count(&g, &plan, 2, &EngineConfig::default());
+            assert_eq!(got, expect, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn vertex_induced_matches_oracle() {
+        let g = gen::erdos_renyi(60, 200, 9);
+        for p in [Pattern::chain(3), Pattern::chain(4), Pattern::cycle(4)] {
+            let expect = count_embeddings(&g, &p, Induced::Vertex);
+            let plan = graphpi_plan(&p, Induced::Vertex);
+            let (got, _) = run_count(&g, &plan, 3, &EngineConfig::default());
+            assert_eq!(got, expect, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn count_invariant_to_machine_count() {
+        let g = gen::rmat(8, 8, 11);
+        let plan = automine_plan(&Pattern::clique(4), Induced::Edge);
+        let baseline = run_count(&g, &plan, 1, &EngineConfig::default()).0;
+        for n in [2, 3, 5, 8] {
+            assert_eq!(run_count(&g, &plan, n, &EngineConfig::default()).0, baseline);
+        }
+    }
+
+    #[test]
+    fn count_invariant_to_chunk_capacity() {
+        let g = gen::erdos_renyi(120, 500, 13);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let baseline = run_count(&g, &plan, 4, &EngineConfig::default()).0;
+        for cap in [2, 7, 64, 100_000] {
+            let cfg = EngineConfig { chunk_capacity: cap, ..Default::default() };
+            assert_eq!(run_count(&g, &plan, 4, &cfg).0, baseline, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn count_invariant_to_optimizations() {
+        let g = gen::rmat(8, 8, 17);
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        let baseline = run_count(&g, &plan, 4, &EngineConfig::default()).0;
+        for (vcs, hds, cache) in
+            [(false, true, 0.05), (true, false, 0.05), (true, true, 0.0), (false, false, 0.0)]
+        {
+            let cfg = EngineConfig {
+                vertical_sharing: vcs,
+                horizontal_sharing: hds,
+                cache_frac: cache,
+                ..Default::default()
+            };
+            // vertical_sharing=false requires a plan without Stored sources.
+            let plan2 = if vcs { plan.clone() } else { plan.without_vertical_sharing() };
+            assert_eq!(run_count(&g, &plan2, 4, &cfg).0, baseline);
+        }
+    }
+
+    #[test]
+    fn hds_reduces_traffic() {
+        let g = gen::planted_hubs(2000, 6000, 6, 0.3, 19);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let cfg_on = EngineConfig { cache_frac: 0.0, ..Default::default() };
+        let cfg_off =
+            EngineConfig { cache_frac: 0.0, horizontal_sharing: false, ..Default::default() };
+        let (_, on) = run_count(&g, &plan, 4, &cfg_on);
+        let (_, off) = run_count(&g, &plan, 4, &cfg_off);
+        assert!(
+            on.network_bytes < off.network_bytes,
+            "HDS on {} !< off {}",
+            on.network_bytes,
+            off.network_bytes
+        );
+    }
+
+    #[test]
+    fn cache_reduces_traffic_on_skewed() {
+        // Chunk capacity must be small relative to the per-machine work so
+        // the run spans many chunks — the regime the static cache targets
+        // (cross-chunk reuse; within a chunk HDS already dedups).
+        let g = gen::planted_hubs(2000, 6000, 6, 0.3, 23);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let cfg_on =
+            EngineConfig { cache_frac: 0.10, chunk_capacity: 256, ..Default::default() };
+        let cfg_off = EngineConfig { cache_frac: 0.0, chunk_capacity: 256, ..Default::default() };
+        let (c_on, on) = run_count(&g, &plan, 4, &cfg_on);
+        let (c_off, off) = run_count(&g, &plan, 4, &cfg_off);
+        assert_eq!(c_on, c_off);
+        assert!(on.network_bytes < off.network_bytes);
+        assert!(on.cache_hits > 0);
+    }
+
+    #[test]
+    fn chunk_capacity_bounds_memory() {
+        let g = gen::rmat(9, 10, 29);
+        let plan = automine_plan(&Pattern::clique(4), Induced::Edge);
+        let small = EngineConfig { chunk_capacity: 64, ..Default::default() };
+        let big = EngineConfig { chunk_capacity: 1 << 20, ..Default::default() };
+        let (_, s) = run_count(&g, &plan, 2, &small);
+        let (_, b) = run_count(&g, &plan, 2, &big);
+        assert!(s.peak_embedding_bytes < b.peak_embedding_bytes);
+    }
+
+    #[test]
+    fn single_machine_has_no_traffic() {
+        let g = gen::erdos_renyi(100, 400, 31);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let (_, st) = run_count(&g, &plan, 1, &EngineConfig::default());
+        assert_eq!(st.network_bytes, 0);
+        assert_eq!(st.exposed_comm_s, 0.0);
+    }
+
+    #[test]
+    fn collect_sink_yields_actual_embeddings() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (2, 3)]);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let pg = PartitionedGraph::new(&g, 2);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let mut sinks: Vec<sink::CollectSink> = Vec::new();
+        KuduEngine::run_with_sinks(
+            &g,
+            &plan,
+            &EngineConfig::default(),
+            &ComputeModel::default(),
+            &mut tr,
+            |_| sink::CollectSink::default(),
+            &mut sinks,
+        );
+        let all: Vec<_> = sinks.iter().flat_map(|s| s.embeddings.iter()).collect();
+        assert_eq!(all.len(), 1);
+        let mut vs = all[0].clone();
+        vs.sort_unstable();
+        assert_eq!(vs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn more_machines_scale_virtual_time_down() {
+        let g = gen::rmat(11, 12, 37);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let (_, t1) = run_count(&g, &plan, 1, &EngineConfig::default());
+        let (_, t8) = run_count(&g, &plan, 8, &EngineConfig::default());
+        assert!(
+            t8.virtual_time_s < t1.virtual_time_s,
+            "8-machine {} !< 1-machine {}",
+            t8.virtual_time_s,
+            t1.virtual_time_s
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! User-defined embedding processing (the function invoked at line 14 of
+//! the paper's Algorithm 1). Counting is special-cased so the last level
+//! can be processed in bulk from the filtered candidate set — the same
+//! optimisation every pattern-aware system applies.
+
+use crate::graph::VertexId;
+
+/// What to do with each discovered embedding.
+pub trait EmbeddingSink {
+    /// Called once per complete embedding, unless [`Self::bulk_count`] is
+    /// true, in which case the engine only reports counts.
+    fn emit(&mut self, vertices: &[VertexId]);
+
+    /// Bulk counting at the last level (skip per-embedding emit).
+    fn bulk_count(&self) -> bool {
+        false
+    }
+
+    /// Receive a bulk count of embeddings sharing a prefix.
+    fn add_count(&mut self, n: u64);
+}
+
+/// Counts embeddings.
+#[derive(Default, Debug)]
+pub struct CountSink {
+    pub count: u64,
+}
+
+impl EmbeddingSink for CountSink {
+    fn emit(&mut self, _vertices: &[VertexId]) {
+        self.count += 1;
+    }
+
+    fn bulk_count(&self) -> bool {
+        true
+    }
+
+    fn add_count(&mut self, n: u64) {
+        self.count += n;
+    }
+}
+
+/// Collects every embedding (tests, small-graph applications).
+#[derive(Default, Debug)]
+pub struct CollectSink {
+    pub embeddings: Vec<Vec<VertexId>>,
+}
+
+impl EmbeddingSink for CollectSink {
+    fn emit(&mut self, vertices: &[VertexId]) {
+        self.embeddings.push(vertices.to_vec());
+    }
+
+    fn add_count(&mut self, _n: u64) {
+        unreachable!("CollectSink never bulk-counts");
+    }
+}
+
+/// Applies a closure to each embedding (the general user function of
+/// Algorithm 1), e.g. support counting for FSM-style analyses.
+pub struct FnSink<F: FnMut(&[VertexId])> {
+    pub f: F,
+    pub count: u64,
+}
+
+impl<F: FnMut(&[VertexId])> FnSink<F> {
+    pub fn new(f: F) -> Self {
+        FnSink { f, count: 0 }
+    }
+}
+
+impl<F: FnMut(&[VertexId])> EmbeddingSink for FnSink<F> {
+    fn emit(&mut self, vertices: &[VertexId]) {
+        self.count += 1;
+        (self.f)(vertices);
+    }
+
+    fn add_count(&mut self, _n: u64) {
+        unreachable!("FnSink never bulk-counts");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_sink_bulk() {
+        let mut s = CountSink::default();
+        assert!(s.bulk_count());
+        s.add_count(5);
+        s.emit(&[1, 2, 3]);
+        assert_eq!(s.count, 6);
+    }
+
+    #[test]
+    fn collect_sink_gathers() {
+        let mut s = CollectSink::default();
+        assert!(!s.bulk_count());
+        s.emit(&[1, 2]);
+        s.emit(&[3, 4]);
+        assert_eq!(s.embeddings.len(), 2);
+        assert_eq!(s.embeddings[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn fn_sink_applies() {
+        let mut seen = 0u32;
+        {
+            let mut s = FnSink::new(|vs: &[VertexId]| {
+                assert_eq!(vs.len(), 3);
+            });
+            s.emit(&[1, 2, 3]);
+            seen += s.count as u32;
+        }
+        assert_eq!(seen, 1);
+    }
+}

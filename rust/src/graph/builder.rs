@@ -1,0 +1,106 @@
+//! Incremental graph construction with the paper's preprocessing rules:
+//! undirected interpretation, self-loop removal, edge deduplication.
+
+use super::{Graph, VertexId};
+
+/// Builds a [`Graph`] from edges, applying preprocessing.
+pub struct GraphBuilder {
+    num_vertices: usize,
+    edges: Vec<(VertexId, VertexId)>,
+}
+
+impl GraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        GraphBuilder { num_vertices, edges: Vec::new() }
+    }
+
+    /// Add a single undirected edge. Self-loops are dropped.
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) -> &mut Self {
+        if u != v {
+            assert!(
+                (u as usize) < self.num_vertices && (v as usize) < self.num_vertices,
+                "edge ({u},{v}) out of range for {} vertices",
+                self.num_vertices
+            );
+            self.edges.push(if u < v { (u, v) } else { (v, u) });
+        }
+        self
+    }
+
+    /// Add many edges.
+    pub fn add_edges(mut self, edges: &[(VertexId, VertexId)]) -> Self {
+        for &(u, v) in edges {
+            self.add_edge(u, v);
+        }
+        self
+    }
+
+    /// Finalise into CSR form: dedup, symmetrise, sort adjacency lists.
+    pub fn build(mut self) -> Graph {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+
+        // Counting sort into CSR. Each undirected edge contributes two
+        // directed arcs.
+        let n = self.num_vertices;
+        let mut deg = vec![0u64; n + 1];
+        for &(u, v) in &self.edges {
+            deg[u as usize + 1] += 1;
+            deg[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let offsets = deg;
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        let mut adj = vec![0 as VertexId; offsets[n] as usize];
+        for &(u, v) in &self.edges {
+            adj[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // Adjacency lists must be sorted for intersection kernels. The
+        // (u,v)-sorted insert order already sorts each u-row's "forward"
+        // half, but the backward arcs interleave — sort each row.
+        for v in 0..n {
+            let lo = offsets[v] as usize;
+            let hi = offsets[v + 1] as usize;
+            adj[lo..hi].sort_unstable();
+        }
+        Graph::from_csr(offsets, adj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_matches_from_edges() {
+        let edges = [(0u32, 1u32), (1, 2), (0, 2), (2, 3)];
+        let a = Graph::from_edges(4, &edges);
+        let mut b = GraphBuilder::new(4);
+        for &(u, v) in &edges {
+            b.add_edge(u, v);
+        }
+        let b = b.add_edges(&[]).build();
+        assert_eq!(a.num_edges(), b.num_edges());
+        for v in 0..4 {
+            assert_eq!(a.neighbors(v), b.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn sorted_adjacency() {
+        let g = Graph::from_edges(6, &[(5, 0), (3, 0), (4, 0), (1, 0), (2, 0)]);
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 5);
+    }
+}

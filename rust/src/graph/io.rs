@@ -1,0 +1,151 @@
+//! Edge-list file I/O: load real SNAP-format datasets when available,
+//! save/load the generated stand-ins for reproducible benchmarking.
+
+use super::{Graph, GraphBuilder, VertexId};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Load a whitespace-separated edge-list file (SNAP convention:
+/// `#`-prefixed comment lines, one `u v` pair per line). Vertex ids are
+/// compacted to a dense range.
+pub fn load_edge_list(path: &Path) -> std::io::Result<Graph> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut raw: Vec<(u64, u64)> = Vec::new();
+    let mut max_id = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else { continue };
+        let (Ok(u), Ok(v)) = (a.parse::<u64>(), b.parse::<u64>()) else { continue };
+        max_id = max_id.max(u).max(v);
+        raw.push((u, v));
+    }
+    // Compact ids: SNAP files can have sparse id spaces.
+    let mut present = vec![false; (max_id + 1) as usize];
+    for &(u, v) in &raw {
+        present[u as usize] = true;
+        present[v as usize] = true;
+    }
+    let mut remap = vec![u32::MAX; (max_id + 1) as usize];
+    let mut next = 0u32;
+    for (id, &p) in present.iter().enumerate() {
+        if p {
+            remap[id] = next;
+            next += 1;
+        }
+    }
+    let mut builder = GraphBuilder::new(next as usize);
+    for (u, v) in raw {
+        builder.add_edge(remap[u as usize], remap[v as usize]);
+    }
+    Ok(builder.add_edges(&[]).build())
+}
+
+/// Save a graph as an edge-list file (each undirected edge once).
+pub fn save_edge_list(g: &Graph, path: &Path) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# kudu edge list: {} vertices, {} edges", g.num_vertices(), g.num_edges())?;
+    for (u, v) in g.undirected_edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+/// Round-trippable binary CSR snapshot (little-endian), far faster to load
+/// than text for the larger stand-ins.
+pub fn save_csr(g: &Graph, path: &Path) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    let n = g.num_vertices() as u64;
+    w.write_all(&n.to_le_bytes())?;
+    // Degrees then adjacency; offsets are reconstructed on load.
+    for v in 0..g.num_vertices() as VertexId {
+        w.write_all(&(g.degree(v) as u64).to_le_bytes())?;
+    }
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            w.write_all(&u.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a binary CSR snapshot written by [`save_csr`].
+pub fn load_csr(path: &Path) -> std::io::Result<Graph> {
+    let bytes = std::fs::read(path)?;
+    let mut pos = 0usize;
+    let read_u64 = |p: &mut usize| -> u64 {
+        let v = u64::from_le_bytes(bytes[*p..*p + 8].try_into().unwrap());
+        *p += 8;
+        v
+    };
+    let n = read_u64(&mut pos) as usize;
+    let mut offsets = vec![0u64; n + 1];
+    for v in 0..n {
+        offsets[v + 1] = offsets[v] + read_u64(&mut pos);
+    }
+    let m = offsets[n] as usize;
+    let mut edges = vec![0 as VertexId; m];
+    for e in edges.iter_mut() {
+        *e = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+    }
+    Ok(Graph::from_csr(offsets, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn edge_list_round_trip() {
+        let g = gen::rmat(7, 6, 9);
+        let dir = std::env::temp_dir();
+        let p = dir.join("kudu_test_edges.txt");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_edges(), g2.num_edges());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csr_round_trip() {
+        let g = gen::erdos_renyi(300, 900, 5);
+        let p = std::env::temp_dir().join("kudu_test_csr.bin");
+        save_csr(&g, &p).unwrap();
+        let g2 = load_csr(&p).unwrap();
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_eq!(g.num_edges(), g2.num_edges());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let p = std::env::temp_dir().join("kudu_test_comments.txt");
+        std::fs::write(&p, "# header\n\n0 1\n% other\n1 2\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sparse_id_compaction() {
+        let p = std::env::temp_dir().join("kudu_test_sparse.txt");
+        std::fs::write(&p, "100 200\n200 4000\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,355 @@
+//! Graph substrate: CSR storage, preprocessing, generators, and I/O.
+//!
+//! All engines in this crate (Kudu and the baselines) operate on the same
+//! [`Graph`] representation: an undirected simple graph in CSR format with
+//! sorted adjacency lists. Sorted lists are what makes the pattern-aware
+//! enumeration loops cheap — every extension step is a sorted-set
+//! intersection (see [`crate::exec`]).
+
+pub mod builder;
+pub mod gen;
+pub mod io;
+
+pub use builder::GraphBuilder;
+
+/// Vertex identifier. 32 bits is plenty for the laptop-scale stand-in
+/// datasets (the paper's largest graph, Yahoo at 1.4 B vertices, would need
+/// u64 — a one-line change here).
+pub type VertexId = u32;
+
+/// An undirected simple graph in CSR (compressed sparse row) format.
+///
+/// `offsets[v]..offsets[v+1]` indexes into `edges`, giving the sorted
+/// neighbour list `N(v)`. Self-loops and duplicate edges are removed at
+/// build time (the paper pre-processes all datasets the same way).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    offsets: Vec<u64>,
+    edges: Vec<VertexId>,
+    /// Optional vertex labels (paper §2.1: "Kudu supports vertex labels").
+    labels: Option<Vec<Label>>,
+}
+
+/// Vertex label type (small alphabet, as in MiCo-style labelled mining).
+pub type Label = u8;
+
+impl Graph {
+    /// Build from an edge list. Deduplicates, removes self-loops, sorts
+    /// adjacency lists. Edges are interpreted as undirected (direction is
+    /// ignored, matching the paper's treatment of directed datasets).
+    pub fn from_edges(num_vertices: usize, edge_list: &[(VertexId, VertexId)]) -> Self {
+        GraphBuilder::new(num_vertices).add_edges(edge_list).build()
+    }
+
+    pub(crate) fn from_csr(offsets: Vec<u64>, edges: Vec<VertexId>) -> Self {
+        debug_assert!(!offsets.is_empty());
+        Graph { offsets, edges, labels: None }
+    }
+
+    /// Attach vertex labels (length must equal the vertex count).
+    pub fn with_labels(mut self, labels: Vec<Label>) -> Self {
+        assert_eq!(labels.len(), self.num_vertices());
+        self.labels = Some(labels);
+        self
+    }
+
+    /// The label of `v` (0 when the graph is unlabelled).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        self.labels.as_ref().map_or(0, |l| l[v as usize])
+    }
+
+    /// True if vertex labels are attached.
+    #[inline]
+    pub fn is_labelled(&self) -> bool {
+        self.labels.is_some()
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges (each stored twice in CSR).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len() / 2
+    }
+
+    /// Sorted neighbour list of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.edges[lo..hi]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// True if the (undirected) edge `(u, v)` exists. O(log deg).
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Maximum degree over all vertices.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Vertices sorted by decreasing degree (ties by id). Used by the
+    /// static-cache analysis and the dense hot-core extraction.
+    pub fn by_degree_desc(&self) -> Vec<VertexId> {
+        let mut vs: Vec<VertexId> = (0..self.num_vertices() as VertexId).collect();
+        vs.sort_by_key(|&v| (std::cmp::Reverse(self.degree(v)), v));
+        vs
+    }
+
+    /// Storage footprint in bytes of the CSR arrays (the paper reports
+    /// graph sizes in CSR bytes, e.g. RMAT-500M = 84 GB).
+    pub fn csr_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<u64>()
+            + self.edges.len() * std::mem::size_of::<VertexId>()
+    }
+
+    /// Iterator over all undirected edges, each reported once as (u, v)
+    /// with u < v.
+    pub fn undirected_edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices() as VertexId).flat_map(move |u| {
+            self.neighbors(u).iter().copied().filter(move |&v| u < v).map(move |v| (u, v))
+        })
+    }
+
+    /// Degree-skew summary: fraction of edge endpoints incident to the top
+    /// `frac` of vertices by degree. Close to 1.0 = highly skewed (uk-like),
+    /// close to `frac`·2 = flat (pt-like). Drives dataset stand-in checks.
+    pub fn skewness(&self, frac: f64) -> f64 {
+        let vs = self.by_degree_desc();
+        let top = ((vs.len() as f64 * frac).ceil() as usize).max(1).min(vs.len());
+        let covered: usize = vs[..top].iter().map(|&v| self.degree(v)).sum();
+        covered as f64 / self.edges.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Graph {
+        // Square 0-1-2-3 plus diagonal 0-2.
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)])
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = small();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(0), 3);
+        assert_eq!(g.degree(3), 2);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = small();
+        assert!(g.has_edge(0, 2));
+        assert!(g.has_edge(2, 0));
+        assert!(!g.has_edge(1, 3));
+        assert!(!g.has_edge(3, 1));
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2), (1, 2)]);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(2), &[1]);
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn undirected_edge_iter() {
+        let g = small();
+        let es: Vec<_> = g.undirected_edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn by_degree_desc_order() {
+        let g = small();
+        let order = g.by_degree_desc();
+        // 0 and 2 have degree 3; 1 and 3 degree 2. Ties broken by id.
+        assert_eq!(order, vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn skewness_bounds() {
+        let g = small();
+        let s = g.skewness(0.25);
+        assert!(s > 0.0 && s <= 1.0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, &[]);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn labels_attach_and_default() {
+        let g = small();
+        assert_eq!(g.label(0), 0);
+        assert!(!g.is_labelled());
+        let g = small().with_labels(vec![1, 2, 1, 2]);
+        assert!(g.is_labelled());
+        assert_eq!(g.label(1), 2);
+        assert_eq!(g.label(3), 2);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = Graph::from_edges(5, &[(0, 1)]);
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.degree(4), 0);
+        assert!(g.neighbors(3).is_empty());
+    }
+}
+
+/// Degree-ordered orientation of a graph (Pangolin's `orientation`
+/// optimization, which the paper credits for Pangolin's uk/tw TC wins in
+/// Table 4): each undirected edge is kept only as an arc from its
+/// lower-rank endpoint to its higher-rank endpoint, where rank =
+/// (degree, id). Out-neighbourhoods are sorted; every triangle appears
+/// exactly once as v→u, v→w, u→w, and out-degrees are bounded by
+/// O(√m) on real graphs — collapsing hub work.
+#[derive(Clone, Debug)]
+pub struct OrientedGraph {
+    offsets: Vec<u64>,
+    arcs: Vec<VertexId>,
+}
+
+impl OrientedGraph {
+    pub fn from(g: &Graph) -> Self {
+        let n = g.num_vertices();
+        let rank = |v: VertexId| (g.degree(v), v);
+        let mut deg = vec![0u64; n + 1];
+        for v in 0..n as VertexId {
+            for &u in g.neighbors(v) {
+                if rank(v) < rank(u) {
+                    deg[v as usize + 1] += 1;
+                }
+            }
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let offsets = deg;
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        let mut arcs = vec![0 as VertexId; offsets[n] as usize];
+        for v in 0..n as VertexId {
+            for &u in g.neighbors(v) {
+                if rank(v) < rank(u) {
+                    arcs[cursor[v as usize] as usize] = u;
+                    cursor[v as usize] += 1;
+                }
+            }
+        }
+        // CSR neighbour lists were sorted by id; the filtered arcs remain
+        // sorted by id.
+        OrientedGraph { offsets, arcs }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Sorted out-neighbours of `v` (higher-ranked endpoints only).
+    #[inline]
+    pub fn out(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.arcs[lo..hi]
+    }
+
+    /// Max out-degree — the orientation's work bound.
+    pub fn max_out_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId).map(|v| self.out(v).len()).max().unwrap_or(0)
+    }
+
+    /// Triangle count over the orientation: for each arc v→u,
+    /// |out(v) ∩ out(u)| — each triangle counted exactly once, no
+    /// symmetry-breaking filters needed.
+    pub fn triangle_count(&self) -> u64 {
+        self.triangle_count_with_work().0
+    }
+
+    /// Triangle count plus work units (element-steps), for the
+    /// virtual-time comparisons in Table 4.
+    pub fn triangle_count_with_work(&self) -> (u64, u64) {
+        let mut scratch = Vec::new();
+        let mut count = 0u64;
+        let mut work = 0u64;
+        for v in 0..self.num_vertices() as VertexId {
+            let ov = self.out(v);
+            for &u in ov {
+                work += crate::exec::intersect(ov, self.out(u), &mut scratch).0;
+                count += scratch.len() as u64;
+            }
+        }
+        (count, work)
+    }
+}
+
+#[cfg(test)]
+mod orientation_tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::brute;
+
+    #[test]
+    fn oriented_tc_matches_oracle() {
+        for (i, g) in [
+            gen::erdos_renyi(200, 800, 51),
+            gen::rmat(9, 8, 53),
+            gen::planted_hubs(500, 1500, 4, 0.3, 55),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let og = OrientedGraph::from(g);
+            assert_eq!(og.triangle_count(), brute::triangle_count(g), "graph {i}");
+        }
+    }
+
+    #[test]
+    fn orientation_halves_arcs() {
+        let g = gen::rmat(8, 8, 57);
+        let og = OrientedGraph::from(&g);
+        let arcs: usize = (0..og.num_vertices() as u32).map(|v| og.out(v).len()).sum();
+        assert_eq!(arcs, g.num_edges());
+    }
+
+    #[test]
+    fn orientation_caps_hub_outdegree() {
+        // The hub's out-degree collapses: all its edges point *into* it
+        // from lower-degree endpoints.
+        let g = gen::planted_hubs(1000, 2000, 2, 0.5, 59);
+        let og = OrientedGraph::from(&g);
+        assert!(
+            og.max_out_degree() < g.max_degree() / 4,
+            "out {} vs undirected {}",
+            og.max_out_degree(),
+            g.max_degree()
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! # Kudu — a distributed graph pattern mining (GPM) engine
+//!
+//! Reproduction of *Kudu: An Efficient and Scalable Distributed Graph
+//! Pattern Mining Engine* (Chen & Qian, 2021).
+//!
+//! Kudu mines patterns (triangles, cliques, motifs, …) over a graph that is
+//! **1-D hash-partitioned** across the machines of a cluster, and achieves
+//! performance competitive with replicated-graph systems. Its central
+//! abstraction is the **extendable embedding** — a partial embedding plus
+//! the *active edge lists* required to extend it by one vertex — which
+//! breaks pattern-aware enumeration (nested intersection loops) into
+//! fine-grained tasks with well-defined remote-data dependencies.
+//!
+//! The crate is organised as the three-layer architecture described in
+//! `DESIGN.md`:
+//!
+//! * [`graph`], [`pattern`], [`plan`], [`partition`], [`cluster`] — the
+//!   substrates: CSR graphs and generators, pattern graphs and isomorphism,
+//!   pattern-aware matching plans (the Automine / GraphPi "code
+//!   generators"), 1-D partitioning, and a deterministic simulated cluster
+//!   with an accounted transport.
+//! * [`engine`] — the paper's contribution: BFS-DFS hybrid chunk
+//!   exploration, circulant scheduling, hierarchical extendable-embedding
+//!   storage, vertical/horizontal sharing, the static cache, and
+//!   NUMA-aware mode.
+//! * [`baselines`] — the comparator execution models (G-thinker-like,
+//!   moving-computation-to-data, replicated GraphPi-like, single-machine).
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for the dense hot-core offload.
+//! * [`exec`], [`metrics`], [`config`] — intersection kernels, traffic and
+//!   virtual-time accounting, and run configuration.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod exec;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod pattern;
+pub mod plan;
+pub mod runtime;
+pub mod workloads;
+
+pub use config::{EngineConfig, RunConfig};
+pub use engine::KuduEngine;
+pub use graph::{Graph, VertexId};
+pub use pattern::Pattern;
+pub use plan::Plan;

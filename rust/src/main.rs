@@ -1,0 +1,178 @@
+//! Kudu CLI: run GPM workloads on the simulated distributed cluster,
+//! inspect plans, generate datasets, and print dataset statistics.
+//!
+//! ```text
+//! kudu run --graph lj --app 4-cc --engine k-graphpi --machines 8
+//! kudu plan --pattern clique-5 --planner graphpi
+//! kudu generate --dataset lj --out /tmp/lj.txt
+//! kudu stats --graph uk
+//! ```
+
+use kudu::cli::Args;
+use kudu::config::RunConfig;
+use kudu::graph::{gen, io, Graph};
+use kudu::metrics::{fmt_bytes, fmt_time};
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+fn parse_dataset(name: &str) -> Option<gen::Dataset> {
+    Some(match name {
+        "mc" => gen::Dataset::Mico,
+        "pt" => gen::Dataset::Patents,
+        "lj" => gen::Dataset::LiveJournal,
+        "uk" => gen::Dataset::Uk,
+        "tw" => gen::Dataset::Twitter,
+        "fr" => gen::Dataset::Friendster,
+        "rm" => gen::Dataset::RmatLarge,
+        "yh" => gen::Dataset::Yahoo,
+        _ => return None,
+    })
+}
+
+fn load_graph(spec: &str) -> Graph {
+    if let Some(d) = parse_dataset(spec) {
+        d.build()
+    } else {
+        io::load_edge_list(std::path::Path::new(spec))
+            .unwrap_or_else(|e| panic!("cannot load graph '{spec}': {e}"))
+    }
+}
+
+fn parse_app(s: &str) -> App {
+    let s = s.to_lowercase();
+    if s == "tc" {
+        return App::Tc;
+    }
+    if let Some(k) = s.strip_suffix("-mc") {
+        return App::Mc(k.parse().expect("bad k in k-mc"));
+    }
+    if let Some(k) = s.strip_suffix("-cc") {
+        return App::Cc(k.parse().expect("bad k in k-cc"));
+    }
+    panic!("unknown app '{s}' (expected tc, K-mc, or K-cc)");
+}
+
+fn parse_engine(s: &str) -> EngineKind {
+    match s.to_lowercase().as_str() {
+        "k-automine" | "automine" => EngineKind::Kudu(ClientSystem::Automine),
+        "k-graphpi" | "graphpi" => EngineKind::Kudu(ClientSystem::GraphPi),
+        "gthinker" | "g-thinker" => EngineKind::GThinker,
+        "movingcomp" | "arabesque" => EngineKind::MovingComp,
+        "replicated" => EngineKind::Replicated,
+        "single" => EngineKind::SingleMachine,
+        other => panic!("unknown engine '{other}'"),
+    }
+}
+
+fn parse_pattern(s: &str) -> Pattern {
+    let s = s.to_lowercase();
+    if s == "triangle" {
+        return Pattern::triangle();
+    }
+    if s == "diamond" {
+        return Pattern::diamond();
+    }
+    if s == "tailed-triangle" {
+        return Pattern::tailed_triangle();
+    }
+    for (prefix, f) in [
+        ("clique-", Pattern::clique as fn(usize) -> Pattern),
+        ("chain-", Pattern::chain),
+        ("cycle-", Pattern::cycle),
+        ("star-", Pattern::star),
+    ] {
+        if let Some(k) = s.strip_prefix(prefix) {
+            return f(k.parse().expect("bad pattern size"));
+        }
+    }
+    panic!("unknown pattern '{s}'");
+}
+
+fn usage() -> ! {
+    eprintln!("usage: kudu <run|plan|generate|stats> [flags]");
+    eprintln!("  run      --graph <mc|pt|lj|uk|tw|fr|rm|yh|path> --app <tc|K-mc|K-cc>");
+    eprintln!("           --engine <k-automine|k-graphpi|gthinker|movingcomp|replicated|single>");
+    eprintln!("           --machines N --threads N [--no-cache] [--no-hds] [--no-vcs]");
+    eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
+    eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
+    eprintln!("  generate --dataset <abbr> --out <path>");
+    eprintln!("  stats    --graph <abbr|path>");
+    std::process::exit(2)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "run" => {
+            let g = load_graph(&args.get("graph", "mc"));
+            let app = parse_app(&args.get("app", "tc"));
+            let engine = parse_engine(&args.get("engine", "k-graphpi"));
+            let machines = args.get_as::<usize>("machines", 8);
+            let mut cfg = RunConfig::with_machines(machines);
+            cfg.engine.threads = args.get_as::<usize>("threads", 1);
+            if args.has("no-cache") {
+                cfg.engine.cache_frac = 0.0;
+            }
+            cfg.engine.horizontal_sharing = !args.has("no-hds");
+            cfg.engine.vertical_sharing = !args.has("no-vcs");
+            println!(
+                "graph: {} vertices, {} edges (max degree {})",
+                g.num_vertices(),
+                g.num_edges(),
+                g.max_degree()
+            );
+            println!("engine: {} | app: {} | machines: {}", engine.name(), app.name(), machines);
+            let st = run_app(&g, app, engine, &cfg);
+            println!("counts: {:?}  (total {})", st.counts, st.total_count());
+            println!(
+                "virtual time: {}  wall: {}  comm overhead: {:.1}%",
+                fmt_time(st.virtual_time_s),
+                fmt_time(st.wall_s),
+                st.comm_overhead() * 100.0
+            );
+            println!(
+                "traffic: {} in {} messages | embeddings: {} | peak chunk mem: {}",
+                fmt_bytes(st.network_bytes),
+                st.network_messages,
+                st.embeddings_created,
+                fmt_bytes(st.peak_embedding_bytes)
+            );
+            if st.cache_hits + st.cache_misses > 0 {
+                println!(
+                    "cache: {} hits / {} misses ({:.1}% hit rate)",
+                    st.cache_hits,
+                    st.cache_misses,
+                    100.0 * st.cache_hits as f64 / (st.cache_hits + st.cache_misses) as f64
+                );
+            }
+        }
+        "plan" => {
+            let p = parse_pattern(&args.get("pattern", "triangle"));
+            let induced = if args.has("vertex-induced") { Induced::Vertex } else { Induced::Edge };
+            let client = match args.get("planner", "graphpi").as_str() {
+                "automine" => ClientSystem::Automine,
+                _ => ClientSystem::GraphPi,
+            };
+            println!("{}", client.plan(&p, induced).describe());
+        }
+        "generate" => {
+            let d = parse_dataset(&args.get("dataset", "lj")).expect("unknown dataset");
+            let out = args.get("out", "/tmp/kudu_graph.txt");
+            let g = d.build();
+            io::save_edge_list(&g, std::path::Path::new(&out)).expect("save failed");
+            println!("wrote {out} ({} vertices, {} edges)", g.num_vertices(), g.num_edges());
+        }
+        "stats" => {
+            let g = load_graph(&args.get("graph", "mc"));
+            println!("vertices: {}", g.num_vertices());
+            println!("edges: {}", g.num_edges());
+            println!("max degree: {}", g.max_degree());
+            println!("csr bytes: {}", fmt_bytes(g.csr_bytes() as u64));
+            println!("skew(top 5%): {:.1}% of edge mass", g.skewness(0.05) * 100.0);
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,241 @@
+//! Metrics: traffic accounting, the deterministic virtual-time model, and
+//! run reports.
+//!
+//! The paper reports wall-clock runtimes on an 8-node InfiniBand cluster,
+//! network traffic volumes, and "communication time on the critical path".
+//! On this single-core testbed, compute is measured in **work units**
+//! (element-steps, see [`crate::exec::Work`]) and communication in bytes;
+//! both are converted to *virtual time* through a calibrated cost model.
+//! The conversion is deterministic, so every scheduling experiment
+//! (circulant overlap, cache on/off, N machines) is exactly reproducible.
+
+/// Network cost model (per-message latency + bandwidth), defaults shaped
+/// like the paper's FDR InfiniBand (56 Gbps, ~µs latency) relative to the
+/// compute-rate calibration below.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Per-batch latency in virtual seconds.
+    pub latency_s: f64,
+    /// Bandwidth in bytes per virtual second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // Calibrated to the paper's compute:communication regime at this
+        // testbed's ~100× smaller graphs (DESIGN.md §1): per-vertex work
+        // scales with degree² while fetch bytes scale with degree, so a
+        // scaled-down graph needs a proportionally faster virtual network
+        // to land in the same operating point the paper measured (Fig 16:
+        // ≲20% exposed communication except on flat graphs like Patents).
+        // The raw FDR-InfiniBand figures (5 µs, 7 GB/s) at full graph
+        // scale map to ~1.7 µs / 21 GB/s here.
+        NetModel { latency_s: 1.7e-6, bandwidth_bps: 21e9 }
+    }
+}
+
+impl NetModel {
+    /// Virtual time to transfer one batched message of `bytes`.
+    #[inline]
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_s + bytes as f64 / self.bandwidth_bps
+        }
+    }
+}
+
+/// Compute cost model: virtual seconds per work unit (element-step).
+/// Calibrated so one unit ≈ one CPU element-step at ~1 GHz effective
+/// throughput, comparable to the paper's Xeon E5-2630 v3 cores.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    pub seconds_per_unit: f64,
+    /// Fixed overhead charged per extendable embedding created (the
+    /// paper's "overhead per extendable embedding (creation, scheduling)"
+    /// that shows up on lightweight-task graphs like Patents).
+    pub per_embedding_overhead_units: u64,
+    /// Multiplier for remote-NUMA-socket memory accesses.
+    pub numa_remote_penalty: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel {
+            seconds_per_unit: 1e-9,
+            per_embedding_overhead_units: 48,
+            numa_remote_penalty: 2.2,
+        }
+    }
+}
+
+/// Per-machine traffic matrix (bytes sent from i to j) plus message
+/// counts. This is the stream MPI would carry; Tables 6 / Fig 14 read it.
+#[derive(Clone, Debug)]
+pub struct Traffic {
+    n: usize,
+    bytes: Vec<u64>,
+    messages: Vec<u64>,
+}
+
+impl Traffic {
+    pub fn new(num_machines: usize) -> Self {
+        Traffic {
+            n: num_machines,
+            bytes: vec![0; num_machines * num_machines],
+            messages: vec![0; num_machines * num_machines],
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, from: usize, to: usize, bytes: u64) {
+        self.bytes[from * self.n + to] += bytes;
+        self.messages[from * self.n + to] += 1;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.iter().sum()
+    }
+
+    pub fn bytes_from(&self, machine: usize) -> u64 {
+        self.bytes[machine * self.n..(machine + 1) * self.n].iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &Traffic) {
+        assert_eq!(self.n, other.n);
+        for (a, b) in self.bytes.iter_mut().zip(&other.bytes) {
+            *a += b;
+        }
+        for (a, b) in self.messages.iter_mut().zip(&other.messages) {
+            *a += b;
+        }
+    }
+}
+
+/// Outcome of one mining run, on one engine. All the paper's reported
+/// quantities derive from this.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Pattern embedding count(s) — the mining answer.
+    pub counts: Vec<u64>,
+    /// Total compute work units across all machines.
+    pub work_units: u64,
+    /// Number of extendable embeddings (or tasks) created.
+    pub embeddings_created: u64,
+    /// Bytes moved between machines.
+    pub network_bytes: u64,
+    /// Number of batched messages.
+    pub network_messages: u64,
+    /// Virtual makespan: max over machines of per-machine finish time.
+    pub virtual_time_s: f64,
+    /// Virtual communication time left exposed on the critical path
+    /// (after overlap) summed over the slowest machine's timeline.
+    pub exposed_comm_s: f64,
+    /// Real wall-clock of the whole simulation (all machines on one core).
+    pub wall_s: f64,
+    /// Peak bytes of extendable-embedding + fetched-edge-list storage on
+    /// any machine (chunk arenas; memory-bounding claim of §5.2).
+    pub peak_embedding_bytes: u64,
+    /// Remote-NUMA-socket accesses (Table 7).
+    pub numa_remote_accesses: u64,
+    /// Static-cache hits / misses (Table 6 analysis).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl RunStats {
+    /// Communication overhead ratio (Fig 16): exposed comm / total runtime.
+    pub fn comm_overhead(&self) -> f64 {
+        if self.virtual_time_s == 0.0 {
+            0.0
+        } else {
+            self.exposed_comm_s / self.virtual_time_s
+        }
+    }
+
+    /// Sum of counts (single-pattern runs have one entry).
+    pub fn total_count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// Pretty-print helpers for the table harness.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1}{}", UNITS[u])
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 3600.0 {
+        format!("{s:.1}s")
+    } else {
+        format!("{:.1}h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_matrix() {
+        let mut t = Traffic::new(3);
+        t.record(0, 1, 100);
+        t.record(1, 0, 50);
+        t.record(0, 2, 25);
+        assert_eq!(t.total_bytes(), 175);
+        assert_eq!(t.total_messages(), 3);
+        assert_eq!(t.bytes_from(0), 125);
+    }
+
+    #[test]
+    fn traffic_merge() {
+        let mut a = Traffic::new(2);
+        a.record(0, 1, 10);
+        let mut b = Traffic::new(2);
+        b.record(0, 1, 5);
+        b.record(1, 0, 7);
+        a.merge(&b);
+        assert_eq!(a.total_bytes(), 22);
+    }
+
+    #[test]
+    fn net_model_monotone() {
+        let m = NetModel::default();
+        assert_eq!(m.transfer_time(0), 0.0);
+        assert!(m.transfer_time(1000) > m.transfer_time(10));
+        assert!(m.transfer_time(1) >= m.latency_s);
+    }
+
+    #[test]
+    fn comm_overhead_ratio() {
+        let s = RunStats { virtual_time_s: 10.0, exposed_comm_s: 2.0, ..Default::default() };
+        assert!((s.comm_overhead() - 0.2).abs() < 1e-12);
+        let z = RunStats::default();
+        assert_eq!(z.comm_overhead(), 0.0);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(fmt_bytes(512), "512.0B");
+        assert!(fmt_bytes(2048).contains("KB"));
+        assert!(fmt_bytes(3 * 1024 * 1024 * 1024).contains("GB"));
+        assert!(fmt_time(0.5).contains("ms"));
+        assert!(fmt_time(4000.0).contains('h'));
+    }
+}

@@ -1,0 +1,159 @@
+//! 1-D graph partitioning (paper §3.1).
+//!
+//! The vertex set is hash-partitioned into N parts; machine i holds all
+//! edges with at least one endpoint in V_i (so every owned vertex's full
+//! adjacency list is local). Partitioning is what lets Kudu scale memory —
+//! the table-5 harness uses [`PartitionedGraph::partition_bytes`] against a
+//! per-machine budget to demonstrate the replication gate.
+
+use crate::graph::{Graph, VertexId};
+
+/// Hash-based vertex → machine mapping. The paper uses a hash function for
+/// balanced distribution; we use a multiplicative hash (plain modulo would
+/// correlate with generator vertex ids).
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionMap {
+    num_machines: usize,
+}
+
+impl PartitionMap {
+    pub fn new(num_machines: usize) -> Self {
+        assert!(num_machines >= 1);
+        PartitionMap { num_machines }
+    }
+
+    #[inline]
+    pub fn num_machines(&self) -> usize {
+        self.num_machines
+    }
+
+    /// Owner machine of vertex `v`.
+    #[inline]
+    pub fn owner(&self, v: VertexId) -> usize {
+        // Fibonacci hashing, reduced to [0, N).
+        let h = (v as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        ((h >> 32) as usize * self.num_machines) >> 32
+    }
+}
+
+/// A 1-D partitioned graph: the shared CSR plus the ownership map.
+///
+/// In the simulated cluster all partitions live in one address space; the
+/// *policy* distinction between local and remote is made by
+/// [`PartitionedGraph::is_local`], and every remote access is routed
+/// through the accounted transport in [`crate::cluster`].
+#[derive(Clone)]
+pub struct PartitionedGraph<'g> {
+    pub graph: &'g Graph,
+    pub map: PartitionMap,
+}
+
+impl<'g> PartitionedGraph<'g> {
+    pub fn new(graph: &'g Graph, num_machines: usize) -> Self {
+        PartitionedGraph { graph, map: PartitionMap::new(num_machines) }
+    }
+
+    #[inline]
+    pub fn owner(&self, v: VertexId) -> usize {
+        self.map.owner(v)
+    }
+
+    #[inline]
+    pub fn is_local(&self, machine: usize, v: VertexId) -> bool {
+        self.map.owner(v) == machine
+    }
+
+    /// Vertices owned by `machine` (the start vertices of its embedding
+    /// trees).
+    pub fn owned_vertices(&self, machine: usize) -> Vec<VertexId> {
+        (0..self.graph.num_vertices() as VertexId)
+            .filter(|&v| self.owner(v) == machine)
+            .collect()
+    }
+
+    /// CSR bytes held by `machine`: offsets + adjacency of owned vertices
+    /// (each edge with ≥1 endpoint in V_i is stored on machine i, per the
+    /// paper's O(|V|/p + |E|/p) representation).
+    pub fn partition_bytes(&self, machine: usize) -> usize {
+        let mut edges = 0usize;
+        let mut verts = 0usize;
+        for v in 0..self.graph.num_vertices() as VertexId {
+            if self.owner(v) == machine {
+                verts += 1;
+                edges += self.graph.degree(v);
+            }
+        }
+        verts * std::mem::size_of::<u64>() + edges * std::mem::size_of::<VertexId>()
+    }
+
+    /// Max over machines of partition size — the per-machine memory
+    /// requirement under partitioning.
+    pub fn max_partition_bytes(&self) -> usize {
+        (0..self.map.num_machines()).map(|m| self.partition_bytes(m)).max().unwrap_or(0)
+    }
+
+    /// Load-balance factor: max partition bytes / mean partition bytes.
+    pub fn balance_factor(&self) -> f64 {
+        let sizes: Vec<usize> =
+            (0..self.map.num_machines()).map(|m| self.partition_bytes(m)).collect();
+        let max = *sizes.iter().max().unwrap() as f64;
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn owner_in_range_and_stable() {
+        let map = PartitionMap::new(8);
+        for v in 0..10_000u32 {
+            let o = map.owner(v);
+            assert!(o < 8);
+            assert_eq!(o, map.owner(v));
+        }
+    }
+
+    #[test]
+    fn single_machine_owns_all() {
+        let map = PartitionMap::new(1);
+        for v in 0..100u32 {
+            assert_eq!(map.owner(v), 0);
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_vertices() {
+        let g = gen::erdos_renyi(500, 1500, 5);
+        let pg = PartitionedGraph::new(&g, 4);
+        let total: usize = (0..4).map(|m| pg.owned_vertices(m).len()).sum();
+        assert_eq!(total, g.num_vertices());
+    }
+
+    #[test]
+    fn partitions_reasonably_balanced() {
+        let g = gen::rmat(12, 8, 7);
+        let pg = PartitionedGraph::new(&g, 8);
+        // Hash partitioning of a skewed graph is still vertex-balanced;
+        // byte balance is looser but bounded.
+        assert!(pg.balance_factor() < 3.0, "balance {}", pg.balance_factor());
+    }
+
+    #[test]
+    fn partition_bytes_sum_versus_csr() {
+        let g = gen::erdos_renyi(300, 1000, 9);
+        let pg = PartitionedGraph::new(&g, 4);
+        let sum: usize = (0..4).map(|m| pg.partition_bytes(m)).sum();
+        // Partitioned total ≈ whole CSR (each arc stored once at its
+        // source vertex's owner; offsets slightly undercounted).
+        assert!(sum <= g.csr_bytes());
+        assert!(sum >= g.csr_bytes() / 2);
+    }
+}

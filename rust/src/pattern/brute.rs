@@ -1,0 +1,154 @@
+//! Brute-force embedding enumeration oracle.
+//!
+//! The correctness anchor for every engine in this crate: a direct
+//! backtracking enumerator over *labelled* vertex tuples, counting both
+//! edge-induced and vertex-induced embeddings. Deliberately simple and
+//! slow; used only on small graphs in tests and to validate the planners.
+
+use super::Pattern;
+use crate::graph::{Graph, VertexId};
+
+/// Embedding semantics (paper §2.1): edge-induced embeddings require the
+/// pattern's edges to be present; vertex-induced additionally require the
+/// pattern's *non-edges* to be absent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Induced {
+    Edge,
+    Vertex,
+}
+
+/// Count embeddings of `p` in `g` (unlabelled, i.e. subgraphs isomorphic
+/// to `p`). Counts each subgraph once — labelled matches are divided by
+/// |Aut(p)|.
+pub fn count_embeddings(g: &Graph, p: &Pattern, induced: Induced) -> u64 {
+    let labelled = count_labelled(g, p, induced);
+    let auts = p.automorphisms().len() as u64;
+    debug_assert_eq!(labelled % auts, 0, "labelled count must divide by |Aut|");
+    labelled / auts
+}
+
+/// Count labelled matches: injective maps f: V(p) -> V(g) preserving
+/// (and for vertex-induced, reflecting) adjacency.
+pub fn count_labelled(g: &Graph, p: &Pattern, induced: Induced) -> u64 {
+    let mut assignment = vec![u32::MAX; p.num_vertices()];
+    let mut count = 0u64;
+    extend(g, p, induced, &mut assignment, 0, &mut count);
+    count
+}
+
+fn extend(
+    g: &Graph,
+    p: &Pattern,
+    induced: Induced,
+    assignment: &mut Vec<VertexId>,
+    level: usize,
+    count: &mut u64,
+) {
+    if level == p.num_vertices() {
+        *count += 1;
+        return;
+    }
+    // Candidates: if the pattern vertex has an already-assigned neighbour,
+    // iterate that neighbour's adjacency (pattern connectivity guarantees
+    // one exists for level > 0 under a connectivity-respecting order; we
+    // fall back to all vertices otherwise for full generality).
+    let anchor = (0..level).find(|&j| p.has_edge(j, level));
+    let candidates: Vec<VertexId> = match anchor {
+        Some(j) => g.neighbors(assignment[j]).to_vec(),
+        None => (0..g.num_vertices() as VertexId).collect(),
+    };
+    'cand: for v in candidates {
+        if p.label(level) != 0 && g.label(v) != p.label(level) {
+            continue 'cand;
+        }
+        for j in 0..level {
+            if assignment[j] == v {
+                continue 'cand;
+            }
+            let has = g.has_edge(assignment[j], v);
+            if p.has_edge(j, level) {
+                if !has {
+                    continue 'cand;
+                }
+            } else if induced == Induced::Vertex && has {
+                continue 'cand;
+            }
+        }
+        assignment[level] = v;
+        extend(g, p, induced, assignment, level + 1, count);
+        assignment[level] = u32::MAX;
+    }
+}
+
+/// Convenience: triangle count via the oracle.
+pub fn triangle_count(g: &Graph) -> u64 {
+    count_embeddings(g, &Pattern::triangle(), Induced::Edge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn triangles_on_k4() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert_eq!(triangle_count(&g), 4);
+        assert_eq!(count_embeddings(&g, &Pattern::clique(4), Induced::Edge), 1);
+    }
+
+    #[test]
+    fn square_has_no_triangle() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert_eq!(triangle_count(&g), 0);
+        assert_eq!(count_embeddings(&g, &Pattern::cycle(4), Induced::Edge), 1);
+        // 4 edge-induced 3-chains: one per omitted vertex... actually one
+        // per pair of adjacent edges = 4.
+        assert_eq!(count_embeddings(&g, &Pattern::chain(3), Induced::Edge), 4);
+    }
+
+    #[test]
+    fn vertex_vs_edge_induced() {
+        // K4: every 3-subset forms a triangle; no vertex-induced 3-chains
+        // (any 3 vertices are fully connected).
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert_eq!(count_embeddings(&g, &Pattern::chain(3), Induced::Vertex), 0);
+        assert_eq!(count_embeddings(&g, &Pattern::chain(3), Induced::Edge), 12);
+    }
+
+    #[test]
+    fn chain_counts_on_path() {
+        // Path 0-1-2-3: 3-chain embeddings = 2 (012, 123).
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(count_embeddings(&g, &Pattern::chain(3), Induced::Edge), 2);
+        assert_eq!(count_embeddings(&g, &Pattern::chain(4), Induced::Edge), 1);
+    }
+
+    #[test]
+    fn star_counts() {
+        // Star with centre 0, leaves 1..4: 4-star embeddings = C(4,3) = 4.
+        let g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(count_embeddings(&g, &Pattern::star(4), Induced::Edge), 4);
+    }
+
+    #[test]
+    fn labelled_matching_filters() {
+        // Triangle 0-1-2 with labels (1,1,2) on K3 graph labelled (1,1,2):
+        // exactly one subgraph matches; with labels (2,2,2): none.
+        let g = Graph::from_edges(3, &[(0, 1), (0, 2), (1, 2)]).with_labels(vec![1, 1, 2]);
+        let p = Pattern::triangle().with_labels(&[1, 1, 2]);
+        assert_eq!(count_embeddings(&g, &p, Induced::Edge), 1);
+        let q = Pattern::triangle().with_labels(&[2, 2, 2]);
+        assert_eq!(count_embeddings(&g, &q, Induced::Edge), 0);
+    }
+
+    #[test]
+    fn labelled_divides_by_aut() {
+        let g = gen::erdos_renyi(60, 200, 11);
+        for p in [Pattern::triangle(), Pattern::chain(3), Pattern::cycle(4)] {
+            // Just exercising the debug_assert in count_embeddings.
+            let _ = count_embeddings(&g, &p, Induced::Edge);
+            let _ = count_embeddings(&g, &p, Induced::Vertex);
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! Pattern substrate: small pattern graphs, isomorphism, automorphism
+//! groups, canonical forms, and k-motif pattern generation.
+//!
+//! Patterns in GPM are tiny (the paper mines up to size 6), so adjacency
+//! is a bitset per vertex and isomorphism is permutation search — exact
+//! and fast at these sizes.
+
+pub mod brute;
+pub mod motifs;
+
+use std::fmt;
+
+/// Maximum pattern size. The paper's largest workloads are 5-clique and
+/// 6-chain; 8 leaves headroom and keeps per-embedding storage inline.
+pub const MAX_PATTERN: usize = 8;
+
+/// A small connected undirected pattern graph. Vertex `i`'s neighbourhood
+/// is the bitset `adj[i]`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Pattern {
+    n: usize,
+    adj: [u8; MAX_PATTERN],
+    /// Per-vertex labels; all-zero means unlabelled (paper §2.1).
+    labels: [u8; MAX_PATTERN],
+}
+
+impl fmt::Debug for Pattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pattern(n={}, edges={:?})", self.n, self.edges())
+    }
+}
+
+impl Pattern {
+    /// Build from an edge list over vertices `0..n`.
+    pub fn new(n: usize, edges: &[(usize, usize)]) -> Self {
+        assert!(n >= 1 && n <= MAX_PATTERN, "pattern size {n} out of range");
+        let mut adj = [0u8; MAX_PATTERN];
+        for &(u, v) in edges {
+            assert!(u < n && v < n && u != v, "bad pattern edge ({u},{v})");
+            adj[u] |= 1 << v;
+            adj[v] |= 1 << u;
+        }
+        Pattern { n, adj, labels: [0; MAX_PATTERN] }
+    }
+
+    /// Attach vertex labels. Labelled patterns only match graph vertices
+    /// with the same label; automorphisms must preserve labels too.
+    pub fn with_labels(mut self, labels: &[u8]) -> Self {
+        assert_eq!(labels.len(), self.n);
+        self.labels[..self.n].copy_from_slice(labels);
+        self
+    }
+
+    /// The label of pattern vertex `u` (0 if unlabelled).
+    #[inline]
+    pub fn label(&self, u: usize) -> u8 {
+        self.labels[u]
+    }
+
+    /// True if any vertex carries a non-zero label.
+    pub fn is_labelled(&self) -> bool {
+        self.labels[..self.n].iter().any(|&l| l != 0)
+    }
+
+    /// The size-k clique (complete pattern).
+    pub fn clique(k: usize) -> Self {
+        let mut edges = Vec::new();
+        for u in 0..k {
+            for v in (u + 1)..k {
+                edges.push((u, v));
+            }
+        }
+        Pattern::new(k, &edges)
+    }
+
+    /// Triangle (3-clique) — the paper's TC workload.
+    pub fn triangle() -> Self {
+        Pattern::clique(3)
+    }
+
+    /// The k-chain (path with k vertices, k-1 edges).
+    pub fn chain(k: usize) -> Self {
+        let edges: Vec<_> = (0..k - 1).map(|i| (i, i + 1)).collect();
+        Pattern::new(k, &edges)
+    }
+
+    /// The k-star (one centre, k-1 leaves).
+    pub fn star(k: usize) -> Self {
+        let edges: Vec<_> = (1..k).map(|i| (0, i)).collect();
+        Pattern::new(k, &edges)
+    }
+
+    /// The k-cycle.
+    pub fn cycle(k: usize) -> Self {
+        assert!(k >= 3);
+        let mut edges: Vec<_> = (0..k - 1).map(|i| (i, i + 1)).collect();
+        edges.push((k - 1, 0));
+        Pattern::new(k, &edges)
+    }
+
+    /// "Tailed triangle": triangle with a pendant vertex.
+    pub fn tailed_triangle() -> Self {
+        Pattern::new(4, &[(0, 1), (0, 2), (1, 2), (2, 3)])
+    }
+
+    /// Diamond: 4-cycle plus one chord (two triangles sharing an edge).
+    pub fn diamond() -> Self {
+        Pattern::new(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)])
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj[..self.n].iter().map(|a| a.count_ones() as usize).sum::<usize>() / 2
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u] & (1 << v) != 0
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].count_ones() as usize
+    }
+
+    /// Neighbour bitset of `u`.
+    #[inline]
+    pub fn adj_bits(&self, u: usize) -> u8 {
+        self.adj[u]
+    }
+
+    /// Edges as (u, v) with u < v.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut es = Vec::new();
+        for u in 0..self.n {
+            for v in (u + 1)..self.n {
+                if self.has_edge(u, v) {
+                    es.push((u, v));
+                }
+            }
+        }
+        es
+    }
+
+    /// True if the pattern is connected (required of GPM patterns).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return false;
+        }
+        let mut seen = 1u8;
+        let mut frontier = 1u8;
+        while frontier != 0 {
+            let mut next = 0u8;
+            let mut f = frontier;
+            while f != 0 {
+                let u = f.trailing_zeros() as usize;
+                f &= f - 1;
+                next |= self.adj[u] & !seen;
+            }
+            seen |= next;
+            frontier = next;
+        }
+        seen.count_ones() as usize == self.n
+    }
+
+    /// Apply a vertex permutation: vertex `i` of the result is vertex
+    /// `perm[i]` of `self`.
+    pub fn permute(&self, perm: &[usize]) -> Pattern {
+        assert_eq!(perm.len(), self.n);
+        let mut edges = Vec::new();
+        for (i, &pi) in perm.iter().enumerate() {
+            for (j, &pj) in perm.iter().enumerate().skip(i + 1) {
+                if self.has_edge(pi, pj) {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let mut out = Pattern::new(self.n, &edges);
+        for (i, &pi) in perm.iter().enumerate() {
+            out.labels[i] = self.labels[pi];
+        }
+        out
+    }
+
+    /// All automorphisms (permutations p with p(G) = G), as permutation
+    /// vectors. |Aut| divides n! and is the overcount factor symmetry
+    /// breaking must cancel.
+    pub fn automorphisms(&self) -> Vec<Vec<usize>> {
+        let mut autos = Vec::new();
+        let mut perm: Vec<usize> = (0..self.n).collect();
+        permute_search(self, &mut perm, 0, &mut autos);
+        autos
+    }
+
+    /// True if `self` and `other` are isomorphic.
+    pub fn isomorphic(&self, other: &Pattern) -> bool {
+        if self.n != other.n || self.num_edges() != other.num_edges() {
+            return false;
+        }
+        self.canonical_code() == other.canonical_code()
+    }
+
+    /// A canonical code: the lexicographically largest adjacency-bitstring
+    /// over all vertex permutations. Exact (patterns are tiny).
+    pub fn canonical_code(&self) -> u64 {
+        let mut best = 0u64;
+        let mut perm: Vec<usize> = (0..self.n).collect();
+        canon_search(self, &mut perm, 0, &mut best);
+        best
+    }
+
+    /// Degree sequence, descending — a cheap isomorphism invariant.
+    pub fn degree_sequence(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = (0..self.n).map(|u| self.degree(u)).collect();
+        d.sort_unstable_by(|a, b| b.cmp(a));
+        d
+    }
+}
+
+/// Encode the upper-triangular adjacency of `p` under permutation `perm`
+/// as a u64 (row-major bits), with the permuted label sequence folded into
+/// the high bits so labelled patterns canonicalise label-consistently.
+fn code_under(p: &Pattern, perm: &[usize]) -> u64 {
+    let mut code = 0u64;
+    let mut bit = 0;
+    for i in 0..p.n {
+        for j in (i + 1)..p.n {
+            if p.has_edge(perm[i], perm[j]) {
+                code |= 1 << bit;
+            }
+            bit += 1;
+        }
+    }
+    // Fold labels (3 bits per vertex is enough for test alphabets; a full
+    // canonical form would hash, but patterns here are tiny).
+    let mut label_code = 0u64;
+    for i in 0..p.n {
+        label_code = (label_code << 3) | (p.labels[perm[i]] as u64 & 0x7);
+    }
+    code | (label_code << 28)
+}
+
+fn canon_search(p: &Pattern, perm: &mut Vec<usize>, k: usize, best: &mut u64) {
+    if k == p.n {
+        let c = code_under(p, perm);
+        if c > *best {
+            *best = c;
+        }
+        return;
+    }
+    for i in k..p.n {
+        perm.swap(k, i);
+        canon_search(p, perm, k + 1, best);
+        perm.swap(k, i);
+    }
+}
+
+fn permute_search(p: &Pattern, perm: &mut Vec<usize>, k: usize, out: &mut Vec<Vec<usize>>) {
+    if k == p.n {
+        if code_under(p, perm) == code_under(p, &(0..p.n).collect::<Vec<_>>()) {
+            out.push(perm.clone());
+        }
+        return;
+    }
+    for i in k..p.n {
+        perm.swap(k, i);
+        // Prune: the partial map must preserve adjacency among placed
+        // vertices and the vertex label.
+        let ok = p.labels[k] == p.labels[perm[k]]
+            && (0..k).all(|j| p.has_edge(j, k) == p.has_edge(perm[j], perm[k]));
+        if ok {
+            permute_search(p, perm, k + 1, out);
+        }
+        perm.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_structure() {
+        let k4 = Pattern::clique(4);
+        assert_eq!(k4.num_vertices(), 4);
+        assert_eq!(k4.num_edges(), 6);
+        assert!(k4.is_connected());
+        for u in 0..4 {
+            assert_eq!(k4.degree(u), 3);
+        }
+    }
+
+    #[test]
+    fn chain_and_star() {
+        let c = Pattern::chain(4);
+        assert_eq!(c.num_edges(), 3);
+        assert_eq!(c.degree_sequence(), vec![2, 2, 1, 1]);
+        let s = Pattern::star(4);
+        assert_eq!(s.degree_sequence(), vec![3, 1, 1, 1]);
+        assert!(!c.isomorphic(&s));
+    }
+
+    #[test]
+    fn automorphism_counts() {
+        // Known |Aut|: triangle 3!=6, 3-chain 2, 4-clique 24, 4-cycle 8,
+        // 4-star 3!=6, diamond 4.
+        assert_eq!(Pattern::triangle().automorphisms().len(), 6);
+        assert_eq!(Pattern::chain(3).automorphisms().len(), 2);
+        assert_eq!(Pattern::clique(4).automorphisms().len(), 24);
+        assert_eq!(Pattern::cycle(4).automorphisms().len(), 8);
+        assert_eq!(Pattern::star(4).automorphisms().len(), 6);
+        assert_eq!(Pattern::diamond().automorphisms().len(), 4);
+    }
+
+    #[test]
+    fn isomorphism_detects_relabelling() {
+        let a = Pattern::new(4, &[(0, 1), (1, 2), (2, 3)]);
+        let b = Pattern::new(4, &[(2, 0), (0, 3), (3, 1)]);
+        assert!(a.isomorphic(&b));
+        assert!(!a.isomorphic(&Pattern::star(4)));
+    }
+
+    #[test]
+    fn permute_round_trip() {
+        let p = Pattern::tailed_triangle();
+        let perm = vec![2, 0, 3, 1];
+        let q = p.permute(&perm);
+        assert!(p.isomorphic(&q));
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(Pattern::cycle(5).is_connected());
+        let disconnected = Pattern::new(4, &[(0, 1), (2, 3)]);
+        assert!(!disconnected.is_connected());
+    }
+
+    #[test]
+    fn labelled_automorphisms_shrink() {
+        // Unlabelled triangle: |Aut| = 6. With labels (1,1,2): only the
+        // swap of the two label-1 vertices survives => |Aut| = 2.
+        let p = Pattern::triangle().with_labels(&[1, 1, 2]);
+        assert_eq!(p.automorphisms().len(), 2);
+        let q = Pattern::triangle().with_labels(&[1, 2, 3]);
+        assert_eq!(q.automorphisms().len(), 1);
+    }
+
+    #[test]
+    fn labelled_permute_carries_labels() {
+        let p = Pattern::chain(3).with_labels(&[5, 6, 7]);
+        let q = p.permute(&[2, 1, 0]);
+        assert_eq!(q.label(0), 7);
+        assert_eq!(q.label(2), 5);
+        assert!(q.is_labelled());
+    }
+
+    #[test]
+    fn canonical_code_invariant() {
+        let p = Pattern::diamond();
+        let q = p.permute(&[3, 1, 0, 2]);
+        assert_eq!(p.canonical_code(), q.canonical_code());
+    }
+}

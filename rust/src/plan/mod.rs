@@ -1,0 +1,444 @@
+//! Pattern-aware matching plans — the "code generator" layer.
+//!
+//! A [`Plan`] is the compiled form of a pattern enumeration algorithm
+//! (the nested intersection loops of paper Fig. 2): a matching order, the
+//! backward-neighbour sets to intersect at each level, symmetry-breaking
+//! restrictions, and vertical-sharing (reusable intersection) annotations.
+//!
+//! Two planners are provided, mirroring the two client systems the paper
+//! ports onto Kudu:
+//! * [`automine_plan`] — Automine-style: connectivity-greedy matching
+//!   order, orbit-stabiliser symmetry breaking on that order.
+//! * [`graphpi_plan`] — GraphPi-style: searches all connectivity-respecting
+//!   orders and picks the one minimising an estimated enumeration cost
+//!   (GraphPi's "effective redundancy elimination" — better restriction
+//!   placement, which is why k-GraphPi beats k-Automine on 3-MC in
+//!   Table 3).
+//!
+//! The Kudu engine interprets plans generically; porting a new client
+//! system is writing a new planner (the paper's ~500-line "modify the code
+//! generator" porting cost).
+
+pub mod restrict;
+
+use crate::pattern::brute::Induced;
+use crate::pattern::Pattern;
+pub use restrict::symmetry_restrictions;
+
+/// One source feeding the candidate-set intersection at some level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// The adjacency list of the vertex matched at this earlier level.
+    Adj(usize),
+    /// The stored (unfiltered) candidate set computed at this earlier
+    /// level — vertical computation sharing (paper §6.1).
+    Stored(usize),
+}
+
+/// Per-level step of the plan.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Levels of earlier pattern vertices adjacent to this one (the
+    /// backward neighbours B_i). Non-empty for every level ≥ 1 — matching
+    /// orders are connectivity-respecting.
+    pub backward: Vec<usize>,
+    /// What to intersect to form the candidate set. Either the raw
+    /// adjacency lists of `backward`, or a stored ancestor set plus the
+    /// leftover adjacency lists.
+    pub sources: Vec<Source>,
+    /// Earlier levels j such that the symmetry-breaking restriction
+    /// v_j < v_i applies at this level i.
+    pub greater_than: Vec<usize>,
+    /// Earlier levels j such that v_j > v_i is required (the mirror
+    /// restriction direction).
+    pub less_than: Vec<usize>,
+    /// Earlier non-adjacent levels whose neighbourhoods must be *excluded*
+    /// (vertex-induced semantics only).
+    pub exclude: Vec<usize>,
+    /// Required vertex label at this level (0 = unconstrained).
+    pub label: u8,
+}
+
+/// A compiled enumeration plan for one pattern.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The pattern *in matching order* (vertex i of this pattern is
+    /// matched at level i).
+    pub pattern: Pattern,
+    /// Steps for levels 1..k (level 0 enumerates all vertices).
+    pub steps: Vec<Step>,
+    /// Embedding semantics.
+    pub induced: Induced,
+    /// `store_set[i]` — the candidate set computed at level i must be
+    /// stored in the extendable embedding for reuse by descendants.
+    pub store_set: Vec<bool>,
+    /// `needs_adj[i]` — the adjacency list of the vertex matched at level
+    /// i is an *active edge list* for some later step and must be fetched
+    /// / retained (the paper's "active vertex" notion; antimonotone).
+    pub needs_adj: Vec<bool>,
+    /// Restrictions as raw (a, b) pairs meaning v_a < v_b, for reporting.
+    pub restrictions: Vec<(usize, usize)>,
+}
+
+impl Plan {
+    /// Number of levels (pattern vertices).
+    pub fn depth(&self) -> usize {
+        self.pattern.num_vertices()
+    }
+
+    /// The overcount factor the restrictions cancel (|Aut(pattern)|).
+    pub fn automorphism_factor(&self) -> u64 {
+        self.pattern.automorphisms().len() as u64
+    }
+
+    /// Strip vertical computation sharing (the Fig 13 ablation): every
+    /// step intersects raw adjacency lists; nothing is stored.
+    pub fn without_vertical_sharing(&self) -> Plan {
+        let mut p = self.clone();
+        for (i, st) in p.steps.iter_mut().enumerate() {
+            st.sources = st.backward.iter().map(|&l| Source::Adj(l)).collect();
+            let _ = i;
+        }
+        for s in p.store_set.iter_mut() {
+            *s = false;
+        }
+        // Recompute active vertices from the widened source lists.
+        let k = p.pattern.num_vertices();
+        let mut needs = vec![false; k];
+        for (i, st) in p.steps.iter().enumerate() {
+            for s in &st.sources {
+                if let Source::Adj(l) = s {
+                    needs[*l] = true;
+                }
+            }
+            if p.induced == Induced::Vertex {
+                for j in 0..(i + 1) {
+                    if !p.pattern.has_edge(j, i + 1) {
+                        needs[j] = true;
+                    }
+                }
+            }
+        }
+        p.needs_adj = needs;
+        p
+    }
+
+    /// Human-readable plan dump (used by `kudu plan` CLI).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "plan: k={} edges={:?} induced={:?} |Aut|={}\n",
+            self.depth(),
+            self.pattern.edges(),
+            self.induced,
+            self.automorphism_factor()
+        );
+        for (i, st) in self.steps.iter().enumerate() {
+            let lvl = i + 1;
+            s += &format!(
+                "  level {lvl}: sources={:?} restrict>[{:?}] <[{:?}] exclude={:?}{}{}\n",
+                st.sources,
+                st.greater_than,
+                st.less_than,
+                st.exclude,
+                if self.store_set[lvl] { " [store]" } else { "" },
+                if self.needs_adj[lvl] { " [adj active]" } else { "" },
+            );
+        }
+        s
+    }
+}
+
+/// Build the steps for a given matching order (identity order of `p`),
+/// deriving sources with vertical sharing, restriction placement, and
+/// active-vertex flags.
+fn build_plan(p: &Pattern, induced: Induced, restrictions: &[(usize, usize)]) -> Plan {
+    let k = p.num_vertices();
+    let mut steps = Vec::with_capacity(k - 1);
+    // Backward sets.
+    let backward: Vec<Vec<usize>> = (0..k)
+        .map(|i| (0..i).filter(|&j| p.has_edge(j, i)).collect::<Vec<_>>())
+        .collect();
+
+    // Vertical sharing: for level i, find the deepest earlier level j ≥ 2
+    // whose backward set is a subset of B_i with |B_j| ≥ 2 (a level-1 set
+    // is a single adjacency list — nothing to reuse). The stored set C_j
+    // is the *unfiltered* intersection over B_j, so C_i = C_j ∩ (the
+    // leftover adjacency lists).
+    let mut store_set = vec![false; k];
+    let mut sources: Vec<Vec<Source>> = vec![Vec::new(); k];
+    for i in 1..k {
+        let bi = &backward[i];
+        let mut best: Option<usize> = None;
+        for j in (2..i).rev() {
+            let bj = &backward[j];
+            if bj.len() >= 2
+                && bj.len() < bi.len()
+                && bj.iter().all(|x| bi.contains(x))
+            {
+                best = Some(j);
+                break;
+            }
+        }
+        match best {
+            Some(j) => {
+                store_set[j] = true;
+                let mut src = vec![Source::Stored(j)];
+                for &l in bi {
+                    if !backward[j].contains(&l) {
+                        src.push(Source::Adj(l));
+                    }
+                }
+                sources[i] = src;
+            }
+            None => {
+                sources[i] = bi.iter().map(|&l| Source::Adj(l)).collect();
+            }
+        }
+    }
+
+    // Active vertices: N(v_l) is needed if Adj(l) appears in a later step,
+    // or (vertex-induced) if l is excluded at a later step.
+    let mut needs_adj = vec![false; k];
+    for i in 1..k {
+        for s in &sources[i] {
+            if let Source::Adj(l) = s {
+                needs_adj[*l] = true;
+            }
+        }
+        if induced == Induced::Vertex {
+            for j in 0..i {
+                if !p.has_edge(j, i) {
+                    needs_adj[j] = true;
+                }
+            }
+        }
+    }
+
+    for i in 1..k {
+        let greater_than: Vec<usize> =
+            restrictions.iter().filter(|&&(a, b)| b == i && a < i).map(|&(a, _)| a).collect();
+        let less_than: Vec<usize> =
+            restrictions.iter().filter(|&&(a, b)| a == i && b < i).map(|&(_, b)| b).collect();
+        let exclude: Vec<usize> = if induced == Induced::Vertex {
+            (0..i).filter(|&j| !p.has_edge(j, i)).collect()
+        } else {
+            Vec::new()
+        };
+        steps.push(Step {
+            backward: backward[i].clone(),
+            sources: sources[i].clone(),
+            greater_than,
+            less_than,
+            exclude,
+            label: p.label(i),
+        });
+    }
+
+    Plan {
+        pattern: p.clone(),
+        steps,
+        induced,
+        store_set,
+        needs_adj,
+        restrictions: restrictions.to_vec(),
+    }
+}
+
+/// All connectivity-respecting matching orders (each vertex after the
+/// first has an earlier neighbour).
+fn connected_orders(p: &Pattern) -> Vec<Vec<usize>> {
+    let k = p.num_vertices();
+    let mut out = Vec::new();
+    let mut order = Vec::with_capacity(k);
+    fn rec(p: &Pattern, order: &mut Vec<usize>, used: u8, out: &mut Vec<Vec<usize>>) {
+        let k = p.num_vertices();
+        if order.len() == k {
+            out.push(order.clone());
+            return;
+        }
+        for v in 0..k {
+            if used & (1 << v) != 0 {
+                continue;
+            }
+            if !order.is_empty() && p.adj_bits(v) & used == 0 {
+                continue; // not connected to the prefix
+            }
+            order.push(v);
+            rec(p, order, used | (1 << v), out);
+            order.pop();
+        }
+    }
+    rec(p, &mut order, 0, &mut out);
+    out
+}
+
+/// Estimated enumeration cost of an order — GraphPi-style scoring.
+/// Prefers: high-degree-in-pattern vertices early (more constrained
+/// candidate sets sooner), restrictions applying early (symmetry pruning
+/// high in the tree), and more backward neighbours per level.
+fn order_cost(p: &Pattern, order: &[usize]) -> f64 {
+    let q = p.permute(order);
+    let restr = symmetry_restrictions(&q);
+    let k = q.num_vertices();
+    let mut cost = 0.0;
+    // Cost model: the candidate-set size at level i shrinks geometrically
+    // with the number of constraints already applied; each restriction at
+    // level ≤ i halves the subtree.
+    let mut width = 1.0f64;
+    for i in 1..k {
+        let b = (0..i).filter(|&j| q.has_edge(j, i)).count();
+        let r = restr.iter().filter(|&&(a, bb)| bb == i && a < i).count();
+        // More intersections => smaller candidate sets; restrictions prune.
+        let shrink = 0.5f64.powi(b as i32 - 1) * 0.6f64.powi(r as i32);
+        width *= 8.0 * shrink; // 8.0: nominal average degree scale
+        cost += width;
+    }
+    cost
+}
+
+/// Automine-style plan: greedy connectivity order (maximise backward
+/// connections, break ties by pattern degree then index), then
+/// orbit-stabiliser restrictions.
+pub fn automine_plan(p: &Pattern, induced: Induced) -> Plan {
+    assert!(p.is_connected(), "GPM patterns must be connected");
+    let k = p.num_vertices();
+    let mut order: Vec<usize> = Vec::with_capacity(k);
+    let mut used = 0u8;
+    // Start from the max-degree vertex.
+    let start = (0..k).max_by_key(|&v| (p.degree(v), k - v)).unwrap();
+    order.push(start);
+    used |= 1 << start;
+    while order.len() < k {
+        let next = (0..k)
+            .filter(|&v| used & (1 << v) == 0 && p.adj_bits(v) & used != 0)
+            .max_by_key(|&v| ((p.adj_bits(v) & used).count_ones(), p.degree(v), k - v))
+            .expect("connected pattern always has a next vertex");
+        order.push(next);
+        used |= 1 << next;
+    }
+    let q = p.permute(&order);
+    let restr = symmetry_restrictions(&q);
+    build_plan(&q, induced, &restr)
+}
+
+/// GraphPi-style plan: exhaustive search over connectivity-respecting
+/// orders, scored by [`order_cost`]. Exact at pattern sizes ≤ 8.
+pub fn graphpi_plan(p: &Pattern, induced: Induced) -> Plan {
+    assert!(p.is_connected(), "GPM patterns must be connected");
+    let orders = connected_orders(p);
+    let best = orders
+        .into_iter()
+        .min_by(|a, b| order_cost(p, a).partial_cmp(&order_cost(p, b)).unwrap())
+        .expect("connected pattern has at least one order");
+    let q = p.permute(&best);
+    let restr = symmetry_restrictions(&q);
+    build_plan(&q, induced, &restr)
+}
+
+/// Which client system generated the plan — selects the planner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientSystem {
+    /// k-Automine (greedy order).
+    Automine,
+    /// k-GraphPi (cost-searched order).
+    GraphPi,
+}
+
+impl ClientSystem {
+    pub fn plan(&self, p: &Pattern, induced: Induced) -> Plan {
+        match self {
+            ClientSystem::Automine => automine_plan(p, induced),
+            ClientSystem::GraphPi => graphpi_plan(p, induced),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClientSystem::Automine => "k-Automine",
+            ClientSystem::GraphPi => "k-GraphPi",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::Pattern;
+
+    #[test]
+    fn triangle_plan_shape() {
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        assert_eq!(plan.depth(), 3);
+        assert_eq!(plan.steps.len(), 2);
+        // Level 2 intersects N(v0) ∩ N(v1).
+        assert_eq!(plan.steps[1].sources.len(), 2);
+        // Triangle restrictions give v0 < v1 < v2 (some orientation).
+        assert_eq!(plan.automorphism_factor(), 6);
+        assert_eq!(plan.restrictions.len(), 3);
+    }
+
+    #[test]
+    fn clique_plans_use_vertical_sharing() {
+        for k in 4..=6 {
+            let plan = automine_plan(&Pattern::clique(k), Induced::Edge);
+            // Levels 3..k-1 must reuse the stored set of their parent.
+            for i in 3..k {
+                let st = &plan.steps[i - 1];
+                assert!(
+                    matches!(st.sources[0], Source::Stored(_)),
+                    "k={k} level {i} should reuse: {:?}",
+                    st.sources
+                );
+                assert_eq!(st.sources.len(), 2, "reuse + one new adjacency");
+            }
+        }
+    }
+
+    #[test]
+    fn needs_adj_antimonotone_for_last_level() {
+        // The vertex matched at the last level never needs its adjacency.
+        for p in [Pattern::triangle(), Pattern::clique(4), Pattern::chain(4)] {
+            let plan = automine_plan(&p, Induced::Edge);
+            assert!(!plan.needs_adj[plan.depth() - 1]);
+        }
+    }
+
+    #[test]
+    fn chain_orders_are_connected() {
+        let plan = graphpi_plan(&Pattern::chain(4), Induced::Edge);
+        for st in &plan.steps {
+            assert!(!st.backward.is_empty(), "order must be connectivity-respecting");
+        }
+    }
+
+    #[test]
+    fn connected_orders_counts() {
+        // Triangle: all 3! = 6 orders are connected.
+        assert_eq!(connected_orders(&Pattern::triangle()).len(), 6);
+        // 3-chain 0-1-2: orders starting with (0,2) are disconnected at
+        // step 2; connected orders = 6 - 2 = ... enumerate: valid orders
+        // are those where the second vertex neighbours the first:
+        // 0,1,_ ; 1,0,_ ; 1,2,_ ; 2,1,_ and then the third must attach:
+        // all do. Plus 0,1,2 / 1,{0,2} both orders / 2,1,0 => 4 prefixes
+        // × 1 = 4... second vertex choices: from 0: only 1; from 1: 0 or
+        // 2; from 2: only 1 => 4 orders.
+        assert_eq!(connected_orders(&Pattern::chain(3)).len(), 4);
+    }
+
+    #[test]
+    fn vertex_induced_excludes_nonneighbors() {
+        let plan = automine_plan(&Pattern::chain(3), Induced::Vertex);
+        // The last level of a 3-chain has exactly one non-neighbour among
+        // earlier levels.
+        assert_eq!(plan.steps[1].exclude.len(), 1);
+        // Edge-induced: no exclusions.
+        let plan_e = automine_plan(&Pattern::chain(3), Induced::Edge);
+        assert!(plan_e.steps[1].exclude.is_empty());
+    }
+
+    #[test]
+    fn describe_is_nonempty() {
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        assert!(plan.describe().contains("level 3"));
+    }
+}

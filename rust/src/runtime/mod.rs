@@ -1,0 +1,254 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! from the Rust mining path.
+//!
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`), written
+//! once by `python/compile/aot.py` — see DESIGN.md §5 and
+//! /opt/xla-example/README.md for why text (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5's 64-bit-id serialized protos). Python never runs at mining
+//! time; the Rust binary is self-contained once artifacts exist.
+//!
+//! The artifact used by the engine is the **dense hot-core counter**
+//! (DESIGN.md §2 hardware adaptation): the induced adjacency matrix over
+//! the top-degree vertices is counted with an MXU-shaped `A·A ⊙ A`
+//! contraction, while the sparse remainder stays on the CPU intersection
+//! path.
+
+use crate::graph::{Graph, VertexId};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory, overridable via `KUDU_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("KUDU_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Hot-core side length the artifacts are compiled for (must match
+/// `python/compile/aot.py`).
+pub const DENSE_N: usize = 256;
+
+/// A compiled dense-core counting executable on the PJRT CPU client.
+pub struct DenseCore {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+}
+
+/// Counts returned by the dense core.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DenseCounts {
+    /// Triangles entirely inside the hot set.
+    pub triangles: u64,
+    /// Wedges (3-chains) whose three vertices are all in the hot set.
+    pub wedges: u64,
+    /// Edges inside the hot set.
+    pub edges: u64,
+}
+
+impl DenseCore {
+    /// Load `dense_core_{n}.hlo.txt` from the artifact directory and
+    /// compile it on the PJRT CPU client.
+    pub fn load(dir: &Path, n: usize) -> Result<Self> {
+        let path = dir.join(format!("dense_core_{n}.hlo.txt"));
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let path_str = path.to_str().context("artifact path is not UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("load HLO text from {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile dense-core HLO")?;
+        Ok(DenseCore { exe, n })
+    }
+
+    /// Load with defaults (artifact dir from env, n = [`DENSE_N`]).
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir(), DENSE_N)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Run the counter on a dense f32 adjacency matrix (row-major n×n,
+    /// entries 0.0/1.0, zero diagonal, symmetric).
+    pub fn count(&self, adj: &[f32]) -> Result<DenseCounts> {
+        anyhow::ensure!(adj.len() == self.n * self.n, "adjacency must be n×n");
+        let lit = xla::Literal::vec1(adj).reshape(&[self.n as i64, self.n as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (tri, wedge, edge) f32
+        // scalars.
+        let tuple = result.to_tuple()?;
+        anyhow::ensure!(tuple.len() == 3, "expected 3 outputs, got {}", tuple.len());
+        let read = |l: &xla::Literal| -> Result<u64> {
+            let v = l.to_vec::<f32>()?;
+            Ok(v[0].round() as u64)
+        };
+        Ok(DenseCounts {
+            triangles: read(&tuple[0])?,
+            wedges: read(&tuple[1])?,
+            edges: read(&tuple[2])?,
+        })
+    }
+}
+
+/// Batch size the pair-intersect artifact is compiled for (must match
+/// `python/compile/aot.py`).
+pub const PAIR_BATCH: usize = 512;
+
+/// The batched bitmap common-neighbour counter
+/// (`pair_intersect_{b}x{n}.hlo.txt`): the direct TPU analogue of Kudu's
+/// per-pair edge-list intersections, over hot-core bitmap rows.
+pub struct PairIntersect {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    n: usize,
+}
+
+impl PairIntersect {
+    /// Load and compile the artifact.
+    pub fn load(dir: &Path, batch: usize, n: usize) -> Result<Self> {
+        let path = dir.join(format!("pair_intersect_{batch}x{n}.hlo.txt"));
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let path_str = path.to_str().context("artifact path is not UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("load HLO text from {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile pair-intersect HLO")?;
+        Ok(PairIntersect { exe, batch, n })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir(), PAIR_BATCH, DENSE_N)
+    }
+
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// |N(u) ∩ N(v)| for each of `batch` pairs, given the pairs' 0/1
+    /// bitmap rows over the hot core (row-major `batch × n` each).
+    pub fn counts(&self, rows_u: &[f32], rows_v: &[f32]) -> Result<Vec<u64>> {
+        anyhow::ensure!(
+            rows_u.len() == self.batch * self.n && rows_v.len() == rows_u.len(),
+            "rows must be batch×n"
+        );
+        let dims = [self.batch as i64, self.n as i64];
+        let u = xla::Literal::vec1(rows_u).reshape(&dims)?;
+        let v = xla::Literal::vec1(rows_v).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[u, v])?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        anyhow::ensure!(tuple.len() == 1, "expected a 1-tuple");
+        Ok(tuple[0].to_vec::<f32>()?.into_iter().map(|x| x.round() as u64).collect())
+    }
+}
+
+/// The hot-vertex set and its dense induced adjacency, extracted from a
+/// graph (the skew insight of paper §6.3 applied to compute: the top-K
+/// vertices by degree form a small dense core).
+pub struct HotCore {
+    /// The selected vertices (top-degree), length ≤ n.
+    pub vertices: Vec<VertexId>,
+    /// Dense row-major n×n f32 adjacency (padded with zeros).
+    pub adj: Vec<f32>,
+    /// Membership bitmap over the whole graph.
+    pub member: Vec<bool>,
+    pub n: usize,
+}
+
+impl HotCore {
+    /// Extract the top-`n`-degree induced subgraph as a dense matrix.
+    pub fn extract(g: &Graph, n: usize) -> Self {
+        let mut vertices = g.by_degree_desc();
+        vertices.truncate(n);
+        let mut member = vec![false; g.num_vertices()];
+        let mut index = vec![usize::MAX; g.num_vertices()];
+        for (i, &v) in vertices.iter().enumerate() {
+            member[v as usize] = true;
+            index[v as usize] = i;
+        }
+        let mut adj = vec![0f32; n * n];
+        for (i, &v) in vertices.iter().enumerate() {
+            for &u in g.neighbors(v) {
+                if member[u as usize] {
+                    let j = index[u as usize];
+                    adj[i * n + j] = 1.0;
+                }
+            }
+        }
+        HotCore { vertices, adj, member, n }
+    }
+
+    /// True if all of `vs` are in the hot set.
+    #[inline]
+    pub fn all_hot(&self, vs: &[VertexId]) -> bool {
+        vs.iter().all(|&v| self.member[v as usize])
+    }
+
+    /// Reference CPU triangle count of the dense core (validates the XLA
+    /// path; also the no-artifact fallback).
+    pub fn cpu_triangles(&self) -> u64 {
+        let n = self.n;
+        let mut t = 0u64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if self.adj[i * n + j] == 0.0 {
+                    continue;
+                }
+                for k in (j + 1)..n {
+                    if self.adj[i * n + k] != 0.0 && self.adj[j * n + k] != 0.0 {
+                        t += 1;
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn hot_core_extraction() {
+        let g = gen::planted_hubs(500, 1000, 4, 0.5, 3);
+        let hc = HotCore::extract(&g, 16);
+        assert_eq!(hc.vertices.len(), 16);
+        assert_eq!(hc.adj.len(), 16 * 16);
+        // Symmetric, zero diagonal.
+        for i in 0..16 {
+            assert_eq!(hc.adj[i * 16 + i], 0.0);
+            for j in 0..16 {
+                assert_eq!(hc.adj[i * 16 + j], hc.adj[j * 16 + i]);
+            }
+        }
+        // The hubs (highest degree) must be members.
+        let top = g.by_degree_desc()[0];
+        assert!(hc.member[top as usize]);
+    }
+
+    #[test]
+    fn cpu_triangles_on_known_core() {
+        // A 4-clique plus a detached edge: top-4 core = the clique => 4
+        // triangles.
+        let g = crate::graph::Graph::from_edges(
+            6,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (4, 5)],
+        );
+        let hc = HotCore::extract(&g, 4);
+        assert_eq!(hc.cpu_triangles(), 4);
+    }
+
+    #[test]
+    fn all_hot_membership() {
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2)]);
+        let hc = HotCore::extract(&g, 2);
+        assert!(hc.all_hot(&[hc.vertices[0]]));
+        assert!(!hc.all_hot(&[3]));
+    }
+
+    // DenseCore::load is exercised by tests/runtime_integration.rs (needs
+    // `make artifacts`).
+}

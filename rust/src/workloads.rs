@@ -1,0 +1,277 @@
+//! GPM applications (paper §8.1) and engine runners.
+//!
+//! * **TC** — triangle counting (edge-induced 3-clique).
+//! * **k-MC** — k-motif counting: every connected size-k pattern,
+//!   vertex-induced.
+//! * **k-CC** — k-clique counting, edge-induced.
+//!
+//! [`run_app`] dispatches an app onto any of the five execution models
+//! (Kudu, G-thinker, moving-computation, replicated, single-machine) with
+//! a shared configuration, which is exactly what the table harness needs.
+
+use crate::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
+use crate::cluster::Transport;
+use crate::config::RunConfig;
+use crate::engine::sink::FnSink;
+use crate::engine::KuduEngine;
+use crate::graph::Graph;
+use crate::metrics::{RunStats, Traffic};
+use crate::partition::PartitionedGraph;
+use crate::pattern::brute::Induced;
+use crate::pattern::{motifs, Pattern};
+use crate::plan::{ClientSystem, Plan};
+use crate::runtime::{DenseCore, HotCore};
+
+/// A GPM application.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum App {
+    /// Triangle counting.
+    Tc,
+    /// k-motif counting (vertex-induced, all connected size-k patterns).
+    Mc(usize),
+    /// k-clique counting.
+    Cc(usize),
+}
+
+impl App {
+    pub fn name(&self) -> String {
+        match self {
+            App::Tc => "TC".into(),
+            App::Mc(k) => format!("{k}-MC"),
+            App::Cc(k) => format!("{k}-CC"),
+        }
+    }
+
+    /// The patterns this app mines, with their induced semantics.
+    pub fn patterns(&self) -> (Vec<Pattern>, Induced) {
+        match self {
+            App::Tc => (vec![Pattern::triangle()], Induced::Edge),
+            App::Mc(k) => (motifs::all_motifs(*k), Induced::Vertex),
+            App::Cc(k) => (vec![Pattern::clique(*k)], Induced::Edge),
+        }
+    }
+
+    /// Compile plans with the given client system's planner, honouring the
+    /// vertical-sharing toggle.
+    pub fn plans(&self, client: ClientSystem, vertical_sharing: bool) -> Vec<Plan> {
+        let (patterns, induced) = self.patterns();
+        patterns
+            .iter()
+            .map(|p| {
+                let plan = client.plan(p, induced);
+                if vertical_sharing {
+                    plan
+                } else {
+                    plan.without_vertical_sharing()
+                }
+            })
+            .collect()
+    }
+}
+
+/// Execution model selector for [`run_app`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Kudu with the given client system's plans.
+    Kudu(ClientSystem),
+    /// G-thinker-like baseline.
+    GThinker,
+    /// Moving-computation-to-data baseline.
+    MovingComp,
+    /// Replicated-graph GraphPi-like baseline.
+    Replicated,
+    /// Single-machine DFS (ignores the machine count).
+    SingleMachine,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Kudu(c) => c.name(),
+            EngineKind::GThinker => "G-thinker",
+            EngineKind::MovingComp => "MovingComp",
+            EngineKind::Replicated => "GraphPi(repl)",
+            EngineKind::SingleMachine => "single",
+        }
+    }
+}
+
+/// Run `app` on `graph` with `engine` under `cfg`. Multi-pattern apps run
+/// pattern-by-pattern; stats are merged (counts appended, times summed,
+/// traffic summed).
+pub fn run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) -> RunStats {
+    let client = match engine {
+        EngineKind::Kudu(c) => c,
+        // Baselines all use the GraphPi planner — best plans for everyone,
+        // so comparisons isolate the execution model.
+        _ => ClientSystem::GraphPi,
+    };
+    let plans = app.plans(client, cfg.engine.vertical_sharing);
+    let mut merged = RunStats::default();
+    let mut traffic = Traffic::new(cfg.num_machines);
+    for plan in &plans {
+        let stats = match engine {
+            EngineKind::Kudu(_) => {
+                let pg = PartitionedGraph::new(graph, cfg.num_machines);
+                let mut tr = Transport::new(pg, cfg.net);
+                let s = KuduEngine::run(graph, plan, &cfg.engine, &cfg.compute, &mut tr);
+                traffic.merge(&tr.traffic);
+                s
+            }
+            EngineKind::GThinker => {
+                let pg = PartitionedGraph::new(graph, cfg.num_machines);
+                let mut tr = Transport::new(pg, cfg.net);
+                let s = GThinker::run(graph, plan, cfg.engine.threads, &cfg.compute, &mut tr);
+                traffic.merge(&tr.traffic);
+                s
+            }
+            EngineKind::MovingComp => {
+                let pg = PartitionedGraph::new(graph, cfg.num_machines);
+                let mut tr = Transport::new(pg, cfg.net);
+                let s = MovingComputation::run(graph, plan, cfg.engine.threads, &cfg.compute, &mut tr);
+                traffic.merge(&tr.traffic);
+                s
+            }
+            EngineKind::Replicated => {
+                Replicated::run(graph, plan, cfg.num_machines, cfg.engine.threads, &cfg.compute)
+            }
+            EngineKind::SingleMachine => SingleMachine::run(graph, plan, &cfg.compute),
+        };
+        merged.counts.extend(stats.counts.iter());
+        merged.work_units += stats.work_units;
+        merged.embeddings_created += stats.embeddings_created;
+        merged.network_bytes += stats.network_bytes;
+        merged.network_messages += stats.network_messages;
+        merged.virtual_time_s += stats.virtual_time_s;
+        merged.exposed_comm_s += stats.exposed_comm_s;
+        merged.wall_s += stats.wall_s;
+        merged.peak_embedding_bytes = merged.peak_embedding_bytes.max(stats.peak_embedding_bytes);
+        merged.numa_remote_accesses += stats.numa_remote_accesses;
+        merged.cache_hits += stats.cache_hits;
+        merged.cache_misses += stats.cache_misses;
+    }
+    merged
+}
+
+/// Hybrid triangle counting: the dense hot-vertex core is counted by the
+/// AOT XLA artifact (MXU-shaped `A·A ⊙ A`, see DESIGN.md §2); the CPU
+/// engine counts every triangle with at least one cold vertex. Counts are
+/// exact and must equal the pure-CPU path (tested).
+pub fn tc_hybrid(graph: &Graph, cfg: &RunConfig, core: &DenseCore) -> anyhow::Result<RunStats> {
+    let hot = HotCore::extract(graph, core.n());
+    let dense = core.count(&hot.adj)?;
+
+    // CPU side: count triangles NOT entirely inside the hot set. The
+    // bulk-count fast path cannot filter, so use a per-embedding sink.
+    let (stats, cold) = count_cold_triangles(graph, cfg, &hot.member);
+    let mut out = stats;
+    out.counts = vec![dense.triangles + cold];
+    Ok(out)
+}
+
+/// Pure-CPU hybrid fallback (no artifacts): identical split, dense core
+/// counted by the CPU reference — used to test count equality of the
+/// decomposition itself.
+pub fn tc_hybrid_cpu(graph: &Graph, cfg: &RunConfig, core_n: usize) -> RunStats {
+    let hot = HotCore::extract(graph, core_n);
+    let dense_tri = hot.cpu_triangles();
+    let (stats, cold) = count_cold_triangles(graph, cfg, &hot.member);
+    let mut out = stats;
+    out.counts = vec![dense_tri + cold];
+    out
+}
+
+/// Count triangles with at least one vertex outside `member` using the
+/// engine's per-embedding sink path. Returns (run stats, cold count).
+fn count_cold_triangles(graph: &Graph, cfg: &RunConfig, member: &[bool]) -> (RunStats, u64) {
+    let plan = ClientSystem::GraphPi.plan(&Pattern::triangle(), Induced::Edge);
+    let pg = PartitionedGraph::new(graph, cfg.num_machines);
+    let mut tr = Transport::new(pg, cfg.net);
+    let cold_counter = std::cell::Cell::new(0u64);
+    let mut sinks: Vec<FnSink<Box<dyn FnMut(&[u32]) + '_>>> = Vec::new();
+    let stats = KuduEngine::run_with_sinks(
+        graph,
+        &plan,
+        &cfg.engine,
+        &cfg.compute,
+        &mut tr,
+        |_m| {
+            let cc = &cold_counter;
+            FnSink::new(Box::new(move |vs: &[u32]| {
+                if !vs.iter().all(|&v| member[v as usize]) {
+                    cc.set(cc.get() + 1);
+                }
+            }) as Box<dyn FnMut(&[u32]) + '_>)
+        },
+        &mut sinks,
+    );
+    drop(sinks);
+    (stats, cold_counter.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::brute;
+
+    #[test]
+    fn all_engines_agree_on_tc() {
+        let g = gen::rmat(8, 8, 73);
+        let cfg = RunConfig::with_machines(4);
+        let expect = brute::triangle_count(&g);
+        for engine in [
+            EngineKind::Kudu(ClientSystem::Automine),
+            EngineKind::Kudu(ClientSystem::GraphPi),
+            EngineKind::GThinker,
+            EngineKind::MovingComp,
+            EngineKind::Replicated,
+            EngineKind::SingleMachine,
+        ] {
+            let st = run_app(&g, App::Tc, engine, &cfg);
+            assert_eq!(st.total_count(), expect, "{}", engine.name());
+        }
+    }
+
+    #[test]
+    fn motif_counts_sum_consistently() {
+        let g = gen::erdos_renyi(60, 200, 79);
+        let cfg = RunConfig::with_machines(3);
+        let st = run_app(&g, App::Mc(3), EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        assert_eq!(st.counts.len(), 2); // triangle + wedge
+        let expect: u64 = motifs::all_motifs(3)
+            .iter()
+            .map(|p| brute::count_embeddings(&g, p, Induced::Vertex))
+            .sum();
+        assert_eq!(st.total_count(), expect);
+    }
+
+    #[test]
+    fn clique_apps() {
+        let g = gen::rmat(7, 8, 83);
+        let cfg = RunConfig::with_machines(2);
+        for k in [4, 5] {
+            let expect = brute::count_embeddings(&g, &Pattern::clique(k), Induced::Edge);
+            let st = run_app(&g, App::Cc(k), EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+            assert_eq!(st.total_count(), expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn hybrid_cpu_decomposition_is_exact() {
+        let g = gen::planted_hubs(800, 2500, 5, 0.3, 97);
+        let cfg = RunConfig::with_machines(2);
+        let expect = brute::triangle_count(&g);
+        for core_n in [4, 32, 128] {
+            let st = tc_hybrid_cpu(&g, &cfg, core_n);
+            assert_eq!(st.total_count(), expect, "core_n={core_n}");
+        }
+    }
+
+    #[test]
+    fn app_names() {
+        assert_eq!(App::Tc.name(), "TC");
+        assert_eq!(App::Mc(3).name(), "3-MC");
+        assert_eq!(App::Cc(5).name(), "5-CC");
+    }
+}

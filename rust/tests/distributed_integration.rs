@@ -1,0 +1,190 @@
+//! Cross-module integration: every execution model, every app, every
+//! dataset stand-in — counts must agree across the board, and the
+//! structural claims of the paper (traffic ordering, scaling direction,
+//! memory gates) must hold on the real simulated cluster.
+
+use kudu::config::RunConfig;
+use kudu::graph::gen::{self, Dataset};
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::{count_embeddings, Induced};
+use kudu::pattern::Pattern;
+use kudu::plan::ClientSystem;
+use kudu::workloads::{run_app, App, EngineKind};
+
+const ALL_ENGINES: [EngineKind; 6] = [
+    EngineKind::Kudu(ClientSystem::Automine),
+    EngineKind::Kudu(ClientSystem::GraphPi),
+    EngineKind::GThinker,
+    EngineKind::MovingComp,
+    EngineKind::Replicated,
+    EngineKind::SingleMachine,
+];
+
+#[test]
+fn all_engines_all_apps_agree() {
+    let g = gen::rmat(9, 8, 101);
+    let cfg = RunConfig::with_machines(5);
+    for app in [App::Tc, App::Mc(3), App::Cc(4)] {
+        let mut counts: Vec<u64> = Vec::new();
+        for engine in ALL_ENGINES {
+            counts.push(run_app(&g, app, engine, &cfg).total_count());
+        }
+        assert!(
+            counts.windows(2).all(|w| w[0] == w[1]),
+            "{:?}: engines disagree: {counts:?}",
+            app.name()
+        );
+    }
+}
+
+#[test]
+fn dataset_standins_have_expected_skew_regimes() {
+    // The ablation tables depend on these regimes (DESIGN.md §1).
+    let pt = Dataset::Patents.build();
+    let uk = Dataset::Uk.build();
+    let lj = Dataset::LiveJournal.build();
+    // pt (ER) flat; uk (planted hubs) extreme; lj (RMAT) in between.
+    // Note: endpoint-mass skew caps near ~50% for hub-planted graphs
+    // (each hub edge donates half its mass to a tail vertex), so 0.40 is
+    // already the extreme regime.
+    assert!(pt.skewness(0.05) < 0.25, "pt skew {}", pt.skewness(0.05));
+    assert!(uk.skewness(0.05) > 0.40, "uk skew {}", uk.skewness(0.05));
+    let s_lj = lj.skewness(0.05);
+    assert!(s_lj > pt.skewness(0.05) && s_lj < uk.skewness(0.05), "lj skew {s_lj}");
+}
+
+#[test]
+fn kudu_beats_gthinker_on_every_standin() {
+    // Table 2's headline: orders of magnitude on pt-like, large on all.
+    let cfg = RunConfig::with_machines(8);
+    for d in [Dataset::Mico, Dataset::Patents] {
+        let g = d.build();
+        let k = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        let gt = run_app(&g, App::Tc, EngineKind::GThinker, &cfg);
+        assert_eq!(k.total_count(), gt.total_count());
+        let speedup = gt.virtual_time_s / k.virtual_time_s;
+        assert!(speedup > 5.0, "{}: speedup only {speedup:.1}x", d.abbr());
+    }
+}
+
+#[test]
+fn replication_memory_gate() {
+    // Table 5's structural claim: max partition << whole graph.
+    let g = Dataset::RmatLarge.build();
+    let pg = PartitionedGraph::new(&g, 8);
+    assert!(
+        pg.max_partition_bytes() < g.csr_bytes() / 4,
+        "partitioned {} vs replicated {}",
+        pg.max_partition_bytes(),
+        g.csr_bytes()
+    );
+}
+
+#[test]
+fn internode_scaling_beats_replicated_on_skew() {
+    // Fig 15's shape: Kudu scales near-linearly; replicated is hampered
+    // by stragglers + startup.
+    let g = Dataset::LiveJournal.build();
+    let k1 = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &RunConfig::with_machines(1));
+    let k8 = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &RunConfig::with_machines(8));
+    let r1 = run_app(&g, App::Tc, EngineKind::Replicated, &RunConfig::with_machines(1));
+    let r8 = run_app(&g, App::Tc, EngineKind::Replicated, &RunConfig::with_machines(8));
+    let k_speedup = k1.virtual_time_s / k8.virtual_time_s;
+    let r_speedup = r1.virtual_time_s / r8.virtual_time_s;
+    assert!(k_speedup > 3.0, "kudu 8-node speedup {k_speedup:.2}");
+    assert!(k_speedup > r_speedup, "kudu {k_speedup:.2} !> replicated {r_speedup:.2}");
+}
+
+#[test]
+fn comm_overhead_small_on_skewed_graphs() {
+    // Fig 16: with the cache, uk-like communication is negligible.
+    let g = Dataset::Uk.build();
+    let st = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &RunConfig::with_machines(8));
+    assert!(st.comm_overhead() < 0.5, "comm overhead {:.2}", st.comm_overhead());
+}
+
+#[test]
+fn vertex_induced_multi_pattern_run() {
+    // 4-MC on a small graph: 6 patterns, against the oracle.
+    let g = gen::erdos_renyi(50, 170, 103);
+    let cfg = RunConfig::with_machines(3);
+    let st = run_app(&g, App::Mc(4), EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    let motifs = kudu::pattern::motifs::all_motifs(4);
+    assert_eq!(st.counts.len(), 6);
+    for (i, p) in motifs.iter().enumerate() {
+        let expect = count_embeddings(&g, p, Induced::Vertex);
+        assert_eq!(st.counts[i], expect, "motif {i}: {p:?}");
+    }
+}
+
+#[test]
+fn five_clique_against_oracle() {
+    let g = gen::rmat(8, 10, 107);
+    let expect = count_embeddings(&g, &Pattern::clique(5), Induced::Edge);
+    let cfg = RunConfig::with_machines(4);
+    for engine in [EngineKind::Kudu(ClientSystem::Automine), EngineKind::Replicated] {
+        assert_eq!(run_app(&g, App::Cc(5), engine, &cfg).total_count(), expect);
+    }
+}
+
+#[test]
+fn deterministic_runs() {
+    // Identical config => identical stats (bitwise, incl. virtual time).
+    let g = Dataset::Mico.build();
+    let cfg = RunConfig::with_machines(8);
+    let a = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    let b = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    assert_eq!(a.total_count(), b.total_count());
+    assert_eq!(a.network_bytes, b.network_bytes);
+    assert_eq!(a.virtual_time_s, b.virtual_time_s);
+    assert_eq!(a.work_units, b.work_units);
+}
+
+#[test]
+fn labelled_mining_matches_oracle() {
+    // Labelled triangle and wedge mining across the cluster (paper §2.1:
+    // Kudu supports vertex labels).
+    let base = gen::erdos_renyi(80, 320, 211);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8 + 1).collect();
+    let g = base.with_labels(labels);
+    let cfg = RunConfig::with_machines(4);
+    for (pat, name) in [
+        (Pattern::triangle().with_labels(&[1, 2, 3]), "tri-123"),
+        (Pattern::triangle().with_labels(&[1, 1, 2]), "tri-112"),
+        (Pattern::chain(3).with_labels(&[2, 1, 2]), "wedge-212"),
+        (Pattern::chain(3).with_labels(&[1, 1, 1]), "wedge-111"),
+    ] {
+        for induced in [Induced::Edge, Induced::Vertex] {
+            let expect = count_embeddings(&g, &pat, induced);
+            let plan = ClientSystem::GraphPi.plan(&pat, induced);
+            let pg = PartitionedGraph::new(&g, cfg.num_machines);
+            let mut tr = kudu::cluster::Transport::new(pg, cfg.net);
+            let st = kudu::engine::KuduEngine::run(
+                &g,
+                &plan,
+                &cfg.engine,
+                &cfg.compute,
+                &mut tr,
+            );
+            assert_eq!(st.total_count(), expect, "{name} {induced:?}");
+            // Single-machine baseline agrees too.
+            let sm = kudu::baselines::SingleMachine::run(&g, &plan, &cfg.compute);
+            assert_eq!(sm.total_count(), expect, "single {name} {induced:?}");
+        }
+    }
+}
+
+#[test]
+fn labelled_pattern_restrictions_account_for_labels() {
+    // A label-asymmetric triangle has |Aut| = 1: no restrictions, and the
+    // count equals the raw labelled match count.
+    let p = Pattern::triangle().with_labels(&[1, 2, 3]);
+    assert_eq!(p.automorphisms().len(), 1);
+    let plan = ClientSystem::GraphPi.plan(&p, Induced::Edge);
+    assert!(plan.restrictions.is_empty());
+    // Two-same-label triangle keeps exactly one swap.
+    let q = Pattern::triangle().with_labels(&[1, 1, 2]);
+    assert_eq!(q.automorphisms().len(), 2);
+    let plan_q = ClientSystem::GraphPi.plan(&q, Induced::Edge);
+    assert_eq!(plan_q.restrictions.len(), 1);
+}

@@ -1,0 +1,235 @@
+//! Property-based tests over randomly generated graphs, patterns, and
+//! engine configurations (in-tree generator — the image has no proptest
+//! crate). Each property runs across a seeded sweep of cases; failures
+//! print the seed for reproduction.
+
+use kudu::config::EngineConfig;
+use kudu::exec;
+use kudu::graph::gen::Rng;
+use kudu::graph::{gen, Graph};
+use kudu::metrics::{ComputeModel, NetModel};
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::{count_embeddings, Induced};
+use kudu::pattern::{motifs, Pattern};
+use kudu::plan::{automine_plan, graphpi_plan, restrict};
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    let n = 20 + rng.below(60) as usize;
+    let m = n + rng.below(4 * n as u64) as usize;
+    gen::erdos_renyi(n, m, rng.next_u64())
+}
+
+fn random_sorted_list(rng: &mut Rng, max_len: usize, universe: u64) -> Vec<u32> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    let mut v: Vec<u32> = (0..len).map(|_| rng.below(universe) as u32).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Property: all intersection kernels agree with a HashSet reference.
+#[test]
+fn prop_intersection_kernels_agree() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..500 {
+        let a = random_sorted_list(&mut rng, 200, 300);
+        let b = random_sorted_list(&mut rng, 200, 300);
+        let expect: Vec<u32> =
+            a.iter().copied().filter(|x| b.binary_search(x).is_ok()).collect();
+        let mut out = Vec::new();
+        exec::intersect_merge(&a, &b, &mut out);
+        assert_eq!(out, expect, "merge case {case}");
+        exec::intersect_gallop(&a, &b, &mut out);
+        assert_eq!(out, expect, "gallop case {case}");
+        exec::intersect(&a, &b, &mut out);
+        assert_eq!(out, expect, "adaptive case {case}");
+    }
+}
+
+/// Property: difference kernel matches the set-subtraction reference.
+#[test]
+fn prop_difference_kernel() {
+    let mut rng = Rng::new(0xB0B);
+    for case in 0..500 {
+        let a = random_sorted_list(&mut rng, 150, 200);
+        let b = random_sorted_list(&mut rng, 150, 200);
+        let expect: Vec<u32> =
+            a.iter().copied().filter(|x| b.binary_search(x).is_err()).collect();
+        let mut out = Vec::new();
+        exec::difference(&a, &b, &mut out);
+        assert_eq!(out, expect, "case {case}");
+    }
+}
+
+/// Property: for every connected pattern up to size 4 and random graphs,
+/// both planners' engine counts equal the brute-force oracle, under both
+/// induced semantics.
+#[test]
+fn prop_planners_match_oracle() {
+    let mut rng = Rng::new(0xC0DE);
+    let patterns: Vec<Pattern> =
+        motifs::all_motifs(3).into_iter().chain(motifs::all_motifs(4)).collect();
+    for round in 0..8 {
+        let g = random_graph(&mut rng);
+        let machines = 1 + rng.below(6) as usize;
+        for p in &patterns {
+            for induced in [Induced::Edge, Induced::Vertex] {
+                let expect = count_embeddings(&g, p, induced);
+                for plan in [automine_plan(p, induced), graphpi_plan(p, induced)] {
+                    let pg = PartitionedGraph::new(&g, machines);
+                    let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
+                    let st = kudu::engine::KuduEngine::run(
+                        &g,
+                        &plan,
+                        &EngineConfig::default(),
+                        &ComputeModel::default(),
+                        &mut tr,
+                    );
+                    assert_eq!(
+                        st.total_count(),
+                        expect,
+                        "round {round} machines {machines} pattern {p:?} {induced:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: counts are invariant under every engine-config combination
+/// (chunk capacity, sharing toggles, cache, sockets, threads).
+#[test]
+fn prop_config_invariance() {
+    let mut rng = Rng::new(0xF00D);
+    let g = gen::rmat(8, 8, 0xF00D);
+    let p = Pattern::clique(4);
+    let plan = graphpi_plan(&p, Induced::Edge);
+    let expect = count_embeddings(&g, &p, Induced::Edge);
+    for case in 0..40 {
+        let cap = 1 + rng.below(5000) as usize;
+        let hds = rng.below(2) == 0;
+        let cache = if rng.below(2) == 0 { 0.0 } else { 0.02 + rng.f64() * 0.2 };
+        let sockets = 1 + rng.below(4) as usize;
+        let threads = 1 + rng.below(16) as usize;
+        let numa = rng.below(2) == 0;
+        let vcs = rng.below(2) == 0;
+        let cfg = EngineConfig {
+            chunk_capacity: cap,
+            horizontal_sharing: hds,
+            cache_frac: cache,
+            sockets,
+            threads,
+            numa_aware: numa,
+            vertical_sharing: vcs,
+            ..Default::default()
+        };
+        let plan_used = if vcs { plan.clone() } else { plan.without_vertical_sharing() };
+        let machines = 1 + rng.below(8) as usize;
+        let pg = PartitionedGraph::new(&g, machines);
+        let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
+        let st = kudu::engine::KuduEngine::run(
+            &g,
+            &plan_used,
+            &cfg,
+            &ComputeModel::default(),
+            &mut tr,
+        );
+        assert_eq!(
+            st.total_count(),
+            expect,
+            "case {case}: cap={cap} hds={hds} cache={cache:.2} sockets={sockets} \
+             threads={threads} numa={numa} vcs={vcs} machines={machines}"
+        );
+    }
+}
+
+/// Property: the orbit–stabiliser restrictions of ANY connected pattern up
+/// to size 5 cancel the automorphism factor exactly.
+#[test]
+fn prop_restrictions_exact_for_all_size5_motifs() {
+    let g = gen::erdos_renyi(24, 70, 0xABCD);
+    for p in motifs::all_motifs(5) {
+        assert_eq!(
+            restrict::restriction_factor(&p),
+            p.automorphisms().len() as u64,
+            "{p:?}"
+        );
+        // Engine count must equal oracle (covers the restriction logic
+        // end-to-end for every size-5 shape).
+        let plan = automine_plan(&p, Induced::Edge);
+        let expect = count_embeddings(&g, &p, Induced::Edge);
+        let pg = PartitionedGraph::new(&g, 3);
+        let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
+        let st = kudu::engine::KuduEngine::run(
+            &g,
+            &plan,
+            &EngineConfig::default(),
+            &ComputeModel::default(),
+            &mut tr,
+        );
+        assert_eq!(st.total_count(), expect, "{p:?}");
+    }
+}
+
+/// Property: traffic with HDS ≤ traffic without HDS, always (sharing can
+/// only remove requests); same for the cache on skew-heavy graphs.
+#[test]
+fn prop_sharing_never_increases_traffic() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..10 {
+        let g = gen::planted_hubs(
+            500 + rng.below(1500) as usize,
+            2000 + rng.below(3000) as usize,
+            1 + rng.below(6) as usize,
+            0.1 + rng.f64() * 0.3,
+            rng.next_u64(),
+        );
+        let plan = graphpi_plan(&Pattern::triangle(), Induced::Edge);
+        let run = |hds: bool, cap: usize| {
+            let cfg = EngineConfig {
+                horizontal_sharing: hds,
+                cache_frac: 0.0,
+                chunk_capacity: cap,
+                ..Default::default()
+            };
+            let pg = PartitionedGraph::new(&g, 4);
+            let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
+            kudu::engine::KuduEngine::run(
+                &g,
+                &plan,
+                &cfg,
+                &ComputeModel::default(),
+                &mut tr,
+            )
+            .network_bytes
+        };
+        let cap = 64 + rng.below(2048) as usize;
+        assert!(run(true, cap) <= run(false, cap), "case {case} cap {cap}");
+    }
+}
+
+/// Property: peak chunk memory is monotone (weakly) in chunk capacity.
+#[test]
+fn prop_memory_bounded_by_capacity() {
+    let g = gen::rmat(9, 9, 0xD1CE);
+    let plan = automine_plan(&Pattern::clique(4), Induced::Edge);
+    let mut prev = 0u64;
+    for cap in [16usize, 256, 4096, 65536] {
+        let cfg = EngineConfig { chunk_capacity: cap, ..Default::default() };
+        let pg = PartitionedGraph::new(&g, 2);
+        let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
+        let st = kudu::engine::KuduEngine::run(
+            &g,
+            &plan,
+            &cfg,
+            &ComputeModel::default(),
+            &mut tr,
+        );
+        assert!(
+            st.peak_embedding_bytes >= prev,
+            "cap {cap}: peak {} < previous {prev}",
+            st.peak_embedding_bytes
+        );
+        prev = st.peak_embedding_bytes;
+    }
+}

@@ -1,0 +1,111 @@
+//! Integration: the PJRT runtime loads the AOT artifacts and its counts
+//! agree exactly with the CPU reference and the brute-force oracle.
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use kudu::config::RunConfig;
+use kudu::graph::gen;
+use kudu::pattern::brute;
+use kudu::plan::ClientSystem;
+use kudu::runtime::{DenseCore, HotCore, DENSE_N};
+use kudu::workloads::{run_app, tc_hybrid, App, EngineKind};
+
+fn artifacts_present() -> bool {
+    kudu::runtime::artifacts_dir().join(format!("dense_core_{DENSE_N}.hlo.txt")).exists()
+}
+
+#[test]
+fn dense_core_matches_cpu_reference() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let core = DenseCore::load_default().expect("load artifact");
+    for (name, g) in [
+        ("skewed", gen::planted_hubs(3000, 9000, 8, 0.25, 11)),
+        ("rmat", gen::rmat(12, 10, 13)),
+        ("flat", gen::erdos_renyi(5000, 20000, 17)),
+    ] {
+        let hot = HotCore::extract(&g, DENSE_N);
+        let counts = core.count(&hot.adj).expect("execute artifact");
+        assert_eq!(counts.triangles, hot.cpu_triangles(), "graph {name}");
+        // Edge count cross-check against the dense matrix itself.
+        let edges: f64 = hot.adj.iter().map(|&x| x as f64).sum::<f64>() / 2.0;
+        assert_eq!(counts.edges, edges as u64, "graph {name}");
+    }
+}
+
+#[test]
+fn hybrid_tc_is_exact_end_to_end() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let core = DenseCore::load_default().expect("load artifact");
+    let g = gen::planted_hubs(4000, 12000, 8, 0.2, 19);
+    let cfg = RunConfig::with_machines(4);
+    let expect = brute::triangle_count(&g);
+    let hybrid = tc_hybrid(&g, &cfg, &core).expect("hybrid run");
+    assert_eq!(hybrid.total_count(), expect, "XLA-dense + CPU-sparse must be exact");
+    // And the pure engine agrees too.
+    let engine = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    assert_eq!(engine.total_count(), expect);
+}
+
+#[test]
+fn dense_core_wedges_match_oracle_on_core_subgraph() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let core = DenseCore::load_default().expect("load artifact");
+    let g = gen::rmat(11, 12, 23);
+    let hot = HotCore::extract(&g, DENSE_N);
+    let counts = core.count(&hot.adj).expect("execute");
+    // Build the hot-induced subgraph as a Graph and oracle-count wedges.
+    let mut edges = Vec::new();
+    for i in 0..hot.n {
+        for j in (i + 1)..hot.n {
+            if hot.adj[i * hot.n + j] != 0.0 {
+                edges.push((i as u32, j as u32));
+            }
+        }
+    }
+    let sub = kudu::graph::Graph::from_edges(hot.n, &edges);
+    let wedges = brute::count_embeddings(
+        &sub,
+        &kudu::pattern::Pattern::chain(3),
+        kudu::pattern::brute::Induced::Edge,
+    );
+    assert_eq!(counts.wedges, wedges);
+    let tris = brute::triangle_count(&sub);
+    assert_eq!(counts.triangles, tris);
+}
+
+#[test]
+fn pair_intersect_artifact_matches_cpu() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use kudu::runtime::{PairIntersect, PAIR_BATCH};
+    let pi = PairIntersect::load_default().expect("load pair-intersect artifact");
+    let g = gen::rmat(11, 10, 29);
+    let hot = HotCore::extract(&g, DENSE_N);
+    // Build bitmap rows for PAIR_BATCH hot-vertex pairs.
+    let n = hot.n;
+    let mut rows_u = vec![0f32; PAIR_BATCH * n];
+    let mut rows_v = vec![0f32; PAIR_BATCH * n];
+    let mut expect = Vec::with_capacity(PAIR_BATCH);
+    for b in 0..PAIR_BATCH {
+        let i = b % n;
+        let j = (b * 7 + 1) % n;
+        rows_u[b * n..(b + 1) * n].copy_from_slice(&hot.adj[i * n..(i + 1) * n]);
+        rows_v[b * n..(b + 1) * n].copy_from_slice(&hot.adj[j * n..(j + 1) * n]);
+        let c = (0..n)
+            .filter(|&k| hot.adj[i * n + k] != 0.0 && hot.adj[j * n + k] != 0.0)
+            .count() as u64;
+        expect.push(c);
+    }
+    let got = pi.counts(&rows_u, &rows_v).expect("execute pair-intersect");
+    assert_eq!(got, expect, "batched common-neighbour counts must match CPU");
+}
