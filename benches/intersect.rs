@@ -1,5 +1,7 @@
 //! Micro-bench for the intersection kernels — the L3 hot path. Drives the
-//! GALLOP_RATIO tuning recorded in EXPERIMENTS.md §Perf.
+//! GALLOP_RATIO tuning recorded in EXPERIMENTS.md §Perf. Emits
+//! machine-readable results to BENCH_intersect.json so the perf
+//! trajectory is tracked across PRs.
 
 use kudu::bench::Group;
 use kudu::exec::{intersect, intersect_gallop, intersect_merge};
@@ -45,4 +47,6 @@ fn main() {
         });
     }
     group.finish();
+    group.write_json("BENCH_intersect.json").expect("write BENCH_intersect.json");
+    println!("wrote BENCH_intersect.json ({} results)", group.results().len());
 }

@@ -1,0 +1,84 @@
+//! Parallel-speedup bench: real wall-clock of the simulated cluster with
+//! host parallelism off (`sim_threads = 1`) versus on (`0` = all cores),
+//! on an 8-machine RMAT triangle-counting run. Also asserts the tentpole
+//! guarantee along the way: both executions report bitwise-identical
+//! counts, traffic, and virtual time. Emits BENCH_parallel.json
+//! (acceptance: ≥ 2× on a 4-core host); numbers are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use kudu::cluster::Transport;
+use kudu::config::EngineConfig;
+use kudu::engine::KuduEngine;
+use kudu::graph::gen;
+use kudu::metrics::{ComputeModel, NetModel, RunStats};
+use kudu::par;
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::graphpi_plan;
+use std::time::Instant;
+
+const MACHINES: usize = 8;
+
+fn run_once(g: &kudu::Graph, plan: &kudu::Plan, sim_threads: usize) -> (RunStats, f64) {
+    let cfg = EngineConfig { sim_threads, ..Default::default() };
+    let pg = PartitionedGraph::new(g, MACHINES);
+    let mut tr = Transport::new(pg, NetModel::default());
+    let t0 = Instant::now();
+    let st = KuduEngine::run(g, plan, &cfg, &ComputeModel::default(), &mut tr);
+    let wall = t0.elapsed().as_secs_f64();
+    (st, wall)
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let host_threads = par::resolve_threads(0);
+    let g = gen::rmat(13, 16, 42);
+    let plan = graphpi_plan(&Pattern::triangle(), Induced::Edge);
+    println!(
+        "parallel bench: TC on rmat-13 ({} vertices, {} edges), {MACHINES} machines, \
+         host threads {host_threads}",
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    // Warmup.
+    let (reference, _) = run_once(&g, &plan, 1);
+
+    let reps = 5;
+    let mut serial = Vec::with_capacity(reps);
+    let mut parallel = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (s1, w1) = run_once(&g, &plan, 1);
+        let (s2, w2) = run_once(&g, &plan, 0);
+        // Tentpole guarantee: host parallelism is invisible in results.
+        assert_eq!(s1.counts, reference.counts);
+        assert_eq!(s2.counts, reference.counts);
+        assert_eq!(s1.network_bytes, s2.network_bytes);
+        assert_eq!(s1.network_messages, s2.network_messages);
+        assert_eq!(s1.virtual_time_s.to_bits(), s2.virtual_time_s.to_bits());
+        serial.push(w1);
+        parallel.push(w2);
+    }
+    let serial_s = median(serial);
+    let parallel_s = median(parallel);
+    let speedup = serial_s / parallel_s;
+    println!(
+        "bench parallel/tc-rmat13-{MACHINES}machines  serial {serial_s:.4}s  \
+         parallel {parallel_s:.4}s  speedup {speedup:.2}x"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"parallel_speedup\",\n  \"workload\": \"tc_rmat13_{MACHINES}machines\",\n  \
+         \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
+         \"serial_median_s\": {serial_s},\n  \"parallel_median_s\": {parallel_s},\n  \
+         \"speedup\": {speedup},\n  \"count\": {},\n  \"deterministic\": true\n}}\n",
+        reference.total_count()
+    );
+    std::fs::write("BENCH_parallel.json", json).expect("write BENCH_parallel.json");
+    println!("wrote BENCH_parallel.json");
+}

@@ -19,10 +19,9 @@ use kudu::config::RunConfig;
 use kudu::graph::gen::Dataset;
 use kudu::metrics::{fmt_bytes, fmt_time};
 use kudu::plan::ClientSystem;
-use kudu::runtime::DenseCore;
-use kudu::workloads::{run_app, tc_hybrid, App, EngineKind};
+use kudu::workloads::{run_app, App, EngineKind};
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     println!("== Kudu end-to-end driver ==");
     let g = Dataset::RmatLarge.build();
     println!(
@@ -52,11 +51,13 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- Step 2: the three-layer hybrid TC (PJRT dense core). ---
-    println!("\n-- hybrid TC: XLA dense hot-core + engine sparse remainder --");
-    match DenseCore::load_default() {
+    // --- Step 2: the three-layer hybrid TC (PJRT dense core when built
+    // with `--features pjrt`; CPU dense-core twin otherwise). ---
+    println!("\n-- hybrid TC: dense hot-core + engine sparse remainder --");
+    #[cfg(feature = "pjrt")]
+    match kudu::runtime::DenseCore::load_default() {
         Ok(core) => {
-            let st = tc_hybrid(&g, &cfg, &core)?;
+            let st = kudu::workloads::tc_hybrid(&g, &cfg, &core).expect("hybrid run");
             println!(
                 "hybrid count={} (pure engine count={}) -> {}",
                 st.total_count(),
@@ -72,6 +73,13 @@ fn main() -> anyhow::Result<()> {
             assert_eq!(st.total_count(), tc_count);
             println!("cpu-hybrid count={} EXACT MATCH", st.total_count());
         }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        println!("(built without `pjrt`; using the CPU dense-core twin)");
+        let st = kudu::workloads::tc_hybrid_cpu(&g, &cfg, 256);
+        assert_eq!(st.total_count(), tc_count);
+        println!("cpu-hybrid count={} EXACT MATCH", st.total_count());
     }
 
     // --- Step 3: headline comparison vs baselines. ---
@@ -98,5 +106,4 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(g.csr_bytes() as u64)
     );
     println!("\ne2e driver complete: all layers composed, counts exact.");
-    Ok(())
 }

@@ -18,7 +18,7 @@ use kudu::partition::PartitionedGraph;
 use kudu::pattern::brute::Induced;
 use kudu::pattern::Pattern;
 use kudu::plan::ClientSystem;
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 fn main() {
     // A social graph with planted dense "fraud rings": hubs connected to a
@@ -29,11 +29,14 @@ fn main() {
     let cfg = RunConfig::with_machines(4);
     let plan = ClientSystem::GraphPi.plan(&Pattern::triangle(), Induced::Edge);
 
-    // Per-vertex triangle participation, accumulated across machines.
-    let tri_count = RefCell::new(vec![0u32; g.num_vertices()]);
+    // Per-vertex triangle participation, accumulated across machines. The
+    // engine runs its simulated machines on concurrent host threads, so
+    // the shared accumulator is a Mutex (each sink locks briefly per
+    // embedding; counts are u32 adds, so arrival order cannot matter).
+    let tri_count = Mutex::new(vec![0u32; g.num_vertices()]);
     let pg = PartitionedGraph::new(&g, cfg.num_machines);
     let mut tr = Transport::new(pg, cfg.net);
-    let mut sinks: Vec<FnSink<Box<dyn FnMut(&[u32]) + '_>>> = Vec::new();
+    let mut sinks: Vec<FnSink<Box<dyn FnMut(&[u32]) + Send + '_>>> = Vec::new();
     let stats = KuduEngine::run_with_sinks(
         &g,
         &plan,
@@ -43,10 +46,11 @@ fn main() {
         |_machine| {
             let tc = &tri_count;
             FnSink::new(Box::new(move |vs: &[u32]| {
+                let mut counts = tc.lock().unwrap();
                 for &v in vs {
-                    tc.borrow_mut()[v as usize] += 1;
+                    counts[v as usize] += 1;
                 }
-            }) as Box<dyn FnMut(&[u32]) + '_>)
+            }) as Box<dyn FnMut(&[u32]) + Send + '_>)
         },
         &mut sinks,
     );
@@ -56,7 +60,7 @@ fn main() {
     println!("virtual time: {:.3}s, traffic: {} bytes", stats.virtual_time_s, stats.network_bytes);
 
     // Clustering-coefficient-style score: triangles / possible wedges.
-    let tri = tri_count.into_inner();
+    let tri = tri_count.into_inner().unwrap();
     let mut scored: Vec<(f64, u32)> = (0..g.num_vertices() as u32)
         .filter(|&v| g.degree(v) >= 8)
         .map(|v| {

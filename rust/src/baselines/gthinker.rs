@@ -11,11 +11,12 @@
 //! (Table 2's 1289.8× gap): each request touches a tiny edge list, so the
 //! cache bookkeeping cannot be amortised.
 
-use crate::cluster::{Timeline, Transport};
+use crate::cluster::{Timeline, TrafficLedger, Transport};
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
+use crate::par;
 use crate::plan::Plan;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Software-cache management cost per request, in work units. Covers hash
 /// lookup, reference-count update, lock, and GC amortisation — the "high
@@ -29,29 +30,37 @@ pub const TASK_OVERHEAD_UNITS: u64 = 2_000;
 pub struct GThinker;
 
 impl GThinker {
+    /// Runs over the same split transport as the Kudu engine (shared
+    /// read-only [`crate::cluster::ClusterView`], one [`TrafficLedger`]
+    /// per machine, merged after the join), one host thread per machine —
+    /// so Table 2/3 wall-clock comparisons stay apples-to-apples.
+    /// `threads` is the *modeled* per-machine thread count (scales
+    /// virtual time); `sim_threads` is the host-side parallelism of the
+    /// simulation itself (`0` = all cores), which never changes results:
+    /// machines only read shared state, and the reduction below runs in
+    /// machine order.
     pub fn run(
         g: &Graph,
         plan: &Plan,
         threads: usize,
+        sim_threads: usize,
         compute: &ComputeModel,
         transport: &mut Transport,
     ) -> RunStats {
         let wall = std::time::Instant::now();
         let spu = compute.seconds_per_unit / threads.max(1) as f64;
         let n = transport.num_machines();
-        let mut stats = RunStats::default();
-        let mut total = 0u64;
-        let mut worst: f64 = 0.0;
-        let mut worst_exposed = 0.0f64;
+        let view = transport.view();
 
-        for machine in 0..n {
+        let outcomes = par::run_indexed(par::resolve_threads(sim_threads), n, |machine| {
             let mut timeline = Timeline::default();
             let mut work = 0u64;
+            let mut ledger = TrafficLedger::new(n);
             // Ref-counted software cache: vertex -> refcount. Capacity is
             // generous (G-thinker caches aggressively); the cost is the
             // per-request management, not misses.
             let mut cache: HashMap<VertexId, u32> = HashMap::new();
-            let starts = transport.partitioned().owned_vertices(machine);
+            let starts = view.partitioned().owned_vertices(machine);
             let mut count = 0u64;
 
             for &v0 in &starts {
@@ -68,20 +77,22 @@ impl GThinker {
                         Some(rc) => *rc += 1,
                         None => {
                             cache.insert(u, 1);
-                            if transport.partitioned().owner(u) != machine {
+                            if view.partitioned().owner(u) != machine {
                                 to_fetch.push(u);
                             }
                         }
                     }
                 }
                 // One batched pull per remote machine for this task.
-                let mut by_owner: HashMap<usize, Vec<VertexId>> = HashMap::new();
+                // BTreeMap: owner iteration order is part of the virtual
+                // timeline, so it must be deterministic.
+                let mut by_owner: BTreeMap<usize, Vec<VertexId>> = BTreeMap::new();
                 for u in to_fetch {
-                    by_owner.entry(transport.partitioned().owner(u)).or_default().push(u);
+                    by_owner.entry(view.partitioned().owner(u)).or_default().push(u);
                 }
                 let mut gate = 0.0f64;
                 for (owner, verts) in by_owner {
-                    let (_b, t) = transport.fetch_batch(machine, owner, &verts);
+                    let (_b, t) = view.fetch_batch(&mut ledger, machine, owner, &verts);
                     gate = gate.max(timeline.post_comm(t));
                     work += verts.iter().map(|&u| g.degree(u) as u64 / 4 + 1).sum::<u64>();
                 }
@@ -101,8 +112,6 @@ impl GThinker {
                     }
                 }
             }
-            total += count;
-            stats.work_units += work;
             // The per-task posts covered only the enumeration compute;
             // charge the cache/task management overhead (it runs on the
             // same compute threads) as the remainder.
@@ -111,9 +120,20 @@ impl GThinker {
             if all > posted {
                 timeline.post_compute(0.0, all - posted);
             }
-            if timeline.finish() > worst {
-                worst = timeline.finish();
-                worst_exposed = timeline.exposed_comm();
+            (count, work, ledger, timeline.finish(), timeline.exposed_comm())
+        });
+
+        let mut stats = RunStats::default();
+        let mut total = 0u64;
+        let mut worst: f64 = 0.0;
+        let mut worst_exposed = 0.0f64;
+        for (count, work, ledger, finish, exposed) in outcomes {
+            total += count;
+            stats.work_units += work;
+            transport.merge_ledger(&ledger);
+            if finish > worst {
+                worst = finish;
+                worst_exposed = exposed;
             }
         }
         stats.counts = vec![total];
@@ -232,7 +252,7 @@ mod tests {
         let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
         let pg = PartitionedGraph::new(&g, 4);
         let mut tr = Transport::new(pg, NetModel::default());
-        let st = GThinker::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+        let st = GThinker::run(&g, &plan, 1, 0, &ComputeModel::default(), &mut tr);
         assert_eq!(st.total_count(), expect);
         assert!(st.network_bytes > 0);
     }
@@ -244,7 +264,7 @@ mod tests {
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
         let pg = PartitionedGraph::new(&g, 4);
         let mut tr = Transport::new(pg, NetModel::default());
-        let gt = GThinker::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+        let gt = GThinker::run(&g, &plan, 1, 0, &ComputeModel::default(), &mut tr);
         // Work must massively exceed the pure enumeration work.
         let pure = crate::baselines::SingleMachine::run(&g, &plan, &ComputeModel::default());
         assert!(

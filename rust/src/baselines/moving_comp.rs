@@ -40,6 +40,11 @@ impl MovingComputation {
         let spu = compute.seconds_per_unit / threads.max(1) as f64;
         let n = transport.num_machines();
         let depth = plan.depth();
+        // This baseline is inherently level-synchronous (BSP barriers
+        // between shuffles), so it stays serial and uses the split
+        // transport's single-ledger convenience path — same ClusterView
+        // cost model underneath, so traffic comparisons against the
+        // parallel engines remain apples-to-apples.
 
         // Per-machine frontiers of partial embeddings at the current level.
         let mut frontiers: Vec<Vec<Partial>> = vec![Vec::new(); n];

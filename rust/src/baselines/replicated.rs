@@ -14,6 +14,7 @@
 
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
+use crate::par;
 use crate::pattern::MAX_PATTERN;
 use crate::plan::Plan;
 
@@ -27,15 +28,18 @@ pub const STARTUP_S_PER_MACHINE: f64 = 0.0005;
 pub struct Replicated;
 
 impl Replicated {
-    /// Mine with `machines` replicas and `threads` compute threads per
-    /// machine. Start vertices are block-partitioned (GraphPi's static
-    /// first-loop split); virtual time is the slowest machine (stragglers
-    /// included) plus startup.
+    /// Mine with `machines` replicas and `threads` *modeled* compute
+    /// threads per machine. Start vertices are block-partitioned
+    /// (GraphPi's static first-loop split); virtual time is the slowest
+    /// machine (stragglers included) plus startup. `sim_threads` is the
+    /// host-side parallelism of the simulation (`0` = all cores) and
+    /// never changes results.
     pub fn run(
         g: &Graph,
         plan: &Plan,
         machines: usize,
         threads: usize,
+        sim_threads: usize,
         compute: &ComputeModel,
     ) -> RunStats {
         let wall = std::time::Instant::now();
@@ -47,8 +51,13 @@ impl Replicated {
         // the first loop(s) with a cost model before mining; round-robin
         // is the closest static approximation). Still coarse-grained: a
         // deep straggler subtree cannot be re-balanced once assigned.
-        for m in 0..machines {
-            let (count, work) = mine_split(g, plan, m as VertexId, machines as VertexId, n);
+        // Replicas are independent, so each runs on its own host thread;
+        // the fold below is in machine order (u64 sums + max), so results
+        // never depend on the host thread count.
+        let outcomes = par::run_indexed(par::resolve_threads(sim_threads), machines, |m| {
+            mine_split(g, plan, m as VertexId, machines as VertexId, n)
+        });
+        for (count, work) in outcomes {
             total += count;
             total_work += work;
             slowest = slowest.max(work);
@@ -233,7 +242,7 @@ mod tests {
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
         let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
         for m in [1, 2, 4, 8] {
-            let st = Replicated::run(&g, &plan, m, 1, &ComputeModel::default());
+            let st = Replicated::run(&g, &plan, m, 1, 0, &ComputeModel::default());
             assert_eq!(st.total_count(), expect, "machines={m}");
         }
     }
@@ -242,8 +251,8 @@ mod tests {
     fn startup_cost_grows_with_machines() {
         let g = gen::erdos_renyi(50, 100, 3);
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
-        let t1 = Replicated::run(&g, &plan, 1, 1, &ComputeModel::default()).virtual_time_s;
-        let t8 = Replicated::run(&g, &plan, 8, 1, &ComputeModel::default()).virtual_time_s;
+        let t1 = Replicated::run(&g, &plan, 1, 1, 0, &ComputeModel::default()).virtual_time_s;
+        let t8 = Replicated::run(&g, &plan, 8, 1, 0, &ComputeModel::default()).virtual_time_s;
         // Tiny workload: startup dominates, so 8 machines are SLOWER —
         // the paper's small-workload observation.
         assert!(t8 > t1);
@@ -262,8 +271,8 @@ mod tests {
         let g = gen::planted_hubs(4000, 8000, 6, 0.4, 7);
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
         let c = ComputeModel::default();
-        let t1 = Replicated::run(&g, &plan, 1, 1, &c);
-        let t8 = Replicated::run(&g, &plan, 8, 1, &c);
+        let t1 = Replicated::run(&g, &plan, 1, 1, 0, &c);
+        let t8 = Replicated::run(&g, &plan, 8, 1, 0, &c);
         let speedup = t1.virtual_time_s / t8.virtual_time_s;
         assert!(speedup < 7.0, "skewed replicated speedup should be sub-linear, got {speedup}");
     }

@@ -7,8 +7,22 @@
 //! ```text
 //! bench <group>/<name>  median 12.34ms  min 11.98ms  mean 12.50ms  (n=10)
 //! ```
+//!
+//! Results are also accumulated per group and can be written as JSON
+//! (`Group::write_json`) so the perf trajectory is machine-readable and
+//! trackable across PRs (`BENCH_*.json`, see EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
+
+/// One recorded benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub samples: usize,
+}
 
 /// One benchmark group; mirrors criterion's `benchmark_group` surface
 /// closely enough that the bench files read the same.
@@ -16,11 +30,12 @@ pub struct Group {
     name: String,
     samples: usize,
     warmup: usize,
+    results: Vec<BenchResult>,
 }
 
 impl Group {
     pub fn new(name: &str) -> Self {
-        Group { name: name.to_string(), samples: 10, warmup: 2 }
+        Group { name: name.to_string(), samples: 10, warmup: 2, results: Vec::new() }
     }
 
     /// Number of timed samples per benchmark (default 10).
@@ -31,7 +46,7 @@ impl Group {
 
     /// Run and report one benchmark. `f` is the operation under test; its
     /// result is passed through `std::hint::black_box`.
-    pub fn bench<R>(&self, name: &str, mut f: impl FnMut() -> R) {
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -54,11 +69,52 @@ impl Group {
             fmt(mean),
             self.samples
         );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            median_s: median,
+            min_s: min,
+            mean_s: mean,
+            samples: self.samples,
+        });
+    }
+
+    /// Everything recorded so far, in bench order.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write the recorded results as a JSON document to `path`
+    /// (hand-rolled writer; the image has no serde).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut out = std::fs::File::create(path)?;
+        writeln!(out, "{{")?;
+        writeln!(out, "  \"group\": \"{}\",", json_escape(&self.name))?;
+        writeln!(out, "  \"results\": [")?;
+        for (i, r) in self.results.iter().enumerate() {
+            let comma = if i + 1 < self.results.len() { "," } else { "" };
+            writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"median_s\": {}, \"min_s\": {}, \"mean_s\": {}, \"samples\": {}}}{comma}",
+                json_escape(&r.name),
+                r.median_s,
+                r.min_s,
+                r.mean_s,
+                r.samples
+            )?;
+        }
+        writeln!(out, "  ]")?;
+        writeln!(out, "}}")?;
+        Ok(())
     }
 
     pub fn finish(&self) {
         println!("group {} done", self.name);
     }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 fn fmt(s: f64) -> String {
@@ -88,7 +144,28 @@ mod tests {
         });
         // warmup 2 + samples 3
         assert_eq!(calls, 5);
+        assert_eq!(g.results().len(), 1);
+        assert_eq!(g.results()[0].name, "noop");
+        assert_eq!(g.results()[0].samples, 3);
         g.finish();
+    }
+
+    #[test]
+    fn json_output_is_wellformed() {
+        let dir = std::env::temp_dir().join("kudu_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let mut g = Group::new("grp\"x");
+        g.sample_size(3);
+        g.bench("a/b", || 1 + 1);
+        g.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"group\": \"grp\\\"x\""));
+        assert!(text.contains("\"name\": \"a/b\""));
+        assert!(text.contains("\"median_s\": "));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
     }
 
     #[test]

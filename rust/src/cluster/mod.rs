@@ -4,10 +4,23 @@
 //! Substitution for the paper's 8-node MPI/InfiniBand testbed (DESIGN.md
 //! §1). All graph partitions live in one address space; *policy* is
 //! unchanged — a machine may touch a remote vertex's adjacency list only
-//! by issuing a [`Transport`] fetch, which copies the data (remote edge
-//! lists are materialised into the requester's chunk arena, exactly as
-//! they would arrive off the wire) and records bytes/messages. Batched
-//! fetches get one latency charge, modelling MPI message aggregation.
+//! by issuing a fetch through the transport layer, which copies the data
+//! (remote edge lists are materialised into the requester's chunk arena,
+//! exactly as they would arrive off the wire) and records bytes/messages.
+//! Batched fetches get one latency charge, modelling MPI message
+//! aggregation.
+//!
+//! The transport is split so the simulated machines can execute on
+//! concurrent host threads (one thread per machine):
+//!
+//! * [`ClusterView`] — the shared, read-only side: partitioned graph +
+//!   network cost model. `Copy`, freely shareable across threads.
+//! * [`TrafficLedger`] — the mutable side, one per machine executor:
+//!   a private traffic matrix merged (associatively, u64 sums) into the
+//!   run's [`Transport`] after the fork-join, so the reduction order can
+//!   never change reported numbers.
+//! * [`Transport`] — owns the merged [`Traffic`] for a run and doubles as
+//!   a single-ledger convenience for serial callers and tests.
 
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{NetModel, Traffic};
@@ -19,17 +32,18 @@ pub const PER_VERTEX_HEADER_BYTES: u64 = 8;
 /// Fixed per-message envelope.
 pub const PER_MESSAGE_BYTES: u64 = 64;
 
-/// The accounted transport between simulated machines.
-pub struct Transport<'g> {
+/// Shared, read-only view of the simulated cluster: the partitioned graph
+/// plus the network cost model. Nothing here is mutable, so a copy can be
+/// handed to every machine-executor thread.
+#[derive(Clone, Copy)]
+pub struct ClusterView<'g> {
     pg: PartitionedGraph<'g>,
     net: NetModel,
-    pub traffic: Traffic,
 }
 
-impl<'g> Transport<'g> {
+impl<'g> ClusterView<'g> {
     pub fn new(pg: PartitionedGraph<'g>, net: NetModel) -> Self {
-        let n = pg.map.num_machines();
-        Transport { pg, net, traffic: Traffic::new(n) }
+        ClusterView { pg, net }
     }
 
     #[inline]
@@ -43,15 +57,42 @@ impl<'g> Transport<'g> {
     }
 
     #[inline]
+    pub fn net(&self) -> &NetModel {
+        &self.net
+    }
+
+    #[inline]
     pub fn num_machines(&self) -> usize {
         self.pg.map.num_machines()
     }
 
+    /// Wire cost of one batched fetch of `vertices`: (request bytes,
+    /// payload bytes, transfer time). Pure — no accounting.
+    #[inline]
+    pub fn fetch_cost(&self, vertices: &[VertexId]) -> (u64, u64, f64) {
+        let payload: u64 = vertices
+            .iter()
+            .map(|&v| self.pg.graph.degree(v) as u64 * 4 + PER_VERTEX_HEADER_BYTES)
+            .sum::<u64>()
+            + PER_MESSAGE_BYTES;
+        // Request message (vertex ids) + response (edge lists).
+        let request: u64 = vertices.len() as u64 * 4 + PER_MESSAGE_BYTES;
+        let time = self.net.transfer_time(request) + self.net.transfer_time(payload);
+        (request, payload, time)
+    }
+
     /// Fetch the edge lists of `vertices` (all owned by `from`) into
-    /// `requester`'s memory as one batched message. Returns the payload
-    /// bytes and the modelled transfer time. The caller copies the
-    /// adjacency data into its arena — the copy is the "receive".
-    pub fn fetch_batch(&mut self, requester: usize, from: usize, vertices: &[VertexId]) -> (u64, f64) {
+    /// `requester`'s memory as one batched message, accounting the bytes
+    /// on `ledger`. Returns the total bytes and the modelled transfer
+    /// time. The caller copies the adjacency data into its arena — the
+    /// copy is the "receive".
+    pub fn fetch_batch(
+        &self,
+        ledger: &mut TrafficLedger,
+        requester: usize,
+        from: usize,
+        vertices: &[VertexId],
+    ) -> (u64, f64) {
         if vertices.is_empty() {
             return (0, 0.0);
         }
@@ -60,16 +101,9 @@ impl<'g> Transport<'g> {
             // Local: no traffic, no modelled latency.
             return (0, 0.0);
         }
-        let payload: u64 = vertices
-            .iter()
-            .map(|&v| self.pg.graph.degree(v) as u64 * 4 + PER_VERTEX_HEADER_BYTES)
-            .sum::<u64>()
-            + PER_MESSAGE_BYTES;
-        // Request message (vertex ids) + response (edge lists).
-        let request: u64 = vertices.len() as u64 * 4 + PER_MESSAGE_BYTES;
-        self.traffic.record(requester, from, request);
-        self.traffic.record(from, requester, payload);
-        let time = self.net.transfer_time(request) + self.net.transfer_time(payload);
+        let (request, payload, time) = self.fetch_cost(vertices);
+        ledger.record(requester, from, request);
+        ledger.record(from, requester, payload);
         (request + payload, time)
     }
 
@@ -77,7 +111,8 @@ impl<'g> Transport<'g> {
     /// baseline): `count` embeddings of `level` vertices each, plus
     /// piggybacked edge-list bytes.
     pub fn ship_embeddings(
-        &mut self,
+        &self,
+        ledger: &mut TrafficLedger,
         from: usize,
         to: usize,
         count: u64,
@@ -88,8 +123,99 @@ impl<'g> Transport<'g> {
             return (0, 0.0);
         }
         let bytes = count * (level as u64 * 4) + extra_bytes + PER_MESSAGE_BYTES;
-        self.traffic.record(from, to, bytes);
+        ledger.record(from, to, bytes);
         (bytes, self.net.transfer_time(bytes))
+    }
+}
+
+/// Per-executor traffic ledger: a private traffic matrix owned by one
+/// simulated machine's host thread. Ledgers are merged into the run's
+/// [`Transport`] after the fork-join; merging sums u64 counters, so it is
+/// associative and commutative and the reduction order cannot change any
+/// reported number.
+#[derive(Clone, Debug)]
+pub struct TrafficLedger {
+    traffic: Traffic,
+}
+
+impl TrafficLedger {
+    pub fn new(num_machines: usize) -> Self {
+        TrafficLedger { traffic: Traffic::new(num_machines) }
+    }
+
+    #[inline]
+    pub fn record(&mut self, from: usize, to: usize, bytes: u64) {
+        self.traffic.record(from, to, bytes);
+    }
+
+    #[inline]
+    pub fn traffic(&self) -> &Traffic {
+        &self.traffic
+    }
+}
+
+/// The accounted transport between simulated machines: the shared
+/// [`ClusterView`] plus the merged per-run [`Traffic`].
+pub struct Transport<'g> {
+    view: ClusterView<'g>,
+    pub traffic: Traffic,
+}
+
+impl<'g> Transport<'g> {
+    pub fn new(pg: PartitionedGraph<'g>, net: NetModel) -> Self {
+        let n = pg.map.num_machines();
+        Transport { view: ClusterView::new(pg, net), traffic: Traffic::new(n) }
+    }
+
+    /// The shared read-only side, copyable across executor threads.
+    #[inline]
+    pub fn view(&self) -> ClusterView<'g> {
+        self.view
+    }
+
+    /// Fold one executor's ledger into the run totals.
+    pub fn merge_ledger(&mut self, ledger: &TrafficLedger) {
+        self.traffic.merge(ledger.traffic());
+    }
+
+    #[inline]
+    pub fn graph(&self) -> &'g Graph {
+        self.view.graph()
+    }
+
+    #[inline]
+    pub fn partitioned(&self) -> &PartitionedGraph<'g> {
+        self.view.partitioned()
+    }
+
+    #[inline]
+    pub fn num_machines(&self) -> usize {
+        self.view.num_machines()
+    }
+
+    /// Single-ledger convenience: [`ClusterView::fetch_batch`] accounted
+    /// directly on the run totals (serial callers and tests). Delegates
+    /// through a throwaway ledger so the cost math lives in one place.
+    pub fn fetch_batch(&mut self, requester: usize, from: usize, vertices: &[VertexId]) -> (u64, f64) {
+        let mut ledger = TrafficLedger::new(self.num_machines());
+        let out = self.view.fetch_batch(&mut ledger, requester, from, vertices);
+        self.traffic.merge(ledger.traffic());
+        out
+    }
+
+    /// Single-ledger convenience mirroring [`ClusterView::ship_embeddings`].
+    pub fn ship_embeddings(
+        &mut self,
+        from: usize,
+        to: usize,
+        count: u64,
+        level: usize,
+        extra_bytes: u64,
+    ) -> (u64, f64) {
+        let mut ledger = TrafficLedger::new(self.num_machines());
+        let out = self.view.ship_embeddings(&mut ledger, from, to, count, level, extra_bytes);
+        self.traffic.merge(ledger.traffic());
+        out
     }
 }
 
@@ -225,5 +351,60 @@ mod tests {
         assert!(s > 0.0);
         let (b0, s0) = t.ship_embeddings(0, 0, 10, 3, 100);
         assert_eq!((b0, s0), (0, 0.0));
+    }
+
+    #[test]
+    fn ledger_fetch_matches_transport_fetch() {
+        // The split path (view + per-machine ledger, merged after) must
+        // account byte-for-byte like the single-ledger convenience path.
+        let g = gen::erdos_renyi(200, 700, 3);
+        let pg = PartitionedGraph::new(&g, 4);
+        let mut direct = Transport::new(pg, NetModel::default());
+        let view = direct.view();
+        let owned1 = view.partitioned().owned_vertices(1);
+        let owned2 = view.partitioned().owned_vertices(2);
+        let vs1 = &owned1[..4.min(owned1.len())];
+        let vs2 = &owned2[..3.min(owned2.len())];
+        let (db1, dt1) = direct.fetch_batch(0, 1, vs1);
+        let (db2, dt2) = direct.fetch_batch(3, 2, vs2);
+
+        let pg2 = PartitionedGraph::new(&g, 4);
+        let mut split = Transport::new(pg2, NetModel::default());
+        let sview = split.view();
+        let mut ledger_a = TrafficLedger::new(4);
+        let mut ledger_b = TrafficLedger::new(4);
+        let (sb1, st1) = sview.fetch_batch(&mut ledger_a, 0, 1, vs1);
+        let (sb2, st2) = sview.fetch_batch(&mut ledger_b, 3, 2, vs2);
+        // Merge in the opposite order: u64 sums are order-proof.
+        split.merge_ledger(&ledger_b);
+        split.merge_ledger(&ledger_a);
+
+        assert_eq!((db1, db2), (sb1, sb2));
+        assert_eq!((dt1, dt2), (st1, st2));
+        assert_eq!(direct.traffic.total_bytes(), split.traffic.total_bytes());
+        assert_eq!(direct.traffic.total_messages(), split.traffic.total_messages());
+    }
+
+    #[test]
+    fn view_is_shareable_across_threads() {
+        let g = gen::erdos_renyi(100, 300, 5);
+        let pg = PartitionedGraph::new(&g, 4);
+        let t = Transport::new(pg, NetModel::default());
+        let view = t.view();
+        let totals: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|m| {
+                    s.spawn(move || {
+                        let mut ledger = TrafficLedger::new(4);
+                        let owned = view.partitioned().owned_vertices((m + 1) % 4);
+                        let vs = &owned[..2.min(owned.len())];
+                        view.fetch_batch(&mut ledger, m, (m + 1) % 4, vs);
+                        ledger.traffic().total_bytes()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(totals.iter().all(|&b| b > 0));
     }
 }

@@ -26,8 +26,21 @@ pub struct EngineConfig {
     pub sockets: usize,
     /// NUMA-aware exploration (Table 7); irrelevant when `sockets == 1`.
     pub numa_aware: bool,
-    /// Computation threads per machine (virtual; Fig 17).
+    /// Computation threads per machine (virtual; Fig 17). This is part of
+    /// the *cost model* — it scales virtual compute time.
     pub threads: usize,
+    /// Host threads used to execute the simulation itself (thread-per-
+    /// machine, plus root-vertex sharding when only one machine is
+    /// simulated). `0` = all available cores. Changes wall-clock time
+    /// only: counts, traffic, and virtual-time metrics are byte-for-byte
+    /// identical for every value.
+    pub sim_threads: usize,
+    /// Number of contiguous root-vertex shards a single simulated
+    /// machine's start range is split into, so the single-machine and
+    /// NUMA configurations can also use the host cores. Fixed by config —
+    /// never derived from `sim_threads` — which is what keeps results
+    /// independent of the host thread count.
+    pub root_shards: usize,
 }
 
 impl Default for EngineConfig {
@@ -42,6 +55,8 @@ impl Default for EngineConfig {
             sockets: 1,
             numa_aware: true,
             threads: 1,
+            sim_threads: 0,
+            root_shards: 8,
         }
     }
 }
@@ -86,6 +101,8 @@ mod tests {
         assert_eq!(c.num_machines, 8);
         assert!(c.engine.vertical_sharing && c.engine.horizontal_sharing);
         assert!(c.engine.cache_frac > 0.0);
+        assert_eq!(c.engine.sim_threads, 0, "default = all available cores");
+        assert!(c.engine.root_shards >= 1);
         assert_eq!(RunConfig::single_machine().num_machines, 1);
         assert_eq!(RunConfig::with_machines(4).num_machines, 4);
     }

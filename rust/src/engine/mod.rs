@@ -23,11 +23,12 @@ pub mod cache;
 pub mod chunk;
 pub mod sink;
 
-use crate::cluster::{Timeline, Transport};
+use crate::cluster::{ClusterView, Timeline, TrafficLedger, Transport};
 use crate::config::EngineConfig;
 use crate::exec;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
+use crate::par;
 use crate::pattern::MAX_PATTERN;
 use crate::plan::{Plan, Source};
 use cache::StaticCache;
@@ -35,8 +36,27 @@ use chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
 use sink::{CountSink, EmbeddingSink};
 
 /// The distributed Kudu engine. Stateless facade: each [`KuduEngine::run`]
-/// simulates all machines of the cluster over a shared transport.
+/// simulates all machines of the cluster, one host thread per machine.
 pub struct KuduEngine;
+
+/// Everything one execution unit (a simulated machine, or one root-vertex
+/// shard of a lone machine) produces. Units only ever touch shared state
+/// through the read-only [`ClusterView`], so they run on concurrent host
+/// threads; outcomes are reduced in unit order after the join.
+struct UnitOutcome<S> {
+    machine: usize,
+    sink: S,
+    ledger: TrafficLedger,
+    units_cpu: u64,
+    units_mem: u64,
+    embeddings_created: u64,
+    peak_bytes: u64,
+    numa_remote: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    finish: f64,
+    exposed: f64,
+}
 
 impl KuduEngine {
     /// Mine `plan`'s pattern over `graph` partitioned across
@@ -50,52 +70,126 @@ impl KuduEngine {
         transport: &mut Transport<'g>,
     ) -> RunStats {
         let mut sinks: Vec<CountSink> = Vec::new();
-        let stats = Self::run_with_sinks(graph, plan, cfg, compute, transport, |_m| {
+        let mut stats = Self::run_with_sinks(graph, plan, cfg, compute, transport, |_m| {
             CountSink::default()
         }, &mut sinks);
-        let mut stats = stats;
         stats.counts = vec![sinks.iter().map(|s| s.count).sum()];
         stats
     }
 
-    /// Generic entry point: one sink per machine, produced by `make_sink`.
-    /// Sinks are returned through `out_sinks` for inspection.
-    pub fn run_with_sinks<'g, S: EmbeddingSink>(
+    /// Generic entry point: one sink per execution unit, produced by
+    /// `make_sink` (which receives the unit's machine index — a sharded
+    /// single-machine run yields several sinks for machine 0). Sinks are
+    /// returned through `out_sinks` in unit order for inspection.
+    ///
+    /// Execution is parallel across `cfg.sim_threads` host threads, but
+    /// the work decomposition and every reduction order are fixed by the
+    /// graph and config alone, so all results — counts, traffic, and
+    /// virtual-time metrics — are byte-for-byte identical for any
+    /// `sim_threads` value.
+    pub fn run_with_sinks<'g, S: EmbeddingSink + Send>(
         graph: &'g Graph,
         plan: &Plan,
         cfg: &EngineConfig,
         compute: &ComputeModel,
         transport: &mut Transport<'g>,
-        mut make_sink: impl FnMut(usize) -> S,
+        make_sink: impl Fn(usize) -> S + Sync,
         out_sinks: &mut Vec<S>,
     ) -> RunStats {
         assert!(plan.depth() >= 2, "patterns must have at least one edge");
         let n = transport.num_machines();
         let wall_start = std::time::Instant::now();
+        let view = transport.view();
+
+        // Work decomposition: one unit per machine; a lone machine's root
+        // range is additionally split into `cfg.root_shards` contiguous
+        // shards (each with its own chunk arenas, static cache, and
+        // ledger) so single-machine and NUMA configurations use the host
+        // cores too. The unit list never depends on `sim_threads`.
+        let l0 = plan.pattern.label(0);
+        let roots_of = |machine: usize| -> Vec<VertexId> {
+            let mut starts = view.partitioned().owned_vertices(machine);
+            if l0 != 0 {
+                starts.retain(|&v| graph.label(v) == l0);
+            }
+            starts
+        };
+        let units: Vec<(usize, Vec<VertexId>)> = if n == 1 {
+            let starts = roots_of(0);
+            let shards = cfg.root_shards.max(1);
+            // Ceiling division kept manual: usize::div_ceil needs a newer
+            // rustc than this crate assumes.
+            #[allow(clippy::manual_div_ceil)]
+            let per = (starts.len() + shards - 1) / shards;
+            if per == 0 {
+                vec![(0, starts)]
+            } else {
+                starts.chunks(per).map(|c| (0, c.to_vec())).collect()
+            }
+        } else {
+            (0..n).map(|m| (m, roots_of(m))).collect()
+        };
+
+        let sim_threads = par::resolve_threads(cfg.sim_threads);
+        let outcomes: Vec<UnitOutcome<S>> = par::run_indexed(sim_threads, units.len(), |i| {
+            let (machine, roots) = &units[i];
+            let mut sink = make_sink(*machine);
+            let mut run = MachineRun::new(*machine, graph, plan, cfg, compute, view);
+            run.run(roots, &mut sink);
+            UnitOutcome {
+                machine: *machine,
+                sink,
+                ledger: run.ledger,
+                units_cpu: run.units_cpu,
+                units_mem: run.units_mem,
+                embeddings_created: run.embeddings_created,
+                peak_bytes: run.peak_bytes,
+                numa_remote: run.numa_remote,
+                cache_hits: run.cache.hits,
+                cache_misses: run.cache.misses,
+                finish: run.timeline.finish(),
+                exposed: run.timeline.exposed_comm(),
+            }
+        });
+
+        // Reduce in unit order. Counters are u64 sums (associative); the
+        // per-machine virtual times are folded machine-by-machine below.
+        // Shards of a lone machine model sequential slices of its virtual
+        // timeline: finish times add, and — since a sequential machine
+        // reuses its chunk arenas across slices — the machine's peak is
+        // the max over its shards. (Shard boundaries re-segment the
+        // level-0 blocks, so the value can sit slightly below an
+        // unsharded run's; it stays bounded by the same chunk capacity
+        // and is deterministic for any `sim_threads`.)
         let mut stats = RunStats::default();
+        let mut machine_finish = vec![0.0f64; n];
+        let mut machine_exposed = vec![0.0f64; n];
+        let mut machine_peak = vec![0u64; n];
+        for o in &outcomes {
+            stats.work_units += o.units_cpu + o.units_mem;
+            stats.embeddings_created += o.embeddings_created;
+            stats.numa_remote_accesses += o.numa_remote;
+            stats.cache_hits += o.cache_hits;
+            stats.cache_misses += o.cache_misses;
+            machine_finish[o.machine] += o.finish;
+            machine_exposed[o.machine] += o.exposed;
+            machine_peak[o.machine] = machine_peak[o.machine].max(o.peak_bytes);
+        }
         let mut worst_finish = 0.0f64;
         let mut worst_exposed = 0.0f64;
-
-        for machine in 0..n {
-            let mut sink = make_sink(machine);
-            let mut m = MachineRun::new(machine, graph, plan, cfg, compute, transport);
-            m.run(&mut sink);
-            // Merge.
-            stats.work_units += m.units_cpu + m.units_mem;
-            stats.embeddings_created += m.embeddings_created;
-            stats.peak_embedding_bytes = stats.peak_embedding_bytes.max(m.peak_bytes);
-            stats.numa_remote_accesses += m.numa_remote;
-            stats.cache_hits += m.cache.hits;
-            stats.cache_misses += m.cache.misses;
-            let finish = m.timeline.finish();
-            if finish > worst_finish {
-                worst_finish = finish;
-                worst_exposed = m.timeline.exposed_comm();
+        for m in 0..n {
+            if machine_finish[m] > worst_finish {
+                worst_finish = machine_finish[m];
+                worst_exposed = machine_exposed[m];
             }
-            out_sinks.push(sink);
+        }
+        for o in outcomes {
+            transport.merge_ledger(&o.ledger);
+            out_sinks.push(o.sink);
         }
         stats.virtual_time_s = worst_finish;
         stats.exposed_comm_s = worst_exposed;
+        stats.peak_embedding_bytes = machine_peak.iter().copied().max().unwrap_or(0);
         stats.network_bytes = transport.traffic.total_bytes();
         stats.network_messages = transport.traffic.total_messages();
         stats.wall_s = wall_start.elapsed().as_secs_f64();
@@ -103,14 +197,18 @@ impl KuduEngine {
     }
 }
 
-/// Per-machine execution state.
+/// Per-machine (or per-shard) execution state. Shared data is reached
+/// only through the read-only `view`; all mutation is confined to this
+/// struct, which is what makes units safe to run on concurrent host
+/// threads without locks.
 struct MachineRun<'a, 'g> {
     machine: usize,
     graph: &'g Graph,
     plan: &'a Plan,
     cfg: &'a EngineConfig,
     compute: ComputeModel,
-    transport: &'a mut Transport<'g>,
+    view: ClusterView<'g>,
+    ledger: TrafficLedger,
     chunks: Vec<Chunk>,
     cache: StaticCache,
     timeline: Timeline,
@@ -137,7 +235,7 @@ impl<'a, 'g> MachineRun<'a, 'g> {
         plan: &'a Plan,
         cfg: &'a EngineConfig,
         compute: &ComputeModel,
-        transport: &'a mut Transport<'g>,
+        view: ClusterView<'g>,
     ) -> Self {
         let depth = plan.depth();
         let cache = if cfg.cache_frac > 0.0 {
@@ -145,13 +243,15 @@ impl<'a, 'g> MachineRun<'a, 'g> {
         } else {
             StaticCache::disabled()
         };
+        let ledger = TrafficLedger::new(view.num_machines());
         MachineRun {
             machine,
             graph,
             plan,
             cfg,
             compute: *compute,
-            transport,
+            view,
+            ledger,
             chunks: (0..depth).map(|_| Chunk::new(cfg.chunk_capacity)).collect(),
             cache,
             timeline: Timeline::default(),
@@ -213,20 +313,16 @@ impl<'a, 'g> MachineRun<'a, 'g> {
         self.pending_mem = 0;
     }
 
-    fn run<S: EmbeddingSink>(&mut self, sink: &mut S) {
-        let mut starts = self.transport.partitioned().owned_vertices(self.machine);
-        // Labelled mining: only start from vertices matching level-0's label.
-        let l0 = self.plan.pattern.label(0);
-        if l0 != 0 {
-            starts.retain(|&v| self.graph.label(v) == l0);
-        }
+    /// Mine the subtrees rooted at `roots` (the unit's slice of this
+    /// machine's owned, label-filtered start vertices).
+    fn run<S: EmbeddingSink>(&mut self, roots: &[VertexId], sink: &mut S) {
         let cap = self.cfg.chunk_capacity;
         let needs0 = self.plan.needs_adj[0];
         let mut block_start = 0usize;
-        while block_start < starts.len() {
-            let block_end = (block_start + cap).min(starts.len());
+        while block_start < roots.len() {
+            let block_end = (block_start + cap).min(roots.len());
             self.chunks[0].clear();
-            for &v in &starts[block_start..block_end] {
+            for &v in &roots[block_start..block_end] {
                 let mut vs = [0 as VertexId; MAX_PATTERN];
                 vs[0] = v;
                 let list = if needs0 { ListRef::Local(v) } else { ListRef::None };
@@ -244,7 +340,7 @@ impl<'a, 'g> MachineRun<'a, 'g> {
     /// Process a filled (or final partial) chunk at `level`: circulant
     /// fetch + extend, descending into `level+1` whenever it fills.
     fn process_chunk<S: EmbeddingSink>(&mut self, level: usize, sink: &mut S) {
-        let n = self.transport.num_machines();
+        let n = self.view.num_machines();
         // Group embedding indices into circulant batches: index 0 = ready
         // (local/cached/shared-resolved/no-list), then owner machines in
         // circulant order starting after self. Buffers are pooled per
@@ -327,7 +423,8 @@ impl<'a, 'g> MachineRun<'a, 'g> {
         if verts.is_empty() {
             return 0.0;
         }
-        let (_bytes, time) = self.transport.fetch_batch(self.machine, owner, &verts);
+        let (_bytes, time) =
+            self.view.fetch_batch(&mut self.ledger, self.machine, owner, &verts);
         let gate = self.timeline.post_comm(time);
         // Materialise the lists into the chunk arena ("receive").
         for &i in batch {
@@ -495,7 +592,7 @@ impl<'a, 'g> MachineRun<'a, 'g> {
             vs[new_level] = v;
             let list = if !needs {
                 ListRef::None
-            } else if self.transport.partitioned().is_local(self.machine, v) {
+            } else if self.view.partitioned().is_local(self.machine, v) {
                 ListRef::Local(v)
             } else if self.cache.lookup(v) {
                 ListRef::Cached(v)
@@ -509,14 +606,14 @@ impl<'a, 'g> MachineRun<'a, 'g> {
                             child.hds_insert(v, next_idx);
                             ListRef::Pending {
                                 vertex: v,
-                                owner: self.transport.partitioned().owner(v) as u8,
+                                owner: self.view.partitioned().owner(v) as u8,
                             }
                         }
                     }
                 } else {
                     ListRef::Pending {
                         vertex: v,
-                        owner: self.transport.partitioned().owner(v) as u8,
+                        owner: self.view.partitioned().owner(v) as u8,
                     }
                 }
             };
@@ -714,6 +811,55 @@ mod tests {
         let mut vs = all[0].clone();
         vs.sort_unstable();
         assert_eq!(vs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sim_threads_do_not_change_results() {
+        // The tentpole guarantee: host parallelism is invisible in every
+        // reported number, bitwise.
+        let g = gen::rmat(8, 10, 41);
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        for machines in [1usize, 2, 4, 8] {
+            let run = |sim: usize| {
+                let cfg = EngineConfig { sim_threads: sim, ..Default::default() };
+                run_count(&g, &plan, machines, &cfg).1
+            };
+            let a = run(1);
+            let b = run(4);
+            assert_eq!(a.counts, b.counts, "machines={machines}");
+            assert_eq!(a.network_bytes, b.network_bytes, "machines={machines}");
+            assert_eq!(a.network_messages, b.network_messages, "machines={machines}");
+            assert_eq!(
+                a.virtual_time_s.to_bits(),
+                b.virtual_time_s.to_bits(),
+                "machines={machines}"
+            );
+            assert_eq!(
+                a.exposed_comm_s.to_bits(),
+                b.exposed_comm_s.to_bits(),
+                "machines={machines}"
+            );
+            assert_eq!(a.work_units, b.work_units, "machines={machines}");
+            assert_eq!(a.embeddings_created, b.embeddings_created, "machines={machines}");
+            assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "machines={machines}");
+            assert_eq!(a.cache_hits, b.cache_hits, "machines={machines}");
+            assert_eq!(a.cache_misses, b.cache_misses, "machines={machines}");
+        }
+    }
+
+    #[test]
+    fn single_machine_sharding_matches_oracle() {
+        // A lone machine's root range is split into parallel shards; the
+        // shard count must never change the answer or the traffic (none).
+        let g = gen::erdos_renyi(150, 600, 77);
+        let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        for shards in [1usize, 3, 8, 64] {
+            let cfg = EngineConfig { root_shards: shards, ..Default::default() };
+            let (got, st) = run_count(&g, &plan, 1, &cfg);
+            assert_eq!(got, expect, "shards={shards}");
+            assert_eq!(st.network_bytes, 0, "shards={shards}");
+        }
     }
 
     #[test]

@@ -25,10 +25,14 @@
 //!   NUMA-aware mode.
 //! * [`baselines`] — the comparator execution models (G-thinker-like,
 //!   moving-computation-to-data, replicated GraphPi-like, single-machine).
-//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) for the dense hot-core offload.
+//! * [`runtime`] — the dense hot-core decomposition, plus (behind the
+//!   `pjrt` cargo feature) the PJRT bridge that loads AOT-compiled
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) for the XLA offload.
 //! * [`exec`], [`metrics`], [`config`] — intersection kernels, traffic and
 //!   virtual-time accounting, and run configuration.
+//! * [`par`] — deterministic fork-join execution of the simulated
+//!   machines over host threads (results are bitwise independent of the
+//!   host thread count).
 
 pub mod baselines;
 pub mod bench;
@@ -39,6 +43,7 @@ pub mod engine;
 pub mod exec;
 pub mod graph;
 pub mod metrics;
+pub mod par;
 pub mod partition;
 pub mod pattern;
 pub mod plan;

@@ -94,7 +94,8 @@ fn usage() -> ! {
     eprintln!("usage: kudu <run|plan|generate|stats> [flags]");
     eprintln!("  run      --graph <mc|pt|lj|uk|tw|fr|rm|yh|path> --app <tc|K-mc|K-cc>");
     eprintln!("           --engine <k-automine|k-graphpi|gthinker|movingcomp|replicated|single>");
-    eprintln!("           --machines N --threads N [--no-cache] [--no-hds] [--no-vcs]");
+    eprintln!("           --machines N --threads N --sim-threads N (0=all cores)");
+    eprintln!("           [--no-cache] [--no-hds] [--no-vcs]");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
     eprintln!("  generate --dataset <abbr> --out <path>");
@@ -113,6 +114,9 @@ fn main() {
             let machines = args.get_as::<usize>("machines", 8);
             let mut cfg = RunConfig::with_machines(machines);
             cfg.engine.threads = args.get_as::<usize>("threads", 1);
+            // Host-side parallelism of the simulation (0 = all cores);
+            // changes wall-clock only, never the reported metrics.
+            cfg.engine.sim_threads = args.get_as::<usize>("sim-threads", 0);
             if args.has("no-cache") {
                 cfg.engine.cache_frac = 0.0;
             }

@@ -149,6 +149,26 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    /// Fold another run's stats into an aggregate (multi-pattern apps,
+    /// per-machine reductions): counts append, counters and times add,
+    /// peaks take the max. Integer fields are associative-commutative
+    /// sums, and callers fold in a fixed order, so the aggregate cannot
+    /// depend on which thread finished first.
+    pub fn absorb(&mut self, other: &RunStats) {
+        self.counts.extend(other.counts.iter().copied());
+        self.work_units += other.work_units;
+        self.embeddings_created += other.embeddings_created;
+        self.network_bytes += other.network_bytes;
+        self.network_messages += other.network_messages;
+        self.virtual_time_s += other.virtual_time_s;
+        self.exposed_comm_s += other.exposed_comm_s;
+        self.wall_s += other.wall_s;
+        self.peak_embedding_bytes = self.peak_embedding_bytes.max(other.peak_embedding_bytes);
+        self.numa_remote_accesses += other.numa_remote_accesses;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+    }
+
     /// Communication overhead ratio (Fig 16): exposed comm / total runtime.
     pub fn comm_overhead(&self) -> f64 {
         if self.virtual_time_s == 0.0 {
@@ -220,6 +240,40 @@ mod tests {
         assert_eq!(m.transfer_time(0), 0.0);
         assert!(m.transfer_time(1000) > m.transfer_time(10));
         assert!(m.transfer_time(1) >= m.latency_s);
+    }
+
+    #[test]
+    fn run_stats_absorb() {
+        let mut a = RunStats {
+            counts: vec![3],
+            work_units: 10,
+            network_bytes: 100,
+            network_messages: 2,
+            virtual_time_s: 1.5,
+            peak_embedding_bytes: 64,
+            cache_hits: 1,
+            ..Default::default()
+        };
+        let b = RunStats {
+            counts: vec![4, 5],
+            work_units: 7,
+            network_bytes: 50,
+            network_messages: 1,
+            virtual_time_s: 0.5,
+            peak_embedding_bytes: 256,
+            cache_misses: 3,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.counts, vec![3, 4, 5]);
+        assert_eq!(a.total_count(), 12);
+        assert_eq!(a.work_units, 17);
+        assert_eq!(a.network_bytes, 150);
+        assert_eq!(a.network_messages, 3);
+        assert!((a.virtual_time_s - 2.0).abs() < 1e-12);
+        assert_eq!(a.peak_embedding_bytes, 256);
+        assert_eq!(a.cache_hits, 1);
+        assert_eq!(a.cache_misses, 3);
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! Deterministic fork-join execution of independent simulation units.
+//!
+//! The simulated cluster's machines (and a lone machine's root-vertex
+//! shards) are mutually independent: each reads the shared graph through a
+//! [`crate::cluster::ClusterView`] and writes only its own state. This
+//! module runs those units on scoped host threads with a work-stealing
+//! index counter and returns results **in unit order**, so every reduction
+//! over them is performed in a fixed sequence — results are byte-for-byte
+//! identical for any thread count, including 1.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a host-parallelism knob: `0` means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Run `f(i)` for every `i in 0..units` on up to `threads` scoped worker
+/// threads and return the outputs in index order. Workers steal unit
+/// indices from a shared atomic counter, so a straggler unit never idles
+/// the other cores. `f` must be pure with respect to shared state (it may
+/// only mutate what it owns); under that contract the output is identical
+/// for every `threads` value.
+pub fn run_indexed<T, F>(threads: usize, units: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if units == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(units);
+    if threads == 1 {
+        return (0..units).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..units).map(|_| Mutex::new(None)).collect();
+    let f = &f;
+    let next = &next;
+    let slots = &slots;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= units {
+                    break;
+                }
+                let result = f(i);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .iter()
+        .map(|slot| slot.lock().unwrap().take().expect("worker completed every claimed unit"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_zero_to_cores() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn outputs_in_unit_order() {
+        for threads in [1usize, 2, 4, 16] {
+            let out = run_indexed(threads, 37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(run_indexed(4, 0, |i| i).is_empty());
+        assert_eq!(run_indexed(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn more_threads_than_units() {
+        let out = run_indexed(64, 3, |i| i as u64);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn identical_across_thread_counts() {
+        // The whole point: a fold over the outputs is thread-count-proof.
+        let reference: f64 = run_indexed(1, 100, |i| (i as f64).sqrt()).iter().sum();
+        for threads in [2usize, 3, 8] {
+            let sum: f64 = run_indexed(threads, 100, |i| (i as f64).sqrt()).iter().sum();
+            assert_eq!(sum.to_bits(), reference.to_bits(), "threads={threads}");
+        }
+    }
+}

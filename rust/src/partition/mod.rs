@@ -42,7 +42,7 @@ impl PartitionMap {
 /// *policy* distinction between local and remote is made by
 /// [`PartitionedGraph::is_local`], and every remote access is routed
 /// through the accounted transport in [`crate::cluster`].
-#[derive(Clone)]
+#[derive(Clone, Copy)]
 pub struct PartitionedGraph<'g> {
     pub graph: &'g Graph,
     pub map: PartitionMap,

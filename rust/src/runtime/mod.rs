@@ -1,5 +1,6 @@
-//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
-//! from the Rust mining path.
+//! Runtime: the dense hot-core decomposition, plus (behind the `pjrt`
+//! cargo feature) the PJRT bridge that loads AOT-compiled JAX/Pallas
+//! artifacts and executes them from the Rust mining path.
 //!
 //! The interchange format is **HLO text** (`artifacts/*.hlo.txt`), written
 //! once by `python/compile/aot.py` — see DESIGN.md §5 and
@@ -12,10 +13,18 @@
 //! the top-degree vertices is counted with an MXU-shaped `A·A ⊙ A`
 //! contraction, while the sparse remainder stays on the CPU intersection
 //! path.
+//!
+//! The default build carries no `xla` dependency: [`HotCore`] (the
+//! decomposition itself, with a CPU reference counter) always compiles,
+//! while [`DenseCore`] / [`PairIntersect`] require `--features pjrt`.
 
 use crate::graph::{Graph, VertexId};
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DenseCore, DenseCounts, PairIntersect};
 
 /// Default artifact directory, overridable via `KUDU_ARTIFACTS`.
 pub fn artifacts_dir() -> PathBuf {
@@ -28,120 +37,9 @@ pub fn artifacts_dir() -> PathBuf {
 /// `python/compile/aot.py`).
 pub const DENSE_N: usize = 256;
 
-/// A compiled dense-core counting executable on the PJRT CPU client.
-pub struct DenseCore {
-    exe: xla::PjRtLoadedExecutable,
-    n: usize,
-}
-
-/// Counts returned by the dense core.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct DenseCounts {
-    /// Triangles entirely inside the hot set.
-    pub triangles: u64,
-    /// Wedges (3-chains) whose three vertices are all in the hot set.
-    pub wedges: u64,
-    /// Edges inside the hot set.
-    pub edges: u64,
-}
-
-impl DenseCore {
-    /// Load `dense_core_{n}.hlo.txt` from the artifact directory and
-    /// compile it on the PJRT CPU client.
-    pub fn load(dir: &Path, n: usize) -> Result<Self> {
-        let path = dir.join(format!("dense_core_{n}.hlo.txt"));
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let path_str = path.to_str().context("artifact path is not UTF-8")?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .with_context(|| format!("load HLO text from {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compile dense-core HLO")?;
-        Ok(DenseCore { exe, n })
-    }
-
-    /// Load with defaults (artifact dir from env, n = [`DENSE_N`]).
-    pub fn load_default() -> Result<Self> {
-        Self::load(&artifacts_dir(), DENSE_N)
-    }
-
-    #[inline]
-    pub fn n(&self) -> usize {
-        self.n
-    }
-
-    /// Run the counter on a dense f32 adjacency matrix (row-major n×n,
-    /// entries 0.0/1.0, zero diagonal, symmetric).
-    pub fn count(&self, adj: &[f32]) -> Result<DenseCounts> {
-        anyhow::ensure!(adj.len() == self.n * self.n, "adjacency must be n×n");
-        let lit = xla::Literal::vec1(adj).reshape(&[self.n as i64, self.n as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: (tri, wedge, edge) f32
-        // scalars.
-        let tuple = result.to_tuple()?;
-        anyhow::ensure!(tuple.len() == 3, "expected 3 outputs, got {}", tuple.len());
-        let read = |l: &xla::Literal| -> Result<u64> {
-            let v = l.to_vec::<f32>()?;
-            Ok(v[0].round() as u64)
-        };
-        Ok(DenseCounts {
-            triangles: read(&tuple[0])?,
-            wedges: read(&tuple[1])?,
-            edges: read(&tuple[2])?,
-        })
-    }
-}
-
 /// Batch size the pair-intersect artifact is compiled for (must match
 /// `python/compile/aot.py`).
 pub const PAIR_BATCH: usize = 512;
-
-/// The batched bitmap common-neighbour counter
-/// (`pair_intersect_{b}x{n}.hlo.txt`): the direct TPU analogue of Kudu's
-/// per-pair edge-list intersections, over hot-core bitmap rows.
-pub struct PairIntersect {
-    exe: xla::PjRtLoadedExecutable,
-    batch: usize,
-    n: usize,
-}
-
-impl PairIntersect {
-    /// Load and compile the artifact.
-    pub fn load(dir: &Path, batch: usize, n: usize) -> Result<Self> {
-        let path = dir.join(format!("pair_intersect_{batch}x{n}.hlo.txt"));
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let path_str = path.to_str().context("artifact path is not UTF-8")?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .with_context(|| format!("load HLO text from {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compile pair-intersect HLO")?;
-        Ok(PairIntersect { exe, batch, n })
-    }
-
-    pub fn load_default() -> Result<Self> {
-        Self::load(&artifacts_dir(), PAIR_BATCH, DENSE_N)
-    }
-
-    #[inline]
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
-
-    /// |N(u) ∩ N(v)| for each of `batch` pairs, given the pairs' 0/1
-    /// bitmap rows over the hot core (row-major `batch × n` each).
-    pub fn counts(&self, rows_u: &[f32], rows_v: &[f32]) -> Result<Vec<u64>> {
-        anyhow::ensure!(
-            rows_u.len() == self.batch * self.n && rows_v.len() == rows_u.len(),
-            "rows must be batch×n"
-        );
-        let dims = [self.batch as i64, self.n as i64];
-        let u = xla::Literal::vec1(rows_u).reshape(&dims)?;
-        let v = xla::Literal::vec1(rows_v).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[u, v])?[0][0].to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        anyhow::ensure!(tuple.len() == 1, "expected a 1-tuple");
-        Ok(tuple[0].to_vec::<f32>()?.into_iter().map(|x| x.round() as u64).collect())
-    }
-}
 
 /// The hot-vertex set and its dense induced adjacency, extracted from a
 /// graph (the skew insight of paper §6.3 applied to compute: the top-K
@@ -250,5 +148,5 @@ mod tests {
     }
 
     // DenseCore::load is exercised by tests/runtime_integration.rs (needs
-    // `make artifacts`).
+    // `make artifacts` and `--features pjrt`).
 }

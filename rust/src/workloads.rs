@@ -20,7 +20,9 @@ use crate::partition::PartitionedGraph;
 use crate::pattern::brute::Induced;
 use crate::pattern::{motifs, Pattern};
 use crate::plan::{ClientSystem, Plan};
-use crate::runtime::{DenseCore, HotCore};
+#[cfg(feature = "pjrt")]
+use crate::runtime::DenseCore;
+use crate::runtime::HotCore;
 
 /// A GPM application.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,7 +123,14 @@ pub fn run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) -> 
             EngineKind::GThinker => {
                 let pg = PartitionedGraph::new(graph, cfg.num_machines);
                 let mut tr = Transport::new(pg, cfg.net);
-                let s = GThinker::run(graph, plan, cfg.engine.threads, &cfg.compute, &mut tr);
+                let s = GThinker::run(
+                    graph,
+                    plan,
+                    cfg.engine.threads,
+                    cfg.engine.sim_threads,
+                    &cfg.compute,
+                    &mut tr,
+                );
                 traffic.merge(&tr.traffic);
                 s
             }
@@ -132,23 +141,17 @@ pub fn run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) -> 
                 traffic.merge(&tr.traffic);
                 s
             }
-            EngineKind::Replicated => {
-                Replicated::run(graph, plan, cfg.num_machines, cfg.engine.threads, &cfg.compute)
-            }
+            EngineKind::Replicated => Replicated::run(
+                graph,
+                plan,
+                cfg.num_machines,
+                cfg.engine.threads,
+                cfg.engine.sim_threads,
+                &cfg.compute,
+            ),
             EngineKind::SingleMachine => SingleMachine::run(graph, plan, &cfg.compute),
         };
-        merged.counts.extend(stats.counts.iter());
-        merged.work_units += stats.work_units;
-        merged.embeddings_created += stats.embeddings_created;
-        merged.network_bytes += stats.network_bytes;
-        merged.network_messages += stats.network_messages;
-        merged.virtual_time_s += stats.virtual_time_s;
-        merged.exposed_comm_s += stats.exposed_comm_s;
-        merged.wall_s += stats.wall_s;
-        merged.peak_embedding_bytes = merged.peak_embedding_bytes.max(stats.peak_embedding_bytes);
-        merged.numa_remote_accesses += stats.numa_remote_accesses;
-        merged.cache_hits += stats.cache_hits;
-        merged.cache_misses += stats.cache_misses;
+        merged.absorb(&stats);
     }
     merged
 }
@@ -156,7 +159,9 @@ pub fn run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) -> 
 /// Hybrid triangle counting: the dense hot-vertex core is counted by the
 /// AOT XLA artifact (MXU-shaped `A·A ⊙ A`, see DESIGN.md §2); the CPU
 /// engine counts every triangle with at least one cold vertex. Counts are
-/// exact and must equal the pure-CPU path (tested).
+/// exact and must equal the pure-CPU path (tested). Requires the `pjrt`
+/// feature; [`tc_hybrid_cpu`] is the always-available CPU twin.
+#[cfg(feature = "pjrt")]
 pub fn tc_hybrid(graph: &Graph, cfg: &RunConfig, core: &DenseCore) -> anyhow::Result<RunStats> {
     let hot = HotCore::extract(graph, core.n());
     let dense = core.count(&hot.adj)?;
@@ -183,12 +188,15 @@ pub fn tc_hybrid_cpu(graph: &Graph, cfg: &RunConfig, core_n: usize) -> RunStats 
 
 /// Count triangles with at least one vertex outside `member` using the
 /// engine's per-embedding sink path. Returns (run stats, cold count).
+/// The accumulator is atomic because the engine runs its machines on
+/// concurrent host threads.
 fn count_cold_triangles(graph: &Graph, cfg: &RunConfig, member: &[bool]) -> (RunStats, u64) {
+    use std::sync::atomic::{AtomicU64, Ordering};
     let plan = ClientSystem::GraphPi.plan(&Pattern::triangle(), Induced::Edge);
     let pg = PartitionedGraph::new(graph, cfg.num_machines);
     let mut tr = Transport::new(pg, cfg.net);
-    let cold_counter = std::cell::Cell::new(0u64);
-    let mut sinks: Vec<FnSink<Box<dyn FnMut(&[u32]) + '_>>> = Vec::new();
+    let cold_counter = AtomicU64::new(0);
+    let mut sinks: Vec<FnSink<Box<dyn FnMut(&[u32]) + Send + '_>>> = Vec::new();
     let stats = KuduEngine::run_with_sinks(
         graph,
         &plan,
@@ -199,14 +207,14 @@ fn count_cold_triangles(graph: &Graph, cfg: &RunConfig, member: &[bool]) -> (Run
             let cc = &cold_counter;
             FnSink::new(Box::new(move |vs: &[u32]| {
                 if !vs.iter().all(|&v| member[v as usize]) {
-                    cc.set(cc.get() + 1);
+                    cc.fetch_add(1, Ordering::Relaxed);
                 }
-            }) as Box<dyn FnMut(&[u32]) + '_>)
+            }) as Box<dyn FnMut(&[u32]) + Send + '_>)
         },
         &mut sinks,
     );
     drop(sinks);
-    (stats, cold_counter.get())
+    (stats, cold_counter.load(Ordering::Relaxed))
 }
 
 #[cfg(test)]

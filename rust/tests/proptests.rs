@@ -171,6 +171,46 @@ fn prop_restrictions_exact_for_all_size5_motifs() {
     }
 }
 
+/// Property (tentpole): the thread-per-machine simulation is bitwise
+/// deterministic — `sim_threads = 1` and `sim_threads = 4` produce
+/// identical counts, network bytes/messages, and virtual time across
+/// machine counts {1, 2, 4, 8} on RMAT graphs, and the counts match the
+/// brute-force oracle for the triangle, 4-clique, and house motifs.
+#[test]
+fn prop_parallel_determinism_and_oracle() {
+    let house = Pattern::new(5, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)]);
+    let cases: Vec<(Graph, Pattern)> = vec![
+        (gen::rmat(8, 8, 0xA1), Pattern::triangle()),
+        (gen::rmat(8, 8, 0xB2), Pattern::clique(4)),
+        (gen::rmat(7, 6, 0xC3), house),
+    ];
+    for (g, p) in &cases {
+        let expect = count_embeddings(g, p, Induced::Edge);
+        let plan = automine_plan(p, Induced::Edge);
+        for machines in [1usize, 2, 4, 8] {
+            let run = |sim_threads: usize| {
+                let cfg = EngineConfig { sim_threads, ..Default::default() };
+                let pg = PartitionedGraph::new(g, machines);
+                let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
+                kudu::engine::KuduEngine::run(g, &plan, &cfg, &ComputeModel::default(), &mut tr)
+            };
+            let a = run(1);
+            let b = run(4);
+            assert_eq!(a.total_count(), expect, "{p:?} machines={machines}");
+            assert_eq!(a.counts, b.counts, "{p:?} machines={machines}");
+            assert_eq!(a.network_bytes, b.network_bytes, "{p:?} machines={machines}");
+            assert_eq!(a.network_messages, b.network_messages, "{p:?} machines={machines}");
+            assert_eq!(
+                a.virtual_time_s.to_bits(),
+                b.virtual_time_s.to_bits(),
+                "{p:?} machines={machines}"
+            );
+            assert_eq!(a.work_units, b.work_units, "{p:?} machines={machines}");
+            assert_eq!(a.embeddings_created, b.embeddings_created, "{p:?} machines={machines}");
+        }
+    }
+}
+
 /// Property: traffic with HDS ≤ traffic without HDS, always (sharing can
 /// only remove requests); same for the cache on skew-heavy graphs.
 #[test]

@@ -1,6 +1,9 @@
 //! Integration: the PJRT runtime loads the AOT artifacts and its counts
 //! agree exactly with the CPU reference and the brute-force oracle.
-//! Requires `make artifacts` (skips with a message otherwise).
+//! Requires `make artifacts` (skips with a message otherwise) and the
+//! `pjrt` cargo feature (this whole target compiles to nothing without
+//! it — the default build carries no `xla` dependency).
+#![cfg(feature = "pjrt")]
 
 use kudu::config::RunConfig;
 use kudu::graph::gen;
