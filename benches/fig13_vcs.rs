@@ -1,22 +1,20 @@
 //! Fig 13 bench: vertical computation sharing on/off (4-CC / 5-CC).
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::App;
 
 fn main() {
     let mut group = Group::new("fig13_vertical_sharing");
     group.sample_size(10);
     let g = gen::rmat(10, 10, 3);
+    let sess = MiningSession::new(&g, 8);
     for app in [App::Cc(4), App::Cc(5)] {
         for vcs in [true, false] {
-            let mut cfg = RunConfig::with_machines(8);
-            cfg.engine.vertical_sharing = vcs;
             let label = if vcs { "vcs-on" } else { "vcs-off" };
             group.bench(&format!("{label}/{}", app.name()), || {
-                run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg).total_count()
+                sess.job(&app).vertical_sharing(vcs).run().total_count()
             });
         }
     }

@@ -1,22 +1,20 @@
 //! Fig 14 bench: horizontal data sharing on/off (4-CC / 5-CC).
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::App;
 
 fn main() {
     let mut group = Group::new("fig14_horizontal_sharing");
     group.sample_size(10);
     let g = gen::rmat(10, 10, 5);
+    let sess = MiningSession::new(&g, 8);
     for app in [App::Cc(4), App::Cc(5)] {
         for hds in [true, false] {
-            let mut cfg = RunConfig::with_machines(8);
-            cfg.engine.horizontal_sharing = hds;
             let label = if hds { "hds-on" } else { "hds-off" };
             group.bench(&format!("{label}/{}", app.name()), || {
-                run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg).total_count()
+                sess.job(&app).horizontal_sharing(hds).run().total_count()
             });
         }
     }

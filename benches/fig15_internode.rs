@@ -1,23 +1,21 @@
 //! Fig 15 bench: inter-node scalability (1/2/4/8 machines), Kudu vs
-//! replicated.
+//! replicated. One session per machine count — the partitioning is a
+//! session invariant.
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::{App, EngineKind};
 
 fn main() {
     let mut group = Group::new("fig15_internode");
     group.sample_size(10);
     let g = gen::rmat(10, 10, 11);
     for n in [1usize, 2, 4, 8] {
-        let cfg = RunConfig::with_machines(n);
-        group.bench(&format!("k-graphpi/{n}"), || {
-            run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg).total_count()
-        });
+        let sess = MiningSession::new(&g, n);
+        group.bench(&format!("k-graphpi/{n}"), || sess.job(&App::Tc).run().total_count());
         group.bench(&format!("replicated/{n}"), || {
-            run_app(&g, App::Tc, EngineKind::Replicated, &cfg).total_count()
+            sess.job(&App::Tc).executor(EngineKind::Replicated.executor()).run().total_count()
         });
     }
     group.finish();

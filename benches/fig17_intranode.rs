@@ -2,24 +2,22 @@
 //! the single-thread COST reference.
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::{App, EngineKind};
 
 fn main() {
     let mut group = Group::new("fig17_intranode");
     group.sample_size(10);
     let g = gen::rmat(10, 10, 13);
+    let sess = MiningSession::new(&g, 1);
     group.bench("single-thread-reference", || {
-        run_app(&g, App::Tc, EngineKind::SingleMachine, &RunConfig::single_machine())
-            .total_count()
+        sess.job(&App::Tc).executor(EngineKind::SingleMachine.executor()).run().total_count()
     });
     for t in [1usize, 4, 12] {
-        let mut cfg = RunConfig::single_machine();
-        cfg.engine.threads = t;
         group.bench(&format!("k-automine-threads/{t}"), || {
-            run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::Automine), &cfg).total_count()
+            sess.job(&App::Tc).client(ClientSystem::Automine).threads(t).run().total_count()
         });
     }
     group.finish();

@@ -2,20 +2,25 @@
 //! host parallelism off (`sim_threads = 1`) versus on (`0` = all cores),
 //! on an 8-machine RMAT triangle-counting run. Also asserts the tentpole
 //! guarantee along the way: both executions report bitwise-identical
-//! counts, traffic, and virtual time. Emits BENCH_parallel.json
-//! (acceptance: ≥ 2× on a 4-core host); numbers are recorded in
-//! EXPERIMENTS.md §Perf.
+//! counts, traffic, and virtual time. A second section measures the
+//! session API's partition-once win: a multi-pattern 4-MC app through one
+//! [`MiningSession`] (partition computed once) versus the legacy
+//! per-pattern path (re-partitioned for each of the 6 motifs). Emits
+//! BENCH_parallel.json (acceptance: ≥ 2× parallel speedup on a 4-core
+//! host, session ≥ legacy); numbers are recorded in EXPERIMENTS.md §Perf.
 
 use kudu::cluster::Transport;
-use kudu::config::EngineConfig;
+use kudu::config::{EngineConfig, RunConfig};
 use kudu::engine::KuduEngine;
 use kudu::graph::gen;
-use kudu::metrics::{ComputeModel, NetModel, RunStats};
+use kudu::metrics::{ComputeModel, NetModel, RunStats, Traffic};
 use kudu::par;
 use kudu::partition::PartitionedGraph;
 use kudu::pattern::brute::Induced;
-use kudu::pattern::Pattern;
-use kudu::plan::graphpi_plan;
+use kudu::pattern::{motifs, Pattern};
+use kudu::plan::{graphpi_plan, ClientSystem};
+use kudu::session::MiningSession;
+use kudu::workloads::App;
 use std::time::Instant;
 
 const MACHINES: usize = 8;
@@ -28,6 +33,23 @@ fn run_once(g: &kudu::Graph, plan: &kudu::Plan, sim_threads: usize) -> (RunStats
     let st = KuduEngine::run(g, plan, &cfg, &ComputeModel::default(), &mut tr);
     let wall = t0.elapsed().as_secs_f64();
     (st, wall)
+}
+
+/// The pre-session multi-pattern path: rebuild `PartitionedGraph` +
+/// `Transport` and rescan the owned-vertex lists for *every* pattern
+/// (what `workloads::run_app` used to do).
+fn legacy_multi_pattern(g: &kudu::Graph, cfg: &RunConfig) -> RunStats {
+    let mut merged = RunStats::default();
+    let mut traffic = Traffic::new(cfg.num_machines);
+    for p in motifs::all_motifs(4) {
+        let plan = ClientSystem::GraphPi.plan(&p, Induced::Vertex);
+        let pg = PartitionedGraph::new(g, cfg.num_machines);
+        let mut tr = Transport::new(pg, cfg.net);
+        let st = KuduEngine::run(g, &plan, &cfg.engine, &cfg.compute, &mut tr);
+        traffic.merge(&tr.traffic);
+        merged.absorb(&st);
+    }
+    merged
 }
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -72,11 +94,56 @@ fn main() {
          parallel {parallel_s:.4}s  speedup {speedup:.2}x"
     );
 
+    // --- Partition-once: 4-MC (6 motifs) through one session vs the ---
+    // --- legacy per-pattern re-partitioning path.                    ---
+    // A vertex-heavy sparse graph puts the per-pattern O(V × machines)
+    // owned-vertex rescans on the profile, which is exactly the overhead
+    // the session amortises.
+    let gm = gen::erdos_renyi(120_000, 240_000, 17);
+    let cfg = RunConfig::with_machines(MACHINES);
+    println!(
+        "partition-once bench: 4-MC on er-120k ({} vertices, {} edges), {MACHINES} machines",
+        gm.num_vertices(),
+        gm.num_edges()
+    );
+    // Warmup + equivalence check: session and legacy agree exactly.
+    let sess = MiningSession::with_config(&gm, cfg.clone());
+    let ref_session = sess.job(&App::Mc(4)).run();
+    let ref_legacy = legacy_multi_pattern(&gm, &cfg);
+    assert_eq!(ref_session.counts, ref_legacy.counts);
+    assert_eq!(ref_session.network_bytes, ref_legacy.network_bytes);
+    assert_eq!(ref_session.virtual_time_s.to_bits(), ref_legacy.virtual_time_s.to_bits());
+
+    let mut legacy_w = Vec::with_capacity(reps);
+    let mut session_w = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let a = legacy_multi_pattern(&gm, &cfg);
+        legacy_w.push(t0.elapsed().as_secs_f64());
+        // Session path includes the one-time partitioning, amortised over
+        // the app's 6 patterns.
+        let t1 = Instant::now();
+        let s = MiningSession::with_config(&gm, cfg.clone());
+        let b = s.job(&App::Mc(4)).run();
+        session_w.push(t1.elapsed().as_secs_f64());
+        assert_eq!(a.counts, b.counts);
+    }
+    let legacy_s = median(legacy_w);
+    let session_s = median(session_w);
+    let part_speedup = legacy_s / session_s;
+    println!(
+        "bench parallel/partition-once-4mc  legacy {legacy_s:.4}s  \
+         session {session_s:.4}s  speedup {part_speedup:.2}x"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"parallel_speedup\",\n  \"workload\": \"tc_rmat13_{MACHINES}machines\",\n  \
          \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
          \"serial_median_s\": {serial_s},\n  \"parallel_median_s\": {parallel_s},\n  \
-         \"speedup\": {speedup},\n  \"count\": {},\n  \"deterministic\": true\n}}\n",
+         \"speedup\": {speedup},\n  \"count\": {},\n  \"deterministic\": true,\n  \
+         \"partition_once\": {{\n    \"workload\": \"4mc_er120k_{MACHINES}machines\",\n    \
+         \"legacy_median_s\": {legacy_s},\n    \"session_median_s\": {session_s},\n    \
+         \"speedup\": {part_speedup}\n  }}\n}}\n",
         reference.total_count()
     );
     std::fs::write("BENCH_parallel.json", json).expect("write BENCH_parallel.json");

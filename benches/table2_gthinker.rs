@@ -3,24 +3,24 @@
 //! the table itself (virtual times) comes from `bin/tables.rs table2`.
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::{App, EngineKind};
 
 fn main() {
     let mut group = Group::new("table2_tc_8machines");
     group.sample_size(10);
     let graphs = [("mc", gen::rmat(10, 10, 1)), ("pt", gen::erdos_renyi(8_000, 32_000, 2))];
     for (name, g) in &graphs {
-        let cfg = RunConfig::with_machines(8);
+        let sess = MiningSession::new(g, 8);
         for (engine, label) in [
             (EngineKind::Kudu(ClientSystem::Automine), "k-automine"),
             (EngineKind::Kudu(ClientSystem::GraphPi), "k-graphpi"),
             (EngineKind::GThinker, "g-thinker"),
         ] {
             group.bench(&format!("{label}/{name}"), || {
-                run_app(g, App::Tc, engine, &cfg).total_count()
+                sess.job(&App::Tc).executor(engine.executor()).run().total_count()
             });
         }
     }

@@ -2,23 +2,23 @@
 //! the paper's four applications.
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::{App, EngineKind};
 
 fn main() {
     let mut group = Group::new("table3_vs_replicated");
     group.sample_size(10);
     let g = gen::rmat(10, 10, 3); // lj-like, bench-sized
-    let cfg = RunConfig::with_machines(8);
+    let sess = MiningSession::new(&g, 8);
     for app in [App::Tc, App::Mc(3), App::Cc(4), App::Cc(5)] {
         for (engine, label) in [
             (EngineKind::Kudu(ClientSystem::GraphPi), "k-graphpi"),
             (EngineKind::Replicated, "replicated"),
         ] {
             group.bench(&format!("{label}/{}", app.name()), || {
-                run_app(&g, app, engine, &cfg).total_count()
+                sess.job(&app).executor(engine.executor()).run().total_count()
             });
         }
     }

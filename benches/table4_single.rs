@@ -2,23 +2,23 @@
 //! reference (AutomineIH stand-in) — the engine-overhead comparison.
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::{App, EngineKind};
 
 fn main() {
     let mut group = Group::new("table4_single_node");
     group.sample_size(10);
     let graphs = [("mc", gen::rmat(10, 10, 1)), ("pt", gen::erdos_renyi(8_000, 32_000, 2))];
-    let cfg = RunConfig::single_machine();
     for (name, g) in &graphs {
+        let sess = MiningSession::new(g, 1);
         for app in [App::Tc, App::Cc(4)] {
             group.bench(&format!("k-automine/{}/{name}", app.name()), || {
-                run_app(g, app, EngineKind::Kudu(ClientSystem::Automine), &cfg).total_count()
+                sess.job(&app).client(ClientSystem::Automine).run().total_count()
             });
             group.bench(&format!("single-dfs/{}/{name}", app.name()), || {
-                run_app(g, app, EngineKind::SingleMachine, &cfg).total_count()
+                sess.job(&app).executor(EngineKind::SingleMachine.executor()).run().total_count()
             });
         }
     }

@@ -2,10 +2,9 @@
 //! where the cache matters most, and a flat (pt-like) control.
 
 use kudu::bench::Group;
-use kudu::config::RunConfig;
 use kudu::graph::gen;
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::App;
 
 fn main() {
     let mut group = Group::new("table6_static_cache");
@@ -13,12 +12,11 @@ fn main() {
     let skewed = gen::planted_hubs(6_000, 18_000, 8, 0.25, 7);
     let flat = gen::erdos_renyi(6_000, 24_000, 9);
     for (gname, g) in [("uk-like", &skewed), ("pt-like", &flat)] {
+        let sess = MiningSession::new(g, 8);
         for cache in [0.05f64, 0.0] {
-            let mut cfg = RunConfig::with_machines(8);
-            cfg.engine.cache_frac = cache;
             let label = if cache > 0.0 { "cache-on" } else { "cache-off" };
             group.bench(&format!("{label}/{gname}"), || {
-                run_app(g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg).total_count()
+                sess.job(&App::Tc).cache_frac(cache).run().total_count()
             });
         }
     }

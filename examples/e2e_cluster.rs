@@ -1,16 +1,18 @@
 //! End-to-end driver: the full three-layer system on a real workload.
 //!
 //! Exercises every layer in one run (see DESIGN.md §5):
-//!   1. builds the RMAT large-graph stand-in and 1-D partitions it over 8
-//!      simulated machines;
+//!   1. builds the RMAT large-graph stand-in and opens one
+//!      [`MiningSession`] over 8 simulated machines (the 1-D partitioning
+//!      is computed once and shared by every job below);
 //!   2. mines TC / 3-MC / 4-CC with the Kudu engine (chunked BFS-DFS
 //!      exploration, circulant scheduling, all sharing optimizations);
 //!   3. loads the AOT-compiled JAX/Pallas dense-core artifact through the
 //!      PJRT runtime and runs the **hybrid** triangle count (dense
 //!      hot-vertex core on XLA, sparse remainder on the engine),
 //!      verifying the counts agree exactly;
-//!   4. compares against the replicated and G-thinker baselines and
-//!      reports the paper's headline metric (speedup, traffic).
+//!   4. compares against the replicated and G-thinker baselines through
+//!      the [`Executor`](kudu::session::Executor) trait and reports the
+//!      paper's headline metric (speedup, traffic).
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_cluster`
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
@@ -18,8 +20,8 @@
 use kudu::config::RunConfig;
 use kudu::graph::gen::Dataset;
 use kudu::metrics::{fmt_bytes, fmt_time};
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::{App, EngineKind};
 
 fn main() {
     println!("== Kudu end-to-end driver ==");
@@ -32,12 +34,13 @@ fn main() {
         fmt_bytes(g.csr_bytes() as u64)
     );
     let cfg = RunConfig::with_machines(8);
+    let session = MiningSession::with_config(&g, cfg.clone());
 
     // --- Step 1: mining workloads on the Kudu engine. ---
     println!("\n-- k-GraphPi on 8 simulated machines --");
     let mut tc_count = 0;
     for app in [App::Tc, App::Mc(3), App::Cc(4)] {
-        let st = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        let st = session.job(&app).run();
         if app == App::Tc {
             tc_count = st.total_count();
         }
@@ -82,11 +85,11 @@ fn main() {
         println!("cpu-hybrid count={} EXACT MATCH", st.total_count());
     }
 
-    // --- Step 3: headline comparison vs baselines. ---
+    // --- Step 3: headline comparison vs baselines (Executor trait). ---
     println!("\n-- headline: TC vs baselines (8 machines) --");
-    let kudu_st = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-    let repl = run_app(&g, App::Tc, EngineKind::Replicated, &cfg);
-    let gth = run_app(&g, App::Tc, EngineKind::GThinker, &cfg);
+    let kudu_st = session.job(&App::Tc).run();
+    let repl = session.job(&App::Tc).executor(EngineKind::Replicated.executor()).run();
+    let gth = session.job(&App::Tc).executor(EngineKind::GThinker.executor()).run();
     assert_eq!(kudu_st.total_count(), repl.total_count());
     assert_eq!(kudu_st.total_count(), gth.total_count());
     println!(
@@ -99,10 +102,9 @@ fn main() {
     );
 
     // --- Step 4: memory-scaling gate (the Table 5 claim). ---
-    let pg = kudu::partition::PartitionedGraph::new(&g, 8);
     println!(
         "\nper-machine memory: partitioned {} vs replicated {}",
-        fmt_bytes(pg.max_partition_bytes() as u64),
+        fmt_bytes(session.partitioned().max_partition_bytes() as u64),
         fmt_bytes(g.csr_bytes() as u64)
     );
     println!("\ne2e driver complete: all layers composed, counts exact.");

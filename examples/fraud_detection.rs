@@ -3,22 +3,99 @@
 //! close many triangles relative to their degree form suspicious dense
 //! clusters.
 //!
-//! Uses the engine's per-embedding sink API (`FnSink`) — the "user-defined
-//! function" of Algorithm 1 — to accumulate per-vertex triangle counts
-//! over the distributed run, then flags outliers.
+//! This is the "extend Kudu with your own app" path end to end: a custom
+//! [`GpmApp`] whose per-unit sinks (the user-defined function of the
+//! paper's Algorithm 1) accumulate per-vertex triangle participation.
+//! Each execution unit owns a private histogram — no locks on the hot
+//! path even though units run on concurrent host threads — and the app's
+//! `aggregate` override merges the finished sinks (u32 adds in unit
+//! order, so results are deterministic).
 //!
 //! Run: `cargo run --release --example fraud_detection`
 
-use kudu::cluster::Transport;
-use kudu::config::RunConfig;
-use kudu::engine::sink::FnSink;
-use kudu::engine::KuduEngine;
+use kudu::engine::sink::{AppSink, BoxSink, EmbeddingSink};
 use kudu::graph::gen;
-use kudu::partition::PartitionedGraph;
+use kudu::metrics::RunStats;
 use kudu::pattern::brute::Induced;
 use kudu::pattern::Pattern;
-use kudu::plan::ClientSystem;
+use kudu::session::{GpmApp, MiningSession, PatternOutcome};
+use kudu::VertexId;
 use std::sync::Mutex;
+
+/// Per-unit sink: counts triangles and charges each member vertex on a
+/// unit-private histogram.
+struct TriSink {
+    tri: Vec<u32>,
+    count: u64,
+}
+
+impl EmbeddingSink for TriSink {
+    fn emit(&mut self, vertices: &[VertexId]) {
+        self.count += 1;
+        for &v in vertices {
+            self.tri[v as usize] += 1;
+        }
+    }
+
+    fn add_count(&mut self, _n: u64) {
+        unreachable!("TriSink never bulk-counts");
+    }
+}
+
+impl AppSink for TriSink {
+    fn total(&self) -> u64 {
+        self.count
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// The app: one pattern (triangle), one private sink per unit, merged
+/// into the final per-vertex profile when the run aggregates.
+struct TriangleProfile {
+    num_vertices: usize,
+    profile: Mutex<Vec<u32>>,
+}
+
+impl GpmApp for TriangleProfile {
+    fn name(&self) -> String {
+        "triangle-profile".into()
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        vec![Pattern::triangle()]
+    }
+
+    fn induced(&self) -> Induced {
+        Induced::Edge
+    }
+
+    fn needs_sinks(&self) -> bool {
+        true
+    }
+
+    fn unit_sink(&self, _pattern_idx: usize, _machine: usize) -> BoxSink {
+        Box::new(TriSink { tri: vec![0; self.num_vertices], count: 0 })
+    }
+
+    fn aggregate(&self, outcomes: Vec<PatternOutcome>) -> RunStats {
+        let mut merged = RunStats::default();
+        let mut profile = vec![0u32; self.num_vertices];
+        for o in &outcomes {
+            for s in &o.sinks {
+                let ts = s.as_any().downcast_ref::<TriSink>().expect("units produce TriSinks");
+                for (acc, unit) in profile.iter_mut().zip(&ts.tri) {
+                    *acc += unit;
+                }
+            }
+            merged.absorb(&o.stats);
+        }
+        *self.profile.lock().unwrap() = profile;
+        merged
+    }
+}
 
 fn main() {
     // A social graph with planted dense "fraud rings": hubs connected to a
@@ -26,41 +103,16 @@ fn main() {
     let g = gen::planted_hubs(5_000, 15_000, 8, 0.15, 2026);
     println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
 
-    let cfg = RunConfig::with_machines(4);
-    let plan = ClientSystem::GraphPi.plan(&Pattern::triangle(), Induced::Edge);
+    let app =
+        TriangleProfile { num_vertices: g.num_vertices(), profile: Mutex::new(Vec::new()) };
 
-    // Per-vertex triangle participation, accumulated across machines. The
-    // engine runs its simulated machines on concurrent host threads, so
-    // the shared accumulator is a Mutex (each sink locks briefly per
-    // embedding; counts are u32 adds, so arrival order cannot matter).
-    let tri_count = Mutex::new(vec![0u32; g.num_vertices()]);
-    let pg = PartitionedGraph::new(&g, cfg.num_machines);
-    let mut tr = Transport::new(pg, cfg.net);
-    let mut sinks: Vec<FnSink<Box<dyn FnMut(&[u32]) + Send + '_>>> = Vec::new();
-    let stats = KuduEngine::run_with_sinks(
-        &g,
-        &plan,
-        &cfg.engine,
-        &cfg.compute,
-        &mut tr,
-        |_machine| {
-            let tc = &tri_count;
-            FnSink::new(Box::new(move |vs: &[u32]| {
-                let mut counts = tc.lock().unwrap();
-                for &v in vs {
-                    counts[v as usize] += 1;
-                }
-            }) as Box<dyn FnMut(&[u32]) + Send + '_>)
-        },
-        &mut sinks,
-    );
-    let total: u64 = sinks.iter().map(|s| s.count).sum();
-    drop(sinks); // release the borrows on tri_count
-    println!("total triangles: {total}");
+    let session = MiningSession::new(&g, 4);
+    let stats = session.job(&app).run();
+    println!("total triangles: {}", stats.total_count());
     println!("virtual time: {:.3}s, traffic: {} bytes", stats.virtual_time_s, stats.network_bytes);
 
     // Clustering-coefficient-style score: triangles / possible wedges.
-    let tri = tri_count.into_inner().unwrap();
+    let tri = app.profile.lock().unwrap();
     let mut scored: Vec<(f64, u32)> = (0..g.num_vertices() as u32)
         .filter(|&v| g.degree(v) >= 8)
         .map(|v| {

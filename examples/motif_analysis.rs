@@ -3,24 +3,28 @@
 //! compare against a degree-matched random control to find over-represented
 //! shapes.
 //!
+//! One [`MiningSession`] per graph: the real network and the control are
+//! each partitioned once, then both motif apps run over the shared
+//! session state.
+//!
 //! Run: `cargo run --release --example motif_analysis`
 
-use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::metrics::fmt_time;
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::App;
 
 fn main() {
     // "Real" network: skewed RMAT. Control: ER with identical edge count.
     let real = gen::rmat(11, 10, 7);
     let control = gen::erdos_renyi(real.num_vertices(), real.num_edges(), 8);
-    let cfg = RunConfig::with_machines(4);
+    let real_sess = MiningSession::new(&real, 4);
+    let control_sess = MiningSession::new(&control, 4);
 
     for (k, app) in [(3usize, App::Mc(3)), (4, App::Mc(4))] {
         let patterns = kudu::pattern::motifs::all_motifs(k);
-        let r = run_app(&real, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-        let c = run_app(&control, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        let r = real_sess.job(&app).run();
+        let c = control_sess.job(&app).run();
         println!("\n{k}-motifs ({} patterns), virtual time {}:", patterns.len(), fmt_time(r.virtual_time_s));
         println!("{:<28} {:>12} {:>12} {:>8}", "pattern", "real", "control", "ratio");
         for (i, p) in patterns.iter().enumerate() {

@@ -1,24 +1,35 @@
 //! Quickstart: count triangles on a small generated graph with the Kudu
-//! engine over a 4-machine simulated cluster.
+//! engine over a 4-machine simulated cluster, through the mining-session
+//! API.
+//!
+//! A [`MiningSession`] owns the graph and its 1-D partitioning once;
+//! jobs are built fluently on top of it — pick an app, optionally an
+//! executor or feature toggles, and `run()`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::metrics::{fmt_bytes, fmt_time};
-use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::App;
 
 fn main() {
     // A LiveJournal-like power-law graph, deterministic.
     let g = gen::rmat(12, 12, 42);
     println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
 
-    let cfg = RunConfig::with_machines(4);
-    let stats = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    // Partition once across 4 simulated machines; the default executor is
+    // the Kudu engine with GraphPi plans.
+    let session = MiningSession::new(&g, 4);
+    let stats = session.job(&App::Tc).run();
 
     println!("triangles: {}", stats.total_count());
     println!("virtual time (4 machines): {}", fmt_time(stats.virtual_time_s));
     println!("network traffic: {}", fmt_bytes(stats.network_bytes));
     println!("comm overhead: {:.1}%", stats.comm_overhead() * 100.0);
+
+    // The same session serves further jobs without re-partitioning:
+    // 4-clique counting with Automine plans.
+    let cliques = session.job(&App::Cc(4)).client(kudu::plan::ClientSystem::Automine).run();
+    println!("4-cliques: {}", cliques.total_count());
 }

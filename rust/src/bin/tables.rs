@@ -2,6 +2,12 @@
 //! paper's evaluation (§8) at simulated scale. See DESIGN.md §4 for the
 //! experiment index and EXPERIMENTS.md for recorded outputs.
 //!
+//! Every cell routes through the mining-session API: one
+//! [`MiningSession`] per graph (the partitioning is computed once and
+//! shared by every engine, app, and ablation of that graph), with
+//! executors selected through the [`Executor`](kudu::session::Executor)
+//! trait.
+//!
 //! Usage: `cargo run --release --bin tables -- [table2|table3|table4|
 //! table5|table6|table7|fig13|fig14|fig15|fig16|fig17|all]`
 
@@ -9,7 +15,8 @@ use kudu::config::RunConfig;
 use kudu::graph::gen::Dataset;
 use kudu::metrics::{fmt_bytes, fmt_time, RunStats};
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::{App, EngineKind};
 
 fn cfg_n(machines: usize) -> RunConfig {
     // The paper's node config: 12 computation threads per machine (4 of
@@ -17,6 +24,11 @@ fn cfg_n(machines: usize) -> RunConfig {
     let mut cfg = RunConfig::with_machines(machines);
     cfg.engine.threads = 12;
     cfg
+}
+
+/// One 8-machine session per dataset with the paper's node config.
+fn session8(g: &kudu::Graph) -> MiningSession<'_> {
+    MiningSession::with_config(g, cfg_n(8))
 }
 
 fn head(title: &str) {
@@ -34,10 +46,10 @@ fn table2() {
     row(&["graph".into(), "k-Automine".into(), "k-GraphPi".into(), "G-thinker".into(), "speedup(kGP)".into()]);
     for d in [Dataset::Mico, Dataset::Patents, Dataset::LiveJournal, Dataset::Uk, Dataset::Twitter, Dataset::Friendster] {
         let g = d.build();
-        let cfg = cfg_n(8);
-        let ka = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::Automine), &cfg);
-        let kg = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-        let gt = run_app(&g, App::Tc, EngineKind::GThinker, &cfg);
+        let sess = session8(&g);
+        let ka = sess.job(&App::Tc).client(ClientSystem::Automine).run();
+        let kg = sess.job(&App::Tc).client(ClientSystem::GraphPi).run();
+        let gt = sess.job(&App::Tc).executor(EngineKind::GThinker.executor()).run();
         assert_eq!(ka.total_count(), gt.total_count());
         row(&[
             d.abbr().into(),
@@ -62,10 +74,10 @@ fn table3() {
         };
         for &d in datasets {
             let g = d.build();
-            let cfg = cfg_n(8);
-            let ka = run_app(&g, app, EngineKind::Kudu(ClientSystem::Automine), &cfg);
-            let kg = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-            let rp = run_app(&g, app, EngineKind::Replicated, &cfg);
+            let sess = session8(&g);
+            let ka = sess.job(&app).client(ClientSystem::Automine).run();
+            let kg = sess.job(&app).client(ClientSystem::GraphPi).run();
+            let rp = sess.job(&app).executor(EngineKind::Replicated.executor()).run();
             assert_eq!(kg.total_count(), rp.total_count());
             row(&[
                 app.name(),
@@ -94,10 +106,9 @@ fn table4() {
             let g = d.build();
             // Single-node engine-overhead comparison at one thread (the
             // DFS reference is single-threaded).
-            let mut cfg = cfg_n(1);
-            cfg.engine.threads = 1;
-            let ka = run_app(&g, app, EngineKind::Kudu(ClientSystem::Automine), &cfg);
-            let sm = run_app(&g, app, EngineKind::SingleMachine, &cfg);
+            let sess = MiningSession::with_config(&g, cfg_n(1));
+            let ka = sess.job(&app).client(ClientSystem::Automine).threads(1).run();
+            let sm = sess.job(&app).executor(EngineKind::SingleMachine.executor()).threads(1).run();
             assert_eq!(ka.total_count(), sm.total_count());
             // Pangolin's orientation optimization applies to TC only (the
             // paper: "a powerful optimization specifically targeting
@@ -106,7 +117,7 @@ fn table4() {
                 let og = kudu::graph::OrientedGraph::from(&g);
                 let (count, work) = og.triangle_count_with_work();
                 assert_eq!(count, ka.total_count());
-                fmt_time(work as f64 * cfg.compute.seconds_per_unit)
+                fmt_time(work as f64 * sess.config().compute.seconds_per_unit)
             } else {
                 "-".into()
             };
@@ -132,13 +143,12 @@ fn table5() {
     for d in [Dataset::Yahoo, Dataset::RmatLarge] {
         let g = d.build();
         let budget = g.csr_bytes() / 4;
-        let pg = kudu::partition::PartitionedGraph::new(&g, 8);
-        let fits_partitioned = pg.max_partition_bytes() <= budget;
+        let sess = session8(&g);
+        let fits_partitioned = sess.partitioned().max_partition_bytes() <= budget;
         let fits_replicated = g.csr_bytes() <= budget;
         for app in [App::Tc, App::Mc(3), App::Cc(4)] {
-            let cfg = cfg_n(8);
             let kg = if fits_partitioned {
-                Some(run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg))
+                Some(sess.job(&app).client(ClientSystem::GraphPi).run())
             } else {
                 None
             };
@@ -164,10 +174,9 @@ fn table6() {
     ] {
         for d in datasets {
             let g = d.build();
-            let on = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg_n(8));
-            let mut cfg = cfg_n(8);
-            cfg.engine.cache_frac = 0.0;
-            let off = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+            let sess = session8(&g);
+            let on = sess.job(&app).client(ClientSystem::GraphPi).run();
+            let off = sess.job(&app).client(ClientSystem::GraphPi).cache_frac(0.0).run();
             assert_eq!(on.total_count(), off.total_count());
             row(&[
                 app.name(),
@@ -188,12 +197,14 @@ fn table7() {
     for app in [App::Cc(4), App::Cc(5)] {
         for d in [Dataset::Patents, Dataset::LiveJournal, Dataset::Friendster] {
             let g = d.build();
+            let sess = MiningSession::with_config(&g, cfg_n(1));
             let mk = |aware: bool| {
-                let mut cfg = cfg_n(1);
-                cfg.engine.sockets = 2;
-                cfg.engine.numa_aware = aware;
-                cfg.engine.threads = 8;
-                run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg)
+                sess.job(&app)
+                    .client(ClientSystem::GraphPi)
+                    .sockets(2)
+                    .numa_aware(aware)
+                    .threads(8)
+                    .run()
             };
             let with = mk(true);
             let without = mk(false);
@@ -216,10 +227,9 @@ fn fig13() {
     for app in [App::Cc(4), App::Cc(5)] {
         for d in [Dataset::Mico, Dataset::Patents, Dataset::LiveJournal, Dataset::Friendster] {
             let g = d.build();
-            let on = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg_n(8));
-            let mut cfg = cfg_n(8);
-            cfg.engine.vertical_sharing = false;
-            let off = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+            let sess = session8(&g);
+            let on = sess.job(&app).client(ClientSystem::GraphPi).run();
+            let off = sess.job(&app).client(ClientSystem::GraphPi).vertical_sharing(false).run();
             assert_eq!(on.total_count(), off.total_count());
             row(&[
                 app.name(),
@@ -239,10 +249,9 @@ fn fig14() {
     for app in [App::Cc(4), App::Cc(5)] {
         for d in [Dataset::Mico, Dataset::Patents, Dataset::LiveJournal, Dataset::Friendster] {
             let g = d.build();
-            let on = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg_n(8));
-            let mut cfg = cfg_n(8);
-            cfg.engine.horizontal_sharing = false;
-            let off = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+            let sess = session8(&g);
+            let on = sess.job(&app).client(ClientSystem::GraphPi).run();
+            let off = sess.job(&app).client(ClientSystem::GraphPi).horizontal_sharing(false).run();
             assert_eq!(on.total_count(), off.total_count());
             row(&[
                 app.name(),
@@ -265,21 +274,20 @@ fn fig15() {
     // 4 compute threads/node: keeps the compute:network ratio in the
     // paper's regime at this scaled-down graph size (DESIGN.md §1 — the
     // figure's purpose is the *scaling shape*, compute-dominant like the
-    // paper's multi-second lj runs).
-    let cfg15 = |n: usize| {
-        let mut c = cfg_n(n);
-        c.engine.threads = 4;
-        c
-    };
+    // paper's multi-second lj runs). One session per node count (the
+    // partitioning is a session invariant).
+    let sessions: Vec<MiningSession<'_>> =
+        [1usize, 2, 4, 8].iter().map(|&n| MiningSession::with_config(&g, cfg_n(n))).collect();
     for app in [App::Tc, App::Mc(3), App::Cc(4)] {
-        let base_k = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg15(1));
-        let base_r = run_app(&g, app, EngineKind::Replicated, &cfg15(1));
-        for n in [1usize, 2, 4, 8] {
-            let k = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg15(n));
-            let r = run_app(&g, app, EngineKind::Replicated, &cfg15(n));
+        let base_k = sessions[0].job(&app).client(ClientSystem::GraphPi).threads(4).run();
+        let base_r =
+            sessions[0].job(&app).executor(EngineKind::Replicated.executor()).threads(4).run();
+        for sess in &sessions {
+            let k = sess.job(&app).client(ClientSystem::GraphPi).threads(4).run();
+            let r = sess.job(&app).executor(EngineKind::Replicated.executor()).threads(4).run();
             row(&[
                 app.name(),
-                n.to_string(),
+                sess.num_machines().to_string(),
                 fmt_time(k.virtual_time_s),
                 format!("{:.2}x", base_k.virtual_time_s / k.virtual_time_s),
                 fmt_time(r.virtual_time_s),
@@ -299,7 +307,7 @@ fn fig16() {
                 continue; // mirror the paper's omitted cells
             }
             let g = d.build();
-            let st = run_app(&g, app, EngineKind::Kudu(ClientSystem::GraphPi), &cfg_n(8));
+            let st = session8(&g).job(&app).client(ClientSystem::GraphPi).run();
             row(&[app.name(), d.abbr().into(), format!("{:.1}%", st.comm_overhead() * 100.0)]);
         }
     }
@@ -310,18 +318,13 @@ fn fig17() {
     head("Fig 17: intra-node scalability on lj (k-Automine, 1 machine)");
     row(&["app".into(), "threads".into(), "time".into(), "speedup".into(), "vs single-thread ref".into()]);
     let g = Dataset::LiveJournal.build();
+    let sess = MiningSession::with_config(&g, cfg_n(1));
     for app in [App::Tc, App::Mc(3), App::Cc(4)] {
-        let reference = run_app(&g, app, EngineKind::SingleMachine, &cfg_n(1));
-        let base = {
-            let mut cfg = cfg_n(1);
-            cfg.engine.threads = 1;
-            run_app(&g, app, EngineKind::Kudu(ClientSystem::Automine), &cfg)
-        };
+        let reference = sess.job(&app).executor(EngineKind::SingleMachine.executor()).run();
+        let base = sess.job(&app).client(ClientSystem::Automine).threads(1).run();
         let mut cost: Option<usize> = None;
         for t in [1usize, 2, 4, 8, 12] {
-            let mut cfg = cfg_n(1);
-            cfg.engine.threads = t;
-            let st = run_app(&g, app, EngineKind::Kudu(ClientSystem::Automine), &cfg);
+            let st = sess.job(&app).client(ClientSystem::Automine).threads(t).run();
             if cost.is_none() && st.virtual_time_s < reference.virtual_time_s {
                 cost = Some(t);
             }

@@ -1,8 +1,84 @@
 //! Tiny flag parser (the image vendors only the `xla` crate closure, so
 //! CLI parsing is in-tree). Supports `--flag value`, `--flag=value`, and
-//! boolean `--flag`.
+//! boolean `--flag`, plus the spec parsers that map CLI strings onto the
+//! mining-session API ([`parse_app`], [`parse_engine`], [`parse_pattern`],
+//! [`parse_dataset`]).
 
+use crate::graph::gen;
+use crate::pattern::Pattern;
+use crate::plan::ClientSystem;
+use crate::workloads::{App, EngineKind};
 use std::collections::HashMap;
+
+/// Dataset abbreviation → stand-in dataset.
+pub fn parse_dataset(name: &str) -> Option<gen::Dataset> {
+    Some(match name {
+        "mc" => gen::Dataset::Mico,
+        "pt" => gen::Dataset::Patents,
+        "lj" => gen::Dataset::LiveJournal,
+        "uk" => gen::Dataset::Uk,
+        "tw" => gen::Dataset::Twitter,
+        "fr" => gen::Dataset::Friendster,
+        "rm" => gen::Dataset::RmatLarge,
+        "yh" => gen::Dataset::Yahoo,
+        _ => return None,
+    })
+}
+
+/// App spec (`tc`, `K-mc`, `K-cc`) → [`App`].
+pub fn parse_app(s: &str) -> App {
+    let s = s.to_lowercase();
+    if s == "tc" {
+        return App::Tc;
+    }
+    if let Some(k) = s.strip_suffix("-mc") {
+        return App::Mc(k.parse().expect("bad k in k-mc"));
+    }
+    if let Some(k) = s.strip_suffix("-cc") {
+        return App::Cc(k.parse().expect("bad k in k-cc"));
+    }
+    panic!("unknown app '{s}' (expected tc, K-mc, or K-cc)");
+}
+
+/// Engine spec → [`EngineKind`] (resolve to an executor with
+/// [`EngineKind::executor`]).
+pub fn parse_engine(s: &str) -> EngineKind {
+    match s.to_lowercase().as_str() {
+        "k-automine" | "automine" => EngineKind::Kudu(ClientSystem::Automine),
+        "k-graphpi" | "graphpi" => EngineKind::Kudu(ClientSystem::GraphPi),
+        "gthinker" | "g-thinker" => EngineKind::GThinker,
+        "movingcomp" | "arabesque" => EngineKind::MovingComp,
+        "replicated" => EngineKind::Replicated,
+        "single" => EngineKind::SingleMachine,
+        other => panic!("unknown engine '{other}'"),
+    }
+}
+
+/// Pattern spec (`triangle`, `clique-K`, `chain-K`, `cycle-K`, `star-K`,
+/// `diamond`, `tailed-triangle`) → [`Pattern`].
+pub fn parse_pattern(s: &str) -> Pattern {
+    let s = s.to_lowercase();
+    if s == "triangle" {
+        return Pattern::triangle();
+    }
+    if s == "diamond" {
+        return Pattern::diamond();
+    }
+    if s == "tailed-triangle" {
+        return Pattern::tailed_triangle();
+    }
+    for (prefix, f) in [
+        ("clique-", Pattern::clique as fn(usize) -> Pattern),
+        ("chain-", Pattern::chain),
+        ("cycle-", Pattern::cycle),
+        ("star-", Pattern::star),
+    ] {
+        if let Some(k) = s.strip_prefix(prefix) {
+            return f(k.parse().expect("bad pattern size"));
+        }
+    }
+    panic!("unknown pattern '{s}'");
+}
 
 /// Parsed arguments: positional values plus `--key value` flags.
 #[derive(Debug, Default)]
@@ -88,5 +164,17 @@ mod tests {
         // "--": it is consumed as the flag's value by design; callers put
         // the subcommand first.
         assert_eq!(a.get("verbose", ""), "stats");
+    }
+
+    #[test]
+    fn spec_parsers() {
+        assert_eq!(parse_app("tc"), App::Tc);
+        assert_eq!(parse_app("4-MC"), App::Mc(4));
+        assert_eq!(parse_app("5-cc"), App::Cc(5));
+        assert_eq!(parse_engine("k-graphpi"), EngineKind::Kudu(ClientSystem::GraphPi));
+        assert_eq!(parse_engine("single"), EngineKind::SingleMachine);
+        assert_eq!(parse_pattern("clique-4").num_vertices(), 4);
+        assert!(parse_dataset("lj").is_some());
+        assert!(parse_dataset("nope").is_none());
     }
 }

@@ -77,6 +77,29 @@ impl KuduEngine {
         stats
     }
 
+    /// Like [`KuduEngine::run`], but with the per-machine owned-vertex
+    /// lists precomputed by the caller (one slot per machine, *unfiltered*
+    /// — the engine still applies the plan's root-label filter). This is
+    /// the session entry point: a [`crate::session::MiningSession`]
+    /// partitions the graph once and reuses the lists across every pattern
+    /// and query, instead of rescanning the vertex set per pattern.
+    /// Results are bitwise identical to the self-partitioning entry points.
+    pub fn run_on_roots<'g>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        owned: &[Vec<VertexId>],
+    ) -> RunStats {
+        let mut sinks: Vec<CountSink> = Vec::new();
+        let mut stats = Self::run_inner(graph, plan, cfg, compute, transport, Some(owned), |_m| {
+            CountSink::default()
+        }, &mut sinks);
+        stats.counts = vec![sinks.iter().map(|s| s.count).sum()];
+        stats
+    }
+
     /// Generic entry point: one sink per execution unit, produced by
     /// `make_sink` (which receives the unit's machine index — a sharded
     /// single-machine run yields several sinks for machine 0). Sinks are
@@ -96,8 +119,41 @@ impl KuduEngine {
         make_sink: impl Fn(usize) -> S + Sync,
         out_sinks: &mut Vec<S>,
     ) -> RunStats {
+        Self::run_inner(graph, plan, cfg, compute, transport, None, make_sink, out_sinks)
+    }
+
+    /// [`KuduEngine::run_with_sinks`] with caller-precomputed per-machine
+    /// owned-vertex lists (see [`KuduEngine::run_on_roots`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_sinks_on_roots<'g, S: EmbeddingSink + Send>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        owned: &[Vec<VertexId>],
+        make_sink: impl Fn(usize) -> S + Sync,
+        out_sinks: &mut Vec<S>,
+    ) -> RunStats {
+        Self::run_inner(graph, plan, cfg, compute, transport, Some(owned), make_sink, out_sinks)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_inner<'g, S: EmbeddingSink + Send>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        owned: Option<&[Vec<VertexId>]>,
+        make_sink: impl Fn(usize) -> S + Sync,
+        out_sinks: &mut Vec<S>,
+    ) -> RunStats {
         assert!(plan.depth() >= 2, "patterns must have at least one edge");
         let n = transport.num_machines();
+        if let Some(o) = owned {
+            assert_eq!(o.len(), n, "one owned-vertex list per machine");
+        }
         let wall_start = std::time::Instant::now();
         let view = transport.view();
 
@@ -108,7 +164,10 @@ impl KuduEngine {
         // cores too. The unit list never depends on `sim_threads`.
         let l0 = plan.pattern.label(0);
         let roots_of = |machine: usize| -> Vec<VertexId> {
-            let mut starts = view.partitioned().owned_vertices(machine);
+            let mut starts = match owned {
+                Some(o) => o[machine].clone(),
+                None => view.partitioned().owned_vertices(machine),
+            };
             if l0 != 0 {
                 starts.retain(|&v| graph.label(v) == l0);
             }

@@ -20,6 +20,38 @@ pub trait EmbeddingSink {
     fn add_count(&mut self, n: u64);
 }
 
+/// Object-safe sink used by the session layer ([`crate::session::GpmApp`]):
+/// an [`EmbeddingSink`] that can also report how many embeddings it
+/// received and be downcast back to its concrete type for app-specific
+/// aggregation after the run.
+pub trait AppSink: EmbeddingSink + Send {
+    /// Number of embeddings this sink received (bulk or per-emit).
+    fn total(&self) -> u64;
+
+    /// Downcast support: apps recover their concrete sink type in
+    /// [`crate::session::GpmApp::aggregate`].
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// The boxed sink a [`crate::session::GpmApp`] factory produces, one per
+/// execution unit.
+pub type BoxSink = Box<dyn AppSink>;
+
+/// Boxed sinks plug directly into the engine's generic sink entry points.
+impl EmbeddingSink for BoxSink {
+    fn emit(&mut self, vertices: &[VertexId]) {
+        (**self).emit(vertices);
+    }
+
+    fn bulk_count(&self) -> bool {
+        (**self).bulk_count()
+    }
+
+    fn add_count(&mut self, n: u64) {
+        (**self).add_count(n);
+    }
+}
+
 /// Counts embeddings.
 #[derive(Default, Debug)]
 pub struct CountSink {
@@ -40,6 +72,16 @@ impl EmbeddingSink for CountSink {
     }
 }
 
+impl AppSink for CountSink {
+    fn total(&self) -> u64 {
+        self.count
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 /// Collects every embedding (tests, small-graph applications).
 #[derive(Default, Debug)]
 pub struct CollectSink {
@@ -53,6 +95,16 @@ impl EmbeddingSink for CollectSink {
 
     fn add_count(&mut self, _n: u64) {
         unreachable!("CollectSink never bulk-counts");
+    }
+}
+
+impl AppSink for CollectSink {
+    fn total(&self) -> u64 {
+        self.embeddings.len() as u64
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 
@@ -77,6 +129,16 @@ impl<F: FnMut(&[VertexId])> EmbeddingSink for FnSink<F> {
 
     fn add_count(&mut self, _n: u64) {
         unreachable!("FnSink never bulk-counts");
+    }
+}
+
+impl<F: FnMut(&[VertexId]) + Send + 'static> AppSink for FnSink<F> {
+    fn total(&self) -> u64 {
+        self.count
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -160,6 +160,15 @@ pub fn planted_hubs(n: usize, m_background: usize, hubs: usize, hub_frac: f64, s
     Graph::from_edges(n, &edges)
 }
 
+/// Deterministic pseudo-random vertex labels in `1..=num_labels`, for
+/// labelled-mining workloads (label 0 is reserved as "unconstrained" in
+/// patterns). Attach with [`Graph::with_labels`].
+pub fn random_labels(g: &Graph, num_labels: u8, seed: u64) -> Vec<u8> {
+    assert!(num_labels >= 1, "need at least one label");
+    let mut rng = Rng::new(seed);
+    (0..g.num_vertices()).map(|_| rng.below(num_labels as u64) as u8 + 1).collect()
+}
+
 /// Named stand-in datasets used throughout the benchmarks (DESIGN.md §1).
 /// Sizes are scaled so that the full table suite completes on one core;
 /// skew regimes mirror the originals.

@@ -3,17 +3,87 @@
 //! Reproduction of *Kudu: An Efficient and Scalable Distributed Graph
 //! Pattern Mining Engine* (Chen & Qian, 2021).
 //!
-//! Kudu mines patterns (triangles, cliques, motifs, …) over a graph that is
-//! **1-D hash-partitioned** across the machines of a cluster, and achieves
-//! performance competitive with replicated-graph systems. Its central
-//! abstraction is the **extendable embedding** — a partial embedding plus
-//! the *active edge lists* required to extend it by one vertex — which
-//! breaks pattern-aware enumeration (nested intersection loops) into
-//! fine-grained tasks with well-defined remote-data dependencies.
+//! Kudu mines patterns (triangles, cliques, motifs, labelled queries, …)
+//! over a graph that is **1-D hash-partitioned** across the machines of a
+//! cluster, and achieves performance competitive with replicated-graph
+//! systems. Its central abstraction is the **extendable embedding** — a
+//! partial embedding plus the *active edge lists* required to extend it by
+//! one vertex — which breaks pattern-aware enumeration (nested
+//! intersection loops) into fine-grained tasks with well-defined remote-
+//! data dependencies.
+//!
+//! ## The mining-session API
+//!
+//! All mining goes through a [`session::MiningSession`], which owns the
+//! graph, its partitioning, and the per-machine root lists once, shared by
+//! every job:
+//!
+//! ```no_run
+//! use kudu::plan::ClientSystem;
+//! use kudu::session::MiningSession;
+//! use kudu::workloads::App;
+//!
+//! let g = kudu::graph::gen::rmat(12, 12, 42);
+//! let session = MiningSession::new(&g, 8);
+//!
+//! // Triangle counting on the Kudu engine with GraphPi plans (default):
+//! let tc = session.job(&App::Tc).run();
+//!
+//! // 4-clique counting, Automine plans, vertical sharing ablated:
+//! let cc = session
+//!     .job(&App::Cc(4))
+//!     .client(ClientSystem::Automine)
+//!     .vertical_sharing(false)
+//!     .run();
+//! println!("triangles {} / 4-cliques {}", tc.total_count(), cc.total_count());
+//! ```
+//!
+//! Two traits keep the surface open:
+//!
+//! * [`session::GpmApp`] — *what* to mine: patterns, embedding semantics,
+//!   an optional per-unit sink factory, and result aggregation. The
+//!   built-in counting apps ([`workloads::App`]) and the labelled-query
+//!   app ([`session::LabeledQuery`]) are ordinary implementations.
+//! * [`session::Executor`] — *how* to mine: the Kudu engine
+//!   ([`session::KuduExec`]) and the four comparator baselines implement
+//!   it, so harnesses swap execution models through one trait
+//!   ([`workloads::EngineKind::executor`] maps the CLI-facing enum onto
+//!   it).
+//!
+//! ## Extending Kudu with your own app
+//!
+//! A counting app only names its patterns:
+//!
+//! ```no_run
+//! use kudu::pattern::{brute::Induced, Pattern};
+//! use kudu::session::{GpmApp, MiningSession};
+//!
+//! struct Squares;
+//! impl GpmApp for Squares {
+//!     fn name(&self) -> String { "squares".into() }
+//!     fn patterns(&self) -> Vec<Pattern> { vec![Pattern::cycle(4)] }
+//!     fn induced(&self) -> Induced { Induced::Edge }
+//! }
+//!
+//! let g = kudu::graph::gen::rmat(10, 8, 7);
+//! let squares = MiningSession::new(&g, 4).job(&Squares).run();
+//! println!("4-cycles: {}", squares.total_count());
+//! ```
+//!
+//! Apps that must see each embedding (the user function of the paper's
+//! Algorithm 1) override `needs_sinks`/`unit_sink`/`aggregate`: the
+//! session calls `unit_sink` once per execution unit (sinks run on
+//! concurrent host threads), then hands the finished sinks back to
+//! `aggregate` for app-specific reduction. See [`session::LabeledQuery`]
+//! (support-thresholded labelled queries) and `examples/fraud_detection.rs`
+//! (per-vertex triangle statistics) for complete implementations.
+//!
+//! ## Crate layout
 //!
 //! The crate is organised as the three-layer architecture described in
 //! `DESIGN.md`:
 //!
+//! * [`session`] — the public mining-session API described above.
 //! * [`graph`], [`pattern`], [`plan`], [`partition`], [`cluster`] — the
 //!   substrates: CSR graphs and generators, pattern graphs and isomorphism,
 //!   pattern-aware matching plans (the Automine / GraphPi "code
@@ -24,7 +94,8 @@
 //!   storage, vertical/horizontal sharing, the static cache, and
 //!   NUMA-aware mode.
 //! * [`baselines`] — the comparator execution models (G-thinker-like,
-//!   moving-computation-to-data, replicated GraphPi-like, single-machine).
+//!   moving-computation-to-data, replicated GraphPi-like, single-machine),
+//!   reached through [`session::Executor`].
 //! * [`runtime`] — the dense hot-core decomposition, plus (behind the
 //!   `pjrt` cargo feature) the PJRT bridge that loads AOT-compiled
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) for the XLA offload.
@@ -48,6 +119,7 @@ pub mod partition;
 pub mod pattern;
 pub mod plan;
 pub mod runtime;
+pub mod session;
 pub mod workloads;
 
 pub use config::{EngineConfig, RunConfig};
@@ -55,3 +127,4 @@ pub use engine::KuduEngine;
 pub use graph::{Graph, VertexId};
 pub use pattern::Pattern;
 pub use plan::Plan;
+pub use session::{Executor, GpmApp, MiningSession};

@@ -7,29 +7,18 @@
 //! kudu generate --dataset lj --out /tmp/lj.txt
 //! kudu stats --graph uk
 //! ```
+//!
+//! The `run` subcommand is a thin shell over the mining-session API:
+//! it opens one [`MiningSession`] and dispatches a job built from the
+//! parsed app/engine/feature flags.
 
-use kudu::cli::Args;
+use kudu::cli::{parse_app, parse_dataset, parse_engine, parse_pattern, Args};
 use kudu::config::RunConfig;
-use kudu::graph::{gen, io, Graph};
+use kudu::graph::{io, Graph};
 use kudu::metrics::{fmt_bytes, fmt_time};
 use kudu::pattern::brute::Induced;
-use kudu::pattern::Pattern;
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
-
-fn parse_dataset(name: &str) -> Option<gen::Dataset> {
-    Some(match name {
-        "mc" => gen::Dataset::Mico,
-        "pt" => gen::Dataset::Patents,
-        "lj" => gen::Dataset::LiveJournal,
-        "uk" => gen::Dataset::Uk,
-        "tw" => gen::Dataset::Twitter,
-        "fr" => gen::Dataset::Friendster,
-        "rm" => gen::Dataset::RmatLarge,
-        "yh" => gen::Dataset::Yahoo,
-        _ => return None,
-    })
-}
+use kudu::session::{GpmApp, MiningSession};
 
 fn load_graph(spec: &str) -> Graph {
     if let Some(d) = parse_dataset(spec) {
@@ -38,56 +27,6 @@ fn load_graph(spec: &str) -> Graph {
         io::load_edge_list(std::path::Path::new(spec))
             .unwrap_or_else(|e| panic!("cannot load graph '{spec}': {e}"))
     }
-}
-
-fn parse_app(s: &str) -> App {
-    let s = s.to_lowercase();
-    if s == "tc" {
-        return App::Tc;
-    }
-    if let Some(k) = s.strip_suffix("-mc") {
-        return App::Mc(k.parse().expect("bad k in k-mc"));
-    }
-    if let Some(k) = s.strip_suffix("-cc") {
-        return App::Cc(k.parse().expect("bad k in k-cc"));
-    }
-    panic!("unknown app '{s}' (expected tc, K-mc, or K-cc)");
-}
-
-fn parse_engine(s: &str) -> EngineKind {
-    match s.to_lowercase().as_str() {
-        "k-automine" | "automine" => EngineKind::Kudu(ClientSystem::Automine),
-        "k-graphpi" | "graphpi" => EngineKind::Kudu(ClientSystem::GraphPi),
-        "gthinker" | "g-thinker" => EngineKind::GThinker,
-        "movingcomp" | "arabesque" => EngineKind::MovingComp,
-        "replicated" => EngineKind::Replicated,
-        "single" => EngineKind::SingleMachine,
-        other => panic!("unknown engine '{other}'"),
-    }
-}
-
-fn parse_pattern(s: &str) -> Pattern {
-    let s = s.to_lowercase();
-    if s == "triangle" {
-        return Pattern::triangle();
-    }
-    if s == "diamond" {
-        return Pattern::diamond();
-    }
-    if s == "tailed-triangle" {
-        return Pattern::tailed_triangle();
-    }
-    for (prefix, f) in [
-        ("clique-", Pattern::clique as fn(usize) -> Pattern),
-        ("chain-", Pattern::chain),
-        ("cycle-", Pattern::cycle),
-        ("star-", Pattern::star),
-    ] {
-        if let Some(k) = s.strip_prefix(prefix) {
-            return f(k.parse().expect("bad pattern size"));
-        }
-    }
-    panic!("unknown pattern '{s}'");
 }
 
 fn usage() -> ! {
@@ -112,16 +51,6 @@ fn main() {
             let app = parse_app(&args.get("app", "tc"));
             let engine = parse_engine(&args.get("engine", "k-graphpi"));
             let machines = args.get_as::<usize>("machines", 8);
-            let mut cfg = RunConfig::with_machines(machines);
-            cfg.engine.threads = args.get_as::<usize>("threads", 1);
-            // Host-side parallelism of the simulation (0 = all cores);
-            // changes wall-clock only, never the reported metrics.
-            cfg.engine.sim_threads = args.get_as::<usize>("sim-threads", 0);
-            if args.has("no-cache") {
-                cfg.engine.cache_frac = 0.0;
-            }
-            cfg.engine.horizontal_sharing = !args.has("no-hds");
-            cfg.engine.vertical_sharing = !args.has("no-vcs");
             println!(
                 "graph: {} vertices, {} edges (max degree {})",
                 g.num_vertices(),
@@ -129,7 +58,20 @@ fn main() {
                 g.max_degree()
             );
             println!("engine: {} | app: {} | machines: {}", engine.name(), app.name(), machines);
-            let st = run_app(&g, app, engine, &cfg);
+            let session = MiningSession::with_config(&g, RunConfig::with_machines(machines));
+            let mut job = session
+                .job(&app)
+                .executor(engine.executor())
+                .threads(args.get_as::<usize>("threads", 1))
+                // Host-side parallelism of the simulation (0 = all cores);
+                // changes wall-clock only, never the reported metrics.
+                .sim_threads(args.get_as::<usize>("sim-threads", 0))
+                .horizontal_sharing(!args.has("no-hds"))
+                .vertical_sharing(!args.has("no-vcs"));
+            if args.has("no-cache") {
+                job = job.cache_frac(0.0);
+            }
+            let st = job.run();
             println!("counts: {:?}  (total {})", st.counts, st.total_count());
             println!(
                 "virtual time: {}  wall: {}  comm overhead: {:.1}%",

@@ -1,0 +1,701 @@
+//! The mining-session API: Kudu's public abstraction.
+//!
+//! The paper's headline claim is a *well-defined abstraction* under which
+//! existing single-machine GPM systems run distributed unchanged. This
+//! module is that seam, split into three pieces:
+//!
+//! * [`MiningSession`] — owns the graph, the 1-D partitioning, and the
+//!   per-machine owned-vertex lists **once**, shared by every pattern,
+//!   query, and executor of the session. (The pre-session entry points
+//!   re-partitioned per pattern: a 4-motif-count app partitioned the
+//!   graph six times.)
+//! * [`GpmApp`] — what to mine: the pattern set, the embedding semantics,
+//!   an optional per-unit sink factory for per-embedding processing, and
+//!   the result aggregation. The built-in counting apps
+//!   ([`crate::workloads::App`]) and the labelled-query app
+//!   ([`LabeledQuery`]) are both ordinary implementations.
+//! * [`Executor`] — how to mine: one compiled [`Plan`] at a time over the
+//!   session's shared cluster state. Implemented by the Kudu engine
+//!   ([`KuduExec`]) and all four comparator baselines, so the table
+//!   harness selects execution models through one trait instead of an
+//!   enum match.
+//!
+//! Jobs are built fluently:
+//!
+//! ```no_run
+//! use kudu::graph::gen;
+//! use kudu::plan::ClientSystem;
+//! use kudu::session::MiningSession;
+//! use kudu::workloads::App;
+//!
+//! let g = gen::rmat(10, 10, 42);
+//! let session = MiningSession::new(&g, 8);
+//! let stats = session
+//!     .job(&App::Cc(4))
+//!     .client(ClientSystem::Automine)
+//!     .vertical_sharing(false)
+//!     .run();
+//! println!("4-cliques: {}", stats.total_count());
+//! ```
+//!
+//! Every result a job reports — counts, traffic, virtual time — is
+//! bitwise identical to the pre-session entry points (property-tested in
+//! `tests/session_equivalence.rs`).
+
+use crate::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
+use crate::cluster::Transport;
+use crate::config::RunConfig;
+use crate::engine::sink::{AppSink, BoxSink, CountSink, EmbeddingSink};
+use crate::engine::KuduEngine;
+use crate::graph::{Graph, VertexId};
+use crate::metrics::RunStats;
+use crate::partition::PartitionedGraph;
+use crate::pattern::brute::Induced;
+use crate::pattern::Pattern;
+use crate::plan::{ClientSystem, Plan};
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// Everything one pattern's run hands back to its app for aggregation.
+pub struct PatternOutcome {
+    /// Index into the app's pattern list.
+    pub pattern_idx: usize,
+    /// Single-pattern run statistics; `counts` holds one entry (the raw
+    /// embedding count reported by the executor).
+    pub stats: RunStats,
+    /// The finished per-unit sinks, in unit order. Empty for counting apps
+    /// (executors bulk-count without materialising sinks).
+    pub sinks: Vec<BoxSink>,
+}
+
+/// A graph pattern mining application: *what* to mine and what to do with
+/// each embedding. Object-safe, so apps are passed as `&dyn GpmApp`;
+/// `Sync` because sink factories are invoked from concurrent executor
+/// threads.
+///
+/// The default methods implement a plain counting app — the only code a
+/// new counting workload needs is [`GpmApp::name`], [`GpmApp::patterns`],
+/// and [`GpmApp::induced`]. Apps that process embeddings (support
+/// counting, per-vertex statistics, …) override [`GpmApp::needs_sinks`],
+/// [`GpmApp::unit_sink`], and [`GpmApp::aggregate`]; see [`LabeledQuery`]
+/// for a complete example.
+pub trait GpmApp: Sync {
+    /// Display name (table/report headers).
+    fn name(&self) -> String;
+
+    /// The patterns this app mines, in reporting order.
+    fn patterns(&self) -> Vec<Pattern>;
+
+    /// Embedding semantics shared by all the app's patterns.
+    fn induced(&self) -> Induced;
+
+    /// True when the app must see each embedding (via [`GpmApp::unit_sink`])
+    /// rather than a bulk count. Sink apps require an executor with
+    /// [`Executor::supports_sinks`].
+    fn needs_sinks(&self) -> bool {
+        false
+    }
+
+    /// Per-execution-unit sink factory for pattern `pattern_idx`. A unit
+    /// is one simulated machine (or one root shard of a lone machine);
+    /// `machine` is the unit's machine index. Only called when
+    /// [`GpmApp::needs_sinks`] is true.
+    fn unit_sink(&self, pattern_idx: usize, machine: usize) -> BoxSink {
+        let _ = (pattern_idx, machine);
+        Box::new(CountSink::default())
+    }
+
+    /// Fold the per-pattern outcomes (in pattern order) into the job's
+    /// final statistics. The default appends counts and sums times and
+    /// traffic — exactly the multi-pattern merge the counting apps need.
+    fn aggregate(&self, outcomes: Vec<PatternOutcome>) -> RunStats {
+        let mut merged = RunStats::default();
+        for o in &outcomes {
+            merged.absorb(&o.stats);
+        }
+        merged
+    }
+}
+
+/// Shared per-plan execution context an [`Executor`] runs against: the
+/// session's graph, partitioning, and owned-vertex lists, plus the
+/// job-resolved configuration and one compiled plan.
+pub struct PlanCtx<'s, 'g> {
+    pub graph: &'g Graph,
+    pub plan: &'s Plan,
+    pub cfg: &'s RunConfig,
+    /// The session's shared 1-D partitioning (computed once per session).
+    pub pg: PartitionedGraph<'g>,
+    /// Per-machine owned-vertex lists, unfiltered (computed once per
+    /// session; executors apply plan-specific root filters themselves).
+    pub roots: &'s [Vec<VertexId>],
+}
+
+/// An execution model that can mine one compiled [`Plan`] over the
+/// session's shared cluster state. Implemented by the Kudu engine and all
+/// four comparator baselines; object-safe so the harnesses select
+/// executors dynamically.
+pub trait Executor: Send + Sync {
+    /// Display name (table headers).
+    fn name(&self) -> String;
+
+    /// The client system whose planner compiles this executor's plans.
+    /// Baselines use the GraphPi planner — best plans for everyone, so
+    /// comparisons isolate the execution model.
+    fn client(&self) -> ClientSystem {
+        ClientSystem::GraphPi
+    }
+
+    /// Mine one plan, counting embeddings. Returns single-pattern stats
+    /// with `counts = [n]`.
+    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats;
+
+    /// Whether [`Executor::run_plan_with_sinks`] is available (per-
+    /// embedding processing). Only the fine-grained Kudu engine exposes
+    /// the paper's Algorithm-1 user function; the baselines count only.
+    fn supports_sinks(&self) -> bool {
+        false
+    }
+
+    /// Mine one plan, feeding every embedding through per-unit sinks from
+    /// `make_sink`. Returns the stats (counts = sum of sink totals) and
+    /// the finished sinks in unit order.
+    fn run_plan_with_sinks(
+        &self,
+        ctx: &PlanCtx<'_, '_>,
+        make_sink: &(dyn Fn(usize) -> BoxSink + Sync),
+    ) -> (RunStats, Vec<BoxSink>) {
+        let _ = (ctx, make_sink);
+        panic!(
+            "executor '{}' does not support per-embedding sinks; \
+             use a sink-capable executor (e.g. KuduExec) for this app",
+            self.name()
+        );
+    }
+}
+
+/// The Kudu engine as an [`Executor`], parameterised by the client system
+/// whose planner compiles its plans.
+pub struct KuduExec {
+    pub client: ClientSystem,
+}
+
+impl Executor for KuduExec {
+    fn name(&self) -> String {
+        self.client.name().into()
+    }
+
+    fn client(&self) -> ClientSystem {
+        self.client
+    }
+
+    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
+        let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
+        KuduEngine::run_on_roots(
+            ctx.graph,
+            ctx.plan,
+            &ctx.cfg.engine,
+            &ctx.cfg.compute,
+            &mut tr,
+            ctx.roots,
+        )
+    }
+
+    fn supports_sinks(&self) -> bool {
+        true
+    }
+
+    fn run_plan_with_sinks(
+        &self,
+        ctx: &PlanCtx<'_, '_>,
+        make_sink: &(dyn Fn(usize) -> BoxSink + Sync),
+    ) -> (RunStats, Vec<BoxSink>) {
+        let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
+        let mut sinks: Vec<BoxSink> = Vec::new();
+        let mut stats = KuduEngine::run_with_sinks_on_roots(
+            ctx.graph,
+            ctx.plan,
+            &ctx.cfg.engine,
+            &ctx.cfg.compute,
+            &mut tr,
+            ctx.roots,
+            make_sink,
+            &mut sinks,
+        );
+        stats.counts = vec![sinks.iter().map(|s| s.total()).sum()];
+        (stats, sinks)
+    }
+}
+
+/// G-thinker-like baseline as an [`Executor`].
+pub struct GThinkerExec;
+
+impl Executor for GThinkerExec {
+    fn name(&self) -> String {
+        "G-thinker".into()
+    }
+
+    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
+        let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
+        GThinker::run(
+            ctx.graph,
+            ctx.plan,
+            ctx.cfg.engine.threads,
+            ctx.cfg.engine.sim_threads,
+            &ctx.cfg.compute,
+            &mut tr,
+        )
+    }
+}
+
+/// Moving-computation-to-data baseline as an [`Executor`].
+pub struct MovingCompExec;
+
+impl Executor for MovingCompExec {
+    fn name(&self) -> String {
+        "MovingComp".into()
+    }
+
+    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
+        let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
+        MovingComputation::run(
+            ctx.graph,
+            ctx.plan,
+            ctx.cfg.engine.threads,
+            &ctx.cfg.compute,
+            &mut tr,
+        )
+    }
+}
+
+/// Replicated-graph GraphPi-like baseline as an [`Executor`].
+pub struct ReplicatedExec;
+
+impl Executor for ReplicatedExec {
+    fn name(&self) -> String {
+        "GraphPi(repl)".into()
+    }
+
+    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
+        Replicated::run(
+            ctx.graph,
+            ctx.plan,
+            ctx.cfg.num_machines,
+            ctx.cfg.engine.threads,
+            ctx.cfg.engine.sim_threads,
+            &ctx.cfg.compute,
+        )
+    }
+}
+
+/// Single-machine DFS reference as an [`Executor`] (ignores the machine
+/// count).
+pub struct SingleMachineExec;
+
+impl Executor for SingleMachineExec {
+    fn name(&self) -> String {
+        "single".into()
+    }
+
+    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
+        SingleMachine::run(ctx.graph, ctx.plan, &ctx.cfg.compute)
+    }
+}
+
+/// A mining session: the graph, its 1-D partitioning, and the per-machine
+/// owned-vertex lists, computed **once** and shared by every job. Jobs
+/// borrow the session immutably, so a session serves any number of apps,
+/// executors, and feature ablations without re-partitioning.
+pub struct MiningSession<'g> {
+    graph: &'g Graph,
+    cfg: RunConfig,
+    pg: PartitionedGraph<'g>,
+    roots: Vec<Vec<VertexId>>,
+}
+
+impl<'g> MiningSession<'g> {
+    /// Open a session over `graph` partitioned across `machines` simulated
+    /// machines, with default configuration.
+    pub fn new(graph: &'g Graph, machines: usize) -> Self {
+        Self::with_config(graph, RunConfig::with_machines(machines))
+    }
+
+    /// Open a session with a full [`RunConfig`]. The partitioning is fixed
+    /// by `cfg.num_machines` for the session's lifetime; per-job engine
+    /// toggles are overridden on the job builder.
+    pub fn with_config(graph: &'g Graph, cfg: RunConfig) -> Self {
+        let pg = PartitionedGraph::new(graph, cfg.num_machines);
+        let roots = (0..cfg.num_machines).map(|m| pg.owned_vertices(m)).collect();
+        MiningSession { graph, cfg, pg, roots }
+    }
+
+    pub fn graph(&self) -> &'g Graph {
+        self.graph
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.cfg.num_machines
+    }
+
+    /// The session's shared partitioning.
+    pub fn partitioned(&self) -> &PartitionedGraph<'g> {
+        &self.pg
+    }
+
+    /// Per-machine owned-vertex lists (the partition-once state).
+    pub fn owned_roots(&self) -> &[Vec<VertexId>] {
+        &self.roots
+    }
+
+    /// Start building a job that mines `app` on this session. Defaults:
+    /// the Kudu engine with the GraphPi planner and the session's config.
+    pub fn job<'a>(&'a self, app: &'a dyn GpmApp) -> Job<'a, 'g> {
+        Job {
+            sess: self,
+            app,
+            exec: Box::new(KuduExec { client: ClientSystem::GraphPi }),
+            cfg: self.cfg.clone(),
+        }
+    }
+}
+
+/// Fluent builder for one mining job: an app × an executor × config
+/// overrides. Consumed by [`Job::run`].
+pub struct Job<'a, 'g> {
+    sess: &'a MiningSession<'g>,
+    app: &'a dyn GpmApp,
+    exec: Box<dyn Executor>,
+    cfg: RunConfig,
+}
+
+impl<'a, 'g> Job<'a, 'g> {
+    /// Mine with the Kudu engine, compiling plans with `client`'s planner.
+    pub fn client(mut self, client: ClientSystem) -> Self {
+        self.exec = Box::new(KuduExec { client });
+        self
+    }
+
+    /// Mine with an explicit executor (baselines, custom execution models).
+    pub fn executor(mut self, exec: Box<dyn Executor>) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Toggle vertical computation sharing (paper §6.1 / Fig 13).
+    pub fn vertical_sharing(mut self, on: bool) -> Self {
+        self.cfg.engine.vertical_sharing = on;
+        self
+    }
+
+    /// Toggle horizontal data sharing (paper §6.2 / Fig 14).
+    pub fn horizontal_sharing(mut self, on: bool) -> Self {
+        self.cfg.engine.horizontal_sharing = on;
+        self
+    }
+
+    /// Static-cache size as a fraction of CSR bytes; `0.0` disables.
+    pub fn cache_frac(mut self, frac: f64) -> Self {
+        self.cfg.engine.cache_frac = frac;
+        self
+    }
+
+    /// Modeled computation threads per machine (scales virtual time).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.engine.threads = threads;
+        self
+    }
+
+    /// Host threads executing the simulation (`0` = all cores). Changes
+    /// wall-clock only, never the reported metrics.
+    pub fn sim_threads(mut self, threads: usize) -> Self {
+        self.cfg.engine.sim_threads = threads;
+        self
+    }
+
+    /// NUMA sockets per machine (`1` disables NUMA modelling).
+    pub fn sockets(mut self, sockets: usize) -> Self {
+        self.cfg.engine.sockets = sockets;
+        self
+    }
+
+    /// Toggle NUMA-aware exploration (Table 7).
+    pub fn numa_aware(mut self, on: bool) -> Self {
+        self.cfg.engine.numa_aware = on;
+        self
+    }
+
+    /// Run the job: compile one plan per app pattern with the executor's
+    /// client planner, execute each over the session's shared cluster
+    /// state, and hand the outcomes to the app for aggregation.
+    ///
+    /// Multi-pattern apps run pattern-by-pattern; with the default
+    /// aggregation, counts append and times/traffic sum — identical to the
+    /// pre-session entry points, bit for bit.
+    pub fn run(self) -> RunStats {
+        let patterns = self.app.patterns();
+        let induced = self.app.induced();
+        let client = self.exec.client();
+        let needs_sinks = self.app.needs_sinks();
+        assert!(
+            !needs_sinks || self.exec.supports_sinks(),
+            "app '{}' needs per-embedding sinks but executor '{}' only counts",
+            self.app.name(),
+            self.exec.name()
+        );
+        let mut outcomes = Vec::with_capacity(patterns.len());
+        for (i, p) in patterns.iter().enumerate() {
+            let plan = {
+                let plan = client.plan(p, induced);
+                if self.cfg.engine.vertical_sharing {
+                    plan
+                } else {
+                    plan.without_vertical_sharing()
+                }
+            };
+            let ctx = PlanCtx {
+                graph: self.sess.graph,
+                plan: &plan,
+                cfg: &self.cfg,
+                pg: self.sess.pg,
+                roots: &self.sess.roots,
+            };
+            let (stats, sinks) = if needs_sinks {
+                self.exec.run_plan_with_sinks(&ctx, &|m| self.app.unit_sink(i, m))
+            } else {
+                (self.exec.run_plan(&ctx), Vec::new())
+            };
+            outcomes.push(PatternOutcome { pattern_idx: i, stats, sinks });
+        }
+        self.app.aggregate(outcomes)
+    }
+}
+
+/// Per-unit sink of [`LabeledQuery`]: counts matches and records the
+/// distinct vertices seen at each pattern position (the per-position
+/// "node images" whose minimum size is the MNI support measure used by
+/// frequent-subgraph mining).
+pub struct SupportSink {
+    pub count: u64,
+    pub images: Vec<HashSet<VertexId>>,
+}
+
+impl SupportSink {
+    pub fn new(k: usize) -> Self {
+        SupportSink { count: 0, images: vec![HashSet::new(); k] }
+    }
+}
+
+impl EmbeddingSink for SupportSink {
+    fn emit(&mut self, vertices: &[VertexId]) {
+        self.count += 1;
+        for (i, &v) in vertices.iter().enumerate() {
+            self.images[i].insert(v);
+        }
+    }
+
+    fn add_count(&mut self, _n: u64) {
+        unreachable!("SupportSink never bulk-counts");
+    }
+}
+
+impl AppSink for SupportSink {
+    fn total(&self) -> u64 {
+        self.count
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Result of one query pattern of a [`LabeledQuery`] run.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub pattern_idx: usize,
+    /// Total labelled embeddings matched.
+    pub embeddings: u64,
+    /// MNI support: minimum over pattern positions of the number of
+    /// distinct graph vertices matched at that position.
+    pub support: u64,
+    /// Whether the pattern met the support threshold.
+    pub kept: bool,
+}
+
+/// Labelled pattern queries with a support threshold — a genuinely new
+/// workload that ships entirely on the [`GpmApp`] trait, with no
+/// engine-internal changes: mine a set of vertex-labelled patterns,
+/// compute each pattern's MNI support from per-embedding sinks, and
+/// report only patterns whose support reaches `min_support` (patterns
+/// below threshold report a zero count, as an FSM-style pruning pass
+/// would discard them).
+pub struct LabeledQuery {
+    patterns: Vec<Pattern>,
+    induced: Induced,
+    min_support: u64,
+    results: Mutex<Vec<QueryResult>>,
+}
+
+impl LabeledQuery {
+    pub fn new(patterns: Vec<Pattern>, induced: Induced, min_support: u64) -> Self {
+        LabeledQuery { patterns, induced, min_support, results: Mutex::new(Vec::new()) }
+    }
+
+    /// Per-pattern query results of the most recent run.
+    pub fn results(&self) -> Vec<QueryResult> {
+        self.results.lock().unwrap().clone()
+    }
+
+    pub fn min_support(&self) -> u64 {
+        self.min_support
+    }
+}
+
+impl GpmApp for LabeledQuery {
+    fn name(&self) -> String {
+        format!("LQ({} patterns, support>={})", self.patterns.len(), self.min_support)
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        self.patterns.clone()
+    }
+
+    fn induced(&self) -> Induced {
+        self.induced
+    }
+
+    fn needs_sinks(&self) -> bool {
+        true
+    }
+
+    fn unit_sink(&self, pattern_idx: usize, _machine: usize) -> BoxSink {
+        Box::new(SupportSink::new(self.patterns[pattern_idx].num_vertices()))
+    }
+
+    fn aggregate(&self, outcomes: Vec<PatternOutcome>) -> RunStats {
+        let mut merged = RunStats::default();
+        let mut results = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            let k = self.patterns[o.pattern_idx].num_vertices();
+            let mut images: Vec<HashSet<VertexId>> = vec![HashSet::new(); k];
+            let mut embeddings = 0u64;
+            for s in &o.sinks {
+                let ss = s
+                    .as_any()
+                    .downcast_ref::<SupportSink>()
+                    .expect("LabeledQuery units produce SupportSinks");
+                embeddings += ss.count;
+                for (i, img) in ss.images.iter().enumerate() {
+                    images[i].extend(img.iter().copied());
+                }
+            }
+            let support = images.iter().map(|img| img.len() as u64).min().unwrap_or(0);
+            let kept = support >= self.min_support;
+            let mut stats = o.stats;
+            stats.counts = vec![if kept { embeddings } else { 0 }];
+            merged.absorb(&stats);
+            results.push(QueryResult { pattern_idx: o.pattern_idx, embeddings, support, kept });
+        }
+        *self.results.lock().unwrap() = results;
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::brute::count_embeddings;
+    use crate::workloads::{App, EngineKind};
+
+    #[test]
+    fn session_counts_match_oracle_for_every_executor() {
+        let g = gen::rmat(8, 8, 73);
+        let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
+        let sess = MiningSession::new(&g, 4);
+        for kind in [
+            EngineKind::Kudu(ClientSystem::Automine),
+            EngineKind::Kudu(ClientSystem::GraphPi),
+            EngineKind::GThinker,
+            EngineKind::MovingComp,
+            EngineKind::Replicated,
+            EngineKind::SingleMachine,
+        ] {
+            let st = sess.job(&App::Tc).executor(kind.executor()).run();
+            assert_eq!(st.total_count(), expect, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn session_partitions_once() {
+        let g = gen::erdos_renyi(200, 700, 5);
+        let sess = MiningSession::new(&g, 4);
+        let total: usize = sess.owned_roots().iter().map(|r| r.len()).sum();
+        assert_eq!(total, g.num_vertices());
+        // Multi-pattern job over the same session state.
+        let st = sess.job(&App::Mc(3)).run();
+        assert_eq!(st.counts.len(), 2);
+        // Another job, same shared roots (no rebuild) — still correct.
+        let tc = sess.job(&App::Tc).run();
+        assert_eq!(tc.total_count(), count_embeddings(&g, &Pattern::triangle(), Induced::Edge));
+    }
+
+    #[test]
+    fn builder_overrides_apply() {
+        let g = gen::rmat(8, 8, 17);
+        let sess = MiningSession::new(&g, 4);
+        let on = sess.job(&App::Cc(4)).run();
+        let off = sess
+            .job(&App::Cc(4))
+            .vertical_sharing(false)
+            .horizontal_sharing(false)
+            .cache_frac(0.0)
+            .run();
+        assert_eq!(on.total_count(), off.total_count());
+        // The ablations cost work: no-sharing does strictly more.
+        assert!(off.work_units > on.work_units);
+    }
+
+    #[test]
+    fn labeled_query_support_threshold() {
+        let base = gen::erdos_renyi(100, 400, 211);
+        let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 2) as u8 + 1).collect();
+        let g = base.with_labels(labels);
+        let queries = vec![
+            Pattern::triangle().with_labels(&[1, 1, 2]),
+            Pattern::chain(3).with_labels(&[2, 1, 2]),
+            // A label absent from the graph: support 0, always pruned.
+            Pattern::chain(3).with_labels(&[3, 1, 3]),
+        ];
+        let app = LabeledQuery::new(queries.clone(), Induced::Edge, 1);
+        let sess = MiningSession::new(&g, 4);
+        let st = sess.job(&app).run();
+        let results = app.results();
+        assert_eq!(results.len(), 3);
+        for (i, q) in queries.iter().enumerate() {
+            let expect = count_embeddings(&g, q, Induced::Edge);
+            assert_eq!(results[i].embeddings, expect, "query {i}");
+            assert_eq!(st.counts[i], if results[i].kept { expect } else { 0 });
+        }
+        assert!(!results[2].kept, "absent label must be pruned");
+        assert_eq!(results[2].support, 0);
+
+        // A high threshold prunes everything.
+        let strict = LabeledQuery::new(queries, Induced::Edge, u64::MAX);
+        let st2 = sess.job(&strict).run();
+        assert_eq!(st2.total_count(), 0);
+        assert!(strict.results().iter().all(|r| !r.kept));
+    }
+
+    #[test]
+    #[should_panic(expected = "needs per-embedding sinks")]
+    fn sink_app_on_counting_executor_panics() {
+        let g = gen::erdos_renyi(30, 60, 3);
+        let app = LabeledQuery::new(vec![Pattern::triangle()], Induced::Edge, 1);
+        let sess = MiningSession::new(&g, 2);
+        let _ = sess.job(&app).executor(EngineKind::Replicated.executor()).run();
+    }
+}

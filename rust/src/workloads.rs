@@ -1,30 +1,35 @@
-//! GPM applications (paper §8.1) and engine runners.
+//! Built-in GPM applications (paper §8.1) and the one-shot runner.
 //!
 //! * **TC** — triangle counting (edge-induced 3-clique).
 //! * **k-MC** — k-motif counting: every connected size-k pattern,
 //!   vertex-induced.
 //! * **k-CC** — k-clique counting, edge-induced.
 //!
-//! [`run_app`] dispatches an app onto any of the five execution models
-//! (Kudu, G-thinker, moving-computation, replicated, single-machine) with
-//! a shared configuration, which is exactly what the table harness needs.
+//! [`App`] is an ordinary [`GpmApp`] implementation and [`EngineKind`] a
+//! parseable selector that resolves to an [`Executor`](crate::session::Executor)
+//! — both are thin adapters over the open traits in [`crate::session`].
+//! [`run_app`] is the one-shot convenience: it opens a throwaway
+//! [`MiningSession`] per call; harnesses that mine several apps or
+//! configurations over one graph should open the session themselves so
+//! the partitioning is computed once.
 
-use crate::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
-use crate::cluster::Transport;
 use crate::config::RunConfig;
 use crate::engine::sink::FnSink;
 use crate::engine::KuduEngine;
 use crate::graph::Graph;
-use crate::metrics::{RunStats, Traffic};
-use crate::partition::PartitionedGraph;
+use crate::metrics::RunStats;
 use crate::pattern::brute::Induced;
 use crate::pattern::{motifs, Pattern};
-use crate::plan::{ClientSystem, Plan};
+use crate::plan::ClientSystem;
 #[cfg(feature = "pjrt")]
 use crate::runtime::DenseCore;
 use crate::runtime::HotCore;
+use crate::session::{
+    Executor, GThinkerExec, GpmApp, KuduExec, MiningSession, MovingCompExec, ReplicatedExec,
+    SingleMachineExec,
+};
 
-/// A GPM application.
+/// The built-in counting applications.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum App {
     /// Triangle counting.
@@ -35,8 +40,8 @@ pub enum App {
     Cc(usize),
 }
 
-impl App {
-    pub fn name(&self) -> String {
+impl GpmApp for App {
+    fn name(&self) -> String {
         match self {
             App::Tc => "TC".into(),
             App::Mc(k) => format!("{k}-MC"),
@@ -44,34 +49,25 @@ impl App {
         }
     }
 
-    /// The patterns this app mines, with their induced semantics.
-    pub fn patterns(&self) -> (Vec<Pattern>, Induced) {
+    fn patterns(&self) -> Vec<Pattern> {
         match self {
-            App::Tc => (vec![Pattern::triangle()], Induced::Edge),
-            App::Mc(k) => (motifs::all_motifs(*k), Induced::Vertex),
-            App::Cc(k) => (vec![Pattern::clique(*k)], Induced::Edge),
+            App::Tc => vec![Pattern::triangle()],
+            App::Mc(k) => motifs::all_motifs(*k),
+            App::Cc(k) => vec![Pattern::clique(*k)],
         }
     }
 
-    /// Compile plans with the given client system's planner, honouring the
-    /// vertical-sharing toggle.
-    pub fn plans(&self, client: ClientSystem, vertical_sharing: bool) -> Vec<Plan> {
-        let (patterns, induced) = self.patterns();
-        patterns
-            .iter()
-            .map(|p| {
-                let plan = client.plan(p, induced);
-                if vertical_sharing {
-                    plan
-                } else {
-                    plan.without_vertical_sharing()
-                }
-            })
-            .collect()
+    fn induced(&self) -> Induced {
+        match self {
+            App::Mc(_) => Induced::Vertex,
+            App::Tc | App::Cc(_) => Induced::Edge,
+        }
     }
 }
 
-/// Execution model selector for [`run_app`].
+/// Execution model selector: the parseable face of the
+/// [`Executor`](crate::session::Executor) implementations (CLI flags,
+/// table headers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// Kudu with the given client system's plans.
@@ -96,64 +92,25 @@ impl EngineKind {
             EngineKind::SingleMachine => "single",
         }
     }
+
+    /// Resolve to the corresponding [`Executor`] implementation.
+    pub fn executor(&self) -> Box<dyn Executor> {
+        match self {
+            EngineKind::Kudu(c) => Box::new(KuduExec { client: *c }),
+            EngineKind::GThinker => Box::new(GThinkerExec),
+            EngineKind::MovingComp => Box::new(MovingCompExec),
+            EngineKind::Replicated => Box::new(ReplicatedExec),
+            EngineKind::SingleMachine => Box::new(SingleMachineExec),
+        }
+    }
 }
 
-/// Run `app` on `graph` with `engine` under `cfg`. Multi-pattern apps run
-/// pattern-by-pattern; stats are merged (counts appended, times summed,
-/// traffic summed).
+/// One-shot convenience: run `app` on `graph` with `engine` under `cfg`
+/// through a throwaway [`MiningSession`]. The session partitions the
+/// graph once and reuses it across all the app's patterns (the old entry
+/// point re-partitioned per pattern); results are bitwise identical.
 pub fn run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) -> RunStats {
-    let client = match engine {
-        EngineKind::Kudu(c) => c,
-        // Baselines all use the GraphPi planner — best plans for everyone,
-        // so comparisons isolate the execution model.
-        _ => ClientSystem::GraphPi,
-    };
-    let plans = app.plans(client, cfg.engine.vertical_sharing);
-    let mut merged = RunStats::default();
-    let mut traffic = Traffic::new(cfg.num_machines);
-    for plan in &plans {
-        let stats = match engine {
-            EngineKind::Kudu(_) => {
-                let pg = PartitionedGraph::new(graph, cfg.num_machines);
-                let mut tr = Transport::new(pg, cfg.net);
-                let s = KuduEngine::run(graph, plan, &cfg.engine, &cfg.compute, &mut tr);
-                traffic.merge(&tr.traffic);
-                s
-            }
-            EngineKind::GThinker => {
-                let pg = PartitionedGraph::new(graph, cfg.num_machines);
-                let mut tr = Transport::new(pg, cfg.net);
-                let s = GThinker::run(
-                    graph,
-                    plan,
-                    cfg.engine.threads,
-                    cfg.engine.sim_threads,
-                    &cfg.compute,
-                    &mut tr,
-                );
-                traffic.merge(&tr.traffic);
-                s
-            }
-            EngineKind::MovingComp => {
-                let pg = PartitionedGraph::new(graph, cfg.num_machines);
-                let mut tr = Transport::new(pg, cfg.net);
-                let s = MovingComputation::run(graph, plan, cfg.engine.threads, &cfg.compute, &mut tr);
-                traffic.merge(&tr.traffic);
-                s
-            }
-            EngineKind::Replicated => Replicated::run(
-                graph,
-                plan,
-                cfg.num_machines,
-                cfg.engine.threads,
-                cfg.engine.sim_threads,
-                &cfg.compute,
-            ),
-            EngineKind::SingleMachine => SingleMachine::run(graph, plan, &cfg.compute),
-        };
-        merged.absorb(&stats);
-    }
-    merged
+    MiningSession::with_config(graph, cfg.clone()).job(&app).executor(engine.executor()).run()
 }
 
 /// Hybrid triangle counting: the dense hot-vertex core is counted by the
@@ -189,8 +146,11 @@ pub fn tc_hybrid_cpu(graph: &Graph, cfg: &RunConfig, core_n: usize) -> RunStats 
 /// Count triangles with at least one vertex outside `member` using the
 /// engine's per-embedding sink path. Returns (run stats, cold count).
 /// The accumulator is atomic because the engine runs its machines on
-/// concurrent host threads.
+/// concurrent host threads. (This sits below the session layer on
+/// purpose: the sink borrows `member`, while session sinks are `'static`.)
 fn count_cold_triangles(graph: &Graph, cfg: &RunConfig, member: &[bool]) -> (RunStats, u64) {
+    use crate::cluster::Transport;
+    use crate::partition::PartitionedGraph;
     use std::sync::atomic::{AtomicU64, Ordering};
     let plan = ClientSystem::GraphPi.plan(&Pattern::triangle(), Induced::Edge);
     let pg = PartitionedGraph::new(graph, cfg.num_machines);
@@ -228,6 +188,7 @@ mod tests {
         let g = gen::rmat(8, 8, 73);
         let cfg = RunConfig::with_machines(4);
         let expect = brute::triangle_count(&g);
+        let sess = MiningSession::with_config(&g, cfg);
         for engine in [
             EngineKind::Kudu(ClientSystem::Automine),
             EngineKind::Kudu(ClientSystem::GraphPi),
@@ -236,7 +197,7 @@ mod tests {
             EngineKind::Replicated,
             EngineKind::SingleMachine,
         ] {
-            let st = run_app(&g, App::Tc, engine, &cfg);
+            let st = sess.job(&App::Tc).executor(engine.executor()).run();
             assert_eq!(st.total_count(), expect, "{}", engine.name());
         }
     }
@@ -257,10 +218,10 @@ mod tests {
     #[test]
     fn clique_apps() {
         let g = gen::rmat(7, 8, 83);
-        let cfg = RunConfig::with_machines(2);
+        let sess = MiningSession::new(&g, 2);
         for k in [4, 5] {
             let expect = brute::count_embeddings(&g, &Pattern::clique(k), Induced::Edge);
-            let st = run_app(&g, App::Cc(k), EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+            let st = sess.job(&App::Cc(k)).client(ClientSystem::GraphPi).run();
             assert_eq!(st.total_count(), expect, "k={k}");
         }
     }

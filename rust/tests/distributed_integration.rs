@@ -1,7 +1,8 @@
 //! Cross-module integration: every execution model, every app, every
 //! dataset stand-in — counts must agree across the board, and the
 //! structural claims of the paper (traffic ordering, scaling direction,
-//! memory gates) must hold on the real simulated cluster.
+//! memory gates) must hold on the real simulated cluster. Everything
+//! routes through the mining-session API.
 
 use kudu::config::RunConfig;
 use kudu::graph::gen::{self, Dataset};
@@ -9,7 +10,8 @@ use kudu::partition::PartitionedGraph;
 use kudu::pattern::brute::{count_embeddings, Induced};
 use kudu::pattern::Pattern;
 use kudu::plan::ClientSystem;
-use kudu::workloads::{run_app, App, EngineKind};
+use kudu::session::{GpmApp, MiningSession};
+use kudu::workloads::{App, EngineKind};
 
 const ALL_ENGINES: [EngineKind; 6] = [
     EngineKind::Kudu(ClientSystem::Automine),
@@ -23,11 +25,11 @@ const ALL_ENGINES: [EngineKind; 6] = [
 #[test]
 fn all_engines_all_apps_agree() {
     let g = gen::rmat(9, 8, 101);
-    let cfg = RunConfig::with_machines(5);
+    let sess = MiningSession::new(&g, 5);
     for app in [App::Tc, App::Mc(3), App::Cc(4)] {
         let mut counts: Vec<u64> = Vec::new();
         for engine in ALL_ENGINES {
-            counts.push(run_app(&g, app, engine, &cfg).total_count());
+            counts.push(sess.job(&app).executor(engine.executor()).run().total_count());
         }
         assert!(
             counts.windows(2).all(|w| w[0] == w[1]),
@@ -56,11 +58,11 @@ fn dataset_standins_have_expected_skew_regimes() {
 #[test]
 fn kudu_beats_gthinker_on_every_standin() {
     // Table 2's headline: orders of magnitude on pt-like, large on all.
-    let cfg = RunConfig::with_machines(8);
     for d in [Dataset::Mico, Dataset::Patents] {
         let g = d.build();
-        let k = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-        let gt = run_app(&g, App::Tc, EngineKind::GThinker, &cfg);
+        let sess = MiningSession::new(&g, 8);
+        let k = sess.job(&App::Tc).client(ClientSystem::GraphPi).run();
+        let gt = sess.job(&App::Tc).executor(EngineKind::GThinker.executor()).run();
         assert_eq!(k.total_count(), gt.total_count());
         let speedup = gt.virtual_time_s / k.virtual_time_s;
         assert!(speedup > 5.0, "{}: speedup only {speedup:.1}x", d.abbr());
@@ -85,10 +87,12 @@ fn internode_scaling_beats_replicated_on_skew() {
     // Fig 15's shape: Kudu scales near-linearly; replicated is hampered
     // by stragglers + startup.
     let g = Dataset::LiveJournal.build();
-    let k1 = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &RunConfig::with_machines(1));
-    let k8 = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &RunConfig::with_machines(8));
-    let r1 = run_app(&g, App::Tc, EngineKind::Replicated, &RunConfig::with_machines(1));
-    let r8 = run_app(&g, App::Tc, EngineKind::Replicated, &RunConfig::with_machines(8));
+    let sess1 = MiningSession::new(&g, 1);
+    let sess8 = MiningSession::new(&g, 8);
+    let k1 = sess1.job(&App::Tc).run();
+    let k8 = sess8.job(&App::Tc).run();
+    let r1 = sess1.job(&App::Tc).executor(EngineKind::Replicated.executor()).run();
+    let r8 = sess8.job(&App::Tc).executor(EngineKind::Replicated.executor()).run();
     let k_speedup = k1.virtual_time_s / k8.virtual_time_s;
     let r_speedup = r1.virtual_time_s / r8.virtual_time_s;
     assert!(k_speedup > 3.0, "kudu 8-node speedup {k_speedup:.2}");
@@ -99,16 +103,16 @@ fn internode_scaling_beats_replicated_on_skew() {
 fn comm_overhead_small_on_skewed_graphs() {
     // Fig 16: with the cache, uk-like communication is negligible.
     let g = Dataset::Uk.build();
-    let st = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &RunConfig::with_machines(8));
+    let st = MiningSession::new(&g, 8).job(&App::Tc).run();
     assert!(st.comm_overhead() < 0.5, "comm overhead {:.2}", st.comm_overhead());
 }
 
 #[test]
 fn vertex_induced_multi_pattern_run() {
-    // 4-MC on a small graph: 6 patterns, against the oracle.
+    // 4-MC on a small graph: 6 patterns, against the oracle — one
+    // partitioning shared by all six patterns.
     let g = gen::erdos_renyi(50, 170, 103);
-    let cfg = RunConfig::with_machines(3);
-    let st = run_app(&g, App::Mc(4), EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    let st = MiningSession::new(&g, 3).job(&App::Mc(4)).run();
     let motifs = kudu::pattern::motifs::all_motifs(4);
     assert_eq!(st.counts.len(), 6);
     for (i, p) in motifs.iter().enumerate() {
@@ -121,23 +125,28 @@ fn vertex_induced_multi_pattern_run() {
 fn five_clique_against_oracle() {
     let g = gen::rmat(8, 10, 107);
     let expect = count_embeddings(&g, &Pattern::clique(5), Induced::Edge);
-    let cfg = RunConfig::with_machines(4);
+    let sess = MiningSession::new(&g, 4);
     for engine in [EngineKind::Kudu(ClientSystem::Automine), EngineKind::Replicated] {
-        assert_eq!(run_app(&g, App::Cc(5), engine, &cfg).total_count(), expect);
+        let st = sess.job(&App::Cc(5)).executor(engine.executor()).run();
+        assert_eq!(st.total_count(), expect);
     }
 }
 
 #[test]
 fn deterministic_runs() {
-    // Identical config => identical stats (bitwise, incl. virtual time).
+    // Identical config => identical stats (bitwise, incl. virtual time),
+    // whether jobs share a session or use fresh ones.
     let g = Dataset::Mico.build();
-    let cfg = RunConfig::with_machines(8);
-    let a = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-    let b = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
-    assert_eq!(a.total_count(), b.total_count());
-    assert_eq!(a.network_bytes, b.network_bytes);
-    assert_eq!(a.virtual_time_s, b.virtual_time_s);
-    assert_eq!(a.work_units, b.work_units);
+    let sess = MiningSession::new(&g, 8);
+    let a = sess.job(&App::Tc).run();
+    let b = sess.job(&App::Tc).run();
+    let c = MiningSession::with_config(&g, RunConfig::with_machines(8)).job(&App::Tc).run();
+    for other in [&b, &c] {
+        assert_eq!(a.total_count(), other.total_count());
+        assert_eq!(a.network_bytes, other.network_bytes);
+        assert_eq!(a.virtual_time_s, other.virtual_time_s);
+        assert_eq!(a.work_units, other.work_units);
+    }
 }
 
 #[test]

@@ -8,9 +8,9 @@
 use kudu::config::RunConfig;
 use kudu::graph::gen;
 use kudu::pattern::brute;
-use kudu::plan::ClientSystem;
 use kudu::runtime::{DenseCore, HotCore, DENSE_N};
-use kudu::workloads::{run_app, tc_hybrid, App, EngineKind};
+use kudu::session::MiningSession;
+use kudu::workloads::{tc_hybrid, App};
 
 fn artifacts_present() -> bool {
     kudu::runtime::artifacts_dir().join(format!("dense_core_{DENSE_N}.hlo.txt")).exists()
@@ -49,8 +49,8 @@ fn hybrid_tc_is_exact_end_to_end() {
     let expect = brute::triangle_count(&g);
     let hybrid = tc_hybrid(&g, &cfg, &core).expect("hybrid run");
     assert_eq!(hybrid.total_count(), expect, "XLA-dense + CPU-sparse must be exact");
-    // And the pure engine agrees too.
-    let engine = run_app(&g, App::Tc, EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+    // And the pure engine agrees too (through the session API).
+    let engine = MiningSession::with_config(&g, cfg).job(&App::Tc).run();
     assert_eq!(engine.total_count(), expect);
 }
 

@@ -1,0 +1,275 @@
+//! Equivalence suite for the mining-session API redesign: the new
+//! `MiningSession` + `GpmApp`/`Executor` path must report **bitwise
+//! identical** results — counts, traffic, and virtual time — to the
+//! pre-redesign entry points, across engines × apps × machine counts.
+//!
+//! The legacy runner below reconstructs the old `workloads::run_app`
+//! body exactly: a fresh `PartitionedGraph` + `Transport` per pattern,
+//! direct engine/baseline calls, stats merged in pattern order. The
+//! session path shares one partitioning across patterns; everything it
+//! reports must still match bit for bit.
+//!
+//! Also here: the object-safety / `Send` compile checks for the new
+//! traits.
+
+use kudu::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
+use kudu::cluster::Transport;
+use kudu::config::RunConfig;
+use kudu::engine::sink::{AppSink, BoxSink, EmbeddingSink};
+use kudu::engine::KuduEngine;
+use kudu::graph::gen::{self, Rng};
+use kudu::graph::Graph;
+use kudu::metrics::{RunStats, Traffic};
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::ClientSystem;
+use kudu::session::{Executor, GpmApp, LabeledQuery, MiningSession, SupportSink};
+use kudu::workloads::{run_app, App, EngineKind};
+
+/// The pre-redesign `run_app`: re-partitions per pattern, dispatches on
+/// the `EngineKind` enum, merges stats in pattern order.
+fn legacy_run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) -> RunStats {
+    let client = match engine {
+        EngineKind::Kudu(c) => c,
+        _ => ClientSystem::GraphPi,
+    };
+    let induced = app.induced();
+    let mut merged = RunStats::default();
+    let mut traffic = Traffic::new(cfg.num_machines);
+    for p in app.patterns() {
+        let plan = {
+            let plan = client.plan(&p, induced);
+            if cfg.engine.vertical_sharing {
+                plan
+            } else {
+                plan.without_vertical_sharing()
+            }
+        };
+        let stats = match engine {
+            EngineKind::Kudu(_) => {
+                let pg = PartitionedGraph::new(graph, cfg.num_machines);
+                let mut tr = Transport::new(pg, cfg.net);
+                let s = KuduEngine::run(graph, &plan, &cfg.engine, &cfg.compute, &mut tr);
+                traffic.merge(&tr.traffic);
+                s
+            }
+            EngineKind::GThinker => {
+                let pg = PartitionedGraph::new(graph, cfg.num_machines);
+                let mut tr = Transport::new(pg, cfg.net);
+                let s = GThinker::run(
+                    graph,
+                    &plan,
+                    cfg.engine.threads,
+                    cfg.engine.sim_threads,
+                    &cfg.compute,
+                    &mut tr,
+                );
+                traffic.merge(&tr.traffic);
+                s
+            }
+            EngineKind::MovingComp => {
+                let pg = PartitionedGraph::new(graph, cfg.num_machines);
+                let mut tr = Transport::new(pg, cfg.net);
+                let s =
+                    MovingComputation::run(graph, &plan, cfg.engine.threads, &cfg.compute, &mut tr);
+                traffic.merge(&tr.traffic);
+                s
+            }
+            EngineKind::Replicated => Replicated::run(
+                graph,
+                &plan,
+                cfg.num_machines,
+                cfg.engine.threads,
+                cfg.engine.sim_threads,
+                &cfg.compute,
+            ),
+            EngineKind::SingleMachine => SingleMachine::run(graph, &plan, &cfg.compute),
+        };
+        merged.absorb(&stats);
+    }
+    merged
+}
+
+/// Bitwise comparison of everything a run reports (floats by bit
+/// pattern, not epsilon).
+#[track_caller]
+fn assert_bitwise_eq(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.work_units, b.work_units, "{what}: work_units");
+    assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{what}: virtual time"
+    );
+    assert_eq!(
+        a.exposed_comm_s.to_bits(),
+        b.exposed_comm_s.to_bits(),
+        "{what}: exposed comm"
+    );
+    assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+    assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+}
+
+const ALL_ENGINES: [EngineKind; 6] = [
+    EngineKind::Kudu(ClientSystem::Automine),
+    EngineKind::Kudu(ClientSystem::GraphPi),
+    EngineKind::GThinker,
+    EngineKind::MovingComp,
+    EngineKind::Replicated,
+    EngineKind::SingleMachine,
+];
+
+#[test]
+fn session_bitwise_equals_legacy_across_engines_apps_machines() {
+    let g = gen::rmat(8, 8, 401);
+    for machines in [1usize, 2, 4, 8] {
+        let cfg = RunConfig::with_machines(machines);
+        let sess = MiningSession::with_config(&g, cfg.clone());
+        for app in [App::Tc, App::Mc(3), App::Cc(4)] {
+            for engine in ALL_ENGINES {
+                let old = legacy_run_app(&g, app, engine, &cfg);
+                let new = sess.job(&app).executor(engine.executor()).run();
+                assert_bitwise_eq(
+                    &old,
+                    &new,
+                    &format!("{} × {} × {machines}m", app.name(), engine.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn run_app_wrapper_bitwise_equals_legacy() {
+    // The retained one-shot entry point routes through the session and
+    // must stay indistinguishable from the old implementation.
+    let g = gen::erdos_renyi(150, 600, 403);
+    let cfg = RunConfig::with_machines(3);
+    for engine in ALL_ENGINES {
+        let old = legacy_run_app(&g, App::Mc(3), engine, &cfg);
+        let new = run_app(&g, App::Mc(3), engine, &cfg);
+        assert_bitwise_eq(&old, &new, engine.name());
+    }
+}
+
+#[test]
+fn session_bitwise_equals_legacy_under_feature_ablations() {
+    let g = gen::rmat(8, 9, 409);
+    let mut cfg = RunConfig::with_machines(4);
+    for (vcs, hds, cache) in
+        [(false, true, 0.10), (true, false, 0.10), (true, true, 0.0), (false, false, 0.0)]
+    {
+        cfg.engine.vertical_sharing = vcs;
+        cfg.engine.horizontal_sharing = hds;
+        cfg.engine.cache_frac = cache;
+        let old = legacy_run_app(&g, App::Cc(4), EngineKind::Kudu(ClientSystem::GraphPi), &cfg);
+        let new = MiningSession::with_config(&g, cfg.clone())
+            .job(&App::Cc(4))
+            .client(ClientSystem::GraphPi)
+            .run();
+        assert_bitwise_eq(&old, &new, &format!("vcs={vcs} hds={hds} cache={cache}"));
+        // Builder-toggle form from a default-config session must land on
+        // the same configuration, hence the same bits.
+        let sess = MiningSession::new(&g, 4);
+        let built = sess
+            .job(&App::Cc(4))
+            .client(ClientSystem::GraphPi)
+            .vertical_sharing(vcs)
+            .horizontal_sharing(hds)
+            .cache_frac(cache)
+            .run();
+        assert_bitwise_eq(&old, &built, &format!("builder vcs={vcs} hds={hds} cache={cache}"));
+    }
+}
+
+/// Property sweep: random graphs × random machine counts × every engine —
+/// legacy and session paths never diverge in any reported bit. Failures
+/// print the case seed for reproduction.
+#[test]
+fn prop_session_equivalence_random_sweep() {
+    let mut rng = Rng::new(0x5E55_1014);
+    for case in 0..12 {
+        let seed = rng.next_u64();
+        let n = 30 + rng.below(80) as usize;
+        let m = n + rng.below(4 * n as u64) as usize;
+        let g = gen::erdos_renyi(n, m, seed);
+        let machines = 1 + rng.below(8) as usize;
+        let cfg = RunConfig::with_machines(machines);
+        let sess = MiningSession::with_config(&g, cfg.clone());
+        let app = match rng.below(3) {
+            0 => App::Tc,
+            1 => App::Mc(3),
+            _ => App::Cc(4),
+        };
+        for engine in ALL_ENGINES {
+            let old = legacy_run_app(&g, app, engine, &cfg);
+            let new = sess.job(&app).executor(engine.executor()).run();
+            assert_bitwise_eq(
+                &old,
+                &new,
+                &format!("case {case} seed {seed} machines {machines} {}", engine.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn labelled_session_runs_match_oracle_and_legacy_engine() {
+    // The labelled path through the session (LabeledQuery on the trait)
+    // reports the same counts as driving the engine directly.
+    let base = gen::erdos_renyi(90, 360, 419);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8 + 1).collect();
+    let g = base.with_labels(labels);
+    let queries =
+        vec![Pattern::triangle().with_labels(&[1, 2, 3]), Pattern::chain(3).with_labels(&[2, 1, 2])];
+    let app = LabeledQuery::new(queries.clone(), Induced::Edge, 1);
+    let sess = MiningSession::new(&g, 4);
+    let st = sess.job(&app).run();
+    for (i, q) in queries.iter().enumerate() {
+        let plan = ClientSystem::GraphPi.plan(q, Induced::Edge);
+        let pg = PartitionedGraph::new(&g, 4);
+        let mut tr = Transport::new(pg, sess.config().net);
+        let direct = KuduEngine::run(&g, &plan, &sess.config().engine, &sess.config().compute, &mut tr);
+        assert_eq!(st.counts[i], direct.total_count(), "query {i}");
+    }
+}
+
+// ---- Object-safety / Send compile checks for the new traits. ----
+
+// The traits must stay usable as trait objects: these signatures only
+// compile while `GpmApp`, `Executor`, and `AppSink` are object-safe.
+fn _takes_app_object(_: &dyn GpmApp) {}
+fn _takes_executor_object(_: &dyn Executor) {}
+fn _takes_sink_object(_: &mut dyn AppSink) {}
+
+fn _assert_send<T: Send + ?Sized>() {}
+fn _assert_sync<T: Sync + ?Sized>() {}
+
+#[test]
+fn traits_are_object_safe_and_send() {
+    // Boxed executors and sinks cross threads inside the engine.
+    _assert_send::<Box<dyn Executor>>();
+    _assert_sync::<Box<dyn Executor>>();
+    _assert_send::<BoxSink>();
+    // App references are shared across the executor's sink-factory
+    // threads.
+    _assert_sync::<&dyn GpmApp>();
+    _assert_send::<SupportSink>();
+
+    // Exercise the object paths for real.
+    let app: &dyn GpmApp = &App::Tc;
+    assert_eq!(app.name(), "TC");
+    assert_eq!(app.patterns().len(), 1);
+    let exec: Box<dyn Executor> = EngineKind::SingleMachine.executor();
+    assert_eq!(exec.name(), "single");
+    assert!(!exec.supports_sinks());
+    let mut sink: BoxSink = app.unit_sink(0, 0);
+    sink.add_count(3);
+    assert_eq!(sink.total(), 3);
+}
