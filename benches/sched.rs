@@ -1,0 +1,171 @@
+//! Scheduler bench: chunk-granularity work stealing vs the static
+//! contiguous root split it replaced, plus the worker-scaling table.
+//!
+//! Workload: single-machine triangle counting on a skewed R-MAT graph —
+//! the shape that load-imbalances a static split worst (R-MAT
+//! concentrates degree mass on a few hub-heavy regions of the id space,
+//! so contiguous shards carry wildly different work). Two measurements:
+//!
+//! 1. **Scaling table**: wall-clock with `workers_per_machine` ∈
+//!    {1, 2, 4, 8}, asserting along the way that every reported metric
+//!    is bitwise identical across the whole row (the tentpole
+//!    determinism contract).
+//! 2. **Static split comparison**: the removed `root_shards` mechanism,
+//!    reconstructed faithfully — the root range cut into 8 contiguous
+//!    shards, each mined serially by its own engine run, all 8 executed
+//!    concurrently on 8 host threads (exactly PR 1's execution shape) —
+//!    versus one scheduler run with 8 workers stealing chunk tasks.
+//!
+//! Emits `BENCH_sched.json` (acceptance: work stealing beats the static
+//! split on this skewed single-machine run); numbers are recorded in
+//! EXPERIMENTS.md §Scheduler.
+
+use kudu::cluster::Transport;
+use kudu::config::EngineConfig;
+use kudu::engine::KuduEngine;
+use kudu::graph::gen;
+use kudu::metrics::{ComputeModel, NetModel, RunStats};
+use kudu::par;
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::graphpi_plan;
+use std::time::Instant;
+
+const STATIC_SHARDS: usize = 8;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// One scheduler run: a lone simulated machine, `workers` stealing
+/// workers on `workers` host threads.
+fn run_sched(g: &kudu::Graph, plan: &kudu::Plan, pg: PartitionedGraph<'_>, workers: usize) -> (RunStats, f64) {
+    let cfg = EngineConfig {
+        sim_threads: workers,
+        workers_per_machine: workers,
+        ..Default::default()
+    };
+    let mut tr = Transport::new(pg, NetModel::default());
+    let t0 = Instant::now();
+    let st = KuduEngine::run(g, plan, &cfg, &ComputeModel::default(), &mut tr);
+    (st, t0.elapsed().as_secs_f64())
+}
+
+/// The removed `root_shards` static split, reconstructed: the machine's
+/// root range cut into `STATIC_SHARDS` contiguous shards, each shard a
+/// fully serial engine run over its own roots, all shards executed
+/// concurrently on `STATIC_SHARDS` host threads. No stealing: a thread
+/// that finishes its shard idles while the hub-heavy shard grinds on.
+fn run_static_split(
+    g: &kudu::Graph,
+    plan: &kudu::Plan,
+    pg: PartitionedGraph<'_>,
+    roots: &[kudu::VertexId],
+) -> (u64, f64) {
+    #[allow(clippy::manual_div_ceil)]
+    let per = (roots.len() + STATIC_SHARDS - 1) / STATIC_SHARDS;
+    let shards: Vec<Vec<kudu::VertexId>> =
+        roots.chunks(per.max(1)).map(|c| c.to_vec()).collect();
+    let t0 = Instant::now();
+    let counts = par::run_indexed(STATIC_SHARDS, shards.len(), |i| {
+        let cfg = EngineConfig { sim_threads: 1, workers_per_machine: 1, ..Default::default() };
+        let mut tr = Transport::new(pg, NetModel::default());
+        let owned = vec![shards[i].clone()];
+        KuduEngine::run_on_roots(g, plan, &cfg, &ComputeModel::default(), &mut tr, &owned)
+            .total_count()
+    });
+    (counts.iter().sum(), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let host_threads = par::resolve_threads(0);
+    let g = gen::rmat(13, 16, 42);
+    let plan = graphpi_plan(&Pattern::triangle(), Induced::Edge);
+    let pg = PartitionedGraph::new(&g, 1);
+    let roots = pg.owned_vertices(0);
+    println!(
+        "sched bench: TC on rmat-13 ({} vertices, {} edges, skew(top5%) {:.1}%), \
+         1 machine, host threads {host_threads}",
+        g.num_vertices(),
+        g.num_edges(),
+        g.skewness(0.05) * 100.0
+    );
+
+    // Warmup + determinism reference.
+    let (reference, _) = run_sched(&g, &plan, pg, 1);
+
+    // --- Worker-scaling table (bitwise-identical metrics asserted). ---
+    let reps = 5;
+    let workers_axis = [1usize, 2, 4, 8];
+    let mut medians = Vec::new();
+    for &w in &workers_axis {
+        let mut walls = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let (st, wall) = run_sched(&g, &plan, pg, w);
+            assert_eq!(st.counts, reference.counts, "workers={w}");
+            assert_eq!(st.network_bytes, reference.network_bytes, "workers={w}");
+            assert_eq!(
+                st.virtual_time_s.to_bits(),
+                reference.virtual_time_s.to_bits(),
+                "workers={w}"
+            );
+            assert_eq!(st.work_units, reference.work_units, "workers={w}");
+            assert_eq!(st.sched_tasks, reference.sched_tasks, "workers={w}");
+            walls.push(wall);
+        }
+        let m = median(walls);
+        println!(
+            "bench sched/workers-{w}  wall {m:.4}s  speedup {:.2}x  tasks {}",
+            medians.first().copied().unwrap_or(m) / m,
+            reference.sched_tasks
+        );
+        medians.push(m);
+    }
+
+    // --- Static split vs work stealing, both on 8-way parallelism. ---
+    let mut static_walls = Vec::with_capacity(reps);
+    let mut steal_walls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (count, wall) = run_static_split(&g, &plan, pg, &roots);
+        assert_eq!(count, reference.total_count(), "static split count");
+        static_walls.push(wall);
+        let (st, wall) = run_sched(&g, &plan, pg, STATIC_SHARDS);
+        assert_eq!(st.counts, reference.counts);
+        steal_walls.push(wall);
+    }
+    let static_s = median(static_walls);
+    let steal_s = median(steal_walls);
+    let vs_static = static_s / steal_s;
+    println!(
+        "bench sched/static-vs-steal  static({STATIC_SHARDS} shards) {static_s:.4}s  \
+         work-stealing({STATIC_SHARDS} workers) {steal_s:.4}s  speedup {vs_static:.2}x"
+    );
+
+    let scaling_rows: String = workers_axis
+        .iter()
+        .zip(&medians)
+        .map(|(w, m)| {
+            format!(
+                "    {{\"workers\": {w}, \"wall_median_s\": {m}, \"speedup\": {}}}",
+                medians[0] / m
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"sched\",\n  \"workload\": \"tc_rmat13_1machine\",\n  \
+         \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
+         \"count\": {},\n  \"tasks\": {},\n  \"deterministic\": true,\n  \
+         \"scaling\": [\n{scaling_rows}\n  ],\n  \
+         \"static_split\": {{\n    \"shards\": {STATIC_SHARDS},\n    \
+         \"static_median_s\": {static_s},\n    \"stealing_median_s\": {steal_s},\n    \
+         \"speedup\": {vs_static},\n    \"scheduler_beats_static\": {}\n  }}\n}}\n",
+        reference.total_count(),
+        reference.sched_tasks,
+        vs_static > 1.0
+    );
+    std::fs::write("BENCH_sched.json", json).expect("write BENCH_sched.json");
+    println!("wrote BENCH_sched.json");
+}

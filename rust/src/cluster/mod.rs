@@ -152,6 +152,14 @@ impl TrafficLedger {
     pub fn traffic(&self) -> &Traffic {
         &self.traffic
     }
+
+    /// Fold another ledger's matrix into this one (u64 sums — associative
+    /// and commutative, so merge order never changes a reported number).
+    /// Scheduler workers merge their private ledgers machine-side before
+    /// the machine ledger reaches the run's [`Transport`].
+    pub fn merge(&mut self, other: &TrafficLedger) {
+        self.traffic.merge(other.traffic());
+    }
 }
 
 /// The accounted transport between simulated machines: the shared

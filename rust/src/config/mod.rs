@@ -1,7 +1,43 @@
 //! Run configuration: which engine features are on, cluster shape, chunk
-//! sizes — everything the ablation tables toggle.
+//! sizes, scheduler granularity — everything the ablation tables toggle.
 
 use crate::metrics::{ComputeModel, NetModel};
+
+/// A degenerate [`EngineConfig`] rejected by [`EngineConfig::validate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `chunk_capacity == 0`: a zero-capacity chunk can never fill nor
+    /// hold an embedding, so exploration would loop forever.
+    ZeroChunkCapacity,
+    /// `mini_batch == 0`: the virtual-time model divides work into
+    /// mini-batches; zero would divide by zero.
+    ZeroMiniBatch,
+    /// `sockets == 0`: a machine has at least one NUMA socket.
+    ZeroSockets,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroChunkCapacity => {
+                write!(f, "chunk_capacity must be >= 1 (a zero-capacity chunk cannot hold any embedding)")
+            }
+            ConfigError::ZeroMiniBatch => {
+                write!(f, "mini_batch must be >= 1 (work is distributed in mini-batches)")
+            }
+            ConfigError::ZeroSockets => write!(f, "sockets must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Read a host-parallelism default from the environment (used by the CI
+/// determinism matrix: `KUDU_SIM_THREADS=1 KUDU_WORKERS_PER_MACHINE=1
+/// cargo test` must report bit-identical numbers to the all-cores run).
+fn env_knob(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 /// Kudu engine feature toggles and sizing (paper §5–§6 knobs).
 #[derive(Clone, Debug)]
@@ -9,7 +45,10 @@ pub struct EngineConfig {
     /// Chunk capacity: number of extendable embeddings per level chunk
     /// (the paper pre-allocates ~1 GB per level; we size by count).
     pub chunk_capacity: usize,
-    /// Mini-batch size for work distribution (paper §7: 64).
+    /// Mini-batch size for work distribution (paper §7: 64). Also the
+    /// root-vertex granularity of scheduler tasks: each root task explores
+    /// the subtrees of one `mini_batch`-sized slice of a machine's owned
+    /// start vertices.
     pub mini_batch: usize,
     /// Vertical computation sharing (paper §6.1 / Fig 13).
     pub vertical_sharing: bool,
@@ -29,18 +68,37 @@ pub struct EngineConfig {
     /// Computation threads per machine (virtual; Fig 17). This is part of
     /// the *cost model* — it scales virtual compute time.
     pub threads: usize,
-    /// Host threads used to execute the simulation itself (thread-per-
-    /// machine, plus root-vertex sharding when only one machine is
-    /// simulated). `0` = all available cores. Changes wall-clock time
-    /// only: counts, traffic, and virtual-time metrics are byte-for-byte
-    /// identical for every value.
+    /// Host threads used to execute the simulation itself. `0` = all
+    /// available cores (overridable via `KUDU_SIM_THREADS`). Changes
+    /// wall-clock time only: counts, traffic, and virtual-time metrics are
+    /// byte-for-byte identical for every value.
     pub sim_threads: usize,
-    /// Number of contiguous root-vertex shards a single simulated
-    /// machine's start range is split into, so the single-machine and
-    /// NUMA configurations can also use the host cores. Fixed by config —
-    /// never derived from `sim_threads` — which is what keeps results
-    /// independent of the host thread count.
-    pub root_shards: usize,
+    /// Logical scheduler workers per simulated machine. Each machine's
+    /// chunk-granularity tasks run on this many per-worker deques with
+    /// work stealing; the host multiplexes all machines' workers onto
+    /// `sim_threads` threads. `0` = all available cores (overridable via
+    /// `KUDU_WORKERS_PER_MACHINE`). Like `sim_threads`, this knob changes
+    /// wall-clock time only — the task decomposition and every reduction
+    /// order are fixed by graph + config, never by worker count or steal
+    /// interleaving.
+    pub workers_per_machine: usize,
+    /// Task-split depth budget: a task exploring a frame at `level <
+    /// task_split_levels` hands each full child chunk to the scheduler as
+    /// a new task (instead of descending depth-first in place). `0`
+    /// disables splitting — every root task explores its whole subtree.
+    pub task_split_levels: usize,
+    /// Task-split width budget: at most this many child tasks are split
+    /// off per task; further full child chunks are descended depth-first
+    /// in place. Bounds the memory a single skewed task can pin.
+    pub task_split_width: usize,
+    /// Cap on split-off child chunks buffered in a machine's scheduler
+    /// queues. Above the cap, a would-be child task is parked on the
+    /// spawning worker's private overflow stack and becomes that
+    /// worker's *next* task (depth-first, releasing its chunk soonest) —
+    /// task identity and results are unchanged, only *where* the task
+    /// runs. Total in-flight chunks per machine stay bounded by
+    /// `max_live_chunks + workers × (task_split_width + pattern depth)`.
+    pub max_live_chunks: usize,
 }
 
 impl Default for EngineConfig {
@@ -55,9 +113,30 @@ impl Default for EngineConfig {
             sockets: 1,
             numa_aware: true,
             threads: 1,
-            sim_threads: 0,
-            root_shards: 8,
+            sim_threads: env_knob("KUDU_SIM_THREADS", 0),
+            workers_per_machine: env_knob("KUDU_WORKERS_PER_MACHINE", 0),
+            task_split_levels: 1,
+            task_split_width: 8,
+            max_live_chunks: 64,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Reject degenerate configurations with a descriptive error instead
+    /// of a panic (or hang) deep inside the engine. Called by the session
+    /// job builder and the engine entry points.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.chunk_capacity == 0 {
+            return Err(ConfigError::ZeroChunkCapacity);
+        }
+        if self.mini_batch == 0 {
+            return Err(ConfigError::ZeroMiniBatch);
+        }
+        if self.sockets == 0 {
+            return Err(ConfigError::ZeroSockets);
+        }
+        Ok(())
     }
 }
 
@@ -101,9 +180,37 @@ mod tests {
         assert_eq!(c.num_machines, 8);
         assert!(c.engine.vertical_sharing && c.engine.horizontal_sharing);
         assert!(c.engine.cache_frac > 0.0);
-        assert_eq!(c.engine.sim_threads, 0, "default = all available cores");
-        assert!(c.engine.root_shards >= 1);
+        // Host-parallelism defaults come from the environment so the CI
+        // determinism matrix can pin them; unset they mean "all cores".
+        // (Assert the real values rather than re-evaluating env_knob —
+        // that comparison would be tautological.)
+        match std::env::var("KUDU_SIM_THREADS") {
+            Err(_) => assert_eq!(c.engine.sim_threads, 0, "default = all available cores"),
+            Ok(v) => assert_eq!(c.engine.sim_threads, v.parse::<usize>().unwrap_or(0)),
+        }
+        match std::env::var("KUDU_WORKERS_PER_MACHINE") {
+            Err(_) => assert_eq!(c.engine.workers_per_machine, 0, "default = all available cores"),
+            Ok(v) => assert_eq!(c.engine.workers_per_machine, v.parse::<usize>().unwrap_or(0)),
+        }
+        assert!(c.engine.task_split_width >= 1);
+        assert!(c.engine.max_live_chunks >= 1);
         assert_eq!(RunConfig::single_machine().num_machines, 1);
         assert_eq!(RunConfig::with_machines(4).num_machines, 4);
+        assert!(c.engine.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let ok = EngineConfig::default();
+        assert!(ok.validate().is_ok());
+        let bad_cap = EngineConfig { chunk_capacity: 0, ..Default::default() };
+        assert_eq!(bad_cap.validate(), Err(ConfigError::ZeroChunkCapacity));
+        let bad_mb = EngineConfig { mini_batch: 0, ..Default::default() };
+        assert_eq!(bad_mb.validate(), Err(ConfigError::ZeroMiniBatch));
+        let bad_sockets = EngineConfig { sockets: 0, ..Default::default() };
+        assert_eq!(bad_sockets.validate(), Err(ConfigError::ZeroSockets));
+        // Errors render as actionable messages.
+        let msg = ConfigError::ZeroChunkCapacity.to_string();
+        assert!(msg.contains("chunk_capacity"));
     }
 }

@@ -3,10 +3,21 @@
 //!
 //! A [`Chunk`] holds all extendable embeddings of one level, plus a bump
 //! arena for fetched remote edge lists and stored (vertically shared)
-//! intersection results. Chunks are pre-allocated per level and reused —
-//! the BFS-DFS hybrid exploration (paper §5.2) allocates and releases a
-//! whole chunk at a time, which is exactly what avoids the fragmentation
-//! and reference-count GC that slow G-thinker down.
+//! intersection results. Chunks no longer live in one per-level stack
+//! owned by a machine loop — they **move into scheduler tasks**: a task
+//! owns the chunk it is exploring plus an `Arc` chain of frozen ancestor
+//! chunks (one per shallower level), so a split-off chunk can be stolen
+//! by another worker while its ancestors stay readable. A chunk is frozen
+//! (immutable, shareable) once its circulant fetch phase is complete;
+//! from then on children only ever read it. The BFS-DFS hybrid (paper
+//! §5.2) still allocates and releases a whole chunk at a time — workers
+//! pool cleared chunks for reuse — which is exactly what avoids the
+//! fragmentation and reference-count GC that slow G-thinker down.
+//!
+//! The resolution helpers ([`resolve_list`], [`resolve_stored`],
+//! [`ancestor_idx`]) take the level stack as `&[&Chunk]` — index =
+//! level — assembled by the task from its ancestor `Arc`s plus its own
+//! frame.
 
 use crate::graph::VertexId;
 use crate::pattern::MAX_PATTERN;
@@ -105,7 +116,8 @@ impl Chunk {
 
     /// Reset for reuse (chunk release in the bottom-up deallocation §4.3;
     /// the capacity-sized buffers are retained — this is the "pre-allocate
-    /// a certain size of memory for the chunk in each level" of §5.2).
+    /// a certain size of memory for the chunk in each level" of §5.2,
+    /// realised as per-worker chunk pools).
     pub fn clear(&mut self) {
         self.embs.clear();
         self.arena.clear();
@@ -160,35 +172,35 @@ impl Chunk {
     }
 }
 
-/// Resolve embedding `e`'s ancestor at `target_level` given the chunk
-/// stack (chunks[l] = level-l chunk). `level` is e's own level.
+/// Resolve embedding `e`'s ancestor at `target_level` given the level
+/// stack (`stack[l]` = level-l chunk). `level` is e's own level.
 #[inline]
-pub fn ancestor_idx(chunks: &[Chunk], level: usize, mut idx: u32, target_level: usize) -> u32 {
+pub fn ancestor_idx(stack: &[&Chunk], level: usize, mut idx: u32, target_level: usize) -> u32 {
     let mut l = level;
     while l > target_level {
-        idx = chunks[l].embs[idx as usize].parent;
+        idx = stack[l].embs[idx as usize].parent;
         l -= 1;
     }
     idx
 }
 
-/// Resolve the edge-list slice for the embedding at `chunks[level][idx]`,
-/// following at most one `Shared` hop. The graph/cache closure maps
-/// Local/Cached refs to CSR slices.
+/// Resolve the edge-list slice for the embedding at `stack[level][idx]`,
+/// following at most one `Shared` hop. The graph maps Local/Cached refs
+/// to CSR slices.
 pub fn resolve_list<'a>(
-    chunks: &'a [Chunk],
+    stack: &[&'a Chunk],
     level: usize,
     idx: u32,
     graph: &'a crate::graph::Graph,
 ) -> &'a [VertexId] {
-    let e = &chunks[level].embs[idx as usize];
+    let e = &stack[level].embs[idx as usize];
     let r = match e.list {
-        ListRef::Shared(other) => chunks[level].embs[other as usize].list,
+        ListRef::Shared(other) => stack[level].embs[other as usize].list,
         other => other,
     };
     match r {
         ListRef::Local(v) | ListRef::Cached(v) => graph.neighbors(v),
-        ListRef::Arena { off, len } => &chunks[level].arena[off as usize..(off + len) as usize],
+        ListRef::Arena { off, len } => &stack[level].arena[off as usize..(off + len) as usize],
         ListRef::Shared(_) => panic!("HDS chains are never created"),
         ListRef::None => panic!("resolving an inactive edge list"),
         ListRef::Pending { .. } => panic!("resolving an unfetched edge list"),
@@ -196,16 +208,20 @@ pub fn resolve_list<'a>(
 }
 
 /// Resolve a stored (vertically shared) set of the embedding at
-/// `chunks[level][idx]`.
-pub fn resolve_stored<'a>(chunks: &'a [Chunk], level: usize, idx: u32) -> &'a [VertexId] {
-    let e = &chunks[level].embs[idx as usize];
+/// `stack[level][idx]`.
+pub fn resolve_stored<'a>(stack: &[&'a Chunk], level: usize, idx: u32) -> &'a [VertexId] {
+    let e = &stack[level].embs[idx as usize];
     let (off, len) = e.stored().expect("plan guaranteed a stored set");
-    &chunks[level].arena[off as usize..(off + len) as usize]
+    &stack[level].arena[off as usize..(off + len) as usize]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn stack(chunks: &[Chunk]) -> Vec<&Chunk> {
+        chunks.iter().collect()
+    }
 
     #[test]
     fn chunk_capacity_and_clear() {
@@ -224,16 +240,53 @@ mod tests {
     }
 
     #[test]
+    fn arena_bump_offsets_are_sequential_and_reset() {
+        // The arena is a bump allocator: consecutive pushes are laid out
+        // back to back, and clear() resets the bump pointer to zero.
+        let mut c = Chunk::new(8);
+        let r1 = c.arena_push(&[1, 2, 3]);
+        let r2 = c.arena_push(&[]);
+        let r3 = c.arena_push(&[9, 9]);
+        assert_eq!(r1, ListRef::Arena { off: 0, len: 3 });
+        assert_eq!(r2, ListRef::Arena { off: 3, len: 0 });
+        assert_eq!(r3, ListRef::Arena { off: 3, len: 2 });
+        assert_eq!(c.arena, vec![1, 2, 3, 9, 9]);
+        c.clear();
+        assert_eq!(c.arena_push(&[5]), ListRef::Arena { off: 0, len: 1 });
+    }
+
+    #[test]
     fn hds_insert_lookup_drop() {
         let mut c = Chunk::new(8);
         assert!(c.hds_insert(42, 0));
         assert_eq!(c.hds_lookup(42), Some(0));
         assert_eq!(c.hds_lookup(43), None);
-        // Same slot, different vertex => dropped (we can't easily force a
-        // collision with a good hash and 16 slots, so just re-insert same
-        // vertex: occupied slot => false).
+        // Occupied slot, same vertex: insert refused, original kept.
         assert!(!c.hds_insert(42, 5));
         assert_eq!(c.hds_lookup(42), Some(0));
+    }
+
+    #[test]
+    fn hds_collision_drops_not_chains() {
+        // Find a genuine slot collision via the public API: with a tiny
+        // table (capacity 2 → 8 slots), some pair of distinct vertices
+        // must collide. The colliding insert is dropped: the first vertex
+        // stays resident, the second remains unfindable (no chain).
+        let mut c = Chunk::new(2);
+        assert!(c.hds_insert(0, 0));
+        let collider = (1..10_000)
+            .find(|&v| !c.hds_insert(v, 1) && c.hds_lookup(v).is_none())
+            .expect("a colliding vertex exists in a tiny table");
+        assert_eq!(c.hds_lookup(0), Some(0), "original survives the collision");
+        assert_eq!(c.hds_lookup(collider), None, "dropped vertex never resolves");
+        // After the drop the table is unchanged: re-inserting the
+        // original is still refused (slot occupied by itself).
+        assert!(!c.hds_insert(0, 7));
+        assert_eq!(c.hds_lookup(0), Some(0));
+        // clear() releases every slot, including the contested one.
+        c.clear();
+        assert!(c.hds_insert(collider, 3));
+        assert_eq!(c.hds_lookup(collider), Some(3));
     }
 
     #[test]
@@ -245,8 +298,8 @@ mod tests {
         e.stored_off = 0;
         e.stored_len = 2;
         chunks[1].embs.push(e);
-        assert_eq!(resolve_list(&chunks, 1, 0, &g), &[5, 6, 7]);
-        assert_eq!(resolve_stored(&chunks, 1, 0), &[5, 6]);
+        assert_eq!(resolve_list(&stack(&chunks), 1, 0, &g), &[5, 6, 7]);
+        assert_eq!(resolve_stored(&stack(&chunks), 1, 0), &[5, 6]);
     }
 
     #[test]
@@ -256,7 +309,28 @@ mod tests {
         let r = chunks[0].arena_push(&[9, 10]);
         chunks[0].embs.push(Emb::new([0; MAX_PATTERN], 0, r));
         chunks[0].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Shared(0)));
-        assert_eq!(resolve_list(&chunks, 0, 1, &g), &[9, 10]);
+        assert_eq!(resolve_list(&stack(&chunks), 0, 1, &g), &[9, 10]);
+    }
+
+    #[test]
+    fn shared_resolves_through_every_target_kind() {
+        // One-hop resolution must work whatever the pointee holds:
+        // Local (CSR), Cached (CSR), or Arena (fetched copy).
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        for target in
+            [ListRef::Local(0), ListRef::Cached(0), ListRef::Arena { off: 0, len: 2 }]
+        {
+            let mut c = Chunk::new(4);
+            c.arena_push(&[1, 2]);
+            c.embs.push(Emb::new([0; MAX_PATTERN], 0, target));
+            c.embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Shared(0)));
+            let chunks = vec![c];
+            let resolved = resolve_list(&stack(&chunks), 0, 1, &g);
+            match target {
+                ListRef::Arena { .. } => assert_eq!(resolved, &[1, 2]),
+                _ => assert_eq!(resolved, &[1, 2, 3]),
+            }
+        }
     }
 
     #[test]
@@ -265,8 +339,23 @@ mod tests {
         chunks[0].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::None));
         chunks[1].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::None));
         chunks[2].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::None));
-        assert_eq!(ancestor_idx(&chunks, 2, 0, 0), 0);
-        assert_eq!(ancestor_idx(&chunks, 2, 0, 2), 0);
+        assert_eq!(ancestor_idx(&stack(&chunks), 2, 0, 0), 0);
+        assert_eq!(ancestor_idx(&stack(&chunks), 2, 0, 2), 0);
+    }
+
+    #[test]
+    fn ancestor_walk_follows_parent_links() {
+        // Two embeddings per level with crossed parent links: the walk
+        // must follow the recorded parents, not the indices.
+        let mut chunks = vec![Chunk::new(4), Chunk::new(4), Chunk::new(4)];
+        chunks[0].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::None));
+        chunks[0].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::None));
+        chunks[1].embs.push(Emb::new([0; MAX_PATTERN], 1, ListRef::None)); // -> root 1
+        chunks[1].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::None)); // -> root 0
+        chunks[2].embs.push(Emb::new([0; MAX_PATTERN], 1, ListRef::None)); // -> l1 idx 1
+        let s = stack(&chunks);
+        assert_eq!(ancestor_idx(&s, 2, 0, 1), 1);
+        assert_eq!(ancestor_idx(&s, 2, 0, 0), 0);
     }
 
     #[test]
@@ -274,6 +363,15 @@ mod tests {
         let g = crate::graph::Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
         let mut chunks = vec![Chunk::new(2)];
         chunks[0].embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Local(0)));
-        assert_eq!(resolve_list(&chunks, 0, 0, &g), &[1, 2, 3]);
+        assert_eq!(resolve_list(&stack(&chunks), 0, 0, &g), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn chunks_are_shareable_across_threads() {
+        // Tasks move chunks between workers and share frozen ancestors
+        // via Arc: Chunk must be Send + Sync.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Chunk>();
+        assert_send_sync::<std::sync::Arc<Chunk>>();
     }
 }

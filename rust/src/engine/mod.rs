@@ -1,62 +1,74 @@
-//! The Kudu engine: "Think Like an Extendable Embedding" (paper §4–§6).
+//! The Kudu engine: "Think Like an Extendable Embedding" (paper §4–§6),
+//! executed as a fine-grained task system.
 //!
 //! Each machine of the (simulated) cluster enumerates pattern embeddings
-//! rooted at its owned vertices by interpreting a [`Plan`]. Exploration is
-//! the paper's **BFS-DFS hybrid** (§5.2): per-level chunks are filled
-//! breadth-first until full, then the engine descends depth-first at chunk
-//! granularity; chunks are released bottom-up, matching the hierarchical
-//! representation's lifetime rules and avoiding fragmentation.
+//! rooted at its owned vertices by interpreting a [`Plan`]. Exploration
+//! is the paper's **BFS-DFS hybrid** (§5.2) decomposed into
+//! chunk-granularity **tasks** ([`task::Task`]): a root task fills a
+//! level-0 chunk from one root mini-batch; as extension fills a child
+//! chunk, the frame either descends depth-first in place or — at shallow
+//! levels, within per-task budgets — hands the full child chunk to the
+//! machine's scheduler ([`sched::MachineSched`]) as a new task. Tasks
+//! run on `workers_per_machine` per-worker deques with work stealing,
+//! multiplexed with every other machine's workers onto `sim_threads`
+//! host threads (the two-level pool in [`crate::par`]). This is the
+//! fine-grained scheduling the extendable-embedding abstraction exists
+//! to enable (§4.1): chunk granularity is coarse enough to amortise
+//! scheduling, fine enough to balance power-law skew that a static
+//! contiguous root split cannot.
 //!
-//! Remote active edge lists are fetched per chunk with **circulant
+//! Memory stays bounded by the paper's rule: an in-flight chunk holds at
+//! most `chunk_capacity` embeddings, split-off chunks queued per machine
+//! are capped by `max_live_chunks` (past the cap a child task becomes
+//! the spawning worker's next task instead of queueing; the residue a
+//! worker can park this way is bounded by the split budgets), and
+//! everything below the split boundary is depth-first with bottom-up
+//! chunk release (§4.3) through per-worker chunk pools.
+//!
+//! **Determinism.** The task tree and the per-task work are pure
+//! functions of graph + plan + config. Order-sensitive reductions (the
+//! virtual timeline fold, sink order) happen in [`task::TaskId`] order;
+//! order-free counters (traffic ledgers, work units, cache hits) merge
+//! as u64 sums. Every reported number except the execution diagnostics
+//! (`wall_s`, `sched_steals`, `peak_live_chunks`) is therefore
+//! byte-for-byte identical for any `sim_threads`, any
+//! `workers_per_machine`, and any steal interleaving — PR 1's
+//! thread-per-machine determinism contract, extended one level down.
+//!
+//! Remote active edge lists are still fetched per chunk with **circulant
 //! scheduling** (§5.3): embeddings are grouped into batches by the owner
 //! machine of their pending vertex, starting from the local machine, and
-//! the fetch of batch *b+1* overlaps the extension of batch *b* on the
-//! virtual timeline.
+//! all of a frame's fetches post on the comm channel before its
+//! extensions post gated compute — the channel free-runs ahead, so the
+//! timeline is identical to the interleaved formulation.
 //!
 //! Data reuse (§6): **vertical** — intersection results stored in the
 //! chunk arena and reused by all children (plan-directed); **horizontal**
 //! — a collision-dropping hash table shares identical active edge lists
-//! within a chunk; **static cache** — hot high-degree vertices are cached
-//! once, no eviction.
+//! within a chunk; **static cache** — hot high-degree vertices are
+//! prefilled once per run and shared read-only by every worker.
 
 pub mod cache;
 pub mod chunk;
+pub mod sched;
 pub mod sink;
+pub mod task;
 
-use crate::cluster::{ClusterView, Timeline, TrafficLedger, Transport};
+use crate::cluster::Transport;
 use crate::config::EngineConfig;
-use crate::exec;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
 use crate::par;
-use crate::pattern::MAX_PATTERN;
-use crate::plan::{Plan, Source};
+use crate::plan::Plan;
 use cache::StaticCache;
-use chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
+use sched::MachineSched;
 use sink::{CountSink, EmbeddingSink};
+use task::TaskRunner;
 
 /// The distributed Kudu engine. Stateless facade: each [`KuduEngine::run`]
-/// simulates all machines of the cluster, one host thread per machine.
+/// simulates all machines of the cluster on the two-level
+/// machine × worker task scheduler.
 pub struct KuduEngine;
-
-/// Everything one execution unit (a simulated machine, or one root-vertex
-/// shard of a lone machine) produces. Units only ever touch shared state
-/// through the read-only [`ClusterView`], so they run on concurrent host
-/// threads; outcomes are reduced in unit order after the join.
-struct UnitOutcome<S> {
-    machine: usize,
-    sink: S,
-    ledger: TrafficLedger,
-    units_cpu: u64,
-    units_mem: u64,
-    embeddings_created: u64,
-    peak_bytes: u64,
-    numa_remote: u64,
-    cache_hits: u64,
-    cache_misses: u64,
-    finish: f64,
-    exposed: f64,
-}
 
 impl KuduEngine {
     /// Mine `plan`'s pattern over `graph` partitioned across
@@ -100,16 +112,11 @@ impl KuduEngine {
         stats
     }
 
-    /// Generic entry point: one sink per execution unit, produced by
-    /// `make_sink` (which receives the unit's machine index — a sharded
-    /// single-machine run yields several sinks for machine 0). Sinks are
-    /// returned through `out_sinks` in unit order for inspection.
-    ///
-    /// Execution is parallel across `cfg.sim_threads` host threads, but
-    /// the work decomposition and every reduction order are fixed by the
-    /// graph and config alone, so all results — counts, traffic, and
-    /// virtual-time metrics — are byte-for-byte identical for any
-    /// `sim_threads` value.
+    /// Generic entry point: one sink **per task**, produced by `make_sink`
+    /// (which receives the task's machine index). Sinks are returned
+    /// through `out_sinks` machine-major in task order — a fixed order,
+    /// like every other reduction here, so sink contents and sequence are
+    /// independent of host parallelism.
     pub fn run_with_sinks<'g, S: EmbeddingSink + Send>(
         graph: &'g Graph,
         plan: &Plan,
@@ -149,6 +156,7 @@ impl KuduEngine {
         make_sink: impl Fn(usize) -> S + Sync,
         out_sinks: &mut Vec<S>,
     ) -> RunStats {
+        cfg.validate().unwrap_or_else(|e| panic!("invalid EngineConfig: {e}"));
         assert!(plan.depth() >= 2, "patterns must have at least one edge");
         let n = transport.num_machines();
         if let Some(o) = owned {
@@ -157,82 +165,67 @@ impl KuduEngine {
         let wall_start = std::time::Instant::now();
         let view = transport.view();
 
-        // Work decomposition: one unit per machine; a lone machine's root
-        // range is additionally split into `cfg.root_shards` contiguous
-        // shards (each with its own chunk arenas, static cache, and
-        // ledger) so single-machine and NUMA configurations use the host
-        // cores too. The unit list never depends on `sim_threads`.
-        let l0 = plan.pattern.label(0);
-        let roots_of = |machine: usize| -> Vec<VertexId> {
-            let mut starts = match owned {
-                Some(o) => o[machine].clone(),
-                None => view.partitioned().owned_vertices(machine),
-            };
-            if l0 != 0 {
-                starts.retain(|&v| graph.label(v) == l0);
-            }
-            starts
-        };
-        let units: Vec<(usize, Vec<VertexId>)> = if n == 1 {
-            let starts = roots_of(0);
-            let shards = cfg.root_shards.max(1);
-            // Ceiling division kept manual: usize::div_ceil needs a newer
-            // rustc than this crate assumes.
-            #[allow(clippy::manual_div_ceil)]
-            let per = (starts.len() + shards - 1) / shards;
-            if per == 0 {
-                vec![(0, starts)]
-            } else {
-                starts.chunks(per).map(|c| (0, c.to_vec())).collect()
-            }
+        // The static cache is prefilled once per run and shared read-only
+        // by every machine and worker (hit/miss totals then depend only
+        // on the deterministic task tree, never on worker interleaving).
+        let cache = if cfg.cache_frac > 0.0 {
+            StaticCache::prefill(graph, cfg.cache_frac, cfg.cache_degree_threshold)
         } else {
-            (0..n).map(|m| (m, roots_of(m))).collect()
+            StaticCache::disabled()
         };
+
+        // Work decomposition: one scheduler per machine, seeded with root
+        // mini-batch tasks over the machine's owned, label-filtered start
+        // vertices. The decomposition never depends on `sim_threads` or
+        // `workers_per_machine` — only execution placement does.
+        let workers = par::resolve_threads(cfg.workers_per_machine);
+        let l0 = plan.pattern.label(0);
+        let scheds: Vec<MachineSched<S>> = (0..n)
+            .map(|m| {
+                let mut starts = match owned {
+                    Some(o) => o[m].clone(),
+                    None => view.partitioned().owned_vertices(m),
+                };
+                if l0 != 0 {
+                    starts.retain(|&v| graph.label(v) == l0);
+                }
+                MachineSched::new(m, n, starts, workers, cfg.mini_batch, cfg.max_live_chunks)
+            })
+            .collect();
 
         let sim_threads = par::resolve_threads(cfg.sim_threads);
-        let outcomes: Vec<UnitOutcome<S>> = par::run_indexed(sim_threads, units.len(), |i| {
-            let (machine, roots) = &units[i];
-            let mut sink = make_sink(*machine);
-            let mut run = MachineRun::new(*machine, graph, plan, cfg, compute, view);
-            run.run(roots, &mut sink);
-            UnitOutcome {
-                machine: *machine,
-                sink,
-                ledger: run.ledger,
-                units_cpu: run.units_cpu,
-                units_mem: run.units_mem,
-                embeddings_created: run.embeddings_created,
-                peak_bytes: run.peak_bytes,
-                numa_remote: run.numa_remote,
-                cache_hits: run.cache.hits,
-                cache_misses: run.cache.misses,
-                finish: run.timeline.finish(),
-                exposed: run.timeline.exposed_comm(),
-            }
+        par::run_unit_workers(sim_threads, workers, &scheds, |sched, slot| {
+            let runner = TaskRunner::new(sched.machine, graph, plan, cfg, compute, view, &cache);
+            sched.run_worker(slot, runner, &make_sink);
         });
 
-        // Reduce in unit order. Counters are u64 sums (associative); the
-        // per-machine virtual times are folded machine-by-machine below.
-        // Shards of a lone machine model sequential slices of its virtual
-        // timeline: finish times add, and — since a sequential machine
-        // reuses its chunk arenas across slices — the machine's peak is
-        // the max over its shards. (Shard boundaries re-segment the
-        // level-0 blocks, so the value can sit slightly below an
-        // unsharded run's; it stays bounded by the same chunk capacity
-        // and is deterministic for any `sim_threads`.)
+        // Reduce machine-by-machine, tasks in TaskId order. Counters are
+        // u64 sums (associative); a machine's tasks model sequential
+        // slices of its virtual timeline — finish times add (exactly as a
+        // single depth-first worker would execute them) and the machine's
+        // peak footprint is the max over its tasks' frame stacks.
         let mut stats = RunStats::default();
         let mut machine_finish = vec![0.0f64; n];
         let mut machine_exposed = vec![0.0f64; n];
         let mut machine_peak = vec![0u64; n];
-        for o in &outcomes {
-            stats.work_units += o.units_cpu + o.units_mem;
-            stats.embeddings_created += o.embeddings_created;
-            stats.numa_remote_accesses += o.numa_remote;
-            stats.cache_hits += o.cache_hits;
-            stats.cache_misses += o.cache_misses;
-            machine_finish[o.machine] += o.finish;
-            machine_exposed[o.machine] += o.exposed;
-            machine_peak[o.machine] = machine_peak[o.machine].max(o.peak_bytes);
+        for sched in scheds {
+            let m = sched.machine;
+            let (outcomes, agg, steals, peak_live) = sched.finish();
+            for o in outcomes {
+                machine_finish[m] += o.finish;
+                machine_exposed[m] += o.exposed;
+                out_sinks.push(o.sink);
+            }
+            stats.work_units += agg.units_cpu + agg.units_mem;
+            stats.embeddings_created += agg.embeddings_created;
+            stats.numa_remote_accesses += agg.numa_remote;
+            stats.cache_hits += agg.cache_hits;
+            stats.cache_misses += agg.cache_misses;
+            stats.sched_tasks += agg.tasks_run;
+            stats.sched_steals += steals;
+            stats.peak_live_chunks = stats.peak_live_chunks.max(peak_live);
+            machine_peak[m] = machine_peak[m].max(agg.peak_bytes);
+            transport.merge_ledger(&agg.ledger);
         }
         let mut worst_finish = 0.0f64;
         let mut worst_exposed = 0.0f64;
@@ -242,10 +235,6 @@ impl KuduEngine {
                 worst_exposed = machine_exposed[m];
             }
         }
-        for o in outcomes {
-            transport.merge_ledger(&o.ledger);
-            out_sinks.push(o.sink);
-        }
         stats.virtual_time_s = worst_finish;
         stats.exposed_comm_s = worst_exposed;
         stats.peak_embedding_bytes = machine_peak.iter().copied().max().unwrap_or(0);
@@ -253,438 +242,6 @@ impl KuduEngine {
         stats.network_messages = transport.traffic.total_messages();
         stats.wall_s = wall_start.elapsed().as_secs_f64();
         stats
-    }
-}
-
-/// Per-machine (or per-shard) execution state. Shared data is reached
-/// only through the read-only `view`; all mutation is confined to this
-/// struct, which is what makes units safe to run on concurrent host
-/// threads without locks.
-struct MachineRun<'a, 'g> {
-    machine: usize,
-    graph: &'g Graph,
-    plan: &'a Plan,
-    cfg: &'a EngineConfig,
-    compute: ComputeModel,
-    view: ClusterView<'g>,
-    ledger: TrafficLedger,
-    chunks: Vec<Chunk>,
-    cache: StaticCache,
-    timeline: Timeline,
-    // Work accumulators (flushed to the timeline per circulant batch).
-    units_cpu: u64,
-    units_mem: u64,
-    pending_cpu: u64,
-    pending_mem: u64,
-    embeddings_created: u64,
-    peak_bytes: u64,
-    numa_remote: u64,
-    // Scratch buffers (reused across extensions — no hot-loop allocation).
-    cand: Vec<VertexId>,
-    tmp: Vec<VertexId>,
-    emb_buf: Vec<VertexId>,
-    /// Per-level circulant batch buffers, reused across chunks.
-    batch_pool: Vec<Vec<Vec<u32>>>,
-}
-
-impl<'a, 'g> MachineRun<'a, 'g> {
-    fn new(
-        machine: usize,
-        graph: &'g Graph,
-        plan: &'a Plan,
-        cfg: &'a EngineConfig,
-        compute: &ComputeModel,
-        view: ClusterView<'g>,
-    ) -> Self {
-        let depth = plan.depth();
-        let cache = if cfg.cache_frac > 0.0 {
-            StaticCache::new(graph, cfg.cache_frac, cfg.cache_degree_threshold)
-        } else {
-            StaticCache::disabled()
-        };
-        let ledger = TrafficLedger::new(view.num_machines());
-        MachineRun {
-            machine,
-            graph,
-            plan,
-            cfg,
-            compute: *compute,
-            view,
-            ledger,
-            chunks: (0..depth).map(|_| Chunk::new(cfg.chunk_capacity)).collect(),
-            cache,
-            timeline: Timeline::default(),
-            units_cpu: 0,
-            units_mem: 0,
-            pending_cpu: 0,
-            pending_mem: 0,
-            embeddings_created: 0,
-            peak_bytes: 0,
-            numa_remote: 0,
-            cand: Vec::new(),
-            tmp: Vec::new(),
-            emb_buf: Vec::new(),
-            batch_pool: vec![Vec::new(); depth],
-        }
-    }
-
-    /// NUMA memory-access multiplier (DESIGN.md §1: Table 7's policy
-    /// effect modelled as a penalty on memory-bound work). NUMA-aware
-    /// exploration keeps embedding memory socket-local except for residual
-    /// cross-socket fetches and work stealing.
-    fn numa_mult(&self) -> f64 {
-        let s = self.cfg.sockets;
-        if s <= 1 {
-            return 1.0;
-        }
-        let remote_frac =
-            if self.cfg.numa_aware { 0.08 } else { (s - 1) as f64 / s as f64 };
-        1.0 + remote_frac * (self.compute.numa_remote_penalty - 1.0)
-    }
-
-    /// Convert accumulated pending work to virtual seconds and post it,
-    /// gated on `gate` (the batch's data-arrival time). Thread scaling:
-    /// mini-batches are distributed dynamically over `threads` workers;
-    /// a small serial fraction covers chunk management (paper §7).
-    fn flush_compute(&mut self, gate: f64, emb_count: usize) {
-        if self.pending_cpu == 0 && self.pending_mem == 0 {
-            return;
-        }
-        let numa = self.numa_mult();
-        let remote_bump = if self.cfg.sockets > 1 {
-            let frac = if self.cfg.numa_aware { 0.08 } else { (self.cfg.sockets - 1) as f64 / self.cfg.sockets as f64 };
-            (self.pending_mem as f64 * frac) as u64
-        } else {
-            0
-        };
-        self.numa_remote += remote_bump;
-        let units = self.pending_cpu as f64 + self.pending_mem as f64 * numa;
-        let t = self.cfg.threads.max(1);
-        let minibatches = (emb_count / self.cfg.mini_batch).max(1);
-        let t_eff = t.min(minibatches.max(1)) as f64;
-        const SERIAL_FRAC: f64 = 0.012;
-        let secs =
-            units * self.compute.seconds_per_unit * (SERIAL_FRAC + (1.0 - SERIAL_FRAC) / t_eff);
-        self.timeline.post_compute(gate, secs);
-        self.units_cpu += self.pending_cpu;
-        self.units_mem += self.pending_mem;
-        self.pending_cpu = 0;
-        self.pending_mem = 0;
-    }
-
-    /// Mine the subtrees rooted at `roots` (the unit's slice of this
-    /// machine's owned, label-filtered start vertices).
-    fn run<S: EmbeddingSink>(&mut self, roots: &[VertexId], sink: &mut S) {
-        let cap = self.cfg.chunk_capacity;
-        let needs0 = self.plan.needs_adj[0];
-        let mut block_start = 0usize;
-        while block_start < roots.len() {
-            let block_end = (block_start + cap).min(roots.len());
-            self.chunks[0].clear();
-            for &v in &roots[block_start..block_end] {
-                let mut vs = [0 as VertexId; MAX_PATTERN];
-                vs[0] = v;
-                let list = if needs0 { ListRef::Local(v) } else { ListRef::None };
-                self.chunks[0].embs.push(Emb::new(vs, 0, list));
-                self.pending_mem += self.compute.per_embedding_overhead_units;
-                self.embeddings_created += 1;
-            }
-            self.process_chunk(0, sink);
-            block_start = block_end;
-        }
-        // Trailing work not yet flushed.
-        self.flush_compute(0.0, 1);
-    }
-
-    /// Process a filled (or final partial) chunk at `level`: circulant
-    /// fetch + extend, descending into `level+1` whenever it fills.
-    fn process_chunk<S: EmbeddingSink>(&mut self, level: usize, sink: &mut S) {
-        let n = self.view.num_machines();
-        // Group embedding indices into circulant batches: index 0 = ready
-        // (local/cached/shared-resolved/no-list), then owner machines in
-        // circulant order starting after self. Buffers are pooled per
-        // level and reused across chunks.
-        let mut batches = std::mem::take(&mut self.batch_pool[level]);
-        batches.resize(n + 1, Vec::new());
-        for b in batches.iter_mut() {
-            b.clear();
-        }
-        for (i, e) in self.chunks[level].embs.iter().enumerate() {
-            let target = match e.list {
-                ListRef::Pending { owner, .. } => Some(owner as usize),
-                ListRef::Shared(other) => match self.chunks[level].embs[other as usize].list {
-                    ListRef::Pending { owner, .. } => Some(owner as usize),
-                    _ => None,
-                },
-                _ => None,
-            };
-            match target {
-                None => batches[0].push(i as u32),
-                Some(o) => {
-                    // circulant position of owner o relative to self
-                    let pos = (o + n - self.machine) % n;
-                    batches[pos.max(1)].push(i as u32) // pos 0 impossible: own vertices are Local
-                }
-            }
-        }
-        self.peak_bytes =
-            self.peak_bytes.max(self.chunks.iter().map(|c| c.bytes()).sum::<u64>());
-
-        for pos in 0..batches.len() {
-            let batch = std::mem::take(&mut batches[pos]);
-            if batch.is_empty() {
-                continue;
-            }
-            // Fetch phase for this batch (no-op for the ready batch).
-            let gate = if pos == 0 {
-                0.0
-            } else {
-                let owner = (self.machine + pos) % n;
-                self.fetch_batch(level, owner, &batch)
-            };
-            // Extend phase, overlapping the next batch's fetch on the
-            // virtual timeline (comm channel free-runs ahead). Thread
-            // parallelism is bounded by the whole chunk's mini-batch pool
-            // (workers pull 64-embedding mini-batches from a shared queue,
-            // §7), not by this circulant batch alone.
-            let chunk_len = self.chunks[level].len();
-            for &idx in &batch {
-                self.extend_one(level, idx, sink);
-                if level + 1 < self.plan.depth() - 1 && self.chunks[level + 1].is_full() {
-                    self.flush_compute(gate, chunk_len);
-                    self.process_chunk(level + 1, sink);
-                    self.chunks[level + 1].clear();
-                }
-            }
-            self.flush_compute(gate, chunk_len);
-            batches[pos] = batch;
-        }
-        self.batch_pool[level] = batches;
-        // Descend into the remaining partial child chunk.
-        if level + 1 < self.plan.depth() - 1 && !self.chunks[level + 1].is_empty() {
-            self.process_chunk(level + 1, sink);
-            self.chunks[level + 1].clear();
-        }
-    }
-
-    /// Fetch the pending edge lists of `batch` (all owned by `owner`) as
-    /// one batched message; returns the data-arrival gate time.
-    fn fetch_batch(&mut self, level: usize, owner: usize, batch: &[u32]) -> f64 {
-        // Collect unique pending vertices (HDS made them unique already
-        // when enabled; when disabled, duplicates are fetched redundantly —
-        // exactly the Fig 14 ablation).
-        let mut verts: Vec<VertexId> = Vec::with_capacity(batch.len());
-        for &i in batch {
-            if let ListRef::Pending { vertex, .. } = self.chunks[level].embs[i as usize].list {
-                verts.push(vertex);
-            }
-        }
-        if verts.is_empty() {
-            return 0.0;
-        }
-        let (_bytes, time) =
-            self.view.fetch_batch(&mut self.ledger, self.machine, owner, &verts);
-        let gate = self.timeline.post_comm(time);
-        // Materialise the lists into the chunk arena ("receive").
-        for &i in batch {
-            let e = self.chunks[level].embs[i as usize];
-            if let ListRef::Pending { vertex, .. } = e.list {
-                let deg = self.graph.degree(vertex);
-                let nb = self.graph.neighbors(vertex);
-                // Copy = receive; charge memory work.
-                let r = {
-                    let c = &mut self.chunks[level];
-                    c.arena_push(nb)
-                };
-                self.chunks[level].embs[i as usize].list = r;
-                self.pending_mem += deg as u64 / 4 + 1;
-                self.cache.offer(vertex, deg);
-            }
-        }
-        gate
-    }
-
-    /// Extend one embedding at `level` to `level+1` (paper Algorithm 1's
-    /// EXTEND, interpreted from the plan).
-    fn extend_one<S: EmbeddingSink>(&mut self, level: usize, idx: u32, sink: &mut S) {
-        let depth = self.plan.depth();
-        let step = &self.plan.steps[level]; // describes level+1
-        let new_level = level + 1;
-        let e = self.chunks[level].embs[idx as usize];
-        let vertices = e.vertices;
-
-        // --- Candidate set: intersect the plan's sources. ---
-        {
-            let (parents, _rest) = self.chunks.split_at_mut(new_level);
-            let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
-            for s in &step.sources {
-                let sl: &[VertexId] = match *s {
-                    Source::Adj(j) => {
-                        let a = ancestor_idx(parents, level, idx, j);
-                        resolve_list(parents, j, a, self.graph)
-                    }
-                    Source::Stored(j) => {
-                        let a = ancestor_idx(parents, level, idx, j);
-                        resolve_stored(parents, j, a)
-                    }
-                };
-                slices.push(sl);
-            }
-            let w = match slices.len() {
-                1 => {
-                    self.cand.clear();
-                    self.cand.extend_from_slice(slices[0]);
-                    exec::Work(1)
-                }
-                2 => exec::intersect(slices[0], slices[1], &mut self.cand),
-                _ => exec::intersect_many(slices[0], &slices[1..], &mut self.cand),
-            };
-            self.pending_cpu += w.0;
-        }
-
-        // --- Vertical sharing: store the raw intersection for children. ---
-        let stored_ref = if self.plan.store_set[new_level] && new_level < depth - 1 {
-            let c = &mut self.chunks[new_level];
-            let off = c.arena.len() as u32;
-            c.arena.extend_from_slice(&self.cand);
-            self.pending_mem += self.cand.len() as u64 / 4 + 1;
-            Some((off, self.cand.len() as u32))
-        } else {
-            None
-        };
-
-        // --- Vertex-induced exclusions. ---
-        if !step.exclude.is_empty() {
-            let (parents, _rest) = self.chunks.split_at_mut(new_level);
-            for &j in &step.exclude {
-                let a = ancestor_idx(parents, level, idx, j);
-                let ex = resolve_list(parents, j, a, self.graph);
-                let w = exec::difference(&self.cand, ex, &mut self.tmp);
-                self.pending_cpu += w.0;
-                std::mem::swap(&mut self.cand, &mut self.tmp);
-            }
-        }
-
-        // --- Symmetry-breaking restriction window [lo, hi). ---
-        let mut lo: VertexId = 0;
-        let mut hi: VertexId = VertexId::MAX;
-        for &j in &step.greater_than {
-            lo = lo.max(vertices[j].saturating_add(1));
-        }
-        for &j in &step.less_than {
-            hi = hi.min(vertices[j]);
-        }
-        let start = self.cand.partition_point(|&v| v < lo);
-        let end = self.cand.partition_point(|&v| v < hi);
-        self.pending_cpu += 2 * (self.cand.len().max(2).ilog2() as u64);
-        if start >= end {
-            return;
-        }
-
-        // Earlier matched vertices that could collide with candidates in
-        // the [lo, hi) window — usually none, so the per-candidate
-        // duplicate check below reduces to a single integer compare.
-        let mut dups = [0 as VertexId; MAX_PATTERN];
-        let mut ndups = 0usize;
-        for &u in &vertices[..new_level] {
-            if u >= lo && u < hi {
-                dups[ndups] = u;
-                ndups += 1;
-            }
-        }
-        let dups = &dups[..ndups];
-
-        if new_level == depth - 1 {
-            // --- Last level: process embeddings (Algorithm 1, l.13-14). ---
-            if sink.bulk_count() && step.label == 0 {
-                let mut count = (end - start) as u64;
-                // Remove earlier vertices that slipped into the window.
-                for &u in &vertices[..new_level] {
-                    if u >= lo && u < hi && self.cand[start..end].binary_search(&u).is_ok() {
-                        count -= 1;
-                    }
-                }
-                sink.add_count(count);
-            } else if sink.bulk_count() {
-                // Labelled: iterate and filter by label.
-                let mut count = 0u64;
-                for k in start..end {
-                    let v = self.cand[k];
-                    if self.graph.label(v) == step.label && !dups.contains(&v) {
-                        count += 1;
-                    }
-                }
-                self.pending_cpu += (end - start) as u64;
-                sink.add_count(count);
-            } else {
-                self.emb_buf.clear();
-                self.emb_buf.extend_from_slice(&vertices[..new_level]);
-                self.emb_buf.push(0);
-                // Iterate the window, skipping earlier vertices. Clone the
-                // window out to release the borrow on self.cand cheaply.
-                for k in start..end {
-                    let v = self.cand[k];
-                    if dups.contains(&v)
-                        || (step.label != 0 && self.graph.label(v) != step.label)
-                    {
-                        continue;
-                    }
-                    *self.emb_buf.last_mut().unwrap() = v;
-                    sink.emit(&self.emb_buf);
-                }
-            }
-            self.pending_cpu += (end - start) as u64;
-            return;
-        }
-
-        // --- Interior level: create child extendable embeddings. ---
-        let needs = self.plan.needs_adj[new_level];
-        let hds = self.cfg.horizontal_sharing;
-        for k in start..end {
-            let v = self.cand[k];
-            if (!dups.is_empty() && dups.contains(&v))
-                || (step.label != 0 && self.graph.label(v) != step.label)
-            {
-                continue;
-            }
-            let mut vs = vertices;
-            vs[new_level] = v;
-            let list = if !needs {
-                ListRef::None
-            } else if self.view.partitioned().is_local(self.machine, v) {
-                ListRef::Local(v)
-            } else if self.cache.lookup(v) {
-                ListRef::Cached(v)
-            } else {
-                let child = &mut self.chunks[new_level];
-                let next_idx = child.embs.len() as u32;
-                if hds {
-                    match child.hds_lookup(v) {
-                        Some(other) => ListRef::Shared(other),
-                        None => {
-                            child.hds_insert(v, next_idx);
-                            ListRef::Pending {
-                                vertex: v,
-                                owner: self.view.partitioned().owner(v) as u8,
-                            }
-                        }
-                    }
-                } else {
-                    ListRef::Pending {
-                        vertex: v,
-                        owner: self.view.partitioned().owner(v) as u8,
-                    }
-                }
-            };
-            let mut emb = Emb::new(vs, idx, list);
-            if let Some((off, len)) = stored_ref {
-                emb.stored_off = off;
-                emb.stored_len = len;
-            }
-            self.chunks[new_level].embs.push(emb);
-            self.pending_mem += self.compute.per_embedding_overhead_units;
-            self.embeddings_created += 1;
-        }
     }
 }
 
@@ -772,6 +329,31 @@ mod tests {
         for cap in [2, 7, 64, 100_000] {
             let cfg = EngineConfig { chunk_capacity: cap, ..Default::default() };
             assert_eq!(run_count(&g, &plan, 4, &cfg).0, baseline, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn count_invariant_to_scheduler_granularity() {
+        // Task decomposition knobs change wall-clock shape and the task
+        // tree, never the answer.
+        let g = gen::rmat(8, 8, 19);
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        let baseline = run_count(&g, &plan, 2, &EngineConfig::default()).0;
+        for (levels, width, live, mb) in
+            [(0, 8, 64, 64), (1, 1, 1, 16), (2, 4, 2, 64), (3, 64, 1024, 1), (1, 8, 64, 100_000)]
+        {
+            let cfg = EngineConfig {
+                task_split_levels: levels,
+                task_split_width: width,
+                max_live_chunks: live,
+                mini_batch: mb,
+                ..Default::default()
+            };
+            assert_eq!(
+                run_count(&g, &plan, 2, &cfg).0,
+                baseline,
+                "levels={levels} width={width} live={live} mb={mb}"
+            );
         }
     }
 
@@ -872,10 +454,35 @@ mod tests {
         assert_eq!(vs, vec![0, 1, 2]);
     }
 
+    /// Everything the determinism contract covers, compared bitwise.
+    #[track_caller]
+    fn assert_deterministic_fields_eq(a: &RunStats, b: &RunStats, what: &str) {
+        assert_eq!(a.counts, b.counts, "{what}: counts");
+        assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+        assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+        assert_eq!(
+            a.virtual_time_s.to_bits(),
+            b.virtual_time_s.to_bits(),
+            "{what}: virtual time"
+        );
+        assert_eq!(
+            a.exposed_comm_s.to_bits(),
+            b.exposed_comm_s.to_bits(),
+            "{what}: exposed comm"
+        );
+        assert_eq!(a.work_units, b.work_units, "{what}: work units");
+        assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+        assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+        assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+        assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+        assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+        assert_eq!(a.sched_tasks, b.sched_tasks, "{what}: tasks");
+    }
+
     #[test]
     fn sim_threads_do_not_change_results() {
-        // The tentpole guarantee: host parallelism is invisible in every
-        // reported number, bitwise.
+        // Host parallelism across machines is invisible in every reported
+        // number, bitwise.
         let g = gen::rmat(8, 10, 41);
         let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
         for machines in [1usize, 2, 4, 8] {
@@ -885,40 +492,91 @@ mod tests {
             };
             let a = run(1);
             let b = run(4);
-            assert_eq!(a.counts, b.counts, "machines={machines}");
-            assert_eq!(a.network_bytes, b.network_bytes, "machines={machines}");
-            assert_eq!(a.network_messages, b.network_messages, "machines={machines}");
-            assert_eq!(
-                a.virtual_time_s.to_bits(),
-                b.virtual_time_s.to_bits(),
-                "machines={machines}"
-            );
-            assert_eq!(
-                a.exposed_comm_s.to_bits(),
-                b.exposed_comm_s.to_bits(),
-                "machines={machines}"
-            );
-            assert_eq!(a.work_units, b.work_units, "machines={machines}");
-            assert_eq!(a.embeddings_created, b.embeddings_created, "machines={machines}");
-            assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "machines={machines}");
-            assert_eq!(a.cache_hits, b.cache_hits, "machines={machines}");
-            assert_eq!(a.cache_misses, b.cache_misses, "machines={machines}");
+            assert_deterministic_fields_eq(&a, &b, &format!("machines={machines}"));
         }
     }
 
     #[test]
-    fn single_machine_sharding_matches_oracle() {
-        // A lone machine's root range is split into parallel shards; the
-        // shard count must never change the answer or the traffic (none).
+    fn workers_do_not_change_results() {
+        // The tentpole guarantee one level down: intra-machine work
+        // stealing is invisible in every reported number, bitwise, for
+        // any worker count and any steal interleaving.
+        let g = gen::rmat(8, 10, 43);
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        for machines in [1usize, 2, 4] {
+            let run = |workers: usize| {
+                let cfg = EngineConfig {
+                    workers_per_machine: workers,
+                    // Small chunks + mini-batches → many tasks, real
+                    // contention, real steals.
+                    chunk_capacity: 128,
+                    mini_batch: 16,
+                    ..Default::default()
+                };
+                run_count(&g, &plan, machines, &cfg).1
+            };
+            let reference = run(1);
+            assert!(reference.sched_tasks > 1, "decomposition produced tasks");
+            for workers in [2usize, 4, 8] {
+                let other = run(workers);
+                assert_deterministic_fields_eq(
+                    &reference,
+                    &other,
+                    &format!("machines={machines} workers={workers}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_machine_scheduler_matches_oracle_without_traffic() {
+        // A lone machine's roots are mined by work-stealing workers; the
+        // worker count must never change the answer or the traffic (none).
         let g = gen::erdos_renyi(150, 600, 77);
         let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
-        for shards in [1usize, 3, 8, 64] {
-            let cfg = EngineConfig { root_shards: shards, ..Default::default() };
+        for workers in [1usize, 3, 8, 64] {
+            let cfg = EngineConfig { workers_per_machine: workers, ..Default::default() };
             let (got, st) = run_count(&g, &plan, 1, &cfg);
-            assert_eq!(got, expect, "shards={shards}");
-            assert_eq!(st.network_bytes, 0, "shards={shards}");
+            assert_eq!(got, expect, "workers={workers}");
+            assert_eq!(st.network_bytes, 0, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn live_chunk_cap_is_respected() {
+        // The scheduler's queue admission gauge never exceeds the
+        // configured cap, even with an eager splitting config on a
+        // skewed graph (over-budget children bypass the queues and run
+        // as their spawner's next task instead).
+        let g = gen::planted_hubs(1500, 5000, 5, 0.3, 53);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        for cap in [1usize, 4, 16] {
+            let cfg = EngineConfig {
+                workers_per_machine: 4,
+                task_split_levels: 2,
+                task_split_width: 64,
+                max_live_chunks: cap,
+                chunk_capacity: 64,
+                mini_batch: 16,
+                ..Default::default()
+            };
+            let (_, st) = run_count(&g, &plan, 2, &cfg);
+            assert!(
+                st.peak_live_chunks <= cap as u64,
+                "cap={cap} peak={}",
+                st.peak_live_chunks
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk_capacity")]
+    fn degenerate_config_is_rejected_at_the_boundary() {
+        let g = gen::erdos_renyi(20, 40, 1);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let cfg = EngineConfig { chunk_capacity: 0, ..Default::default() };
+        let _ = run_count(&g, &plan, 1, &cfg);
     }
 
     #[test]

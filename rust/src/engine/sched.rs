@@ -1,0 +1,270 @@
+//! The fine-grained per-machine task scheduler: chunk-granularity work
+//! stealing inside every simulated machine.
+//!
+//! Each simulated machine owns a [`MachineSched`]: `workers_per_machine`
+//! worker slots, each with its own deque, seeded round-robin with the
+//! machine's root mini-batch tasks. Workers pop their own deque LIFO
+//! (newest first — depth-first order, which drains split-off child
+//! chunks before starting fresh roots and keeps the live-chunk frontier
+//! small) and steal FIFO from victims in round-robin order (oldest
+//! first — root batches, the largest work items). The host multiplexes
+//! all machines' worker slots onto `sim_threads` threads through
+//! [`crate::par::run_unit_workers`].
+//!
+//! **Where determinism lives.** Steal timing decides only *which worker
+//! runs a task* — never what the tasks are ([`Task`] trees are fixed by
+//! graph + config) nor how outcomes reduce (the engine folds
+//! [`TaskOutcome`]s in [`super::task::TaskId`] order; worker-side counters are u64
+//! sums and maxes, associative and commutative). The only numbers that
+//! remember the interleaving are the execution diagnostics: steal count
+//! and peak queued chunks.
+//!
+//! **Where the memory bound lives.** A queued frame task pins one chunk
+//! (≤ `chunk_capacity` embeddings). [`MachineSched::submit`] admits at
+//! most `max_live_chunks` such tasks into a machine's queues; past the
+//! cap the would-be child is parked on the spawning worker's private
+//! overflow stack and runs as that worker's *next* task, before any
+//! queued work — same task, same id, same outcome, different place of
+//! execution. Overflow tasks are not counted by the queue gauge but are
+//! bounded by the split budgets: total in-flight chunks per machine stay
+//! under `max_live_chunks + workers × (task_split_width + depth)`.
+
+use super::sink::EmbeddingSink;
+use super::task::{Task, TaskKind, TaskOutcome, TaskRunner};
+use crate::cluster::TrafficLedger;
+use crate::graph::VertexId;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Order-insensitive per-machine totals, accumulated from each worker's
+/// [`TaskRunner`] when the worker retires. Every field merges by u64
+/// sum or max, so merge order cannot change any reported bit.
+pub struct MachineAgg {
+    pub ledger: TrafficLedger,
+    pub units_cpu: u64,
+    pub units_mem: u64,
+    pub embeddings_created: u64,
+    pub peak_bytes: u64,
+    pub numa_remote: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub tasks_run: u64,
+}
+
+impl MachineAgg {
+    fn new(num_machines: usize) -> Self {
+        MachineAgg {
+            ledger: TrafficLedger::new(num_machines),
+            units_cpu: 0,
+            units_mem: 0,
+            embeddings_created: 0,
+            peak_bytes: 0,
+            numa_remote: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            tasks_run: 0,
+        }
+    }
+
+    fn absorb_runner(&mut self, r: &TaskRunner<'_, '_>) {
+        self.ledger.merge(&r.ledger);
+        self.units_cpu += r.units_cpu;
+        self.units_mem += r.units_mem;
+        self.embeddings_created += r.embeddings_created;
+        self.peak_bytes = self.peak_bytes.max(r.peak_bytes);
+        self.numa_remote += r.numa_remote;
+        self.cache_hits += r.cache_hits;
+        self.cache_misses += r.cache_misses;
+        self.tasks_run += r.tasks_run;
+    }
+}
+
+/// Everything the machine's workers deposit: task outcomes (sorted by
+/// [`super::task::TaskId`] at reduction time) and the merged aggregates.
+struct MachineDone<S> {
+    outcomes: Vec<TaskOutcome<S>>,
+    agg: MachineAgg,
+}
+
+/// One simulated machine's scheduler state, shared by its worker slots.
+pub struct MachineSched<S> {
+    pub machine: usize,
+    /// The machine's owned, root-label-filtered start vertices.
+    pub roots: Vec<VertexId>,
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Tasks submitted but not yet completed (including running ones).
+    outstanding: AtomicUsize,
+    /// Frame tasks currently buffered in the deques (each pins a chunk).
+    live_chunks: AtomicUsize,
+    max_live_chunks: usize,
+    peak_live: AtomicUsize,
+    steals: AtomicU64,
+    done: Mutex<MachineDone<S>>,
+}
+
+impl<S: EmbeddingSink> MachineSched<S> {
+    /// Build the machine's scheduler: one deque per worker slot, seeded
+    /// round-robin with the root mini-batch tasks (`[i·mb, (i+1)·mb)`
+    /// slices of `roots`). The seeding — like everything about the task
+    /// tree — depends only on the root list and the config.
+    pub fn new(
+        machine: usize,
+        num_machines: usize,
+        roots: Vec<VertexId>,
+        workers: usize,
+        mini_batch: usize,
+        max_live_chunks: usize,
+    ) -> Self {
+        let workers = workers.max(1);
+        let mut deques: Vec<VecDeque<Task>> = (0..workers).map(|_| VecDeque::new()).collect();
+        let mb = mini_batch.max(1);
+        let mut lo = 0usize;
+        let mut i = 0u32;
+        while lo < roots.len() {
+            let hi = (lo + mb).min(roots.len());
+            deques[i as usize % workers]
+                .push_back(Task { id: vec![i], kind: TaskKind::Roots { lo, hi } });
+            lo = hi;
+            i += 1;
+        }
+        let outstanding = AtomicUsize::new(i as usize);
+        MachineSched {
+            machine,
+            roots,
+            deques: deques.into_iter().map(Mutex::new).collect(),
+            outstanding,
+            live_chunks: AtomicUsize::new(0),
+            max_live_chunks: max_live_chunks.max(1),
+            peak_live: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            done: Mutex::new(MachineDone {
+                outcomes: Vec::new(),
+                agg: MachineAgg::new(num_machines),
+            }),
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.deques.len()
+    }
+
+    /// Submit a split-off child task from worker `slot`. Admitted to the
+    /// slot's deque while the machine-wide chunk budget allows; past the
+    /// budget it goes to the worker-local `overflow` stack, which the
+    /// worker drains (LIFO) before taking any queued work — bounding
+    /// buffered chunks without touching task identity.
+    fn submit(&self, slot: usize, task: Task, overflow: &mut Vec<Task>) {
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        if task.holds_chunk() && !self.try_admit_chunk() {
+            overflow.push(task);
+            return;
+        }
+        self.deques[slot].lock().unwrap().push_back(task);
+    }
+
+    fn try_admit_chunk(&self) -> bool {
+        let mut cur = self.live_chunks.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_live_chunks {
+                return false;
+            }
+            match self.live_chunks.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak_live.fetch_max(cur + 1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn note_taken(&self, task: &Task) {
+        if task.holds_chunk() {
+            self.live_chunks.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Pop the newest task from our own deque (LIFO → depth-first).
+    fn pop_own(&self, slot: usize) -> Option<Task> {
+        let t = self.deques[slot].lock().unwrap().pop_back();
+        if let Some(ref task) = t {
+            self.note_taken(task);
+        }
+        t
+    }
+
+    /// Steal the oldest task from the first non-empty victim, scanning
+    /// round-robin from `slot + 1` (FIFO → root-most, largest work).
+    fn steal(&self, slot: usize) -> Option<Task> {
+        let w = self.deques.len();
+        for d in 1..w {
+            let victim = (slot + d) % w;
+            let t = self.deques[victim].lock().unwrap().pop_front();
+            if let Some(task) = t {
+                self.note_taken(&task);
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(task);
+            }
+        }
+        None
+    }
+
+    /// Worker loop for one slot: drain local overflow first, then the own
+    /// deque, then steal; briefly spin (yielding) while other workers
+    /// still hold outstanding tasks that might spawn stealable children,
+    /// then retire. Retiring early is always safe: a task queued in a
+    /// deque is drained by the worker that owns that deque (a worker
+    /// never exits with its own deque non-empty), so work cannot strand —
+    /// the spin cap only trades tail-stealing for freeing the host
+    /// thread to take the next machine's worker slot instead of burning
+    /// a core on a long straggler's tail.
+    pub fn run_worker(&self, slot: usize, mut runner: TaskRunner<'_, '_>, make_sink: &impl Fn(usize) -> S) {
+        const MAX_IDLE_SPINS: u32 = 1024;
+        let mut outcomes: Vec<TaskOutcome<S>> = Vec::new();
+        let mut overflow: Vec<Task> = Vec::new();
+        let mut idle_spins = 0u32;
+        loop {
+            let task = if let Some(t) = overflow.pop() {
+                t
+            } else if let Some(t) = self.pop_own(slot) {
+                t
+            } else if let Some(t) = self.steal(slot) {
+                t
+            } else if self.outstanding.load(Ordering::SeqCst) == 0 || idle_spins >= MAX_IDLE_SPINS
+            {
+                break;
+            } else {
+                idle_spins += 1;
+                std::thread::yield_now();
+                continue;
+            };
+            idle_spins = 0;
+            let outcome = runner.run_task(task, &self.roots, make_sink, &mut |t| {
+                self.submit(slot, t, &mut overflow)
+            });
+            outcomes.push(outcome);
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+        }
+        let mut done = self.done.lock().unwrap();
+        done.agg.absorb_runner(&runner);
+        done.outcomes.extend(outcomes);
+    }
+
+    /// Tear down after the fork-join: outcomes sorted into the canonical
+    /// [`super::task::TaskId`] order plus the merged aggregates and the
+    /// execution diagnostics (steals, peak queued chunks).
+    pub fn finish(self) -> (Vec<TaskOutcome<S>>, MachineAgg, u64, u64) {
+        let done = self.done.into_inner().unwrap();
+        let mut outcomes = done.outcomes;
+        outcomes.sort_by(|a, b| a.id.cmp(&b.id));
+        let steals = self.steals.into_inner();
+        let peak_live = self.peak_live.into_inner() as u64;
+        (outcomes, done.agg, steals, peak_live)
+    }
+}

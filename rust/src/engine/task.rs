@@ -1,0 +1,733 @@
+//! The unit of scheduling: one chunk-granularity exploration frame.
+//!
+//! A [`Task`] is either a **root mini-batch** (an unexplored slice of a
+//! machine's owned start vertices) or a **split-off frame** (a filled
+//! chunk at some level, plus the `Arc` chain of frozen ancestor chunks it
+//! needs to resolve inherited edge lists and stored sets). Executing a
+//! task interprets the plan over its frame exactly like the original
+//! monolithic loop did — circulant fetch per chunk, then extension —
+//! with one scheduling hook: while extending a frame at `level <
+//! task_split_levels`, each child chunk that fills is handed back to the
+//! scheduler as a *new task* (up to `task_split_width` per task) instead
+//! of being descended in place. Everything below the split boundary is
+//! classic depth-first descent with bounded memory.
+//!
+//! **Determinism.** The task tree — which tasks exist, what each
+//! contains, and the [`TaskId`] path naming each — is a pure function of
+//! the graph, the plan, and the config: split decisions depend only on
+//! task-local state (level, per-task spawn count), never on queue
+//! occupancy, worker count, or steal timing. Each task accumulates its
+//! own virtual-time slice; the engine folds those slices in `TaskId`
+//! order, so every reported number is byte-for-byte identical for any
+//! `workers_per_machine` and any steal interleaving — PR 1's determinism
+//! contract, extended one level down.
+//!
+//! The phase split inside a frame is what makes sharing safe: a chunk is
+//! mutated only while it is filled and during its circulant fetch phase;
+//! once extension begins it is frozen behind an `Arc` and only ever read
+//! (by this task's descents and by any split-off child task, possibly on
+//! another worker).
+
+use super::cache::StaticCache;
+use super::chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
+use super::sink::EmbeddingSink;
+use crate::cluster::{ClusterView, Timeline, TrafficLedger};
+use crate::config::EngineConfig;
+use crate::exec;
+use crate::graph::{Graph, VertexId};
+use crate::metrics::ComputeModel;
+use crate::pattern::MAX_PATTERN;
+use crate::plan::{Plan, Source};
+use std::sync::Arc;
+
+/// Deterministic task identity: the path through the machine's task tree
+/// (`[root_batch_index, spawn_seq, spawn_seq, …]`). Lexicographic order
+/// over paths is the engine's fixed reduction order — it coincides with
+/// the execution order of a single depth-first worker.
+pub type TaskId = Vec<u32>;
+
+/// What a task explores.
+pub enum TaskKind {
+    /// Root mini-batch: the machine's owned (label-filtered) start
+    /// vertices `[lo, hi)`. Lazy — no chunk is materialised until the
+    /// task runs.
+    Roots { lo: usize, hi: usize },
+    /// A split-off filled chunk at `level`, with the frozen chunks of
+    /// levels `0..level` it resolves ancestors through.
+    Frame { ancestors: Vec<Arc<Chunk>>, chunk: Chunk, level: usize },
+}
+
+/// One schedulable unit of exploration work.
+pub struct Task {
+    pub id: TaskId,
+    pub kind: TaskKind,
+}
+
+impl Task {
+    /// Whether this task pins a materialised chunk while queued (frames
+    /// do; root batches are lazy). The scheduler's `max_live_chunks`
+    /// backpressure counts exactly these.
+    pub fn holds_chunk(&self) -> bool {
+        matches!(self.kind, TaskKind::Frame { .. })
+    }
+}
+
+/// What one task hands back for the ordered fold: its sink and its slice
+/// of the machine's virtual timeline. (Order-insensitive counters —
+/// traffic, work units, cache hits — accumulate on the worker instead.)
+pub struct TaskOutcome<S> {
+    pub id: TaskId,
+    pub sink: S,
+    pub finish: f64,
+    pub exposed: f64,
+}
+
+/// Per-worker exploration state: scratch buffers, chunk pool, and the
+/// order-insensitive accumulators (u64 sums and maxes, merged into the
+/// machine totals in any order without changing a single bit). One
+/// `TaskRunner` serves one scheduler worker for the whole run; per-task
+/// state (timeline, pending work) is reset by [`TaskRunner::run_task`].
+pub struct TaskRunner<'a, 'g> {
+    machine: usize,
+    graph: &'g Graph,
+    plan: &'a Plan,
+    cfg: &'a EngineConfig,
+    compute: ComputeModel,
+    view: ClusterView<'g>,
+    cache: &'a StaticCache,
+    // --- per-worker accumulators (order-free reductions) ---
+    pub ledger: TrafficLedger,
+    pub units_cpu: u64,
+    pub units_mem: u64,
+    pub embeddings_created: u64,
+    pub peak_bytes: u64,
+    pub numa_remote: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub tasks_run: u64,
+    // --- per-task state ---
+    timeline: Timeline,
+    pending_cpu: u64,
+    pending_mem: u64,
+    // --- scratch, reused across tasks (no hot-loop allocation) ---
+    cand: Vec<VertexId>,
+    tmp: Vec<VertexId>,
+    emb_buf: Vec<VertexId>,
+    /// Per-level circulant batch buffers, reused across frames.
+    batch_pool: Vec<Vec<Vec<u32>>>,
+    /// Per-level batch-gate buffers, reused across frames.
+    gate_pool: Vec<Vec<f64>>,
+    /// Cleared chunks awaiting reuse (all sized `cfg.chunk_capacity`).
+    chunk_pool: Vec<Chunk>,
+}
+
+impl<'a, 'g> TaskRunner<'a, 'g> {
+    pub fn new(
+        machine: usize,
+        graph: &'g Graph,
+        plan: &'a Plan,
+        cfg: &'a EngineConfig,
+        compute: &ComputeModel,
+        view: ClusterView<'g>,
+        cache: &'a StaticCache,
+    ) -> Self {
+        let depth = plan.depth();
+        TaskRunner {
+            machine,
+            graph,
+            plan,
+            cfg,
+            compute: *compute,
+            view,
+            cache,
+            ledger: TrafficLedger::new(view.num_machines()),
+            units_cpu: 0,
+            units_mem: 0,
+            embeddings_created: 0,
+            peak_bytes: 0,
+            numa_remote: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            tasks_run: 0,
+            timeline: Timeline::default(),
+            pending_cpu: 0,
+            pending_mem: 0,
+            cand: Vec::new(),
+            tmp: Vec::new(),
+            emb_buf: Vec::new(),
+            batch_pool: vec![Vec::new(); depth],
+            gate_pool: vec![Vec::new(); depth],
+            chunk_pool: Vec::new(),
+        }
+    }
+
+    fn take_chunk(&mut self) -> Chunk {
+        self.chunk_pool.pop().unwrap_or_else(|| Chunk::new(self.cfg.chunk_capacity))
+    }
+
+    fn put_chunk(&mut self, mut chunk: Chunk) {
+        chunk.clear();
+        self.chunk_pool.push(chunk);
+    }
+
+    /// Execute one task to completion. `roots` is the machine's full
+    /// (label-filtered) root list; `spawn` receives split-off child
+    /// tasks. Returns the task's outcome for the ordered fold.
+    pub fn run_task<S: EmbeddingSink>(
+        &mut self,
+        task: Task,
+        roots: &[VertexId],
+        make_sink: &impl Fn(usize) -> S,
+        spawn: &mut impl FnMut(Task),
+    ) -> TaskOutcome<S> {
+        self.timeline = Timeline::default();
+        self.pending_cpu = 0;
+        self.pending_mem = 0;
+        let mut sink = make_sink(self.machine);
+        let mut spawn_seq = 0u32;
+        let id = match task.kind {
+            TaskKind::Roots { lo, hi } => {
+                let cap = self.cfg.chunk_capacity;
+                let needs0 = self.plan.needs_adj[0];
+                let ancestors: Vec<Arc<Chunk>> = Vec::new();
+                let mut chunk = self.take_chunk();
+                let mut block = lo;
+                while block < hi {
+                    let end = (block + cap).min(hi);
+                    for &v in &roots[block..end] {
+                        let mut vs = [0 as VertexId; MAX_PATTERN];
+                        vs[0] = v;
+                        let list = if needs0 { ListRef::Local(v) } else { ListRef::None };
+                        chunk.embs.push(Emb::new(vs, 0, list));
+                        self.pending_mem += self.compute.per_embedding_overhead_units;
+                        self.embeddings_created += 1;
+                    }
+                    chunk = self.process_frame(
+                        &ancestors,
+                        chunk,
+                        0,
+                        &task.id,
+                        &mut spawn_seq,
+                        &mut sink,
+                        spawn,
+                    );
+                    chunk.clear();
+                    block = end;
+                }
+                self.put_chunk(chunk);
+                task.id
+            }
+            TaskKind::Frame { ancestors, chunk, level } => {
+                let chunk =
+                    self.process_frame(&ancestors, chunk, level, &task.id, &mut spawn_seq, &mut sink, spawn);
+                self.put_chunk(chunk);
+                task.id
+            }
+        };
+        // Trailing work not yet flushed.
+        self.flush_compute(0.0, 1);
+        self.tasks_run += 1;
+        TaskOutcome {
+            id,
+            sink,
+            finish: self.timeline.finish(),
+            exposed: self.timeline.exposed_comm(),
+        }
+    }
+
+    /// NUMA memory-access multiplier (DESIGN.md §1: Table 7's policy
+    /// effect modelled as a penalty on memory-bound work). NUMA-aware
+    /// exploration keeps embedding memory socket-local except for residual
+    /// cross-socket fetches and work stealing.
+    fn numa_mult(&self) -> f64 {
+        let s = self.cfg.sockets;
+        if s <= 1 {
+            return 1.0;
+        }
+        let remote_frac =
+            if self.cfg.numa_aware { 0.08 } else { (s - 1) as f64 / s as f64 };
+        1.0 + remote_frac * (self.compute.numa_remote_penalty - 1.0)
+    }
+
+    /// Convert accumulated pending work to virtual seconds and post it on
+    /// the task's timeline, gated on `gate` (the batch's data-arrival
+    /// time). Thread scaling: mini-batches are distributed dynamically
+    /// over `threads` modelled workers; a small serial fraction covers
+    /// chunk management (paper §7).
+    fn flush_compute(&mut self, gate: f64, emb_count: usize) {
+        if self.pending_cpu == 0 && self.pending_mem == 0 {
+            return;
+        }
+        let numa = self.numa_mult();
+        let remote_bump = if self.cfg.sockets > 1 {
+            let frac = if self.cfg.numa_aware {
+                0.08
+            } else {
+                (self.cfg.sockets - 1) as f64 / self.cfg.sockets as f64
+            };
+            (self.pending_mem as f64 * frac) as u64
+        } else {
+            0
+        };
+        self.numa_remote += remote_bump;
+        let units = self.pending_cpu as f64 + self.pending_mem as f64 * numa;
+        let t = self.cfg.threads.max(1);
+        let minibatches = (emb_count / self.cfg.mini_batch).max(1);
+        let t_eff = t.min(minibatches.max(1)) as f64;
+        const SERIAL_FRAC: f64 = 0.012;
+        let secs =
+            units * self.compute.seconds_per_unit * (SERIAL_FRAC + (1.0 - SERIAL_FRAC) / t_eff);
+        self.timeline.post_compute(gate, secs);
+        self.units_cpu += self.pending_cpu;
+        self.units_mem += self.pending_mem;
+        self.pending_cpu = 0;
+        self.pending_mem = 0;
+    }
+
+    /// Process one filled frame: circulant fetch phase (mutating the
+    /// chunk), freeze, then extension in batch order — splitting or
+    /// descending into child chunks as they fill. Returns a cleared chunk
+    /// for pooling (a fresh one if the frame's chunk escaped into
+    /// split-off child tasks).
+    #[allow(clippy::too_many_arguments)]
+    fn process_frame<S: EmbeddingSink>(
+        &mut self,
+        ancestors: &[Arc<Chunk>],
+        mut chunk: Chunk,
+        level: usize,
+        task_id: &TaskId,
+        spawn_seq: &mut u32,
+        sink: &mut S,
+        spawn: &mut impl FnMut(Task),
+    ) -> Chunk {
+        let n = self.view.num_machines();
+        // Group embedding indices into circulant batches: index 0 = ready
+        // (local/cached/shared-resolved/no-list), then owner machines in
+        // circulant order starting after self (§5.3). Buffers are pooled
+        // per level and reused across frames.
+        let mut batches = std::mem::take(&mut self.batch_pool[level]);
+        batches.resize(n + 1, Vec::new());
+        for b in batches.iter_mut() {
+            b.clear();
+        }
+        for (i, e) in chunk.embs.iter().enumerate() {
+            let target = match e.list {
+                ListRef::Pending { owner, .. } => Some(owner as usize),
+                ListRef::Shared(other) => match chunk.embs[other as usize].list {
+                    ListRef::Pending { owner, .. } => Some(owner as usize),
+                    _ => None,
+                },
+                _ => None,
+            };
+            match target {
+                None => batches[0].push(i as u32),
+                Some(o) => {
+                    // circulant position of owner o relative to self
+                    let pos = (o + n - self.machine) % n;
+                    batches[pos.max(1)].push(i as u32) // pos 0 impossible: own vertices are Local
+                }
+            }
+        }
+
+        // Fetch phase: all circulant batches, one batched message each,
+        // posting transfers on the comm channel and recording each
+        // batch's data-arrival gate. The comm channel free-runs ahead of
+        // compute (§5.3's non-strict pipelining), so posting every
+        // transfer before any extension leaves the timeline bit-identical
+        // to the interleaved order — and leaves the chunk immutable for
+        // the rest of its life.
+        let mut gates = std::mem::take(&mut self.gate_pool[level]);
+        gates.clear();
+        for (pos, batch) in batches.iter().enumerate() {
+            if batch.is_empty() || pos == 0 {
+                gates.push(0.0);
+                continue;
+            }
+            let owner = (self.machine + pos) % n;
+            gates.push(self.fetch_batch(&mut chunk, owner, batch));
+        }
+
+        // Freeze: from here the chunk is shared read-only.
+        let cur = Arc::new(chunk);
+        // Peak accounting: this task's live frame stack (frozen ancestors
+        // + own frame; the child under construction is counted when its
+        // own frame is processed).
+        let stack_bytes =
+            ancestors.iter().map(|c| c.bytes()).sum::<u64>() + cur.bytes();
+        self.peak_bytes = self.peak_bytes.max(stack_bytes);
+
+        let depth = self.plan.depth();
+        let interior = level + 1 < depth - 1;
+        let may_split = level < self.cfg.task_split_levels;
+        // The level stack for ancestor resolution (index = level), and
+        // the ancestor chain split-off children inherit. Built once per
+        // frame; both only borrow frozen chunks.
+        let stack: Vec<&Chunk> =
+            ancestors.iter().map(|a| a.as_ref()).chain(std::iter::once(cur.as_ref())).collect();
+        let child_ancestors: Vec<Arc<Chunk>> = if interior {
+            ancestors.iter().cloned().chain(std::iter::once(cur.clone())).collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut child = self.take_chunk();
+        for pos in 0..batches.len() {
+            let batch = std::mem::take(&mut batches[pos]);
+            if batch.is_empty() {
+                batches[pos] = batch;
+                continue;
+            }
+            let gate = gates[pos];
+            // Thread parallelism of the cost model is bounded by the
+            // whole chunk's mini-batch pool (workers pull 64-embedding
+            // mini-batches from a shared queue, §7), not by this
+            // circulant batch alone.
+            let chunk_len = stack[level].len();
+            for &idx in &batch {
+                self.extend_one(&stack, level, idx, &mut child, sink);
+                if interior && child.is_full() {
+                    self.flush_compute(gate, chunk_len);
+                    let full = std::mem::replace(&mut child, self.take_chunk());
+                    self.dispatch_child(
+                        &child_ancestors,
+                        full,
+                        level,
+                        task_id,
+                        spawn_seq,
+                        may_split,
+                        sink,
+                        spawn,
+                    );
+                }
+            }
+            self.flush_compute(gate, chunk_len);
+            batches[pos] = batch;
+        }
+        self.batch_pool[level] = batches;
+        self.gate_pool[level] = gates;
+
+        // Trailing partial child chunk: always descend in place (it is
+        // the last frame of this subtree; splitting it would only add
+        // scheduling overhead).
+        if interior && !child.is_empty() {
+            let done =
+                self.process_frame(&child_ancestors, child, level + 1, task_id, spawn_seq, sink, spawn);
+            self.put_chunk(done);
+        } else {
+            self.put_chunk(child);
+        }
+
+        drop(stack);
+        drop(child_ancestors);
+        // Reclaim the frame's chunk for the pool; if split-off children
+        // still hold it as an ancestor, it is freed when the last of them
+        // completes (bottom-up release, §4.3).
+        match Arc::try_unwrap(cur) {
+            Ok(mut c) => {
+                c.clear();
+                c
+            }
+            Err(_) => Chunk::new(self.cfg.chunk_capacity),
+        }
+    }
+
+    /// Hand one full child chunk onward: split it off as a new task while
+    /// the budgets allow (deterministic — depends only on `level` and the
+    /// per-task spawn count), otherwise descend depth-first in place.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_child<S: EmbeddingSink>(
+        &mut self,
+        child_ancestors: &[Arc<Chunk>],
+        full: Chunk,
+        level: usize,
+        task_id: &TaskId,
+        spawn_seq: &mut u32,
+        may_split: bool,
+        sink: &mut S,
+        spawn: &mut impl FnMut(Task),
+    ) {
+        if may_split && (*spawn_seq as usize) < self.cfg.task_split_width {
+            let mut id = task_id.clone();
+            id.push(*spawn_seq);
+            *spawn_seq += 1;
+            spawn(Task {
+                id,
+                kind: TaskKind::Frame {
+                    ancestors: child_ancestors.to_vec(),
+                    chunk: full,
+                    level: level + 1,
+                },
+            });
+        } else {
+            let done =
+                self.process_frame(child_ancestors, full, level + 1, task_id, spawn_seq, sink, spawn);
+            self.put_chunk(done);
+        }
+    }
+
+    /// Fetch the pending edge lists of `batch` (all owned by `owner`) as
+    /// one batched message; returns the data-arrival gate time.
+    fn fetch_batch(&mut self, chunk: &mut Chunk, owner: usize, batch: &[u32]) -> f64 {
+        // Collect unique pending vertices (HDS made them unique already
+        // when enabled; when disabled, duplicates are fetched redundantly —
+        // exactly the Fig 14 ablation).
+        let mut verts: Vec<VertexId> = Vec::with_capacity(batch.len());
+        for &i in batch {
+            if let ListRef::Pending { vertex, .. } = chunk.embs[i as usize].list {
+                verts.push(vertex);
+            }
+        }
+        if verts.is_empty() {
+            return 0.0;
+        }
+        let (_bytes, time) =
+            self.view.fetch_batch(&mut self.ledger, self.machine, owner, &verts);
+        let gate = self.timeline.post_comm(time);
+        // Materialise the lists into the chunk arena ("receive").
+        for &i in batch {
+            let e = chunk.embs[i as usize];
+            if let ListRef::Pending { vertex, .. } = e.list {
+                let deg = self.graph.degree(vertex);
+                let nb = self.graph.neighbors(vertex);
+                // Copy = receive; charge memory work.
+                let r = chunk.arena_push(nb);
+                chunk.embs[i as usize].list = r;
+                self.pending_mem += deg as u64 / 4 + 1;
+            }
+        }
+        gate
+    }
+
+    /// Extend one embedding at `level` to `level+1` (paper Algorithm 1's
+    /// EXTEND, interpreted from the plan). `stack[0..=level]` are the
+    /// frozen chunks of this frame's lineage; interior children are
+    /// appended to `child`.
+    fn extend_one<S: EmbeddingSink>(
+        &mut self,
+        stack: &[&Chunk],
+        level: usize,
+        idx: u32,
+        child: &mut Chunk,
+        sink: &mut S,
+    ) {
+        let depth = self.plan.depth();
+        let step = &self.plan.steps[level]; // describes level+1
+        let new_level = level + 1;
+        let e = stack[level].embs[idx as usize];
+        let vertices = e.vertices;
+
+        // --- Candidate set: intersect the plan's sources. ---
+        {
+            let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
+            for s in &step.sources {
+                let sl: &[VertexId] = match *s {
+                    Source::Adj(j) => {
+                        let a = ancestor_idx(stack, level, idx, j);
+                        resolve_list(stack, j, a, self.graph)
+                    }
+                    Source::Stored(j) => {
+                        let a = ancestor_idx(stack, level, idx, j);
+                        resolve_stored(stack, j, a)
+                    }
+                };
+                slices.push(sl);
+            }
+            let w = match slices.len() {
+                1 => {
+                    self.cand.clear();
+                    self.cand.extend_from_slice(slices[0]);
+                    exec::Work(1)
+                }
+                2 => exec::intersect(slices[0], slices[1], &mut self.cand),
+                _ => exec::intersect_many(slices[0], &slices[1..], &mut self.cand),
+            };
+            self.pending_cpu += w.0;
+        }
+
+        // --- Vertical sharing: store the raw intersection for children. ---
+        let stored_ref = if self.plan.store_set[new_level] && new_level < depth - 1 {
+            let off = child.arena.len() as u32;
+            child.arena.extend_from_slice(&self.cand);
+            self.pending_mem += self.cand.len() as u64 / 4 + 1;
+            Some((off, self.cand.len() as u32))
+        } else {
+            None
+        };
+
+        // --- Vertex-induced exclusions. ---
+        if !step.exclude.is_empty() {
+            for &j in &step.exclude {
+                let a = ancestor_idx(stack, level, idx, j);
+                let ex = resolve_list(stack, j, a, self.graph);
+                let w = exec::difference(&self.cand, ex, &mut self.tmp);
+                self.pending_cpu += w.0;
+                std::mem::swap(&mut self.cand, &mut self.tmp);
+            }
+        }
+
+        // --- Symmetry-breaking restriction window [lo, hi). ---
+        let mut lo: VertexId = 0;
+        let mut hi: VertexId = VertexId::MAX;
+        for &j in &step.greater_than {
+            lo = lo.max(vertices[j].saturating_add(1));
+        }
+        for &j in &step.less_than {
+            hi = hi.min(vertices[j]);
+        }
+        let start = self.cand.partition_point(|&v| v < lo);
+        let end = self.cand.partition_point(|&v| v < hi);
+        self.pending_cpu += 2 * (self.cand.len().max(2).ilog2() as u64);
+        if start >= end {
+            return;
+        }
+
+        // Earlier matched vertices that could collide with candidates in
+        // the [lo, hi) window — usually none, so the per-candidate
+        // duplicate check below reduces to a single integer compare.
+        let mut dups = [0 as VertexId; MAX_PATTERN];
+        let mut ndups = 0usize;
+        for &u in &vertices[..new_level] {
+            if u >= lo && u < hi {
+                dups[ndups] = u;
+                ndups += 1;
+            }
+        }
+        let dups = &dups[..ndups];
+
+        if new_level == depth - 1 {
+            // --- Last level: process embeddings (Algorithm 1, l.13-14). ---
+            if sink.bulk_count() && step.label == 0 {
+                let mut count = (end - start) as u64;
+                // Remove earlier vertices that slipped into the window.
+                for &u in &vertices[..new_level] {
+                    if u >= lo && u < hi && self.cand[start..end].binary_search(&u).is_ok() {
+                        count -= 1;
+                    }
+                }
+                sink.add_count(count);
+            } else if sink.bulk_count() {
+                // Labelled: iterate and filter by label.
+                let mut count = 0u64;
+                for k in start..end {
+                    let v = self.cand[k];
+                    if self.graph.label(v) == step.label && !dups.contains(&v) {
+                        count += 1;
+                    }
+                }
+                self.pending_cpu += (end - start) as u64;
+                sink.add_count(count);
+            } else {
+                self.emb_buf.clear();
+                self.emb_buf.extend_from_slice(&vertices[..new_level]);
+                self.emb_buf.push(0);
+                // Iterate the window, skipping earlier vertices.
+                for k in start..end {
+                    let v = self.cand[k];
+                    if dups.contains(&v)
+                        || (step.label != 0 && self.graph.label(v) != step.label)
+                    {
+                        continue;
+                    }
+                    *self.emb_buf.last_mut().unwrap() = v;
+                    sink.emit(&self.emb_buf);
+                }
+            }
+            self.pending_cpu += (end - start) as u64;
+            return;
+        }
+
+        // --- Interior level: create child extendable embeddings. ---
+        let needs = self.plan.needs_adj[new_level];
+        let hds = self.cfg.horizontal_sharing;
+        for k in start..end {
+            let v = self.cand[k];
+            if (!dups.is_empty() && dups.contains(&v))
+                || (step.label != 0 && self.graph.label(v) != step.label)
+            {
+                continue;
+            }
+            let mut vs = vertices;
+            vs[new_level] = v;
+            let list = if !needs {
+                ListRef::None
+            } else if self.view.partitioned().is_local(self.machine, v) {
+                ListRef::Local(v)
+            } else if self.cache.contains(v) {
+                self.cache_hits += 1;
+                ListRef::Cached(v)
+            } else {
+                self.cache_misses += 1;
+                let next_idx = child.embs.len() as u32;
+                if hds {
+                    match child.hds_lookup(v) {
+                        Some(other) => ListRef::Shared(other),
+                        None => {
+                            child.hds_insert(v, next_idx);
+                            ListRef::Pending {
+                                vertex: v,
+                                owner: self.view.partitioned().owner(v) as u8,
+                            }
+                        }
+                    }
+                } else {
+                    ListRef::Pending {
+                        vertex: v,
+                        owner: self.view.partitioned().owner(v) as u8,
+                    }
+                }
+            };
+            let mut emb = Emb::new(vs, idx, list);
+            if let Some((off, len)) = stored_ref {
+                emb.stored_off = off;
+                emb.stored_len = len;
+            }
+            child.embs.push(emb);
+            self.pending_mem += self.compute.per_embedding_overhead_units;
+            self.embeddings_created += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_ids_order_like_depth_first_execution() {
+        // Lexicographic TaskId order: children fold directly after their
+        // parent and before the next root batch — the order a single
+        // depth-first worker executes in.
+        let mut ids: Vec<TaskId> =
+            vec![vec![1], vec![0, 1], vec![0], vec![0, 0, 2], vec![0, 0], vec![2]];
+        ids.sort();
+        assert_eq!(
+            ids,
+            vec![
+                vec![0],
+                vec![0, 0],
+                vec![0, 0, 2],
+                vec![0, 1],
+                vec![1],
+                vec![2]
+            ]
+        );
+    }
+
+    #[test]
+    fn tasks_are_send() {
+        // Tasks cross worker threads through the scheduler deques.
+        fn assert_send<T: Send>() {}
+        assert_send::<Task>();
+    }
+
+    #[test]
+    fn root_tasks_are_lazy_frames_hold_chunks() {
+        let root = Task { id: vec![0], kind: TaskKind::Roots { lo: 0, hi: 64 } };
+        assert!(!root.holds_chunk());
+        let frame = Task {
+            id: vec![0, 0],
+            kind: TaskKind::Frame { ancestors: Vec::new(), chunk: Chunk::new(4), level: 1 },
+        };
+        assert!(frame.holds_chunk());
+    }
+}

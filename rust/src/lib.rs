@@ -72,9 +72,11 @@
 //!
 //! Apps that must see each embedding (the user function of the paper's
 //! Algorithm 1) override `needs_sinks`/`unit_sink`/`aggregate`: the
-//! session calls `unit_sink` once per execution unit (sinks run on
-//! concurrent host threads), then hands the finished sinks back to
-//! `aggregate` for app-specific reduction. See [`session::LabeledQuery`]
+//! session calls `unit_sink` once per execution unit — one scheduler
+//! task, i.e. a root mini-batch or a split-off chunk (sinks run on
+//! concurrent, work-stealing host workers) — then hands the finished
+//! sinks back to `aggregate` in deterministic task order for
+//! app-specific reduction. See [`session::LabeledQuery`]
 //! (support-thresholded labelled queries) and `examples/fraud_detection.rs`
 //! (per-vertex triangle statistics) for complete implementations.
 //!
@@ -90,9 +92,11 @@
 //!   generators"), 1-D partitioning, and a deterministic simulated cluster
 //!   with an accounted transport.
 //! * [`engine`] — the paper's contribution: BFS-DFS hybrid chunk
-//!   exploration, circulant scheduling, hierarchical extendable-embedding
-//!   storage, vertical/horizontal sharing, the static cache, and
-//!   NUMA-aware mode.
+//!   exploration decomposed into chunk-granularity tasks
+//!   ([`engine::task`]) under a per-machine work-stealing scheduler
+//!   ([`engine::sched`]), circulant scheduling, hierarchical
+//!   extendable-embedding storage, vertical/horizontal sharing, the
+//!   static cache, and NUMA-aware mode.
 //! * [`baselines`] — the comparator execution models (G-thinker-like,
 //!   moving-computation-to-data, replicated GraphPi-like, single-machine),
 //!   reached through [`session::Executor`].
@@ -101,9 +105,10 @@
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) for the XLA offload.
 //! * [`exec`], [`metrics`], [`config`] — intersection kernels, traffic and
 //!   virtual-time accounting, and run configuration.
-//! * [`par`] — deterministic fork-join execution of the simulated
-//!   machines over host threads (results are bitwise independent of the
-//!   host thread count).
+//! * [`par`] — deterministic fork-join execution: the two-level
+//!   machine × worker pool multiplexing every machine's scheduler
+//!   workers onto host threads (results are bitwise independent of the
+//!   host thread count and the worker count).
 
 pub mod baselines;
 pub mod bench;

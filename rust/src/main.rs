@@ -34,6 +34,7 @@ fn usage() -> ! {
     eprintln!("  run      --graph <mc|pt|lj|uk|tw|fr|rm|yh|path> --app <tc|K-mc|K-cc>");
     eprintln!("           --engine <k-automine|k-graphpi|gthinker|movingcomp|replicated|single>");
     eprintln!("           --machines N --threads N --sim-threads N (0=all cores)");
+    eprintln!("           --workers N (scheduler workers per machine, 0=all cores)");
     eprintln!("           [--no-cache] [--no-hds] [--no-vcs]");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
@@ -66,6 +67,8 @@ fn main() {
                 // Host-side parallelism of the simulation (0 = all cores);
                 // changes wall-clock only, never the reported metrics.
                 .sim_threads(args.get_as::<usize>("sim-threads", 0))
+                // Intra-machine work-stealing width; same contract.
+                .workers_per_machine(args.get_as::<usize>("workers", 0))
                 .horizontal_sharing(!args.has("no-hds"))
                 .vertical_sharing(!args.has("no-vcs"));
             if args.has("no-cache") {

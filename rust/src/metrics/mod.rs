@@ -119,6 +119,12 @@ impl Traffic {
 
 /// Outcome of one mining run, on one engine. All the paper's reported
 /// quantities derive from this.
+///
+/// **Determinism contract:** every field is byte-for-byte independent of
+/// host parallelism (`sim_threads`, `workers_per_machine`) *except* the
+/// execution diagnostics `wall_s`, `sched_steals`, and
+/// `peak_live_chunks`, which describe how the host happened to run the
+/// simulation rather than what the simulated cluster did.
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
     /// Pattern embedding count(s) — the mining answer.
@@ -146,6 +152,19 @@ pub struct RunStats {
     /// Static-cache hits / misses (Table 6 analysis).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Scheduler tasks executed (root mini-batches + split-off chunks).
+    /// The task tree is fixed by graph + config, so this is deterministic.
+    pub sched_tasks: u64,
+    /// Tasks a scheduler worker stole from another worker's deque.
+    /// Execution diagnostic: depends on host timing, like `wall_s`.
+    pub sched_steals: u64,
+    /// Peak number of split-off child chunks buffered in any machine's
+    /// scheduler *queues* (the admission gauge, bounded by
+    /// `EngineConfig::max_live_chunks`; over-budget children parked on a
+    /// worker's private overflow stack are not queued and not counted —
+    /// they are bounded separately by the split budgets).
+    /// Execution diagnostic: depends on host timing, like `wall_s`.
+    pub peak_live_chunks: u64,
 }
 
 impl RunStats {
@@ -167,6 +186,9 @@ impl RunStats {
         self.numa_remote_accesses += other.numa_remote_accesses;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.sched_tasks += other.sched_tasks;
+        self.sched_steals += other.sched_steals;
+        self.peak_live_chunks = self.peak_live_chunks.max(other.peak_live_chunks);
     }
 
     /// Communication overhead ratio (Fig 16): exposed comm / total runtime.

@@ -1,12 +1,21 @@
-//! Deterministic fork-join execution of independent simulation units.
+//! Deterministic fork-join execution of simulation units.
 //!
-//! The simulated cluster's machines (and a lone machine's root-vertex
-//! shards) are mutually independent: each reads the shared graph through a
-//! [`crate::cluster::ClusterView`] and writes only its own state. This
-//! module runs those units on scoped host threads with a work-stealing
-//! index counter and returns results **in unit order**, so every reduction
-//! over them is performed in a fixed sequence — results are byte-for-byte
-//! identical for any thread count, including 1.
+//! Two primitives, both with the same contract — **host thread count is
+//! invisible in the results**:
+//!
+//! * [`run_indexed`] — independent units, one closure call per unit,
+//!   outputs returned in unit order (the baselines' thread-per-machine
+//!   path).
+//! * [`run_unit_workers`] — the two-level machine × worker pool behind
+//!   the fine-grained task scheduler: every unit (simulated machine)
+//!   exposes `workers_per_unit` logical workers that cooperate on the
+//!   unit's shared state (deques, counters); the pool multiplexes all
+//!   `units × workers_per_unit` logical workers onto at most `threads`
+//!   host threads, claiming `(unit, slot)` pairs unit-major from one
+//!   atomic counter. Cooperation is data-race-free because the unit
+//!   state is `Sync`; determinism is the *caller's* contract — unit
+//!   state must reduce its outcomes in an order fixed by the work
+//!   itself (e.g. task ids), never by claim or completion order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -20,50 +29,73 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
+/// Run the logical workers of `units.len()` units on up to `threads`
+/// scoped host threads: `worker(&units[u], slot)` is called exactly once
+/// for every `(u, slot)` pair with `slot < workers_per_unit`. Pairs are
+/// claimed unit-major, so all of a unit's workers are live together and
+/// a lone unit still uses every host thread. A worker for a finished
+/// unit must return promptly (it will be claimed even when the unit's
+/// work is already done).
+pub fn run_unit_workers<S: Sync>(
+    threads: usize,
+    workers_per_unit: usize,
+    units: &[S],
+    worker: impl Fn(&S, usize) + Sync,
+) {
+    let total = units.len() * workers_per_unit;
+    if total == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(total);
+    if threads == 1 {
+        for u in units {
+            for slot in 0..workers_per_unit {
+                worker(u, slot);
+            }
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let worker = &worker;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let p = next.fetch_add(1, Ordering::Relaxed);
+                if p >= total {
+                    break;
+                }
+                worker(&units[p / workers_per_unit], p % workers_per_unit);
+            });
+        }
+    });
+}
+
 /// Run `f(i)` for every `i in 0..units` on up to `threads` scoped worker
-/// threads and return the outputs in index order. Workers steal unit
-/// indices from a shared atomic counter, so a straggler unit never idles
-/// the other cores. `f` must be pure with respect to shared state (it may
-/// only mutate what it owns); under that contract the output is identical
-/// for every `threads` value.
+/// threads and return the outputs in index order. `f` must be pure with
+/// respect to shared state (it may only mutate what it owns); under that
+/// contract the output is identical for every `threads` value. This is
+/// the single-worker special case of [`run_unit_workers`].
 pub fn run_indexed<T, F>(threads: usize, units: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    if units == 0 {
-        return Vec::new();
-    }
-    let threads = threads.max(1).min(units);
-    if threads == 1 {
-        return (0..units).map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..units).map(|_| Mutex::new(None)).collect();
-    let f = &f;
-    let next = &next;
-    let slots = &slots;
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= units {
-                    break;
-                }
-                let result = f(i);
-                *slots[i].lock().unwrap() = Some(result);
-            });
-        }
+    let slots: Vec<(usize, Mutex<Option<T>>)> =
+        (0..units).map(|i| (i, Mutex::new(None))).collect();
+    run_unit_workers(threads, 1, &slots, |(i, slot), _| {
+        *slot.lock().unwrap() = Some(f(*i));
     });
     slots
-        .iter()
-        .map(|slot| slot.lock().unwrap().take().expect("worker completed every claimed unit"))
+        .into_iter()
+        .map(|(_, slot)| slot.into_inner().unwrap().expect("worker completed every claimed unit"))
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn resolves_zero_to_cores() {
@@ -99,5 +131,48 @@ mod tests {
             let sum: f64 = run_indexed(threads, 100, |i| (i as f64).sqrt()).iter().sum();
             assert_eq!(sum.to_bits(), reference.to_bits(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn unit_workers_visit_every_slot_once() {
+        // units × workers grid, each cell incremented exactly once, for
+        // host thread counts below, at, and above the logical total.
+        for threads in [1usize, 2, 5, 64] {
+            let units: Vec<Vec<AtomicU64>> = (0..5)
+                .map(|_| (0..3).map(|_| AtomicU64::new(0)).collect())
+                .collect();
+            run_unit_workers(threads, 3, &units, |unit, slot| {
+                unit[slot].fetch_add(1, Ordering::Relaxed);
+            });
+            for (u, unit) in units.iter().enumerate() {
+                for (s, cell) in unit.iter().enumerate() {
+                    assert_eq!(cell.load(Ordering::Relaxed), 1, "threads={threads} u={u} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unit_workers_share_unit_state() {
+        // Workers of one unit cooperate on shared Sync state; the
+        // per-unit sum is worker-count- and thread-count-proof.
+        for (threads, wpu) in [(1usize, 4usize), (3, 4), (8, 2), (2, 1)] {
+            let units: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+            run_unit_workers(threads, wpu, &units, |unit, slot| {
+                unit.fetch_add(slot as u64 + 1, Ordering::Relaxed);
+            });
+            let expect: u64 = (1..=wpu as u64).sum();
+            for u in &units {
+                assert_eq!(u.load(Ordering::Relaxed), expect, "threads={threads} wpu={wpu}");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_workers_empty_is_noop() {
+        let none: Vec<AtomicU64> = Vec::new();
+        run_unit_workers(4, 3, &none, |_, _| panic!("no units, no calls"));
+        let some = [AtomicU64::new(0)];
+        run_unit_workers(4, 0, &some, |_, _| panic!("zero workers, no calls"));
     }
 }

@@ -97,9 +97,11 @@ pub trait GpmApp: Sync {
     }
 
     /// Per-execution-unit sink factory for pattern `pattern_idx`. A unit
-    /// is one simulated machine (or one root shard of a lone machine);
-    /// `machine` is the unit's machine index. Only called when
-    /// [`GpmApp::needs_sinks`] is true.
+    /// is one scheduler task of a simulated machine (a root mini-batch or
+    /// a split-off chunk — see [`crate::engine::task`]); `machine` is the
+    /// unit's machine index. Only called when [`GpmApp::needs_sinks`] is
+    /// true. Units are reduced in a deterministic order fixed by graph +
+    /// config, never by host scheduling.
     fn unit_sink(&self, pattern_idx: usize, machine: usize) -> BoxSink {
         let _ = (pattern_idx, machine);
         Box::new(CountSink::default())
@@ -416,6 +418,32 @@ impl<'a, 'g> Job<'a, 'g> {
         self
     }
 
+    /// Scheduler workers per simulated machine (`0` = all cores): the
+    /// intra-machine work-stealing width. Like [`Job::sim_threads`], this
+    /// changes wall-clock only, never the reported metrics.
+    pub fn workers_per_machine(mut self, workers: usize) -> Self {
+        self.cfg.engine.workers_per_machine = workers;
+        self
+    }
+
+    /// Task-split budgets: frames at `level < levels` hand full child
+    /// chunks to the scheduler as new tasks, at most `width` per task.
+    /// Changes the (deterministic) task decomposition — and with it
+    /// virtual-time granularity — not the mining answer.
+    pub fn task_split(mut self, levels: usize, width: usize) -> Self {
+        self.cfg.engine.task_split_levels = levels;
+        self.cfg.engine.task_split_width = width;
+        self
+    }
+
+    /// Cap on split-off chunks queued per machine (memory bound; past
+    /// it, a child task becomes the spawning worker's next task instead
+    /// of queueing).
+    pub fn max_live_chunks(mut self, cap: usize) -> Self {
+        self.cfg.engine.max_live_chunks = cap;
+        self
+    }
+
     /// NUMA sockets per machine (`1` disables NUMA modelling).
     pub fn sockets(mut self, sockets: usize) -> Self {
         self.cfg.engine.sockets = sockets;
@@ -436,6 +464,12 @@ impl<'a, 'g> Job<'a, 'g> {
     /// aggregation, counts append and times/traffic sum — identical to the
     /// pre-session entry points, bit for bit.
     pub fn run(self) -> RunStats {
+        // Reject degenerate configurations here, at the API boundary,
+        // with the error's message — not via a hang or index panic deep
+        // inside the engine.
+        if let Err(e) = self.cfg.engine.validate() {
+            panic!("invalid job configuration: {e}");
+        }
         let patterns = self.app.patterns();
         let induced = self.app.induced();
         let client = self.exec.client();
@@ -688,6 +722,36 @@ mod tests {
         let st2 = sess.job(&strict).run();
         assert_eq!(st2.total_count(), 0);
         assert!(strict.results().iter().all(|r| !r.kept));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid job configuration")]
+    fn degenerate_config_rejected_by_job_builder() {
+        let g = gen::erdos_renyi(30, 60, 3);
+        let mut cfg = RunConfig::with_machines(2);
+        cfg.engine.mini_batch = 0;
+        let _ = MiningSession::with_config(&g, cfg).job(&App::Tc).run();
+    }
+
+    #[test]
+    fn scheduler_knobs_change_wall_clock_shape_not_answers() {
+        let g = gen::rmat(8, 8, 91);
+        let sess = MiningSession::new(&g, 2);
+        let reference = sess.job(&App::Cc(4)).workers_per_machine(1).run();
+        for workers in [2usize, 4] {
+            let st = sess
+                .job(&App::Cc(4))
+                .workers_per_machine(workers)
+                .max_live_chunks(8)
+                .run();
+            assert_eq!(st.counts, reference.counts, "workers={workers}");
+            assert_eq!(st.network_bytes, reference.network_bytes);
+            assert_eq!(st.virtual_time_s.to_bits(), reference.virtual_time_s.to_bits());
+        }
+        // A different split *decomposition* may re-slice virtual time but
+        // never the mining answer.
+        let split = sess.job(&App::Cc(4)).task_split(2, 4).run();
+        assert_eq!(split.counts, reference.counts);
     }
 
     #[test]

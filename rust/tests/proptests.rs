@@ -113,6 +113,11 @@ fn prop_config_invariance() {
         let threads = 1 + rng.below(16) as usize;
         let numa = rng.below(2) == 0;
         let vcs = rng.below(2) == 0;
+        let workers = 1 + rng.below(8) as usize;
+        let split_levels = rng.below(4) as usize;
+        let split_width = 1 + rng.below(16) as usize;
+        let live = 1 + rng.below(64) as usize;
+        let mb = 1 + rng.below(256) as usize;
         let cfg = EngineConfig {
             chunk_capacity: cap,
             horizontal_sharing: hds,
@@ -121,6 +126,11 @@ fn prop_config_invariance() {
             threads,
             numa_aware: numa,
             vertical_sharing: vcs,
+            workers_per_machine: workers,
+            task_split_levels: split_levels,
+            task_split_width: split_width,
+            max_live_chunks: live,
+            mini_batch: mb,
             ..Default::default()
         };
         let plan_used = if vcs { plan.clone() } else { plan.without_vertical_sharing() };
@@ -138,7 +148,8 @@ fn prop_config_invariance() {
             st.total_count(),
             expect,
             "case {case}: cap={cap} hds={hds} cache={cache:.2} sockets={sockets} \
-             threads={threads} numa={numa} vcs={vcs} machines={machines}"
+             threads={threads} numa={numa} vcs={vcs} machines={machines} \
+             workers={workers} split={split_levels}/{split_width} live={live} mb={mb}"
         );
     }
 }
@@ -171,11 +182,12 @@ fn prop_restrictions_exact_for_all_size5_motifs() {
     }
 }
 
-/// Property (tentpole): the thread-per-machine simulation is bitwise
-/// deterministic — `sim_threads = 1` and `sim_threads = 4` produce
-/// identical counts, network bytes/messages, and virtual time across
-/// machine counts {1, 2, 4, 8} on RMAT graphs, and the counts match the
-/// brute-force oracle for the triangle, 4-clique, and house motifs.
+/// Property (tentpole): the two-level machine × worker simulation is
+/// bitwise deterministic — every `(sim_threads, workers_per_machine)`
+/// combination produces identical counts, network bytes/messages, work,
+/// and virtual time across machine counts {1, 2, 4, 8} on RMAT graphs,
+/// and the counts match the brute-force oracle for the triangle,
+/// 4-clique, and house motifs.
 #[test]
 fn prop_parallel_determinism_and_oracle() {
     let house = Pattern::new(5, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)]);
@@ -188,25 +200,44 @@ fn prop_parallel_determinism_and_oracle() {
         let expect = count_embeddings(g, p, Induced::Edge);
         let plan = automine_plan(p, Induced::Edge);
         for machines in [1usize, 2, 4, 8] {
-            let run = |sim_threads: usize| {
-                let cfg = EngineConfig { sim_threads, ..Default::default() };
+            let run = |sim_threads: usize, workers: usize| {
+                let cfg = EngineConfig {
+                    sim_threads,
+                    workers_per_machine: workers,
+                    // Fine-grained decomposition so work stealing has
+                    // something to steal even on these small graphs.
+                    chunk_capacity: 128,
+                    mini_batch: 16,
+                    ..Default::default()
+                };
                 let pg = PartitionedGraph::new(g, machines);
                 let mut tr = kudu::cluster::Transport::new(pg, NetModel::default());
                 kudu::engine::KuduEngine::run(g, &plan, &cfg, &ComputeModel::default(), &mut tr)
             };
-            let a = run(1);
-            let b = run(4);
+            let a = run(1, 1);
             assert_eq!(a.total_count(), expect, "{p:?} machines={machines}");
-            assert_eq!(a.counts, b.counts, "{p:?} machines={machines}");
-            assert_eq!(a.network_bytes, b.network_bytes, "{p:?} machines={machines}");
-            assert_eq!(a.network_messages, b.network_messages, "{p:?} machines={machines}");
-            assert_eq!(
-                a.virtual_time_s.to_bits(),
-                b.virtual_time_s.to_bits(),
-                "{p:?} machines={machines}"
-            );
-            assert_eq!(a.work_units, b.work_units, "{p:?} machines={machines}");
-            assert_eq!(a.embeddings_created, b.embeddings_created, "{p:?} machines={machines}");
+            for (sim, workers) in [(4usize, 1usize), (1, 4), (4, 4), (2, 8)] {
+                let b = run(sim, workers);
+                let what = format!("{p:?} machines={machines} sim={sim} workers={workers}");
+                assert_eq!(a.counts, b.counts, "{what}");
+                assert_eq!(a.network_bytes, b.network_bytes, "{what}");
+                assert_eq!(a.network_messages, b.network_messages, "{what}");
+                assert_eq!(
+                    a.virtual_time_s.to_bits(),
+                    b.virtual_time_s.to_bits(),
+                    "{what}"
+                );
+                assert_eq!(
+                    a.exposed_comm_s.to_bits(),
+                    b.exposed_comm_s.to_bits(),
+                    "{what}"
+                );
+                assert_eq!(a.work_units, b.work_units, "{what}");
+                assert_eq!(a.embeddings_created, b.embeddings_created, "{what}");
+                assert_eq!(a.sched_tasks, b.sched_tasks, "{what}");
+                assert_eq!(a.cache_hits, b.cache_hits, "{what}");
+                assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}");
+            }
         }
     }
 }

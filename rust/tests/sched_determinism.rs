@@ -1,0 +1,186 @@
+//! Acceptance suite for the fine-grained task scheduler: counts,
+//! traffic, and virtual-time metrics must be **bitwise identical** across
+//! `workers_per_machine` ∈ {1, 2, 4, 8} × engines × apps — work stealing
+//! inside a simulated machine is an execution detail, never a result.
+//! (The Kudu engine is the system under test; the baselines ride along to
+//! pin the contract across every `Executor` the session can select.)
+//!
+//! Also here: the seeded random sweep over graphs × machine counts ×
+//! scheduler granularity, and the sink-path determinism check (per-task
+//! sinks must reduce in the same order for any worker count).
+
+use kudu::config::RunConfig;
+use kudu::graph::gen::{self, Rng};
+use kudu::metrics::RunStats;
+use kudu::pattern::brute::{count_embeddings, Induced};
+use kudu::pattern::Pattern;
+use kudu::plan::ClientSystem;
+use kudu::session::{GpmApp, LabeledQuery, MiningSession};
+use kudu::workloads::{App, EngineKind};
+
+const WORKER_MATRIX: [usize; 4] = [1, 2, 4, 8];
+
+const ALL_ENGINES: [EngineKind; 6] = [
+    EngineKind::Kudu(ClientSystem::Automine),
+    EngineKind::Kudu(ClientSystem::GraphPi),
+    EngineKind::GThinker,
+    EngineKind::MovingComp,
+    EngineKind::Replicated,
+    EngineKind::SingleMachine,
+];
+
+/// Bitwise comparison of every field the determinism contract covers
+/// (floats by bit pattern; wall clock, steal count, and queue peaks are
+/// execution diagnostics and excluded by design).
+#[track_caller]
+fn assert_bitwise_eq(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.work_units, b.work_units, "{what}: work_units");
+    assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{what}: virtual time"
+    );
+    assert_eq!(
+        a.exposed_comm_s.to_bits(),
+        b.exposed_comm_s.to_bits(),
+        "{what}: exposed comm"
+    );
+    assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+    assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+    assert_eq!(a.sched_tasks, b.sched_tasks, "{what}: tasks");
+}
+
+/// The acceptance matrix: workers ∈ {1,2,4,8} × engines × apps, bitwise.
+#[test]
+fn workers_matrix_is_bitwise_deterministic_across_engines_and_apps() {
+    let g = gen::rmat(8, 8, 0x5C4E_D001);
+    for machines in [1usize, 4] {
+        let mut cfg = RunConfig::with_machines(machines);
+        // Fine granularity: many tasks per machine, so multi-worker runs
+        // really steal (checked below for the Kudu engine).
+        cfg.engine.chunk_capacity = 128;
+        cfg.engine.mini_batch = 16;
+        let sess = MiningSession::with_config(&g, cfg);
+        for app in [App::Tc, App::Mc(3), App::Cc(4)] {
+            for engine in ALL_ENGINES {
+                let reference = sess
+                    .job(&app)
+                    .executor(engine.executor())
+                    .workers_per_machine(WORKER_MATRIX[0])
+                    .run();
+                for &workers in &WORKER_MATRIX[1..] {
+                    let other = sess
+                        .job(&app)
+                        .executor(engine.executor())
+                        .workers_per_machine(workers)
+                        .run();
+                    assert_bitwise_eq(
+                        &reference,
+                        &other,
+                        &format!(
+                            "{} × {} × {machines}m × workers={workers}",
+                            app.name(),
+                            engine.name()
+                        ),
+                    );
+                }
+            }
+        }
+        // The matrix is only meaningful if the decomposition produced
+        // real intra-machine parallelism for the engine under test.
+        let kudu = sess.job(&App::Cc(4)).workers_per_machine(1).run();
+        assert!(
+            kudu.sched_tasks as usize > machines,
+            "machines={machines}: expected multiple tasks per machine, got {}",
+            kudu.sched_tasks
+        );
+    }
+}
+
+/// Oracle pinning for the matrix graph: identical bits are worthless if
+/// they are identically wrong.
+#[test]
+fn matrix_counts_match_oracle() {
+    let g = gen::rmat(8, 8, 0x5C4E_D001);
+    let mut cfg = RunConfig::with_machines(4);
+    cfg.engine.chunk_capacity = 128;
+    cfg.engine.mini_batch = 16;
+    let sess = MiningSession::with_config(&g, cfg);
+    for workers in WORKER_MATRIX {
+        let st = sess.job(&App::Cc(4)).workers_per_machine(workers).run();
+        assert_eq!(
+            st.total_count(),
+            count_embeddings(&g, &Pattern::clique(4), Induced::Edge),
+            "workers={workers}"
+        );
+    }
+}
+
+/// Seeded sweep: random graphs × machine counts × scheduler granularity;
+/// workers ∈ {1, 8} never diverge in any covered bit. Failures print the
+/// case seed for reproduction.
+#[test]
+fn prop_random_sweep_workers_invariant() {
+    let mut rng = Rng::new(0x5C4E_D5EE);
+    for case in 0..10 {
+        let seed = rng.next_u64();
+        let n = 40 + rng.below(120) as usize;
+        let m = n + rng.below(5 * n as u64) as usize;
+        let g = gen::erdos_renyi(n, m, seed);
+        let machines = 1 + rng.below(6) as usize;
+        let mut cfg = RunConfig::with_machines(machines);
+        cfg.engine.chunk_capacity = 16 + rng.below(512) as usize;
+        cfg.engine.mini_batch = 1 + rng.below(128) as usize;
+        cfg.engine.task_split_levels = rng.below(3) as usize;
+        cfg.engine.task_split_width = 1 + rng.below(12) as usize;
+        cfg.engine.max_live_chunks = 1 + rng.below(32) as usize;
+        let sess = MiningSession::with_config(&g, cfg);
+        let app = match rng.below(3) {
+            0 => App::Tc,
+            1 => App::Mc(3),
+            _ => App::Cc(4),
+        };
+        let a = sess.job(&app).workers_per_machine(1).run();
+        let b = sess.job(&app).workers_per_machine(8).run();
+        assert_bitwise_eq(
+            &a,
+            &b,
+            &format!("case {case} seed {seed} machines {machines} {}", app.name()),
+        );
+    }
+}
+
+/// Per-embedding sinks (the paper's Algorithm-1 user function) flow
+/// through per-task sinks reduced in task order: a sink-based app must
+/// aggregate to identical results for any worker count.
+#[test]
+fn sink_apps_are_worker_count_invariant() {
+    let base = gen::erdos_renyi(120, 480, 0x51_4B);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 2) as u8 + 1).collect();
+    let g = base.with_labels(labels);
+    let queries = vec![
+        Pattern::triangle().with_labels(&[1, 1, 2]),
+        Pattern::chain(3).with_labels(&[2, 1, 2]),
+    ];
+    let mut reference: Option<(RunStats, Vec<(u64, u64, bool)>)> = None;
+    for workers in WORKER_MATRIX {
+        let app = LabeledQuery::new(queries.clone(), Induced::Edge, 1);
+        let sess = MiningSession::new(&g, 3);
+        let st = sess.job(&app).workers_per_machine(workers).run();
+        let results: Vec<(u64, u64, bool)> =
+            app.results().iter().map(|r| (r.embeddings, r.support, r.kept)).collect();
+        match &reference {
+            None => reference = Some((st, results)),
+            Some((ref_st, ref_results)) => {
+                assert_bitwise_eq(ref_st, &st, &format!("labeled query workers={workers}"));
+                assert_eq!(ref_results, &results, "workers={workers}");
+            }
+        }
+    }
+}
