@@ -1,0 +1,157 @@
+//! Comm-subsystem bench: async windowed fetches vs the synchronous
+//! message path, measured — not modelled — on a skewed R-MAT workload.
+//!
+//! Workload: 4-machine triangle counting on a skewed R-MAT graph (hub
+//! mass concentrated on few vertices → heavy cross-partition fetch
+//! traffic). Three transports, bitwise-identical results asserted along
+//! the way:
+//!
+//! 1. **sync-fetch** — the escape hatch: remote reads through the shared
+//!    `ClusterView`, no messages, no stalls (wall-clock reference).
+//! 2. **window-1** — the degenerate messaging case (`max_in_flight = 1`,
+//!    `batch_bytes = 0`): every circulant batch is a blocking round trip
+//!    through the owner's comm thread. This is "the synchronous path"
+//!    with real messages.
+//! 3. **async** — the default window with aggregation: fetches are
+//!    issued ahead, frame tasks park instead of blocking, workers run
+//!    other tasks while responses drain.
+//!
+//! The acceptance metric is **measured exposed communication**
+//! (`RunStats::comm_stall_s` — wall seconds workers actually stalled on
+//! the fabric): async windowed fetches must reduce it versus window-1
+//! (`async_reduces_exposed_comm` in `BENCH_comm.json`). Numbers are
+//! recorded in EXPERIMENTS.md §Comm.
+
+use kudu::cluster::Transport;
+use kudu::comm::CommConfig;
+use kudu::config::EngineConfig;
+use kudu::engine::KuduEngine;
+use kudu::graph::gen;
+use kudu::metrics::{ComputeModel, NetModel, RunStats};
+use kudu::par;
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::graphpi_plan;
+use std::time::Instant;
+
+const MACHINES: usize = 4;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn run_mode(
+    g: &kudu::Graph,
+    plan: &kudu::Plan,
+    comm: CommConfig,
+) -> (RunStats, f64) {
+    let cfg = EngineConfig {
+        comm,
+        // Fine task granularity: many frames in flight, so parking and
+        // the window actually matter.
+        chunk_capacity: 256,
+        mini_batch: 32,
+        task_split_levels: 2,
+        task_split_width: 16,
+        ..Default::default()
+    };
+    let pg = PartitionedGraph::new(g, MACHINES);
+    let mut tr = Transport::new(pg, NetModel::default());
+    let t0 = Instant::now();
+    let st = KuduEngine::run(g, plan, &cfg, &ComputeModel::default(), &mut tr);
+    (st, t0.elapsed().as_secs_f64())
+}
+
+#[track_caller]
+fn assert_same_results(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits(), "{what}: vtime");
+    assert_eq!(a.work_units, b.work_units, "{what}: work");
+}
+
+fn main() {
+    let host_threads = par::resolve_threads(0);
+    let g = gen::rmat(12, 16, 42);
+    let plan = graphpi_plan(&Pattern::triangle(), Induced::Edge);
+    println!(
+        "comm bench: TC on rmat-12 ({} vertices, {} edges, skew(top5%) {:.1}%), \
+         {MACHINES} machines, host threads {host_threads}",
+        g.num_vertices(),
+        g.num_edges(),
+        g.skewness(0.05) * 100.0
+    );
+
+    let default_window = CommConfig::default().max_in_flight;
+    let modes: [(&str, CommConfig); 3] = [
+        ("sync_fetch", CommConfig { max_in_flight: 1, batch_bytes: 0, sync_fetch: true }),
+        ("window1", CommConfig { max_in_flight: 1, batch_bytes: 0, sync_fetch: false }),
+        (
+            "async",
+            CommConfig { max_in_flight: default_window, batch_bytes: 4096, sync_fetch: false },
+        ),
+    ];
+
+    // Warmup + determinism reference.
+    let (reference, _) = run_mode(&g, &plan, modes[0].1);
+    assert!(reference.network_bytes > 0, "workload must communicate");
+
+    let reps = 5;
+    let mut rows = Vec::new();
+    let mut stall_medians = std::collections::HashMap::new();
+    for (name, comm) in modes {
+        let mut walls = Vec::with_capacity(reps);
+        let mut stalls = Vec::with_capacity(reps);
+        let mut last = None;
+        for _ in 0..reps {
+            let (st, wall) = run_mode(&g, &plan, comm);
+            assert_same_results(&reference, &st, name);
+            walls.push(wall);
+            stalls.push(st.comm_stall_s);
+            last = Some(st);
+        }
+        let st = last.unwrap();
+        let wall_m = median(walls);
+        let stall_m = median(stalls);
+        stall_medians.insert(name, stall_m);
+        println!(
+            "bench comm/{name}  wall {wall_m:.4}s  stall {stall_m:.4}s  \
+             flushes {}  peak_in_flight {}",
+            st.comm_flushes, st.peak_in_flight
+        );
+        rows.push(format!(
+            "    {{\"mode\": \"{name}\", \"max_in_flight\": {}, \"batch_bytes\": {}, \
+             \"sync_fetch\": {}, \"wall_median_s\": {wall_m}, \
+             \"comm_stall_median_s\": {stall_m}, \"comm_flushes\": {}, \
+             \"peak_in_flight\": {}}}",
+            comm.max_in_flight, comm.batch_bytes, comm.sync_fetch, st.comm_flushes,
+            st.peak_in_flight
+        ));
+    }
+
+    let stall_sync = stall_medians["window1"];
+    let stall_async = stall_medians["async"];
+    let reduces = stall_async < stall_sync;
+    println!(
+        "bench comm/acceptance  window1 stall {stall_sync:.4}s  async stall {stall_async:.4}s  \
+         async_reduces_exposed_comm {reduces}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"comm\",\n  \"workload\": \"tc_rmat12_{MACHINES}machines\",\n  \
+         \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
+         \"count\": {},\n  \"network_bytes\": {},\n  \"deterministic\": true,\n  \
+         \"modes\": [\n{}\n  ],\n  \
+         \"acceptance\": {{\n    \"window1_stall_s\": {stall_sync},\n    \
+         \"async_stall_s\": {stall_async},\n    \
+         \"async_reduces_exposed_comm\": {reduces}\n  }}\n}}\n",
+        reference.total_count(),
+        reference.network_bytes,
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_comm.json", json).expect("write BENCH_comm.json");
+    println!("wrote BENCH_comm.json");
+}

@@ -12,6 +12,7 @@
 //! cache bookkeeping cannot be amortised.
 
 use crate::cluster::{Timeline, TrafficLedger, Transport};
+use crate::comm::{CommConfig, CommFabric, ResponseSlot, ShutdownGuard};
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
 use crate::par;
@@ -38,12 +39,18 @@ impl GThinker {
     /// virtual time); `sim_threads` is the host-side parallelism of the
     /// simulation itself (`0` = all cores), which never changes results:
     /// machines only read shared state, and the reduction below runs in
-    /// machine order.
+    /// machine order. `comm` selects the fetch transport: the real
+    /// message-passing fabric of [`crate::comm`] (a per-task pull becomes
+    /// batched `FetchRequest`s answered by the owner's comm thread, with
+    /// the per-list copy work charged from the received payloads), or
+    /// the synchronous shared-view path when `comm.sync_fetch` is set —
+    /// bitwise-identical metrics either way.
     pub fn run(
         g: &Graph,
         plan: &Plan,
         threads: usize,
         sim_threads: usize,
+        comm: &CommConfig,
         compute: &ComputeModel,
         transport: &mut Transport,
     ) -> RunStats {
@@ -51,8 +58,19 @@ impl GThinker {
         let spu = compute.seconds_per_unit / threads.max(1) as f64;
         let n = transport.num_machines();
         let view = transport.view();
+        let fabric = (n > 1 && !comm.sync_fetch).then(|| CommFabric::new(n, *comm));
 
-        let outcomes = par::run_indexed(par::resolve_threads(sim_threads), n, |machine| {
+        let outcomes = std::thread::scope(|scope| {
+            if let Some(f) = &fabric {
+                for m in 0..n {
+                    scope.spawn(move || f.run_server(m, g));
+                }
+            }
+            let fab = fabric.as_ref();
+            // Stop the servers when the machines finish (or a panic
+            // unwinds past us) so the scope's join always completes.
+            let _shutdown = ShutdownGuard(fab);
+            par::run_indexed(par::resolve_threads(sim_threads), n, |machine| {
             let mut timeline = Timeline::default();
             let mut work = 0u64;
             let mut ledger = TrafficLedger::new(n);
@@ -91,10 +109,34 @@ impl GThinker {
                     by_owner.entry(view.partitioned().owner(u)).or_default().push(u);
                 }
                 let mut gate = 0.0f64;
+                let mut replies: Vec<ResponseSlot> = Vec::new();
                 for (owner, verts) in by_owner {
+                    // Accounting and virtual time at issue — identical on
+                    // both transports.
                     let (_b, t) = view.fetch_batch(&mut ledger, machine, owner, &verts);
                     gate = gate.max(timeline.post_comm(t));
-                    work += verts.iter().map(|&u| g.degree(u) as u64 / 4 + 1).sum::<u64>();
+                    match fab {
+                        None => {
+                            // Synchronous path: charge the per-list copy
+                            // work straight off the shared CSR.
+                            work +=
+                                verts.iter().map(|&u| g.degree(u) as u64 / 4 + 1).sum::<u64>();
+                        }
+                        Some(f) => replies.push(f.issue_fetch(machine, owner, verts)),
+                    }
+                }
+                if let Some(f) = fab {
+                    // Pull the working set for real: wait for the owners'
+                    // comm threads, then charge the same copy work from
+                    // the received payloads (each payload is the owner's
+                    // copy of the CSR slice, so the charge is identical).
+                    f.flush(machine);
+                    for slot in &replies {
+                        let resp = f.wait(machine, slot);
+                        for i in 0..resp.num_payloads() {
+                            work += resp.payload(i).len() as u64 / 4 + 1;
+                        }
+                    }
                 }
                 // Local enumeration over the pulled subgraph.
                 let (c, w) = enumerate_local(g, plan, v0);
@@ -121,6 +163,7 @@ impl GThinker {
                 timeline.post_compute(0.0, all - posted);
             }
             (count, work, ledger, timeline.finish(), timeline.exposed_comm())
+            })
         });
 
         let mut stats = RunStats::default();
@@ -141,6 +184,12 @@ impl GThinker {
         stats.exposed_comm_s = worst_exposed;
         stats.network_bytes = transport.traffic.total_bytes();
         stats.network_messages = transport.traffic.total_messages();
+        if let Some(f) = &fabric {
+            let d = f.diagnostics();
+            stats.comm_stall_s = d.stall_s;
+            stats.peak_in_flight = d.peak_in_flight;
+            stats.comm_flushes = d.flushes;
+        }
         stats.wall_s = wall.elapsed().as_secs_f64();
         stats
     }
@@ -252,9 +301,42 @@ mod tests {
         let expect = count_embeddings(&g, &Pattern::triangle(), Induced::Edge);
         let pg = PartitionedGraph::new(&g, 4);
         let mut tr = Transport::new(pg, NetModel::default());
-        let st = GThinker::run(&g, &plan, 1, 0, &ComputeModel::default(), &mut tr);
+        let st =
+            GThinker::run(&g, &plan, 1, 0, &CommConfig::default(), &ComputeModel::default(), &mut tr);
         assert_eq!(st.total_count(), expect);
         assert!(st.network_bytes > 0);
+    }
+
+    #[test]
+    fn message_passing_matches_sync_fetch_bitwise() {
+        // The real-message transport and the synchronous shared-view path
+        // must agree on every deterministic metric, for any window.
+        let g = gen::erdos_renyi(150, 700, 63);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let run = |comm: CommConfig| {
+            let pg = PartitionedGraph::new(&g, 4);
+            let mut tr = Transport::new(pg, NetModel::default());
+            let st = GThinker::run(&g, &plan, 1, 0, &comm, &ComputeModel::default(), &mut tr);
+            (st, tr.traffic)
+        };
+        let (sync, sync_traffic) =
+            run(CommConfig { sync_fetch: true, ..Default::default() });
+        for window in [1usize, 4, 64] {
+            let (asy, asy_traffic) = run(CommConfig {
+                max_in_flight: window,
+                batch_bytes: 0,
+                sync_fetch: false,
+            });
+            assert_eq!(sync.counts, asy.counts, "window={window}");
+            assert_eq!(sync.work_units, asy.work_units, "window={window}");
+            assert_eq!(sync_traffic, asy_traffic, "window={window}: traffic matrix");
+            assert_eq!(
+                sync.virtual_time_s.to_bits(),
+                asy.virtual_time_s.to_bits(),
+                "window={window}"
+            );
+            assert!(asy.comm_flushes > 0, "window={window}: messages actually flowed");
+        }
     }
 
     #[test]
@@ -264,7 +346,8 @@ mod tests {
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
         let pg = PartitionedGraph::new(&g, 4);
         let mut tr = Transport::new(pg, NetModel::default());
-        let gt = GThinker::run(&g, &plan, 1, 0, &ComputeModel::default(), &mut tr);
+        let gt =
+            GThinker::run(&g, &plan, 1, 0, &CommConfig::default(), &ComputeModel::default(), &mut tr);
         // Work must massively exceed the pure enumeration work.
         let pure = crate::baselines::SingleMachine::run(&g, &plan, &ComputeModel::default());
         assert!(

@@ -11,6 +11,7 @@
 //! little room to overlap communication with computation.
 
 use crate::cluster::Transport;
+use crate::comm::{CommConfig, CommFabric, ShipEmbeddings};
 use crate::exec;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
@@ -33,6 +34,7 @@ impl MovingComputation {
         g: &Graph,
         plan: &Plan,
         threads: usize,
+        comm: &CommConfig,
         compute: &ComputeModel,
         transport: &mut Transport,
     ) -> RunStats {
@@ -44,7 +46,12 @@ impl MovingComputation {
         // between shuffles), so it stays serial and uses the split
         // transport's single-ledger convenience path — same ClusterView
         // cost model underneath, so traffic comparisons against the
-        // parallel engines remain apples-to-apples.
+        // parallel engines remain apples-to-apples. The shuffle itself
+        // still flows through the comm layer's typed [`ShipEmbeddings`]
+        // messages (one envelope per machine pair per level, matching the
+        // accounted message count); a BSP superstep needs no comm server
+        // threads — each machine drains its own mailbox at the barrier.
+        let fabric = (n > 1 && !comm.sync_fetch).then(|| CommFabric::new(n, *comm));
 
         // Per-machine frontiers of partial embeddings at the current level.
         let mut frontiers: Vec<Vec<Partial>> = vec![Vec::new(); n];
@@ -103,10 +110,31 @@ impl MovingComputation {
                             extra_bytes[m][d],
                         );
                         per_machine_comm_s[m] += t;
+                        if let Some(f) = &fabric {
+                            f.send_ship(
+                                m,
+                                d,
+                                ShipEmbeddings {
+                                    count: shipped[m][d],
+                                    level: level + 1,
+                                    extra_bytes: extra_bytes[m][d],
+                                },
+                            );
+                        }
                     }
                 }
             }
-            // Synchronous barrier: everyone waits for the shuffle.
+            // Synchronous barrier: everyone waits for the shuffle. Each
+            // machine receives its shipped embeddings off the wire; the
+            // received counts must reconcile with what was sent (a cheap
+            // end-to-end check that the messages really flowed).
+            if let Some(f) = &fabric {
+                for d in 0..n {
+                    let received: u64 = f.recv_ships(d).iter().map(|s| s.count).sum();
+                    let sent: u64 = (0..n).filter(|&m| m != d).map(|m| shipped[m][d]).sum();
+                    assert_eq!(received, sent, "machine {d}: shuffle reconciliation");
+                }
+            }
             // Extension phase (local on each machine).
             frontiers = vec![Vec::new(); n];
             for (m, frontier) in next_frontiers.into_iter().enumerate() {
@@ -136,6 +164,9 @@ impl MovingComputation {
         out.network_bytes = transport.traffic.total_bytes();
         out.network_messages = transport.traffic.total_messages();
         out.peak_embedding_bytes = peak;
+        if let Some(f) = &fabric {
+            out.comm_flushes = f.diagnostics().flushes;
+        }
         out.wall_s = wall.elapsed().as_secs_f64();
         out
     }
@@ -236,7 +267,14 @@ mod tests {
             let expect = count_embeddings(&g, &p, Induced::Edge);
             let pg = PartitionedGraph::new(&g, 3);
             let mut tr = Transport::new(pg, NetModel::default());
-            let st = MovingComputation::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+            let st = MovingComputation::run(
+                &g,
+                &plan,
+                1,
+                &CommConfig::default(),
+                &ComputeModel::default(),
+                &mut tr,
+            );
             assert_eq!(st.total_count(), expect, "{p:?}");
         }
     }
@@ -247,8 +285,41 @@ mod tests {
         let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
         let pg = PartitionedGraph::new(&g, 4);
         let mut tr = Transport::new(pg, NetModel::default());
-        let st = MovingComputation::run(&g, &plan, 1, &ComputeModel::default(), &mut tr);
+        let st = MovingComputation::run(
+            &g,
+            &plan,
+            1,
+            &CommConfig::default(),
+            &ComputeModel::default(),
+            &mut tr,
+        );
         assert!(st.network_bytes > 0, "shuffling must generate traffic");
         assert!(st.exposed_comm_s > 0.0, "BSP shuffle exposes its comm");
+        // The shuffle flowed through typed ship messages (one envelope
+        // per accounted modelled message) — unless the environment pinned
+        // the synchronous escape hatch (CI determinism matrix).
+        if !CommConfig::default().sync_fetch {
+            assert_eq!(st.comm_flushes, st.network_messages, "ship envelopes = modelled messages");
+        }
+    }
+
+    #[test]
+    fn ship_messages_match_sync_path_bitwise() {
+        let g = gen::rmat(8, 8, 77);
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let run = |comm: CommConfig| {
+            let pg = PartitionedGraph::new(&g, 4);
+            let mut tr = Transport::new(pg, NetModel::default());
+            let st =
+                MovingComputation::run(&g, &plan, 1, &comm, &ComputeModel::default(), &mut tr);
+            (st, tr.traffic)
+        };
+        let (sync, sync_traffic) = run(CommConfig { sync_fetch: true, ..Default::default() });
+        let (msg, msg_traffic) = run(CommConfig { sync_fetch: false, ..Default::default() });
+        assert_eq!(sync.counts, msg.counts);
+        assert_eq!(sync_traffic, msg_traffic, "traffic matrix");
+        assert_eq!(sync.virtual_time_s.to_bits(), msg.virtual_time_s.to_bits());
+        assert_eq!(sync.comm_flushes, 0);
+        assert!(msg.comm_flushes > 0);
     }
 }

@@ -22,15 +22,15 @@
 //! * [`Transport`] — owns the merged [`Traffic`] for a run and doubles as
 //!   a single-ledger convenience for serial callers and tests.
 
+use crate::comm;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{NetModel, Traffic};
 use crate::partition::PartitionedGraph;
 
-/// Wire-format overhead per vertex request/response (vertex id + length
-/// header), matching a compact MPI encoding.
-pub const PER_VERTEX_HEADER_BYTES: u64 = 8;
-/// Fixed per-message envelope.
-pub const PER_MESSAGE_BYTES: u64 = 64;
+// The wire-cost formulas (and their constants) live in the comm layer —
+// the one place a message's bytes are defined; re-exported here for the
+// transport-facing callers that predate the comm subsystem.
+pub use crate::comm::{PER_MESSAGE_BYTES, PER_VERTEX_HEADER_BYTES};
 
 /// Shared, read-only view of the simulated cluster: the partitioned graph
 /// plus the network cost model. Nothing here is mutable, so a copy can be
@@ -67,18 +67,11 @@ impl<'g> ClusterView<'g> {
     }
 
     /// Wire cost of one batched fetch of `vertices`: (request bytes,
-    /// payload bytes, transfer time). Pure — no accounting.
+    /// payload bytes, transfer time). Pure — no accounting. Delegates to
+    /// [`comm::fetch_cost`], the single definition of the formula.
     #[inline]
     pub fn fetch_cost(&self, vertices: &[VertexId]) -> (u64, u64, f64) {
-        let payload: u64 = vertices
-            .iter()
-            .map(|&v| self.pg.graph.degree(v) as u64 * 4 + PER_VERTEX_HEADER_BYTES)
-            .sum::<u64>()
-            + PER_MESSAGE_BYTES;
-        // Request message (vertex ids) + response (edge lists).
-        let request: u64 = vertices.len() as u64 * 4 + PER_MESSAGE_BYTES;
-        let time = self.net.transfer_time(request) + self.net.transfer_time(payload);
-        (request, payload, time)
+        comm::fetch_cost(self.pg.graph, &self.net, vertices)
     }
 
     /// Fetch the edge lists of `vertices` (all owned by `from`) into
@@ -122,7 +115,7 @@ impl<'g> ClusterView<'g> {
         if from == to || count == 0 {
             return (0, 0.0);
         }
-        let bytes = count * (level as u64 * 4) + extra_bytes + PER_MESSAGE_BYTES;
+        let bytes = comm::ship_bytes(count, level, extra_bytes);
         ledger.record(from, to, bytes);
         (bytes, self.net.transfer_time(bytes))
     }

@@ -1,0 +1,599 @@
+//! The message-passing communication subsystem: asynchronous remote
+//! fetches with batching, an in-flight window, and per-machine mailboxes.
+//!
+//! Before this module existed, a "remote fetch" was a synchronous read of
+//! the shared [`crate::cluster::ClusterView`] — overlap between
+//! communication and computation was only *imputed* by the virtual
+//! timeline, never exercised. The comm subsystem makes the messages real:
+//!
+//! * **Wire protocol** ([`proto`]) — typed [`FetchRequest`] /
+//!   [`FetchResponse`] pairs (plus [`ShipEmbeddings`] for the BSP-style
+//!   baselines), pure request/response so a response is a function of
+//!   graph + request and nothing else.
+//! * **[`CommFabric`]** — one port per machine: an incoming mailbox, a
+//!   per-destination outbox that aggregates logical requests into
+//!   size-bounded [`WireBatch`] envelopes (MPI-style aggregation, bounded
+//!   by [`CommConfig::batch_bytes`]), and an in-flight request window
+//!   ([`CommConfig::max_in_flight`]) modelling a bounded pool of
+//!   outstanding non-blocking requests.
+//! * **Per-machine comm server** ([`CommFabric::run_server`]) — each
+//!   machine's requests are served from a thread owned by that machine
+//!   (the engine spawns one per simulated machine): it pops envelopes,
+//!   materialises adjacency payloads from the machine's own partition,
+//!   and fills each request's reply slot. Requesters never read another
+//!   machine's partition directly.
+//!
+//! **What stays deterministic.** Traffic accounting and virtual-time math
+//! are charged at *issue* time, per logical request, with the wire-cost
+//! formulas below — the one place the cost of a message is defined
+//! ([`fetch_cost`], [`ship_bytes`]; [`crate::cluster`] delegates here).
+//! Physical aggregation, window stalls, and message timing affect only
+//! wall-clock behaviour and the comm diagnostics (`comm_stall_s`,
+//! `peak_in_flight`, `comm_flushes` in [`crate::metrics::RunStats`]).
+//! Counts, traffic matrices, and virtual time are bitwise identical to
+//! the synchronous path for any window/batch setting — pinned by
+//! `tests/comm_equivalence.rs`. The synchronous escape hatch
+//! ([`CommConfig::sync_fetch`], env `KUDU_SYNC_FETCH`) bypasses messaging
+//! entirely and reproduces the pre-comm execution exactly; the degenerate
+//! `max_in_flight = 1, batch_bytes = 0` setting keeps the messages but
+//! serialises them into blocking round trips.
+
+pub mod proto;
+
+pub use proto::{FetchRequest, FetchResponse, Message, ResponseSlot, ShipEmbeddings, WireBatch};
+
+use crate::graph::{Graph, VertexId};
+use crate::metrics::NetModel;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Wire-format overhead per vertex request/response (vertex id + length
+/// header), matching a compact MPI encoding.
+pub const PER_VERTEX_HEADER_BYTES: u64 = 8;
+/// Fixed per-message envelope.
+pub const PER_MESSAGE_BYTES: u64 = 64;
+
+/// Wire cost of one batched fetch of `vertices`: (request bytes, payload
+/// bytes, transfer time). Pure — no accounting, no side effects. This is
+/// the single definition of the fetch cost formula; the transport layer
+/// ([`crate::cluster::ClusterView::fetch_cost`]) delegates here.
+#[inline]
+pub fn fetch_cost(graph: &Graph, net: &NetModel, vertices: &[VertexId]) -> (u64, u64, f64) {
+    let payload: u64 = vertices
+        .iter()
+        .map(|&v| graph.degree(v) as u64 * 4 + PER_VERTEX_HEADER_BYTES)
+        .sum::<u64>()
+        + PER_MESSAGE_BYTES;
+    // Request message (vertex ids) + response (edge lists).
+    let request: u64 = vertices.len() as u64 * 4 + PER_MESSAGE_BYTES;
+    let time = net.transfer_time(request) + net.transfer_time(payload);
+    (request, payload, time)
+}
+
+/// Wire bytes of one embedding-shipping message: `count` embeddings of
+/// `level` vertices each, plus piggybacked edge-list payload. The single
+/// definition of the shipping cost formula
+/// ([`crate::cluster::ClusterView::ship_embeddings`] delegates here).
+#[inline]
+pub fn ship_bytes(count: u64, level: usize, extra_bytes: u64) -> u64 {
+    count * (level as u64 * 4) + extra_bytes + PER_MESSAGE_BYTES
+}
+
+/// Knobs of the comm subsystem (part of
+/// [`crate::config::EngineConfig`], validated by
+/// [`crate::config::EngineConfig::validate`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommConfig {
+    /// Maximum logical fetch requests a machine may have outstanding
+    /// (issued, response not yet received). Models a bounded pool of
+    /// non-blocking MPI requests; must be ≥ 1. `1` (with `batch_bytes =
+    /// 0`) degenerates to synchronous blocking round trips.
+    pub max_in_flight: usize,
+    /// Outbox aggregation threshold in modelled request bytes: logical
+    /// requests to one destination are buffered into a single physical
+    /// envelope until the buffer reaches this size (it is always flushed
+    /// before the requester waits or a task parks). `0` sends every
+    /// logical request as its own envelope.
+    pub batch_bytes: u64,
+    /// Escape hatch: bypass the message-passing subsystem and read remote
+    /// partitions synchronously through the shared `ClusterView` (the
+    /// pre-comm execution, reproduced exactly). Counts, traffic, and
+    /// virtual time are bitwise identical either way; only wall-clock
+    /// behaviour and the comm diagnostics differ. Env-overridable default
+    /// via `KUDU_SYNC_FETCH=1` (the CI determinism matrix pins it).
+    pub sync_fetch: bool,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            max_in_flight: env_usize("KUDU_MAX_IN_FLIGHT", 16),
+            batch_bytes: 4096,
+            sync_fetch: env_flag("KUDU_SYNC_FETCH"),
+        }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+/// Outgoing aggregation buffer toward one destination.
+struct Outbox {
+    msgs: Vec<Message>,
+    /// Modelled request bytes buffered (the `batch_bytes` gauge).
+    bytes: u64,
+}
+
+/// One machine's side of the fabric: incoming mailbox, outgoing
+/// aggregation buffers, window state, and diagnostics.
+struct MachinePort {
+    /// Incoming physical envelopes, served by this machine's comm thread.
+    inbox: Mutex<VecDeque<WireBatch>>,
+    /// Per-destination outgoing aggregation buffers.
+    out: Vec<Mutex<Outbox>>,
+    /// Logical fetches issued by this machine and not yet answered.
+    in_flight: AtomicUsize,
+    // --- diagnostics (wall-clock artefacts, outside the determinism
+    // contract like `RunStats::wall_s`) ---
+    peak_in_flight: AtomicUsize,
+    flushes: AtomicU64,
+    stall_ns: AtomicU64,
+}
+
+/// Aggregated comm diagnostics of one run (see
+/// [`crate::metrics::RunStats`] for field semantics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommDiagnostics {
+    /// Wall-clock seconds requesters spent stalled on the window or on
+    /// pending responses, summed over machines.
+    pub stall_s: f64,
+    /// Peak outstanding logical fetches on any machine.
+    pub peak_in_flight: u64,
+    /// Physical envelopes sent (fetch flushes + ship messages).
+    pub flushes: u64,
+}
+
+/// Stops a fabric's comm servers when dropped. Hosts place one inside
+/// the thread scope that spawned the servers, so the scope's implicit
+/// join always completes — even when a worker panic unwinds past the
+/// normal shutdown call.
+pub struct ShutdownGuard<'f>(pub Option<&'f CommFabric>);
+
+impl Drop for ShutdownGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(f) = self.0 {
+            f.shutdown();
+        }
+    }
+}
+
+/// The message-passing fabric of one run: per-machine ports plus the
+/// shared shutdown flag for the comm server threads.
+///
+/// Mailboxes are bounded *by construction* rather than by blocking
+/// senders: a machine can have at most `max_in_flight` logical fetches
+/// outstanding, so a mailbox never holds more than
+/// `(num_machines - 1) × max_in_flight` unserved fetch requests (each at
+/// most one envelope), and the BSP ship path enqueues at most one
+/// envelope per machine pair per superstep, drained at the next barrier.
+/// HUGE-style bounded-memory comm without a send-side block that could
+/// deadlock the window.
+pub struct CommFabric {
+    cfg: CommConfig,
+    ports: Vec<MachinePort>,
+    stop: AtomicBool,
+}
+
+impl CommFabric {
+    pub fn new(num_machines: usize, mut cfg: CommConfig) -> Self {
+        // Defensive clamp: a zero window would turn every issue into an
+        // unbounded spin. `EngineConfig::validate` reports ZeroInFlight
+        // as a config error on the engine/session path; direct fabric
+        // users (baselines, tests) and a stray `KUDU_MAX_IN_FLIGHT=0`
+        // env get the degenerate-but-live window of 1 instead of a hang.
+        cfg.max_in_flight = cfg.max_in_flight.max(1);
+        let ports = (0..num_machines)
+            .map(|_| MachinePort {
+                inbox: Mutex::new(VecDeque::new()),
+                out: (0..num_machines)
+                    .map(|_| Mutex::new(Outbox { msgs: Vec::new(), bytes: 0 }))
+                    .collect(),
+                in_flight: AtomicUsize::new(0),
+                peak_in_flight: AtomicUsize::new(0),
+                flushes: AtomicU64::new(0),
+                stall_ns: AtomicU64::new(0),
+            })
+            .collect();
+        CommFabric { cfg, ports, stop: AtomicBool::new(false) }
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.ports.len()
+    }
+
+    pub fn config(&self) -> &CommConfig {
+        &self.cfg
+    }
+
+    /// Issue one logical fetch from `machine` to `owner`: reserve a slot
+    /// in the machine's in-flight window (flushing and stalling while the
+    /// window is full), buffer the request in the outbox toward `owner`,
+    /// and auto-flush once the buffer reaches `batch_bytes`. Returns the
+    /// reply slot the owner's comm server will fill. Does **no** traffic
+    /// accounting — the caller charges the wire cost at issue time, which
+    /// is what keeps metrics bitwise identical to the synchronous path.
+    pub fn issue_fetch(
+        &self,
+        machine: usize,
+        owner: usize,
+        vertices: Vec<VertexId>,
+    ) -> ResponseSlot {
+        debug_assert_ne!(machine, owner, "local reads never go through the fabric");
+        let port = &self.ports[machine];
+        // Reserve a window slot (CAS loop; while full, flush so the
+        // outstanding requests are servable, then spin-yield).
+        let mut flushed = false;
+        let mut stall_t0: Option<Instant> = None;
+        let mut cur = port.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cfg.max_in_flight {
+                if !flushed {
+                    self.flush(machine);
+                    flushed = true;
+                }
+                if stall_t0.is_none() {
+                    stall_t0 = Some(Instant::now());
+                }
+                std::thread::yield_now();
+                cur = port.in_flight.load(Ordering::Relaxed);
+                continue;
+            }
+            match port.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        port.peak_in_flight.fetch_max(cur + 1, Ordering::Relaxed);
+        if let Some(t0) = stall_t0 {
+            port.stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+
+        let slot: ResponseSlot = Arc::new(OnceLock::new());
+        let request_bytes = vertices.len() as u64 * 4 + PER_MESSAGE_BYTES;
+        let should_flush = {
+            let mut out = port.out[owner].lock().unwrap();
+            out.msgs.push(Message::Fetch(FetchRequest { vertices, reply: slot.clone() }));
+            out.bytes += request_bytes;
+            out.bytes >= self.cfg.batch_bytes
+        };
+        if should_flush {
+            self.flush_to(machine, owner);
+        }
+        slot
+    }
+
+    /// Flush the outbox from `machine` toward `dest` as one physical
+    /// envelope (no-op when empty).
+    fn flush_to(&self, machine: usize, dest: usize) {
+        let msgs = {
+            let mut out = self.ports[machine].out[dest].lock().unwrap();
+            if out.msgs.is_empty() {
+                return;
+            }
+            out.bytes = 0;
+            std::mem::take(&mut out.msgs)
+        };
+        self.ports[machine].flushes.fetch_add(1, Ordering::Relaxed);
+        self.ports[dest].inbox.lock().unwrap().push_back(WireBatch { from: machine, msgs });
+    }
+
+    /// Flush every outbox of `machine`. Requesters call this before any
+    /// wait (and tasks before parking), so every issued request is
+    /// servable before anyone depends on its response — the liveness
+    /// invariant of the batching layer.
+    pub fn flush(&self, machine: usize) {
+        for dest in 0..self.ports.len() {
+            if dest != machine {
+                self.flush_to(machine, dest);
+            }
+        }
+    }
+
+    /// Serve everything currently queued for `machine`: materialise
+    /// adjacency payloads from the shared CSR (this machine's partition —
+    /// requests are only ever routed to their owner) and fill each reply
+    /// slot. Ship messages are one-way and must be drained with
+    /// [`CommFabric::recv_ships`] instead. Returns the number of logical
+    /// fetches served.
+    pub fn serve(&self, machine: usize, graph: &Graph) -> usize {
+        let mut served = 0usize;
+        loop {
+            let batch = { self.ports[machine].inbox.lock().unwrap().pop_front() };
+            let Some(batch) = batch else { break };
+            for msg in batch.msgs {
+                match msg {
+                    Message::Fetch(req) => {
+                        let mut offsets = Vec::with_capacity(req.vertices.len() + 1);
+                        let mut data = Vec::new();
+                        offsets.push(0u32);
+                        for &v in &req.vertices {
+                            data.extend_from_slice(graph.neighbors(v));
+                            offsets.push(data.len() as u32);
+                        }
+                        let dup = req.reply.set(FetchResponse { offsets, data }).is_err();
+                        debug_assert!(!dup, "a request is served exactly once");
+                        // Response received ⇒ the requester's window slot
+                        // frees (completion of a non-blocking request).
+                        self.ports[batch.from].in_flight.fetch_sub(1, Ordering::AcqRel);
+                        served += 1;
+                    }
+                    Message::Ship(_) => {
+                        unreachable!("ship messages are drained via recv_ships")
+                    }
+                }
+            }
+        }
+        served
+    }
+
+    /// Body of `machine`'s dedicated comm server thread: serve incoming
+    /// fetches until [`CommFabric::shutdown`], backing off to short
+    /// sleeps when idle.
+    pub fn run_server(&self, machine: usize, graph: &Graph) {
+        let mut idle = 0u32;
+        while !self.stop.load(Ordering::Acquire) {
+            if self.serve(machine, graph) > 0 {
+                idle = 0;
+                continue;
+            }
+            idle += 1;
+            if idle < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Signal the comm server threads to exit (called after the worker
+    /// pool has joined — no requester is waiting by then).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Block until `slot` is filled, recording the stall on `machine`'s
+    /// port. The response is guaranteed to arrive: every issued request
+    /// was flushed before this wait (see [`CommFabric::flush`]) and the
+    /// owner's server thread runs until shutdown.
+    pub fn wait<'s>(&self, machine: usize, slot: &'s ResponseSlot) -> &'s FetchResponse {
+        if let Some(r) = slot.get() {
+            return r;
+        }
+        let t0 = Instant::now();
+        loop {
+            if let Some(r) = slot.get() {
+                self.ports[machine]
+                    .stall_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                return r;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Send one embedding-shipping message (its own envelope — shuffles
+    /// are already aggregated per destination by the caller). Like
+    /// fetches, the wire cost is accounted by the caller at send time.
+    pub fn send_ship(&self, machine: usize, dest: usize, ship: ShipEmbeddings) {
+        self.ports[machine].flushes.fetch_add(1, Ordering::Relaxed);
+        self.ports[dest]
+            .inbox
+            .lock()
+            .unwrap()
+            .push_back(WireBatch { from: machine, msgs: vec![Message::Ship(ship)] });
+    }
+
+    /// Drain the embedding-shipping messages queued for `machine` (the
+    /// BSP receive phase of the moving-computation baseline).
+    pub fn recv_ships(&self, machine: usize) -> Vec<ShipEmbeddings> {
+        let mut ships = Vec::new();
+        loop {
+            let batch = { self.ports[machine].inbox.lock().unwrap().pop_front() };
+            let Some(batch) = batch else { break };
+            for msg in batch.msgs {
+                match msg {
+                    Message::Ship(s) => ships.push(s),
+                    Message::Fetch(_) => {
+                        unreachable!("fetches are served by the comm server, not recv_ships")
+                    }
+                }
+            }
+        }
+        ships
+    }
+
+    /// Sum the per-port diagnostics of the run.
+    pub fn diagnostics(&self) -> CommDiagnostics {
+        let mut stall_ns = 0u64;
+        let mut peak = 0usize;
+        let mut flushes = 0u64;
+        for p in &self.ports {
+            stall_ns += p.stall_ns.load(Ordering::Relaxed);
+            peak = peak.max(p.peak_in_flight.load(Ordering::Relaxed));
+            flushes += p.flushes.load(Ordering::Relaxed);
+        }
+        CommDiagnostics {
+            stall_s: stall_ns as f64 / 1e9,
+            peak_in_flight: peak as u64,
+            flushes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Transport;
+    use crate::graph::gen;
+    use crate::partition::PartitionedGraph;
+
+    fn async_cfg(max_in_flight: usize, batch_bytes: u64) -> CommConfig {
+        CommConfig { max_in_flight, batch_bytes, sync_fetch: false }
+    }
+
+    /// Satellite: the wire-cost formula lives in exactly one place — pin
+    /// the current byte numbers and the transport layer's delegation.
+    #[test]
+    fn wire_cost_formula_pinned() {
+        // Degrees: v0 → 3, v1 → 1, v2 → 2, v3 → 2.
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (2, 3)]);
+        let net = NetModel::default();
+        let (req, pay, time) = fetch_cost(&g, &net, &[0, 1]);
+        // Request: 2 ids × 4B + 64B envelope.
+        assert_eq!(req, 2 * 4 + PER_MESSAGE_BYTES);
+        // Payload: (3 + 1) adjacency ids × 4B + 2 × 8B headers + 64B.
+        assert_eq!(pay, 4 * 4 + 2 * PER_VERTEX_HEADER_BYTES + PER_MESSAGE_BYTES);
+        assert_eq!(time.to_bits(), (net.transfer_time(req) + net.transfer_time(pay)).to_bits());
+        // The transport layer reports the same numbers through its
+        // delegating wrappers.
+        let pg = PartitionedGraph::new(&g, 2);
+        let t = Transport::new(pg, net);
+        assert_eq!(t.view().fetch_cost(&[0, 1]), (req, pay, time));
+        // Ship formula: count·level·4 + extra + envelope.
+        assert_eq!(ship_bytes(10, 3, 100), 10 * 12 + 100 + PER_MESSAGE_BYTES);
+        assert_eq!(ship_bytes(0, 5, 0), PER_MESSAGE_BYTES);
+    }
+
+    #[test]
+    fn fetch_round_trip_delivers_adjacency() {
+        let g = gen::erdos_renyi(60, 200, 7);
+        let fabric = CommFabric::new(2, async_cfg(4, 0));
+        let verts: Vec<VertexId> = vec![1, 5, 9];
+        let slot = fabric.issue_fetch(0, 1, verts.clone());
+        // batch_bytes = 0 ⇒ the request flushed immediately; the owner's
+        // serve call answers it.
+        assert!(slot.get().is_none());
+        assert_eq!(fabric.serve(1, &g), 1);
+        let resp = fabric.wait(0, &slot);
+        assert_eq!(resp.num_payloads(), verts.len());
+        for (i, &v) in verts.iter().enumerate() {
+            assert_eq!(resp.payload(i), g.neighbors(v), "vertex {v}");
+        }
+        // The window slot freed on service.
+        assert_eq!(fabric.ports[0].in_flight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn batching_aggregates_until_flush() {
+        let g = gen::erdos_renyi(40, 120, 11);
+        // Huge threshold: nothing flushes on its own.
+        let fabric = CommFabric::new(2, async_cfg(8, u64::MAX));
+        let s1 = fabric.issue_fetch(0, 1, vec![1]);
+        let s2 = fabric.issue_fetch(0, 1, vec![3]);
+        let s3 = fabric.issue_fetch(0, 1, vec![5]);
+        // Buffered: the owner sees nothing yet.
+        assert_eq!(fabric.serve(1, &g), 0);
+        assert_eq!(fabric.diagnostics().flushes, 0);
+        fabric.flush(0);
+        // One physical envelope carried all three logical requests.
+        assert_eq!(fabric.diagnostics().flushes, 1);
+        assert_eq!(fabric.serve(1, &g), 3);
+        for s in [&s1, &s2, &s3] {
+            assert!(s.get().is_some());
+        }
+    }
+
+    #[test]
+    fn degenerate_batch_bytes_sends_every_request_alone() {
+        let g = gen::erdos_renyi(40, 120, 13);
+        let fabric = CommFabric::new(3, async_cfg(8, 0));
+        fabric.issue_fetch(0, 1, vec![1]);
+        fabric.issue_fetch(0, 2, vec![2]);
+        fabric.issue_fetch(0, 1, vec![3]);
+        assert_eq!(fabric.diagnostics().flushes, 3);
+        assert_eq!(fabric.serve(1, &g) + fabric.serve(2, &g), 3);
+    }
+
+    #[test]
+    fn window_bounds_outstanding_requests() {
+        let g = gen::erdos_renyi(200, 800, 17);
+        let window = 3usize;
+        let fabric = CommFabric::new(2, async_cfg(window, 0));
+        std::thread::scope(|scope| {
+            let f = &fabric;
+            let gr = &g;
+            let server = scope.spawn(move || f.run_server(1, gr));
+            let mut slots = Vec::new();
+            for i in 0..50u32 {
+                slots.push(fabric.issue_fetch(0, 1, vec![i % 100]));
+            }
+            fabric.flush(0);
+            for s in &slots {
+                fabric.wait(0, s);
+            }
+            fabric.shutdown();
+            server.join().unwrap();
+        });
+        let d = fabric.diagnostics();
+        assert!(d.peak_in_flight as usize <= window, "peak {} > window {window}", d.peak_in_flight);
+        assert!(d.flushes >= 50, "every request flushed");
+    }
+
+    #[test]
+    fn zero_window_is_clamped_to_one() {
+        // A zero window would spin forever in issue_fetch; the fabric
+        // defends itself (the engine/session path additionally reports
+        // ConfigError::ZeroInFlight at validation).
+        let fabric = CommFabric::new(2, async_cfg(0, 0));
+        assert_eq!(fabric.config().max_in_flight, 1);
+        let g = gen::erdos_renyi(20, 40, 5);
+        let slot = fabric.issue_fetch(0, 1, vec![3]);
+        assert_eq!(fabric.serve(1, &g), 1);
+        assert!(slot.get().is_some());
+    }
+
+    #[test]
+    fn ship_messages_round_trip() {
+        let fabric = CommFabric::new(2, async_cfg(1, 0));
+        let ship = ShipEmbeddings { count: 42, level: 3, extra_bytes: 99 };
+        fabric.send_ship(0, 1, ship);
+        fabric.send_ship(0, 1, ShipEmbeddings { count: 1, level: 2, extra_bytes: 0 });
+        let got = fabric.recv_ships(1);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], ship);
+        assert_eq!(fabric.recv_ships(1).len(), 0);
+        assert_eq!(fabric.recv_ships(0).len(), 0);
+    }
+
+    #[test]
+    fn shutdown_stops_servers() {
+        let g = gen::erdos_renyi(20, 40, 3);
+        let fabric = CommFabric::new(2, async_cfg(2, 0));
+        std::thread::scope(|scope| {
+            let f = &fabric;
+            let gr = &g;
+            let handles: Vec<_> =
+                (0..2).map(|m| scope.spawn(move || f.run_server(m, gr))).collect();
+            let slot = fabric.issue_fetch(0, 1, vec![0]);
+            fabric.wait(0, &slot);
+            fabric.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,104 @@
+//! The wire protocol of the comm subsystem: typed messages that actually
+//! cross between machine threads.
+//!
+//! The protocol is deliberately pure request/response (Arabesque-style
+//! coordination-free messaging): a [`FetchRequest`] names a batch of
+//! vertices, a [`FetchResponse`] carries their materialised adjacency
+//! payloads, and nothing else ever flows back. Responses are therefore a
+//! pure function of graph + request — the property the determinism
+//! contract of `tests/comm_equivalence.rs` rests on. [`ShipEmbeddings`]
+//! is the one-way embedding-shipping message the moving-computation
+//! (G-thinker/Arabesque-family) baselines use for their shuffles.
+//!
+//! Physical transport: logical messages are aggregated into
+//! [`WireBatch`] envelopes (the comm layer's MPI-style aggregation; see
+//! [`super::CommFabric`]) and delivered into the destination machine's
+//! mailbox.
+
+use crate::graph::VertexId;
+use std::sync::{Arc, OnceLock};
+
+/// Reply slot of one logical fetch: filled exactly once by the owning
+/// machine's comm server, polled by the requester (and by the scheduler,
+/// to decide when a parked task is runnable again).
+pub type ResponseSlot = Arc<OnceLock<FetchResponse>>;
+
+/// One logical fetch: a batch of vertex ids (all owned by the destination
+/// machine) whose adjacency lists the requester needs.
+pub struct FetchRequest {
+    /// The requested vertices, in request order.
+    pub vertices: Vec<VertexId>,
+    /// Where the serving machine deposits the response.
+    pub reply: ResponseSlot,
+}
+
+/// Materialised adjacency payloads answering one [`FetchRequest`]:
+/// `payload(i)` is the edge list of `request.vertices[i]`, copied out of
+/// the owner's partition exactly as it would arrive off the wire.
+pub struct FetchResponse {
+    /// CSR-style offsets into `data`; `offsets.len() == vertices + 1`.
+    pub offsets: Vec<u32>,
+    /// Concatenated adjacency payloads.
+    pub data: Vec<VertexId>,
+}
+
+impl FetchResponse {
+    /// Number of per-vertex payloads carried.
+    #[inline]
+    pub fn num_payloads(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// The adjacency payload of the i-th requested vertex.
+    #[inline]
+    pub fn payload(&self, i: usize) -> &[VertexId] {
+        &self.data[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+}
+
+/// One-way embedding-shipping message (the moving-computation baseline's
+/// shuffle): `count` partial embeddings of `level` matched vertices each,
+/// plus `extra_bytes` of piggybacked edge-list payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShipEmbeddings {
+    pub count: u64,
+    pub level: usize,
+    pub extra_bytes: u64,
+}
+
+/// A logical message on the wire.
+pub enum Message {
+    Fetch(FetchRequest),
+    Ship(ShipEmbeddings),
+}
+
+/// One physical envelope: the flushed aggregate of logical messages from
+/// one machine to one destination mailbox.
+pub struct WireBatch {
+    /// Sending machine (the fetches' requester).
+    pub from: usize,
+    pub msgs: Vec<Message>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_payload_slicing() {
+        let r = FetchResponse { offsets: vec![0, 3, 3, 5], data: vec![1, 2, 3, 9, 9] };
+        assert_eq!(r.num_payloads(), 3);
+        assert_eq!(r.payload(0), &[1, 2, 3]);
+        assert_eq!(r.payload(1), &[] as &[VertexId]);
+        assert_eq!(r.payload(2), &[9, 9]);
+    }
+
+    #[test]
+    fn protocol_types_cross_threads() {
+        fn assert_send<T: Send>() {}
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send::<Message>();
+        assert_send::<WireBatch>();
+        assert_send_sync::<ResponseSlot>();
+    }
+}

@@ -3,6 +3,8 @@
 
 use crate::metrics::{ComputeModel, NetModel};
 
+pub use crate::comm::CommConfig;
+
 /// A degenerate [`EngineConfig`] rejected by [`EngineConfig::validate`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ConfigError {
@@ -14,6 +16,11 @@ pub enum ConfigError {
     ZeroMiniBatch,
     /// `sockets == 0`: a machine has at least one NUMA socket.
     ZeroSockets,
+    /// `comm.max_in_flight == 0`: a machine with no in-flight budget
+    /// could never issue a remote fetch, so any multi-machine run would
+    /// stall forever. The synchronous setting is `max_in_flight = 1`
+    /// (or `comm.sync_fetch = true` to bypass messaging entirely).
+    ZeroInFlight,
 }
 
 impl std::fmt::Display for ConfigError {
@@ -26,6 +33,11 @@ impl std::fmt::Display for ConfigError {
                 write!(f, "mini_batch must be >= 1 (work is distributed in mini-batches)")
             }
             ConfigError::ZeroSockets => write!(f, "sockets must be >= 1"),
+            ConfigError::ZeroInFlight => write!(
+                f,
+                "comm.max_in_flight must be >= 1 (use 1 for synchronous round trips, \
+                 or comm.sync_fetch = true to bypass the comm subsystem)"
+            ),
         }
     }
 }
@@ -96,9 +108,17 @@ pub struct EngineConfig {
     /// spawning worker's private overflow stack and becomes that
     /// worker's *next* task (depth-first, releasing its chunk soonest) —
     /// task identity and results are unchanged, only *where* the task
-    /// runs. Total in-flight chunks per machine stay bounded by
-    /// `max_live_chunks + workers × (task_split_width + pattern depth)`.
+    /// runs. The same cap bounds frames parked on in-flight comm
+    /// responses (past it, a frame resumes in place with a blocking
+    /// receive), so total in-flight chunks per machine stay bounded by
+    /// `2 × max_live_chunks + workers × (task_split_width + pattern
+    /// depth)`.
     pub max_live_chunks: usize,
+    /// The message-passing comm subsystem's knobs (in-flight request
+    /// window, physical aggregation threshold, synchronous escape hatch).
+    /// Every setting reports bitwise-identical counts/traffic/virtual
+    /// time — see [`crate::comm`] and `tests/comm_equivalence.rs`.
+    pub comm: CommConfig,
 }
 
 impl Default for EngineConfig {
@@ -118,6 +138,7 @@ impl Default for EngineConfig {
             task_split_levels: 1,
             task_split_width: 8,
             max_live_chunks: 64,
+            comm: CommConfig::default(),
         }
     }
 }
@@ -135,6 +156,9 @@ impl EngineConfig {
         }
         if self.sockets == 0 {
             return Err(ConfigError::ZeroSockets);
+        }
+        if self.comm.max_in_flight == 0 {
+            return Err(ConfigError::ZeroInFlight);
         }
         Ok(())
     }
@@ -194,6 +218,13 @@ mod tests {
         }
         assert!(c.engine.task_split_width >= 1);
         assert!(c.engine.max_live_chunks >= 1);
+        // Comm defaults: a real in-flight window and, unless the env pins
+        // the escape hatch (the CI determinism matrix sets
+        // KUDU_SYNC_FETCH=1), the async message-passing path.
+        assert!(c.engine.comm.max_in_flight >= 1);
+        if std::env::var("KUDU_SYNC_FETCH").is_err() {
+            assert!(!c.engine.comm.sync_fetch, "default = async comm");
+        }
         assert_eq!(RunConfig::single_machine().num_machines, 1);
         assert_eq!(RunConfig::with_machines(4).num_machines, 4);
         assert!(c.engine.validate().is_ok());
@@ -209,8 +240,14 @@ mod tests {
         assert_eq!(bad_mb.validate(), Err(ConfigError::ZeroMiniBatch));
         let bad_sockets = EngineConfig { sockets: 0, ..Default::default() };
         assert_eq!(bad_sockets.validate(), Err(ConfigError::ZeroSockets));
+        let bad_window = EngineConfig {
+            comm: CommConfig { max_in_flight: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert_eq!(bad_window.validate(), Err(ConfigError::ZeroInFlight));
         // Errors render as actionable messages.
         let msg = ConfigError::ZeroChunkCapacity.to_string();
         assert!(msg.contains("chunk_capacity"));
+        assert!(ConfigError::ZeroInFlight.to_string().contains("max_in_flight"));
     }
 }

@@ -35,12 +35,28 @@
 //! `workers_per_machine`, and any steal interleaving — PR 1's
 //! thread-per-machine determinism contract, extended one level down.
 //!
-//! Remote active edge lists are still fetched per chunk with **circulant
+//! Remote active edge lists are fetched per chunk with **circulant
 //! scheduling** (§5.3): embeddings are grouped into batches by the owner
 //! machine of their pending vertex, starting from the local machine, and
 //! all of a frame's fetches post on the comm channel before its
 //! extensions post gated compute — the channel free-runs ahead, so the
 //! timeline is identical to the interleaved formulation.
+//!
+//! **Fetches are real messages** (the [`crate::comm`] subsystem): each
+//! circulant batch is issued as a typed `FetchRequest` into the owner
+//! machine's mailbox and served by that machine's dedicated comm thread
+//! (one per simulated machine, spawned per run); the payload arrives as
+//! a `FetchResponse` and is only then materialised into the chunk arena.
+//! A split-off frame task whose responses are in flight *parks* in the
+//! scheduler instead of blocking, so workers overlap communication with
+//! other tasks' computation — measured for real (`comm_stall_s`,
+//! `peak_in_flight`, `comm_flushes` in [`RunStats`]) next to the virtual
+//! timeline's modelled overlap. Wire costs are charged at issue with the
+//! same formulas in the same order as the synchronous path
+//! (`EngineConfig::comm.sync_fetch`, which bypasses messaging and
+//! reproduces the pre-comm execution), so counts, traffic matrices, and
+//! virtual time are bitwise identical for every window/batch setting —
+//! pinned by `tests/comm_equivalence.rs`.
 //!
 //! Data reuse (§6): **vertical** — intersection results stored in the
 //! chunk arena and reused by all children (plan-directed); **horizontal**
@@ -55,6 +71,7 @@ pub mod sink;
 pub mod task;
 
 use crate::cluster::Transport;
+use crate::comm::{CommFabric, ShutdownGuard};
 use crate::config::EngineConfig;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::{ComputeModel, RunStats};
@@ -193,10 +210,41 @@ impl KuduEngine {
             })
             .collect();
 
+        // The comm fabric: real message passing between machine threads.
+        // A lone machine never fetches remotely, and `sync_fetch` is the
+        // synchronous escape hatch — both skip the fabric entirely.
+        let fabric = (n > 1 && !cfg.comm.sync_fetch).then(|| CommFabric::new(n, cfg.comm));
+
         let sim_threads = par::resolve_threads(cfg.sim_threads);
-        par::run_unit_workers(sim_threads, workers, &scheds, |sched, slot| {
-            let runner = TaskRunner::new(sched.machine, graph, plan, cfg, compute, view, &cache);
-            sched.run_worker(slot, runner, &make_sink);
+        std::thread::scope(|scope| {
+            // One dedicated comm server thread per machine: requests are
+            // served from the owning machine's thread, independent of
+            // how the worker pool multiplexes the machines — which is
+            // what makes any host thread count (including 1) live-lock
+            // free: a worker waiting on a response never depends on
+            // another *worker* being scheduled.
+            if let Some(f) = &fabric {
+                for m in 0..n {
+                    scope.spawn(move || f.run_server(m, graph));
+                }
+            }
+            // Stop the servers when the pool finishes — or when a worker
+            // panic unwinds past us — so the scope's implicit join always
+            // completes.
+            let _shutdown = ShutdownGuard(fabric.as_ref());
+            par::run_unit_workers(sim_threads, workers, &scheds, |sched, slot| {
+                let runner = TaskRunner::new(
+                    sched.machine,
+                    graph,
+                    plan,
+                    cfg,
+                    compute,
+                    view,
+                    &cache,
+                    fabric.as_ref(),
+                );
+                sched.run_worker(slot, runner, &make_sink);
+            });
         });
 
         // Reduce machine-by-machine, tasks in TaskId order. Counters are
@@ -240,6 +288,15 @@ impl KuduEngine {
         stats.peak_embedding_bytes = machine_peak.iter().copied().max().unwrap_or(0);
         stats.network_bytes = transport.traffic.total_bytes();
         stats.network_messages = transport.traffic.total_messages();
+        if let Some(f) = &fabric {
+            // Wall-clock comm diagnostics (outside the determinism
+            // contract, like `wall_s`): the measured counterpart of the
+            // modelled `exposed_comm_s`.
+            let d = f.diagnostics();
+            stats.comm_stall_s = d.stall_s;
+            stats.peak_in_flight = d.peak_in_flight;
+            stats.comm_flushes = d.flushes;
+        }
         stats.wall_s = wall_start.elapsed().as_secs_f64();
         stats
     }
@@ -525,6 +582,45 @@ mod tests {
                     &format!("machines={machines} workers={workers}"),
                 );
             }
+        }
+    }
+
+    #[test]
+    fn comm_window_and_batching_do_not_change_results() {
+        // The async message-passing comm path — any window/batch setting,
+        // including the degenerate synchronous window=1/batch=0 — reports
+        // bitwise-identical metrics to the `sync_fetch` escape hatch;
+        // only the (excluded) comm diagnostics differ.
+        use crate::config::CommConfig;
+        let g = gen::rmat(8, 10, 47);
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        let run = |sync: bool, window: usize, batch: u64| {
+            let cfg = EngineConfig {
+                comm: CommConfig { max_in_flight: window, batch_bytes: batch, sync_fetch: sync },
+                // Fine granularity: many frame tasks, so fetches park.
+                chunk_capacity: 128,
+                mini_batch: 16,
+                ..Default::default()
+            };
+            run_count(&g, &plan, 4, &cfg).1
+        };
+        let reference = run(true, 1, 0);
+        assert!(reference.network_bytes > 0, "workload must fetch remotely");
+        assert_eq!(reference.comm_flushes, 0, "sync path sends no envelopes");
+        assert_eq!(reference.comm_stall_s, 0.0, "sync path never stalls");
+        for (window, batch) in [(1usize, 0u64), (2, 0), (8, 4096), (64, 1 << 20)] {
+            let st = run(false, window, batch);
+            assert_deterministic_fields_eq(
+                &reference,
+                &st,
+                &format!("window={window} batch={batch}"),
+            );
+            assert!(st.comm_flushes > 0, "async path sent real envelopes (window={window})");
+            assert!(
+                st.peak_in_flight >= 1 && st.peak_in_flight <= window as u64,
+                "window={window}: peak in flight {}",
+                st.peak_in_flight
+            );
         }
     }
 

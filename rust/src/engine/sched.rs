@@ -28,9 +28,27 @@
 //! execution. Overflow tasks are not counted by the queue gauge but are
 //! bounded by the split budgets: total in-flight chunks per machine stay
 //! under `max_live_chunks + workers × (task_split_width + depth)`.
+//!
+//! **Comm parking.** A frame task whose remote fetches are still in
+//! flight comes back from the runner as [`RunTask::Parked`]: it goes to
+//! the machine's shared parked list (still outstanding, still pinning
+//! its chunk) and any of the machine's workers resumes it once its
+//! responses have landed ([`Task::comm_ready`]). Workers prefer parked-
+//! ready tasks over stealing — resuming frees a pinned chunk soonest —
+//! and never retire while parked tasks remain: their responses are
+//! guaranteed to arrive (requests are flushed before parking and the
+//! comm servers run until the pool joins), so the wait is bounded. This
+//! is where communication actually overlaps computation: the worker
+//! that parked the task is off running other tasks while the owner's
+//! comm thread serves the fetch. The parked list honours the same
+//! memory budget as the queues: at most `max_live_chunks` frames may be
+//! parked per machine — past the cap the worker resumes the frame in
+//! place (a blocking receive, exactly the pre-parking behaviour), so
+//! the per-machine chunk bound only widens by one `max_live_chunks`
+//! term, never unboundedly.
 
 use super::sink::EmbeddingSink;
-use super::task::{Task, TaskKind, TaskOutcome, TaskRunner};
+use super::task::{RunTask, Task, TaskKind, TaskOutcome, TaskRunner};
 use crate::cluster::TrafficLedger;
 use crate::graph::VertexId;
 use std::collections::VecDeque;
@@ -87,6 +105,17 @@ struct MachineDone<S> {
     agg: MachineAgg,
 }
 
+/// Result of one poll of a machine's parked list.
+enum ParkedPoll {
+    /// A parked task whose responses have all arrived, removed from the
+    /// list for execution.
+    Ready(Task),
+    /// Tasks are parked but none is ready yet — keep the worker alive.
+    Waiting,
+    /// Nothing parked.
+    Empty,
+}
+
 /// One simulated machine's scheduler state, shared by its worker slots.
 pub struct MachineSched<S> {
     pub machine: usize,
@@ -100,6 +129,9 @@ pub struct MachineSched<S> {
     max_live_chunks: usize,
     peak_live: AtomicUsize,
     steals: AtomicU64,
+    /// Tasks parked on in-flight fetch responses, shared by the
+    /// machine's workers (any worker may resume a ready one).
+    parked: Mutex<Vec<Task>>,
     done: Mutex<MachineDone<S>>,
 }
 
@@ -138,6 +170,7 @@ impl<S: EmbeddingSink> MachineSched<S> {
             max_live_chunks: max_live_chunks.max(1),
             peak_live: AtomicUsize::new(0),
             steals: AtomicU64::new(0),
+            parked: Mutex::new(Vec::new()),
             done: Mutex::new(MachineDone {
                 outcomes: Vec::new(),
                 agg: MachineAgg::new(num_machines),
@@ -199,6 +232,35 @@ impl<S: EmbeddingSink> MachineSched<S> {
         t
     }
 
+    /// One-lock poll of the parked list: a ready task if any response
+    /// set completed, otherwise whether anything is still waiting. The
+    /// readiness scan is cheap (one atomic load per pending slot) and
+    /// the list is short — bounded by `max_live_chunks`.
+    fn poll_parked(&self) -> ParkedPoll {
+        let mut parked = self.parked.lock().unwrap();
+        if parked.is_empty() {
+            return ParkedPoll::Empty;
+        }
+        match parked.iter().position(|t| t.comm_ready()) {
+            Some(idx) => ParkedPoll::Ready(parked.swap_remove(idx)),
+            None => ParkedPoll::Waiting,
+        }
+    }
+
+    /// Park `task` if the machine's parked list has budget for another
+    /// pinned chunk; otherwise hand it back for in-place resumption (a
+    /// blocking receive on the spawning worker — the pre-parking
+    /// behaviour, always correct).
+    fn park_or_resume(&self, task: Task, overflow: &mut Vec<Task>) {
+        let mut parked = self.parked.lock().unwrap();
+        if parked.len() < self.max_live_chunks {
+            parked.push(task);
+        } else {
+            drop(parked);
+            overflow.push(task);
+        }
+    }
+
     /// Steal the oldest task from the first non-empty victim, scanning
     /// round-robin from `slot + 1` (FIFO → root-most, largest work).
     fn steal(&self, slot: usize) -> Option<Task> {
@@ -216,14 +278,18 @@ impl<S: EmbeddingSink> MachineSched<S> {
     }
 
     /// Worker loop for one slot: drain local overflow first, then the own
-    /// deque, then steal; briefly spin (yielding) while other workers
-    /// still hold outstanding tasks that might spawn stealable children,
-    /// then retire. Retiring early is always safe: a task queued in a
-    /// deque is drained by the worker that owns that deque (a worker
-    /// never exits with its own deque non-empty), so work cannot strand —
-    /// the spin cap only trades tail-stealing for freeing the host
-    /// thread to take the next machine's worker slot instead of burning
-    /// a core on a long straggler's tail.
+    /// deque, then parked tasks whose responses have arrived, then steal;
+    /// briefly spin (yielding) while other workers still hold outstanding
+    /// tasks that might spawn stealable children, then retire. Retiring
+    /// early is always safe: a task queued in a deque is drained by the
+    /// worker that owns that deque (a worker never exits with its own
+    /// deque non-empty), so work cannot strand — the spin cap only trades
+    /// tail-stealing for freeing the host thread to take the next
+    /// machine's worker slot instead of burning a core on a long
+    /// straggler's tail. The one exception is the parked list: while it
+    /// is non-empty a worker keeps polling instead of retiring, because
+    /// a parked task's responses are guaranteed to arrive (see the
+    /// module docs) and nothing else would run it.
     pub fn run_worker(&self, slot: usize, mut runner: TaskRunner<'_, '_>, make_sink: &impl Fn(usize) -> S) {
         const MAX_IDLE_SPINS: u32 = 1024;
         let mut outcomes: Vec<TaskOutcome<S>> = Vec::new();
@@ -234,22 +300,50 @@ impl<S: EmbeddingSink> MachineSched<S> {
                 t
             } else if let Some(t) = self.pop_own(slot) {
                 t
-            } else if let Some(t) = self.steal(slot) {
-                t
-            } else if self.outstanding.load(Ordering::SeqCst) == 0 || idle_spins >= MAX_IDLE_SPINS
-            {
-                break;
             } else {
-                idle_spins += 1;
-                std::thread::yield_now();
-                continue;
+                match self.poll_parked() {
+                    ParkedPoll::Ready(t) => t,
+                    ParkedPoll::Waiting => {
+                        // Something is parked on comm responses that are
+                        // guaranteed to arrive: steal meanwhile, but
+                        // never retire past the parked list.
+                        if let Some(t) = self.steal(slot) {
+                            t
+                        } else {
+                            std::thread::yield_now();
+                            continue;
+                        }
+                    }
+                    ParkedPoll::Empty => {
+                        if let Some(t) = self.steal(slot) {
+                            t
+                        } else if self.outstanding.load(Ordering::SeqCst) == 0
+                            || idle_spins >= MAX_IDLE_SPINS
+                        {
+                            break;
+                        } else {
+                            idle_spins += 1;
+                            std::thread::yield_now();
+                            continue;
+                        }
+                    }
+                }
             };
             idle_spins = 0;
-            let outcome = runner.run_task(task, &self.roots, make_sink, &mut |t| {
+            match runner.run_task(task, &self.roots, make_sink, &mut |t| {
                 self.submit(slot, t, &mut overflow)
-            });
-            outcomes.push(outcome);
-            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+            }) {
+                RunTask::Done(outcome) => {
+                    outcomes.push(outcome);
+                    self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                }
+                // Parked tasks stay outstanding and keep their chunk
+                // pinned; any of the machine's workers resumes one once
+                // its responses land. Past the parked-chunk budget the
+                // task comes straight back to this worker's overflow
+                // stack and resumes with a blocking receive instead.
+                RunTask::Parked(t) => self.park_or_resume(t, &mut overflow),
+            }
         }
         let mut done = self.done.lock().unwrap();
         done.agg.absorb_runner(&runner);

@@ -12,6 +12,23 @@
 //! of being descended in place. Everything below the split boundary is
 //! classic depth-first descent with bounded memory.
 //!
+//! **Remote fetches are real messages.** A frame's circulant fetch phase
+//! is split in two: [`TaskRunner::begin_frame`] charges each remote
+//! batch's wire cost, posts its transfer on the virtual timeline, and
+//! *issues* the [`crate::comm::FetchRequest`] through the machine's comm
+//! fabric; the payloads are materialised into the chunk arena only when
+//! the responses arrive. A split-off [`TaskKind::Frame`] task whose
+//! responses are still in flight **parks**: [`TaskRunner::run_task`]
+//! returns it as [`RunTask::Parked`] — a [`TaskKind::FrameWaiting`] task
+//! carrying its pending-fetch handle ([`FramePrep`]) and its
+//! virtual-time slice — and the scheduler runs other tasks until the
+//! replies land (communication/computation overlap measured from actual
+//! stalls, not just modelled). Root tasks and depth-first descents
+//! receive in place, stalling only if the owner has not answered yet.
+//! With `EngineConfig::comm.sync_fetch` (or a single machine) the
+//! payloads are copied synchronously from the shared `ClusterView`, and
+//! nothing ever parks — the pre-comm execution, reproduced exactly.
+//!
 //! **Determinism.** The task tree — which tasks exist, what each
 //! contains, and the [`TaskId`] path naming each — is a pure function of
 //! the graph, the plan, and the config: split decisions depend only on
@@ -32,6 +49,7 @@ use super::cache::StaticCache;
 use super::chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
 use super::sink::EmbeddingSink;
 use crate::cluster::{ClusterView, Timeline, TrafficLedger};
+use crate::comm::{CommFabric, FetchResponse, ResponseSlot};
 use crate::config::EngineConfig;
 use crate::exec;
 use crate::graph::{Graph, VertexId};
@@ -46,6 +64,29 @@ use std::sync::Arc;
 /// the execution order of a single depth-first worker.
 pub type TaskId = Vec<u32>;
 
+/// A frame's prepared fetch state: the circulant batches, each batch's
+/// virtual data-arrival gate, and (async comm path) the reply slots of
+/// the in-flight fetches. Travels inside a parked task as its
+/// pending-fetch handle.
+pub struct FramePrep {
+    /// Circulant batches of embedding indices (`[0]` = ready, then owner
+    /// machines in circulant order after self).
+    batches: Vec<Vec<u32>>,
+    /// Per-batch data-arrival gates on the task's virtual timeline.
+    gates: Vec<f64>,
+    /// Outstanding logical fetches: (batch position, reply slot). Empty
+    /// on the synchronous path (payloads were materialised at issue).
+    pending: Vec<(usize, ResponseSlot)>,
+}
+
+impl FramePrep {
+    /// Whether every issued fetch has been answered (vacuously true on
+    /// the synchronous path).
+    pub fn ready(&self) -> bool {
+        self.pending.iter().all(|(_, slot)| slot.get().is_some())
+    }
+}
+
 /// What a task explores.
 pub enum TaskKind {
     /// Root mini-batch: the machine's owned (label-filtered) start
@@ -55,6 +96,20 @@ pub enum TaskKind {
     /// A split-off filled chunk at `level`, with the frozen chunks of
     /// levels `0..level` it resolves ancestors through.
     Frame { ancestors: Vec<Arc<Chunk>>, chunk: Chunk, level: usize },
+    /// A split-off frame whose circulant fetches are in flight: parked
+    /// by the scheduler until every reply slot fills. Carries the
+    /// frame's pending-fetch handle and the virtual-time slice already
+    /// accumulated at issue. Same task, same [`TaskId`], same outcome as
+    /// the [`TaskKind::Frame`] it began as — only *when and where* it
+    /// runs changes, which is exactly the freedom the determinism
+    /// contract grants.
+    FrameWaiting {
+        ancestors: Vec<Arc<Chunk>>,
+        chunk: Chunk,
+        level: usize,
+        prep: FramePrep,
+        timeline: Timeline,
+    },
 }
 
 /// One schedulable unit of exploration work.
@@ -68,8 +123,26 @@ impl Task {
     /// do; root batches are lazy). The scheduler's `max_live_chunks`
     /// backpressure counts exactly these.
     pub fn holds_chunk(&self) -> bool {
-        matches!(self.kind, TaskKind::Frame { .. })
+        matches!(self.kind, TaskKind::Frame { .. } | TaskKind::FrameWaiting { .. })
     }
+
+    /// Whether the scheduler may usefully run this task now: a parked
+    /// frame waits until every pending fetch response has arrived.
+    pub fn comm_ready(&self) -> bool {
+        match &self.kind {
+            TaskKind::FrameWaiting { prep, .. } => prep.ready(),
+            _ => true,
+        }
+    }
+}
+
+/// Result of [`TaskRunner::run_task`]: the task either ran to completion
+/// or parked on in-flight fetch responses. A parked task is requeued by
+/// the scheduler and re-run — as the same task, with the same id — once
+/// its responses arrive; it produces no outcome until then.
+pub enum RunTask<S> {
+    Done(TaskOutcome<S>),
+    Parked(Task),
 }
 
 /// What one task hands back for the ordered fold: its sink and its slice
@@ -95,6 +168,10 @@ pub struct TaskRunner<'a, 'g> {
     compute: ComputeModel,
     view: ClusterView<'g>,
     cache: &'a StaticCache,
+    /// The machine's comm fabric; `None` = synchronous escape hatch
+    /// (`EngineConfig::comm.sync_fetch`, or a single-machine run, which
+    /// never fetches remotely).
+    comm: Option<&'a CommFabric>,
     // --- per-worker accumulators (order-free reductions) ---
     pub ledger: TrafficLedger,
     pub units_cpu: u64,
@@ -122,6 +199,7 @@ pub struct TaskRunner<'a, 'g> {
 }
 
 impl<'a, 'g> TaskRunner<'a, 'g> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         machine: usize,
         graph: &'g Graph,
@@ -130,6 +208,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         compute: &ComputeModel,
         view: ClusterView<'g>,
         cache: &'a StaticCache,
+        comm: Option<&'a CommFabric>,
     ) -> Self {
         let depth = plan.depth();
         TaskRunner {
@@ -140,6 +219,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             compute: *compute,
             view,
             cache,
+            comm,
             ledger: TrafficLedger::new(view.num_machines()),
             units_cpu: 0,
             units_mem: 0,
@@ -170,23 +250,27 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         self.chunk_pool.push(chunk);
     }
 
-    /// Execute one task to completion. `roots` is the machine's full
-    /// (label-filtered) root list; `spawn` receives split-off child
-    /// tasks. Returns the task's outcome for the ordered fold.
+    /// Execute one task. `roots` is the machine's full (label-filtered)
+    /// root list; `spawn` receives split-off child tasks. Returns the
+    /// task's outcome for the ordered fold — or the task itself, parked,
+    /// when its frame's fetch responses are still in flight (split-off
+    /// frames only; root tasks and in-place descents receive in place).
     pub fn run_task<S: EmbeddingSink>(
         &mut self,
         task: Task,
         roots: &[VertexId],
         make_sink: &impl Fn(usize) -> S,
         spawn: &mut impl FnMut(Task),
-    ) -> TaskOutcome<S> {
+    ) -> RunTask<S> {
         self.timeline = Timeline::default();
         self.pending_cpu = 0;
         self.pending_mem = 0;
-        let mut sink = make_sink(self.machine);
         let mut spawn_seq = 0u32;
-        let id = match task.kind {
+        let Task { id, kind } = task;
+        let mut sink;
+        match kind {
             TaskKind::Roots { lo, hi } => {
+                sink = make_sink(self.machine);
                 let cap = self.cfg.chunk_capacity;
                 let needs0 = self.plan.needs_adj[0];
                 let ancestors: Vec<Arc<Chunk>> = Vec::new();
@@ -206,7 +290,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                         &ancestors,
                         chunk,
                         0,
-                        &task.id,
+                        &id,
                         &mut spawn_seq,
                         &mut sink,
                         spawn,
@@ -215,24 +299,71 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                     block = end;
                 }
                 self.put_chunk(chunk);
-                task.id
             }
-            TaskKind::Frame { ancestors, chunk, level } => {
-                let chunk =
-                    self.process_frame(&ancestors, chunk, level, &task.id, &mut spawn_seq, &mut sink, spawn);
-                self.put_chunk(chunk);
-                task.id
+            TaskKind::Frame { ancestors, mut chunk, level } => {
+                // Issue the frame's fetches first: if any response is
+                // still in flight, park instead of blocking — the
+                // scheduler runs other tasks while the replies drain.
+                let prep = self.begin_frame(&mut chunk, level);
+                if !prep.ready() {
+                    if let Some(fabric) = self.comm {
+                        // Parked requests must be servable before anyone
+                        // waits on them.
+                        fabric.flush(self.machine);
+                    }
+                    return RunTask::Parked(Task {
+                        id,
+                        kind: TaskKind::FrameWaiting {
+                            ancestors,
+                            chunk,
+                            level,
+                            prep,
+                            timeline: std::mem::take(&mut self.timeline),
+                        },
+                    });
+                }
+                sink = make_sink(self.machine);
+                self.finish_fetches(&mut chunk, &prep);
+                let done = self.extend_frame(
+                    &ancestors,
+                    chunk,
+                    level,
+                    prep,
+                    &id,
+                    &mut spawn_seq,
+                    &mut sink,
+                    spawn,
+                );
+                self.put_chunk(done);
             }
-        };
+            TaskKind::FrameWaiting { ancestors, mut chunk, level, prep, timeline } => {
+                // Resume a parked frame: restore its virtual-time slice,
+                // receive the (now answered) payloads, extend.
+                self.timeline = timeline;
+                sink = make_sink(self.machine);
+                self.finish_fetches(&mut chunk, &prep);
+                let done = self.extend_frame(
+                    &ancestors,
+                    chunk,
+                    level,
+                    prep,
+                    &id,
+                    &mut spawn_seq,
+                    &mut sink,
+                    spawn,
+                );
+                self.put_chunk(done);
+            }
+        }
         // Trailing work not yet flushed.
         self.flush_compute(0.0, 1);
         self.tasks_run += 1;
-        TaskOutcome {
+        RunTask::Done(TaskOutcome {
             id,
             sink,
             finish: self.timeline.finish(),
             exposed: self.timeline.exposed_comm(),
-        }
+        })
     }
 
     /// NUMA memory-access multiplier (DESIGN.md §1: Table 7's policy
@@ -284,11 +415,13 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         self.pending_mem = 0;
     }
 
-    /// Process one filled frame: circulant fetch phase (mutating the
-    /// chunk), freeze, then extension in batch order — splitting or
-    /// descending into child chunks as they fill. Returns a cleared chunk
-    /// for pooling (a fresh one if the frame's chunk escaped into
-    /// split-off child tasks).
+    /// Process one filled frame in place: issue its circulant fetches,
+    /// receive the payloads (stalling only if the owner has not answered
+    /// yet), then extend. This is the path of root tasks and depth-first
+    /// descents; split-off frame tasks go through the same phases but
+    /// may park between issue and receive (see [`TaskRunner::run_task`]).
+    /// Returns a cleared chunk for pooling (a fresh one if the frame's
+    /// chunk escaped into split-off child tasks).
     #[allow(clippy::too_many_arguments)]
     fn process_frame<S: EmbeddingSink>(
         &mut self,
@@ -300,11 +433,29 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         sink: &mut S,
         spawn: &mut impl FnMut(Task),
     ) -> Chunk {
+        let prep = self.begin_frame(&mut chunk, level);
+        self.finish_fetches(&mut chunk, &prep);
+        self.extend_frame(ancestors, chunk, level, prep, task_id, spawn_seq, sink, spawn)
+    }
+
+    /// Phase 1 of a frame: group embedding indices into circulant
+    /// batches — index 0 = ready (local/cached/shared-resolved/no-list),
+    /// then owner machines in circulant order starting after self (§5.3)
+    /// — then, for every remote batch, charge its wire cost on the
+    /// ledger, post its transfer on the comm channel of the virtual
+    /// timeline (recording the data-arrival gate), and send the fetch:
+    /// synchronously materialised from the shared `ClusterView` on the
+    /// `sync_fetch` path, or issued as a real [`crate::comm::FetchRequest`]
+    /// through the fabric. The comm channel free-runs ahead of compute
+    /// (§5.3's non-strict pipelining), so posting every transfer before
+    /// any extension leaves the timeline bit-identical to the interleaved
+    /// order. Accounting and virtual time are charged **at issue**, with
+    /// the same formulas in the same order on both paths — that is the
+    /// whole determinism contract of the comm subsystem.
+    fn begin_frame(&mut self, chunk: &mut Chunk, level: usize) -> FramePrep {
         let n = self.view.num_machines();
-        // Group embedding indices into circulant batches: index 0 = ready
-        // (local/cached/shared-resolved/no-list), then owner machines in
-        // circulant order starting after self (§5.3). Buffers are pooled
-        // per level and reused across frames.
+        // Buffers are pooled per level and reused across frames (a parked
+        // frame carries them away; the pool refills with fresh ones).
         let mut batches = std::mem::take(&mut self.batch_pool[level]);
         batches.resize(n + 1, Vec::new());
         for b in batches.iter_mut() {
@@ -329,24 +480,80 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             }
         }
 
-        // Fetch phase: all circulant batches, one batched message each,
-        // posting transfers on the comm channel and recording each
-        // batch's data-arrival gate. The comm channel free-runs ahead of
-        // compute (§5.3's non-strict pipelining), so posting every
-        // transfer before any extension leaves the timeline bit-identical
-        // to the interleaved order — and leaves the chunk immutable for
-        // the rest of its life.
         let mut gates = std::mem::take(&mut self.gate_pool[level]);
         gates.clear();
-        for (pos, batch) in batches.iter().enumerate() {
-            if batch.is_empty() || pos == 0 {
+        let mut pending: Vec<(usize, ResponseSlot)> = Vec::new();
+        for pos in 0..batches.len() {
+            if pos == 0 || batches[pos].is_empty() {
                 gates.push(0.0);
                 continue;
             }
             let owner = (self.machine + pos) % n;
-            gates.push(self.fetch_batch(&mut chunk, owner, batch));
+            // Unique pending vertices of the batch (HDS made them unique
+            // already when enabled; when disabled, duplicates are fetched
+            // redundantly — exactly the Fig 14 ablation).
+            let mut verts: Vec<VertexId> = Vec::with_capacity(batches[pos].len());
+            for &i in &batches[pos] {
+                if let ListRef::Pending { vertex, .. } = chunk.embs[i as usize].list {
+                    verts.push(vertex);
+                }
+            }
+            if verts.is_empty() {
+                gates.push(0.0);
+                continue;
+            }
+            let (_bytes, time) =
+                self.view.fetch_batch(&mut self.ledger, self.machine, owner, &verts);
+            gates.push(self.timeline.post_comm(time));
+            match self.comm {
+                None => {
+                    let batch = &batches[pos];
+                    self.materialize_sync(chunk, batch);
+                }
+                Some(fabric) => {
+                    pending.push((pos, fabric.issue_fetch(self.machine, owner, verts)));
+                }
+            }
         }
+        FramePrep { batches, gates, pending }
+    }
 
+    /// Phase 2: ensure every remote batch's payload has landed in the
+    /// chunk arena. Synchronous path: nothing to do (phase 1 materialised
+    /// at issue). Async path: flush the outbox — issued requests must be
+    /// servable before anyone waits on them — then receive in batch
+    /// order, so the arena layout is byte-identical to the synchronous
+    /// path. Stall time (responses not yet served when the data is
+    /// needed) is measured on the fabric and reported as
+    /// `RunStats::comm_stall_s`.
+    fn finish_fetches(&mut self, chunk: &mut Chunk, prep: &FramePrep) {
+        let Some(fabric) = self.comm else { return };
+        if prep.pending.is_empty() {
+            return;
+        }
+        fabric.flush(self.machine);
+        for (pos, slot) in &prep.pending {
+            let resp = fabric.wait(self.machine, slot);
+            self.materialize_response(chunk, &prep.batches[*pos], resp);
+        }
+    }
+
+    /// Phase 3: freeze the (fully materialised) chunk and extend it in
+    /// batch order — splitting or descending into child chunks as they
+    /// fill.
+    #[allow(clippy::too_many_arguments)]
+    fn extend_frame<S: EmbeddingSink>(
+        &mut self,
+        ancestors: &[Arc<Chunk>],
+        chunk: Chunk,
+        level: usize,
+        prep: FramePrep,
+        task_id: &TaskId,
+        spawn_seq: &mut u32,
+        sink: &mut S,
+        spawn: &mut impl FnMut(Task),
+    ) -> Chunk {
+        let FramePrep { mut batches, gates, pending: _ } = prep;
         // Freeze: from here the chunk is shared read-only.
         let cur = Arc::new(chunk);
         // Peak accounting: this task's live frame stack (frozen ancestors
@@ -465,37 +672,40 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         }
     }
 
-    /// Fetch the pending edge lists of `batch` (all owned by `owner`) as
-    /// one batched message; returns the data-arrival gate time.
-    fn fetch_batch(&mut self, chunk: &mut Chunk, owner: usize, batch: &[u32]) -> f64 {
-        // Collect unique pending vertices (HDS made them unique already
-        // when enabled; when disabled, duplicates are fetched redundantly —
-        // exactly the Fig 14 ablation).
-        let mut verts: Vec<VertexId> = Vec::with_capacity(batch.len());
-        for &i in batch {
-            if let ListRef::Pending { vertex, .. } = chunk.embs[i as usize].list {
-                verts.push(vertex);
-            }
-        }
-        if verts.is_empty() {
-            return 0.0;
-        }
-        let (_bytes, time) =
-            self.view.fetch_batch(&mut self.ledger, self.machine, owner, &verts);
-        let gate = self.timeline.post_comm(time);
-        // Materialise the lists into the chunk arena ("receive").
+    /// Materialise the pending edge lists of `batch` into the chunk
+    /// arena directly from the shared CSR — the synchronous path's
+    /// "receive" (copy = receive; memory work charged per list).
+    fn materialize_sync(&mut self, chunk: &mut Chunk, batch: &[u32]) {
         for &i in batch {
             let e = chunk.embs[i as usize];
             if let ListRef::Pending { vertex, .. } = e.list {
                 let deg = self.graph.degree(vertex);
                 let nb = self.graph.neighbors(vertex);
-                // Copy = receive; charge memory work.
                 let r = chunk.arena_push(nb);
                 chunk.embs[i as usize].list = r;
                 self.pending_mem += deg as u64 / 4 + 1;
             }
         }
-        gate
+    }
+
+    /// Materialise a batch from a fetch response's payloads. Payloads
+    /// are parallel to the batch's `Pending` entries in batch order (the
+    /// order the request was built in), and each payload is the owner's
+    /// copy of the same CSR slice the synchronous path reads — so arena
+    /// contents, offsets, and memory-work charges are byte-identical.
+    fn materialize_response(&mut self, chunk: &mut Chunk, batch: &[u32], resp: &FetchResponse) {
+        let mut k = 0usize;
+        for &i in batch {
+            if let ListRef::Pending { .. } = chunk.embs[i as usize].list {
+                let data = resp.payload(k);
+                k += 1;
+                let deg = data.len();
+                let r = chunk.arena_push(data);
+                chunk.embs[i as usize].list = r;
+                self.pending_mem += deg as u64 / 4 + 1;
+            }
+        }
+        debug_assert_eq!(k, resp.num_payloads(), "one payload per pending entry");
     }
 
     /// Extend one embedding at `level` to `level+1` (paper Algorithm 1's
@@ -729,5 +939,30 @@ mod tests {
             kind: TaskKind::Frame { ancestors: Vec::new(), chunk: Chunk::new(4), level: 1 },
         };
         assert!(frame.holds_chunk());
+    }
+
+    #[test]
+    fn parked_frames_hold_chunks_and_wait_for_responses() {
+        use crate::comm::FetchResponse;
+        let slot: ResponseSlot = Arc::new(std::sync::OnceLock::new());
+        let prep = FramePrep {
+            batches: Vec::new(),
+            gates: Vec::new(),
+            pending: vec![(1, slot.clone())],
+        };
+        let t = Task {
+            id: vec![0, 0],
+            kind: TaskKind::FrameWaiting {
+                ancestors: Vec::new(),
+                chunk: Chunk::new(4),
+                level: 1,
+                prep,
+                timeline: Timeline::default(),
+            },
+        };
+        assert!(t.holds_chunk(), "a parked frame still pins its chunk");
+        assert!(!t.comm_ready(), "pending response ⇒ not runnable");
+        let _ = slot.set(FetchResponse { offsets: vec![0], data: Vec::new() });
+        assert!(t.comm_ready(), "response arrived ⇒ runnable");
     }
 }

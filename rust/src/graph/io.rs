@@ -116,6 +116,79 @@ mod tests {
     }
 
     #[test]
+    fn snap_round_trip_preserves_exact_adjacency() {
+        // Save → load must reproduce the graph exactly, not just its
+        // size: every vertex keeps its id (generated graphs have dense
+        // id spaces, so compaction is the identity) and its full sorted
+        // neighbor list.
+        let g = gen::planted_hubs(300, 900, 4, 0.3, 21);
+        let p = std::env::temp_dir().join("kudu_test_exact_rt.txt");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_eq!(g.num_edges(), g2.num_edges());
+        for v in 0..g.num_vertices() as VertexId {
+            assert_eq!(g.neighbors(v), g2.neighbors(v), "vertex {v}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn malformed_lines_are_skipped() {
+        // SNAP files in the wild carry stray tokens; the loader keeps
+        // every parseable `u v` pair and silently drops the rest: short
+        // lines, non-numeric ids, floats, and negatives. Trailing tokens
+        // after a valid pair are ignored (whitespace-separated columns).
+        let p = std::env::temp_dir().join("kudu_test_malformed.txt");
+        std::fs::write(
+            &p,
+            "0 1\n\
+             2\n\
+             a b\n\
+             3.5 4\n\
+             -1 2\n\
+             1 2 99 extra\n\
+             nonsense\n\
+             2 0\n",
+        )
+        .unwrap();
+        let g = load_edge_list(&p).unwrap();
+        // Kept pairs: (0,1), (1,2), (2,0) — a triangle on 3 vertices.
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        for v in 0..3u32 {
+            assert_eq!(g.degree(v), 2, "vertex {v}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn comments_only_file_loads_empty() {
+        let p = std::env::temp_dir().join("kudu_test_comments_only.txt");
+        std::fs::write(&p, "# SNAP header\n% matrix-market header\n\n# trailer\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sparse_id_compaction_preserves_structure() {
+        // Ids 7, 1000, 500000 compact to a dense range in ascending id
+        // order (7→0, 1000→1, 500000→2) with adjacency intact.
+        let p = std::env::temp_dir().join("kudu_test_sparse_structure.txt");
+        std::fs::write(&p, "7 1000\n1000 500000\n500000 7\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        // Triangle: every compacted vertex sees the other two.
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn csr_round_trip() {
         let g = gen::erdos_renyi(300, 900, 5);
         let p = std::env::temp_dir().join("kudu_test_csr.bin");

@@ -91,12 +91,22 @@
 //!   pattern-aware matching plans (the Automine / GraphPi "code
 //!   generators"), 1-D partitioning, and a deterministic simulated cluster
 //!   with an accounted transport.
+//! * [`comm`] — the message-passing communication subsystem: typed
+//!   `FetchRequest`/`FetchResponse` (and embedding-shipping) wire
+//!   messages between per-machine mailboxes, aggregated into
+//!   size-bounded envelopes under an in-flight request window and served
+//!   by a dedicated comm thread per machine. Wire costs are charged at
+//!   issue with the formulas defined here (the transport layer
+//!   delegates), so every window/batch setting — including the
+//!   `sync_fetch` escape hatch that bypasses messaging — reports
+//!   bitwise-identical counts, traffic, and virtual time.
 //! * [`engine`] — the paper's contribution: BFS-DFS hybrid chunk
 //!   exploration decomposed into chunk-granularity tasks
 //!   ([`engine::task`]) under a per-machine work-stealing scheduler
-//!   ([`engine::sched`]), circulant scheduling, hierarchical
-//!   extendable-embedding storage, vertical/horizontal sharing, the
-//!   static cache, and NUMA-aware mode.
+//!   ([`engine::sched`]), circulant scheduling with remote fetches
+//!   issued through [`comm`] (tasks *park* on in-flight responses
+//!   instead of blocking), hierarchical extendable-embedding storage,
+//!   vertical/horizontal sharing, the static cache, and NUMA-aware mode.
 //! * [`baselines`] — the comparator execution models (G-thinker-like,
 //!   moving-computation-to-data, replicated GraphPi-like, single-machine),
 //!   reached through [`session::Executor`].
@@ -114,6 +124,7 @@ pub mod baselines;
 pub mod bench;
 pub mod cli;
 pub mod cluster;
+pub mod comm;
 pub mod config;
 pub mod engine;
 pub mod exec;

@@ -35,7 +35,8 @@ fn usage() -> ! {
     eprintln!("           --engine <k-automine|k-graphpi|gthinker|movingcomp|replicated|single>");
     eprintln!("           --machines N --threads N --sim-threads N (0=all cores)");
     eprintln!("           --workers N (scheduler workers per machine, 0=all cores)");
-    eprintln!("           [--no-cache] [--no-hds] [--no-vcs]");
+    eprintln!("           --comm-window N (in-flight fetch window)");
+    eprintln!("           [--no-cache] [--no-hds] [--no-vcs] [--sync-fetch]");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
     eprintln!("  generate --dataset <abbr> --out <path>");
@@ -69,8 +70,20 @@ fn main() {
                 .sim_threads(args.get_as::<usize>("sim-threads", 0))
                 // Intra-machine work-stealing width; same contract.
                 .workers_per_machine(args.get_as::<usize>("workers", 0))
+                // Comm subsystem: window size and the synchronous escape
+                // hatch. Reported metrics are bitwise identical for every
+                // setting; wall time and comm diagnostics differ.
+                .comm_window(args.get_as::<usize>(
+                    "comm-window",
+                    kudu::config::CommConfig::default().max_in_flight,
+                ))
                 .horizontal_sharing(!args.has("no-hds"))
                 .vertical_sharing(!args.has("no-vcs"));
+            if args.has("sync-fetch") {
+                // Flag only forces the hatch on; absent, the env default
+                // (KUDU_SYNC_FETCH) stands.
+                job = job.sync_fetch(true);
+            }
             if args.has("no-cache") {
                 job = job.cache_frac(0.0);
             }

@@ -72,7 +72,10 @@ impl Default for ComputeModel {
 
 /// Per-machine traffic matrix (bytes sent from i to j) plus message
 /// counts. This is the stream MPI would carry; Tables 6 / Fig 14 read it.
-#[derive(Clone, Debug)]
+/// `PartialEq` compares the full matrices — `tests/comm_equivalence.rs`
+/// uses it to pin the async comm path cell-for-cell against the
+/// synchronous one.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Traffic {
     n: usize,
     bytes: Vec<u64>,
@@ -121,10 +124,13 @@ impl Traffic {
 /// quantities derive from this.
 ///
 /// **Determinism contract:** every field is byte-for-byte independent of
-/// host parallelism (`sim_threads`, `workers_per_machine`) *except* the
-/// execution diagnostics `wall_s`, `sched_steals`, and
-/// `peak_live_chunks`, which describe how the host happened to run the
-/// simulation rather than what the simulated cluster did.
+/// host parallelism (`sim_threads`, `workers_per_machine`) and of the
+/// comm-subsystem settings (`EngineConfig::comm` window/batching/
+/// sync-fetch) *except* the execution diagnostics — `wall_s`,
+/// `sched_steals`, `peak_live_chunks`, and the comm diagnostics
+/// `comm_stall_s`, `peak_in_flight`, `comm_flushes` — which describe how
+/// the host happened to run the simulation rather than what the
+/// simulated cluster did.
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
     /// Pattern embedding count(s) — the mining answer.
@@ -162,9 +168,28 @@ pub struct RunStats {
     /// scheduler *queues* (the admission gauge, bounded by
     /// `EngineConfig::max_live_chunks`; over-budget children parked on a
     /// worker's private overflow stack are not queued and not counted —
-    /// they are bounded separately by the split budgets).
+    /// they are bounded separately by the split budgets — and frames
+    /// parked on in-flight comm responses are likewise outside the
+    /// gauge, capped at another `max_live_chunks` per machine).
     /// Execution diagnostic: depends on host timing, like `wall_s`.
     pub peak_live_chunks: u64,
+    /// Wall-clock seconds workers spent actually stalled on the comm
+    /// subsystem (in-flight window full, or a response still in flight
+    /// when its data was needed) — the *measured* counterpart of the
+    /// modelled `exposed_comm_s`, summed across machines. Zero on the
+    /// synchronous path.
+    /// Execution diagnostic: depends on host timing, like `wall_s` —
+    /// excluded from the bitwise-determinism contract.
+    pub comm_stall_s: f64,
+    /// Peak outstanding logical fetch requests on any machine (bounded by
+    /// `EngineConfig::comm.max_in_flight`).
+    /// Execution diagnostic: excluded from the determinism contract.
+    pub peak_in_flight: u64,
+    /// Physical envelopes the comm layer sent (flushed request batches +
+    /// ship messages). Distinct from `network_messages`, which counts
+    /// *modelled* messages and is deterministic.
+    /// Execution diagnostic: excluded from the determinism contract.
+    pub comm_flushes: u64,
 }
 
 impl RunStats {
@@ -189,6 +214,9 @@ impl RunStats {
         self.sched_tasks += other.sched_tasks;
         self.sched_steals += other.sched_steals;
         self.peak_live_chunks = self.peak_live_chunks.max(other.peak_live_chunks);
+        self.comm_stall_s += other.comm_stall_s;
+        self.peak_in_flight = self.peak_in_flight.max(other.peak_in_flight);
+        self.comm_flushes += other.comm_flushes;
     }
 
     /// Communication overhead ratio (Fig 16): exposed comm / total runtime.

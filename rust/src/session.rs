@@ -244,6 +244,7 @@ impl Executor for GThinkerExec {
             ctx.plan,
             ctx.cfg.engine.threads,
             ctx.cfg.engine.sim_threads,
+            &ctx.cfg.engine.comm,
             &ctx.cfg.compute,
             &mut tr,
         )
@@ -264,6 +265,7 @@ impl Executor for MovingCompExec {
             ctx.graph,
             ctx.plan,
             ctx.cfg.engine.threads,
+            &ctx.cfg.engine.comm,
             &ctx.cfg.compute,
             &mut tr,
         )
@@ -423,6 +425,34 @@ impl<'a, 'g> Job<'a, 'g> {
     /// changes wall-clock only, never the reported metrics.
     pub fn workers_per_machine(mut self, workers: usize) -> Self {
         self.cfg.engine.workers_per_machine = workers;
+        self
+    }
+
+    /// Synchronous-fetch escape hatch: `true` bypasses the
+    /// message-passing comm subsystem and reads remote partitions
+    /// directly through the shared cluster view (the pre-comm
+    /// execution). Counts, traffic, and virtual time are bitwise
+    /// identical either way — only wall-clock behaviour and the comm
+    /// diagnostics (`comm_stall_s`, `peak_in_flight`, `comm_flushes`)
+    /// change.
+    pub fn sync_fetch(mut self, on: bool) -> Self {
+        self.cfg.engine.comm.sync_fetch = on;
+        self
+    }
+
+    /// In-flight request window of the comm subsystem (max outstanding
+    /// logical fetches per machine; must be ≥ 1). `1` with
+    /// [`Job::comm_batch_bytes`]`(0)` degenerates to synchronous
+    /// blocking round trips — still real messages, just serialised.
+    pub fn comm_window(mut self, max_in_flight: usize) -> Self {
+        self.cfg.engine.comm.max_in_flight = max_in_flight;
+        self
+    }
+
+    /// Physical aggregation threshold of the comm subsystem, in modelled
+    /// request bytes (`0` = every logical request is its own envelope).
+    pub fn comm_batch_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.engine.comm.batch_bytes = bytes;
         self
     }
 

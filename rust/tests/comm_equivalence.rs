@@ -1,0 +1,255 @@
+//! Acceptance suite for the message-passing comm subsystem: counts,
+//! traffic matrices, and virtual-time metrics must be **bitwise
+//! identical** between the synchronous escape hatch (`sync_fetch`) and
+//! the async comm fabric, across engines × apps × machine counts ×
+//! window/batch settings — real messaging is an execution detail, never
+//! a result.
+//!
+//! Why this holds by construction: wire costs and virtual-time transfers
+//! are charged at *issue* time with the formulas of `kudu::comm` (the
+//! one place they are defined), in the same circulant order on both
+//! paths, and a `FetchResponse` is a pure function of graph + request —
+//! so the received payload materialises byte-for-byte what the
+//! synchronous path copies out of the shared `ClusterView`. What *does*
+//! change is excluded by contract: wall clock and the comm diagnostics
+//! (`comm_stall_s`, `peak_in_flight`, `comm_flushes`).
+
+use kudu::cluster::Transport;
+use kudu::comm::CommConfig;
+use kudu::config::{EngineConfig, RunConfig};
+use kudu::engine::KuduEngine;
+use kudu::graph::gen::{self, Rng};
+use kudu::metrics::{ComputeModel, NetModel, RunStats, Traffic};
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::{graphpi_plan, ClientSystem};
+use kudu::session::{GpmApp, LabeledQuery, MiningSession};
+use kudu::workloads::{App, EngineKind};
+
+/// Bitwise comparison of every field the determinism contract covers
+/// (floats by bit pattern; wall clock and the comm/scheduler execution
+/// diagnostics are excluded by design).
+#[track_caller]
+fn assert_bitwise_eq(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.work_units, b.work_units, "{what}: work_units");
+    assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{what}: virtual time"
+    );
+    assert_eq!(
+        a.exposed_comm_s.to_bits(),
+        b.exposed_comm_s.to_bits(),
+        "{what}: exposed comm"
+    );
+    assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+    assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+    assert_eq!(a.sched_tasks, b.sched_tasks, "{what}: tasks");
+}
+
+/// The engines that fetch or ship through the comm layer. (Replicated
+/// and single-machine never communicate — nothing to compare.)
+const COMM_ENGINES: [EngineKind; 4] = [
+    EngineKind::Kudu(ClientSystem::Automine),
+    EngineKind::Kudu(ClientSystem::GraphPi),
+    EngineKind::GThinker,
+    EngineKind::MovingComp,
+];
+
+/// Window/batch settings swept by the matrix: the degenerate synchronous
+/// round-trip case, small windows with small batches, and a wide window
+/// with aggressive aggregation.
+const COMM_SETTINGS: [(usize, u64); 4] = [(1, 0), (2, 512), (16, 4096), (256, 1 << 20)];
+
+/// The acceptance matrix: engines × apps × machine counts × window
+/// sizes, async bitwise-equal to `sync_fetch`.
+#[test]
+fn async_comm_bitwise_equals_sync_across_engines_apps_machines_windows() {
+    let g = gen::rmat(8, 8, 0xC0_4411);
+    for machines in [2usize, 4, 8] {
+        let mut cfg = RunConfig::with_machines(machines);
+        // Fine granularity: many frame tasks per machine, so the async
+        // path really parks tasks and fills windows.
+        cfg.engine.chunk_capacity = 128;
+        cfg.engine.mini_batch = 16;
+        cfg.engine.comm.sync_fetch = true;
+        let sess = MiningSession::with_config(&g, cfg);
+        for app in [App::Tc, App::Cc(4)] {
+            for engine in COMM_ENGINES {
+                let reference = sess.job(&app).executor(engine.executor()).run();
+                for (window, batch) in COMM_SETTINGS {
+                    let st = sess
+                        .job(&app)
+                        .executor(engine.executor())
+                        .sync_fetch(false)
+                        .comm_window(window)
+                        .comm_batch_bytes(batch)
+                        .run();
+                    assert_bitwise_eq(
+                        &reference,
+                        &st,
+                        &format!(
+                            "{} × {} × {machines}m × window={window} batch={batch}",
+                            app.name(),
+                            engine.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Oracle pinning for the matrix graph: identical bits are worthless if
+/// they are identically wrong.
+#[test]
+fn matrix_counts_match_oracle() {
+    use kudu::pattern::brute::count_embeddings;
+    let g = gen::rmat(8, 8, 0xC0_4411);
+    let expect = count_embeddings(&g, &Pattern::clique(4), Induced::Edge);
+    let mut cfg = RunConfig::with_machines(4);
+    cfg.engine.chunk_capacity = 128;
+    cfg.engine.mini_batch = 16;
+    cfg.engine.comm.sync_fetch = false;
+    let sess = MiningSession::with_config(&g, cfg);
+    for (window, batch) in COMM_SETTINGS {
+        let st = sess.job(&App::Cc(4)).comm_window(window).comm_batch_bytes(batch).run();
+        assert_eq!(st.total_count(), expect, "window={window} batch={batch}");
+    }
+}
+
+/// The full traffic *matrix* — not just the totals — is identical cell
+/// for cell: who sent how many bytes to whom cannot depend on the
+/// transport being real messages or shared-memory reads.
+#[test]
+fn traffic_matrices_identical_cell_for_cell() {
+    let g = gen::planted_hubs(1200, 4000, 5, 0.3, 0xC0_77);
+    let plan = graphpi_plan(&Pattern::triangle(), Induced::Edge);
+    let run = |comm: CommConfig| -> (RunStats, Traffic) {
+        let cfg = EngineConfig { comm, chunk_capacity: 256, ..Default::default() };
+        let pg = PartitionedGraph::new(&g, 4);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let st = KuduEngine::run(&g, &plan, &cfg, &ComputeModel::default(), &mut tr);
+        (st, tr.traffic)
+    };
+    let (sref, tref) = run(CommConfig { sync_fetch: true, ..Default::default() });
+    assert!(sref.network_bytes > 0, "skewed 4-machine run must communicate");
+    for window in [1usize, 8, 128] {
+        let (st, t) = run(CommConfig {
+            max_in_flight: window,
+            batch_bytes: 1024,
+            sync_fetch: false,
+        });
+        assert_eq!(tref, t, "window={window}: traffic matrix");
+        assert_bitwise_eq(&sref, &st, &format!("window={window}"));
+        assert!(st.comm_flushes > 0, "window={window}: envelopes actually flowed");
+        assert!(
+            st.peak_in_flight >= 1 && st.peak_in_flight <= window as u64,
+            "window={window}: peak {}",
+            st.peak_in_flight
+        );
+    }
+}
+
+/// Task parking is heavily exercised (tiny chunks, deep splits, several
+/// workers, a tight window) and still invisible in every covered bit.
+#[test]
+fn parking_under_tight_window_is_invisible() {
+    let g = gen::planted_hubs(1500, 5000, 6, 0.3, 0xC0_AA);
+    let mut cfg = RunConfig::with_machines(4);
+    cfg.engine.chunk_capacity = 64;
+    cfg.engine.mini_batch = 16;
+    cfg.engine.task_split_levels = 2;
+    cfg.engine.task_split_width = 32;
+    cfg.engine.workers_per_machine = 4;
+    cfg.engine.comm.sync_fetch = true;
+    let sess = MiningSession::with_config(&g, cfg);
+    let reference = sess.job(&App::Tc).run();
+    for window in [1usize, 2, 4] {
+        let st = sess
+            .job(&App::Tc)
+            .sync_fetch(false)
+            .comm_window(window)
+            .comm_batch_bytes(0)
+            .run();
+        assert_bitwise_eq(&reference, &st, &format!("tight window={window}"));
+    }
+}
+
+/// Per-embedding sink apps (deterministic per-task sinks) aggregate to
+/// identical results whichever transport carried the fetches.
+#[test]
+fn sink_apps_invariant_under_comm_settings() {
+    let base = gen::erdos_renyi(120, 480, 0xC0_51);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 2) as u8 + 1).collect();
+    let g = base.with_labels(labels);
+    let queries = vec![
+        Pattern::triangle().with_labels(&[1, 1, 2]),
+        Pattern::chain(3).with_labels(&[2, 1, 2]),
+    ];
+    let mut reference: Option<(RunStats, Vec<(u64, u64, bool)>)> = None;
+    for (sync, window) in [(true, 1usize), (false, 1), (false, 16)] {
+        let app = LabeledQuery::new(queries.clone(), Induced::Edge, 1);
+        let sess = MiningSession::new(&g, 3);
+        let st = sess.job(&app).sync_fetch(sync).comm_window(window).run();
+        let results: Vec<(u64, u64, bool)> =
+            app.results().iter().map(|r| (r.embeddings, r.support, r.kept)).collect();
+        match &reference {
+            None => reference = Some((st, results)),
+            Some((ref_st, ref_results)) => {
+                assert_bitwise_eq(ref_st, &st, &format!("labeled sync={sync} window={window}"));
+                assert_eq!(ref_results, &results, "sync={sync} window={window}");
+            }
+        }
+    }
+}
+
+/// Seeded sweep: random graphs × machine counts × scheduler granularity
+/// × window/batch settings — sync and async never diverge in any
+/// covered bit. Failures print the case seed for reproduction.
+#[test]
+fn prop_comm_equivalence_random_sweep() {
+    let mut rng = Rng::new(0xC0_1111);
+    for case in 0..8 {
+        let seed = rng.next_u64();
+        let n = 40 + rng.below(100) as usize;
+        let m = n + rng.below(4 * n as u64) as usize;
+        let g = gen::erdos_renyi(n, m, seed);
+        let machines = 2 + rng.below(7) as usize;
+        let window = 1 + rng.below(32) as usize;
+        let batch = rng.below(8192);
+        let mut cfg = RunConfig::with_machines(machines);
+        cfg.engine.chunk_capacity = 16 + rng.below(256) as usize;
+        cfg.engine.mini_batch = 1 + rng.below(64) as usize;
+        cfg.engine.task_split_levels = rng.below(3) as usize;
+        cfg.engine.comm.sync_fetch = true;
+        let sess = MiningSession::with_config(&g, cfg);
+        let app = match rng.below(3) {
+            0 => App::Tc,
+            1 => App::Mc(3),
+            _ => App::Cc(4),
+        };
+        let reference = sess.job(&app).run();
+        let st = sess
+            .job(&app)
+            .sync_fetch(false)
+            .comm_window(window)
+            .comm_batch_bytes(batch)
+            .run();
+        assert_bitwise_eq(
+            &reference,
+            &st,
+            &format!(
+                "case {case} seed {seed} machines {machines} window {window} batch {batch} {}",
+                app.name()
+            ),
+        );
+    }
+}

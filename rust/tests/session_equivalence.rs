@@ -62,6 +62,7 @@ fn legacy_run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) 
                     &plan,
                     cfg.engine.threads,
                     cfg.engine.sim_threads,
+                    &cfg.engine.comm,
                     &cfg.compute,
                     &mut tr,
                 );
@@ -71,8 +72,14 @@ fn legacy_run_app(graph: &Graph, app: App, engine: EngineKind, cfg: &RunConfig) 
             EngineKind::MovingComp => {
                 let pg = PartitionedGraph::new(graph, cfg.num_machines);
                 let mut tr = Transport::new(pg, cfg.net);
-                let s =
-                    MovingComputation::run(graph, &plan, cfg.engine.threads, &cfg.compute, &mut tr);
+                let s = MovingComputation::run(
+                    graph,
+                    &plan,
+                    cfg.engine.threads,
+                    &cfg.engine.comm,
+                    &cfg.compute,
+                    &mut tr,
+                );
                 traffic.merge(&tr.traffic);
                 s
             }
