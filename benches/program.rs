@@ -1,0 +1,125 @@
+//! Program bench: fused multi-pattern execution vs the legacy
+//! one-plan-per-run path, on 4-motif counting (the tentpole workload of
+//! the mining-program redesign).
+//!
+//! Workload: `App::Mc(4)` — all six connected 4-vertex motifs,
+//! vertex-induced — on a skewed R-MAT graph over 4 simulated machines.
+//! The fused program compiles all six plans into one prefix trie: one
+//! root scan instead of six, and every trie node shared by ≥ 2 patterns
+//! runs its frames (and issues its remote fetches) once. The serial path
+//! (`Job::fused(false)`) reproduces the pre-program execution exactly:
+//! six independent engine runs, six root scans, six comm sessions.
+//!
+//! Reported (and asserted as the acceptance criteria of
+//! `BENCH_program.json`):
+//! * **root-scan work** — level-0 embeddings materialised: fused must be
+//!   6× lower (one scan);
+//! * **total traffic** — physical bytes on the wire: fused must be
+//!   strictly lower (shared prefix fetches deduplicated);
+//! * per-pattern counts identical (the determinism contract, pinned
+//!   bitwise by `tests/program_equivalence.rs`);
+//! * wall-clock medians for both paths.
+
+use kudu::graph::gen;
+use kudu::plan::ClientSystem;
+use kudu::session::{JobReport, MiningSession};
+use kudu::workloads::App;
+use std::time::Instant;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let g = gen::rmat(10, 10, 42);
+    let machines = 4;
+    let sess = MiningSession::new(&g, machines);
+    println!(
+        "program bench: 4-MC on rmat-10 ({} vertices, {} edges, skew(top5%) {:.1}%), \
+         {machines} machines",
+        g.num_vertices(),
+        g.num_edges(),
+        g.skewness(0.05) * 100.0
+    );
+
+    let run = |fused: bool| -> (JobReport, f64) {
+        let t0 = Instant::now();
+        let report =
+            sess.job(&App::Mc(4)).client(ClientSystem::GraphPi).fused(fused).run_report();
+        let wall = t0.elapsed().as_secs_f64();
+        (report, wall)
+    };
+
+    // Warmup + reference reports.
+    let (fused, _) = run(true);
+    let (serial, _) = run(false);
+    assert_eq!(fused.stats.counts, serial.stats.counts, "fused must not change the answers");
+    for (i, ((fs, ft), (ss, st))) in
+        fused.patterns.iter().zip(serial.patterns.iter()).enumerate()
+    {
+        assert_eq!(fs.counts, ss.counts, "pattern {i}: counts");
+        assert_eq!(ft, st, "pattern {i}: per-pattern traffic attribution");
+    }
+
+    let root_fused = fused.program.root_embeddings;
+    let root_serial = serial.program.root_embeddings;
+    let bytes_fused = fused.program.physical_bytes;
+    let bytes_serial = serial.program.physical_bytes;
+    let root_reduction = root_serial as f64 / root_fused.max(1) as f64;
+    let traffic_reduction = bytes_serial as f64 / bytes_fused.max(1) as f64;
+    let reduces_root_scan = root_fused < root_serial;
+    let reduces_traffic = bytes_fused < bytes_serial;
+    println!(
+        "bench program/root-scan  fused {root_fused}  serial {root_serial}  \
+         reduction {root_reduction:.2}x"
+    );
+    println!(
+        "bench program/traffic  fused {bytes_fused}B  serial {bytes_serial}B  \
+         reduction {traffic_reduction:.2}x  shared_nodes {}",
+        fused.program.shared_nodes
+    );
+
+    // Wall-clock medians.
+    let reps = 3;
+    let mut fused_walls = Vec::with_capacity(reps);
+    let mut serial_walls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (r, w) = run(true);
+        assert_eq!(r.stats.counts, fused.stats.counts);
+        fused_walls.push(w);
+        let (r, w) = run(false);
+        assert_eq!(r.stats.counts, fused.stats.counts);
+        serial_walls.push(w);
+    }
+    let fused_s = median(fused_walls);
+    let serial_s = median(serial_walls);
+    println!(
+        "bench program/wall  fused {fused_s:.4}s  serial {serial_s:.4}s  speedup {:.2}x",
+        serial_s / fused_s
+    );
+
+    assert!(reduces_root_scan, "acceptance: fused must reduce root-scan work");
+    assert!(reduces_traffic, "acceptance: fused must reduce total traffic");
+
+    let counts: Vec<String> =
+        fused.stats.counts.iter().map(|c| c.to_string()).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"program\",\n  \"workload\": \"mc4_rmat10_4machines\",\n  \
+         \"samples\": {reps},\n  \"counts\": [{}],\n  \
+         \"shared_nodes\": {},\n  \
+         \"root_scan\": {{\n    \"fused_embeddings\": {root_fused},\n    \
+         \"serial_embeddings\": {root_serial},\n    \"reduction\": {root_reduction},\n    \
+         \"fused_reduces_root_scan\": {reduces_root_scan}\n  }},\n  \
+         \"traffic\": {{\n    \"fused_bytes\": {bytes_fused},\n    \
+         \"serial_bytes\": {bytes_serial},\n    \"reduction\": {traffic_reduction},\n    \
+         \"fused_reduces_traffic\": {reduces_traffic}\n  }},\n  \
+         \"wall\": {{\n    \"fused_median_s\": {fused_s},\n    \
+         \"serial_median_s\": {serial_s},\n    \"speedup\": {}\n  }}\n}}\n",
+        counts.join(", "),
+        fused.program.shared_nodes,
+        serial_s / fused_s
+    );
+    std::fs::write("BENCH_program.json", json).expect("write BENCH_program.json");
+    println!("wrote BENCH_program.json");
+}

@@ -100,8 +100,12 @@ pub struct EngineConfig {
     /// disables splitting — every root task explores its whole subtree.
     pub task_split_levels: usize,
     /// Task-split width budget: at most this many child tasks are split
-    /// off per task; further full child chunks are descended depth-first
-    /// in place. Bounds the memory a single skewed task can pin.
+    /// off per (task, trie child edge); further full child chunks are
+    /// descended depth-first in place. Bounds the memory a single skewed
+    /// task can pin. Counting the budget per child edge (rather than per
+    /// task) is what lets every pattern sharing a fused program's edge
+    /// observe identical split decisions — the per-pattern task trees
+    /// stay exactly those of the patterns' single-plan runs.
     pub task_split_width: usize,
     /// Cap on split-off child chunks buffered in a machine's scheduler
     /// queues. Above the cap, a would-be child task is parked on the
@@ -111,8 +115,8 @@ pub struct EngineConfig {
     /// runs. The same cap bounds frames parked on in-flight comm
     /// responses (past it, a frame resumes in place with a blocking
     /// receive), so total in-flight chunks per machine stay bounded by
-    /// `2 × max_live_chunks + workers × (task_split_width + pattern
-    /// depth)`.
+    /// `2 × max_live_chunks + workers × (task_split_levels ×
+    /// task_split_width + program depth)`.
     pub max_live_chunks: usize,
     /// The message-passing comm subsystem's knobs (in-flight request
     /// window, physical aggregation threshold, synchronous escape hatch).

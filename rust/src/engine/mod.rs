@@ -1,68 +1,54 @@
 //! The Kudu engine: "Think Like an Extendable Embedding" (paper §4–§6),
-//! executed as a fine-grained task system.
+//! executed as a fine-grained task system over a **mining program**.
 //!
-//! Each machine of the (simulated) cluster enumerates pattern embeddings
-//! rooted at its owned vertices by interpreting a [`Plan`]. Exploration
-//! is the paper's **BFS-DFS hybrid** (§5.2) decomposed into
-//! chunk-granularity **tasks** ([`task::Task`]): a root task fills a
-//! level-0 chunk from one root mini-batch; as extension fills a child
-//! chunk, the frame either descends depth-first in place or — at shallow
-//! levels, within per-task budgets — hands the full child chunk to the
-//! machine's scheduler ([`sched::MachineSched`]) as a new task. Tasks
-//! run on `workers_per_machine` per-worker deques with work stealing,
-//! multiplexed with every other machine's workers onto `sim_threads`
-//! host threads (the two-level pool in [`crate::par`]). This is the
-//! fine-grained scheduling the extendable-embedding abstraction exists
-//! to enable (§4.1): chunk granularity is coarse enough to amortise
-//! scheduling, fine enough to balance power-law skew that a static
-//! contiguous root split cannot.
+//! The engine's unit of input is a [`MiningProgram`] — *all* of an app's
+//! compiled plans merged into a shared prefix trie
+//! ([`crate::plan::program`]). One engine run mines every pattern of the
+//! program: one root scan per trie root (a fused 4-motif count scans
+//! roots once, not six times), one scheduler session, one comm-fabric
+//! session — so communication and computation overlap *across* patterns,
+//! and a remote edge list fetched for a shared frame crosses the wire
+//! once. Single-plan entry points ([`KuduEngine::run`] and friends)
+//! remain as thin wrappers over a one-pattern program.
 //!
-//! Memory stays bounded by the paper's rule: an in-flight chunk holds at
-//! most `chunk_capacity` embeddings, split-off chunks queued per machine
-//! are capped by `max_live_chunks` (past the cap a child task becomes
-//! the spawning worker's next task instead of queueing; the residue a
-//! worker can park this way is bounded by the split budgets), and
-//! everything below the split boundary is depth-first with bottom-up
-//! chunk release (§4.3) through per-worker chunk pools.
+//! Each machine of the (simulated) cluster enumerates embeddings rooted
+//! at its owned vertices by interpreting the trie. Exploration is the
+//! paper's **BFS-DFS hybrid** (§5.2) decomposed into chunk-granularity
+//! **tasks** ([`task::Task`]): a root task fills a level-0 chunk from one
+//! root mini-batch; a frame at trie node `n` runs its circulant fetch
+//! phase once, then extends through every child edge of `n` — shared
+//! prefix intersections computed once, per-pattern continuations filling
+//! their own child chunks, which either descend depth-first in place or
+//! (at shallow levels, within per-(task, edge) budgets) are handed to
+//! the machine's work-stealing scheduler ([`sched::MachineSched`]) as
+//! new tasks.
 //!
-//! **Determinism.** The task tree and the per-task work are pure
-//! functions of graph + plan + config. Order-sensitive reductions (the
-//! virtual timeline fold, sink order) happen in [`task::TaskId`] order;
-//! order-free counters (traffic ledgers, work units, cache hits) merge
-//! as u64 sums. Every reported number except the execution diagnostics
-//! (`wall_s`, `sched_steals`, `peak_live_chunks`) is therefore
-//! byte-for-byte identical for any `sim_threads`, any
-//! `workers_per_machine`, and any steal interleaving — PR 1's
-//! thread-per-machine determinism contract, extended one level down.
+//! **Determinism, per pattern.** Every charge — intersection work,
+//! per-embedding overhead, wire bytes, virtual-time posts — is applied
+//! to each pattern alive at the frame, through per-pattern counters,
+//! ledgers, and timelines, with the single-plan formulas in the
+//! single-plan order. Task identity is per pattern
+//! ([`task::TaskId`] per alive pattern, ordered reductions per pattern),
+//! so for every pattern the fused program reports counts, traffic
+//! matrices (cell for cell), and virtual time **bitwise identical** to
+//! mining that pattern's plan alone — pinned by
+//! `tests/program_equivalence.rs` on top of the existing
+//! host-parallelism and comm-equivalence contracts. What fusion changes
+//! is the *physical* execution, reported separately in
+//! [`ProgramStats`]: root embeddings materialised once, shared fetches
+//! sent once.
 //!
-//! Remote active edge lists are fetched per chunk with **circulant
-//! scheduling** (§5.3): embeddings are grouped into batches by the owner
-//! machine of their pending vertex, starting from the local machine, and
-//! all of a frame's fetches post on the comm channel before its
-//! extensions post gated compute — the channel free-runs ahead, so the
-//! timeline is identical to the interleaved formulation.
+//! **Hooks.** Apps may install per-level callbacks
+//! ([`sink::ExtendHooks`]): `filter` prunes partial embeddings before
+//! their subtree is explored, `on_match` sees every complete embedding
+//! and may return [`sink::Control::Halt`] to stop the whole run
+//! (existence queries, top-k). Halting runs report partial results and
+//! are excluded from the bitwise contract; hook-less runs never read the
+//! halt flag.
 //!
-//! **Fetches are real messages** (the [`crate::comm`] subsystem): each
-//! circulant batch is issued as a typed `FetchRequest` into the owner
-//! machine's mailbox and served by that machine's dedicated comm thread
-//! (one per simulated machine, spawned per run); the payload arrives as
-//! a `FetchResponse` and is only then materialised into the chunk arena.
-//! A split-off frame task whose responses are in flight *parks* in the
-//! scheduler instead of blocking, so workers overlap communication with
-//! other tasks' computation — measured for real (`comm_stall_s`,
-//! `peak_in_flight`, `comm_flushes` in [`RunStats`]) next to the virtual
-//! timeline's modelled overlap. Wire costs are charged at issue with the
-//! same formulas in the same order as the synchronous path
-//! (`EngineConfig::comm.sync_fetch`, which bypasses messaging and
-//! reproduces the pre-comm execution), so counts, traffic matrices, and
-//! virtual time are bitwise identical for every window/batch setting —
-//! pinned by `tests/comm_equivalence.rs`.
-//!
-//! Data reuse (§6): **vertical** — intersection results stored in the
-//! chunk arena and reused by all children (plan-directed); **horizontal**
-//! — a collision-dropping hash table shares identical active edge lists
-//! within a chunk; **static cache** — hot high-degree vertices are
-//! prefilled once per run and shared read-only by every worker.
+//! Remote fetches, parking, data reuse (vertical/horizontal sharing,
+//! static cache), and NUMA modelling are unchanged from the comm and
+//! scheduler subsystems — see [`crate::comm`], [`task`], and [`sched`].
 
 pub mod cache;
 pub mod chunk;
@@ -74,110 +60,64 @@ use crate::cluster::Transport;
 use crate::comm::{CommFabric, ShutdownGuard};
 use crate::config::EngineConfig;
 use crate::graph::{Graph, VertexId};
-use crate::metrics::{ComputeModel, RunStats};
+use crate::metrics::{ComputeModel, PatternRun, ProgramStats, RunStats, Traffic};
 use crate::par;
-use crate::plan::Plan;
+use crate::plan::{MiningProgram, Plan};
 use cache::StaticCache;
 use sched::MachineSched;
-use sink::{CountSink, EmbeddingSink};
+use sink::{CountSink, EmbeddingSink, ExtendHooks};
+use std::sync::atomic::AtomicBool;
 use task::TaskRunner;
 
-/// The distributed Kudu engine. Stateless facade: each [`KuduEngine::run`]
-/// simulates all machines of the cluster on the two-level
-/// machine × worker task scheduler.
+/// The distributed Kudu engine. Stateless facade: each run simulates all
+/// machines of the cluster on the two-level machine × worker task
+/// scheduler.
 pub struct KuduEngine;
 
 impl KuduEngine {
-    /// Mine `plan`'s pattern over `graph` partitioned across
-    /// `transport.num_machines()` machines. Returns merged statistics
-    /// (count, traffic, virtual time, …).
-    pub fn run<'g>(
-        graph: &'g Graph,
-        plan: &Plan,
-        cfg: &EngineConfig,
-        compute: &ComputeModel,
-        transport: &mut Transport<'g>,
-    ) -> RunStats {
-        let mut sinks: Vec<CountSink> = Vec::new();
-        let mut stats = Self::run_with_sinks(graph, plan, cfg, compute, transport, |_m| {
-            CountSink::default()
-        }, &mut sinks);
-        stats.counts = vec![sinks.iter().map(|s| s.count).sum()];
-        stats
-    }
-
-    /// Like [`KuduEngine::run`], but with the per-machine owned-vertex
-    /// lists precomputed by the caller (one slot per machine, *unfiltered*
-    /// — the engine still applies the plan's root-label filter). This is
-    /// the session entry point: a [`crate::session::MiningSession`]
-    /// partitions the graph once and reuses the lists across every pattern
-    /// and query, instead of rescanning the vertex set per pattern.
-    /// Results are bitwise identical to the self-partitioning entry points.
-    pub fn run_on_roots<'g>(
-        graph: &'g Graph,
-        plan: &Plan,
-        cfg: &EngineConfig,
-        compute: &ComputeModel,
-        transport: &mut Transport<'g>,
-        owned: &[Vec<VertexId>],
-    ) -> RunStats {
-        let mut sinks: Vec<CountSink> = Vec::new();
-        let mut stats = Self::run_inner(graph, plan, cfg, compute, transport, Some(owned), |_m| {
-            CountSink::default()
-        }, &mut sinks);
-        stats.counts = vec![sinks.iter().map(|s| s.count).sum()];
-        stats
-    }
-
-    /// Generic entry point: one sink **per task**, produced by `make_sink`
-    /// (which receives the task's machine index). Sinks are returned
-    /// through `out_sinks` machine-major in task order — a fixed order,
-    /// like every other reduction here, so sink contents and sequence are
-    /// independent of host parallelism.
-    pub fn run_with_sinks<'g, S: EmbeddingSink + Send>(
-        graph: &'g Graph,
-        plan: &Plan,
-        cfg: &EngineConfig,
-        compute: &ComputeModel,
-        transport: &mut Transport<'g>,
-        make_sink: impl Fn(usize) -> S + Sync,
-        out_sinks: &mut Vec<S>,
-    ) -> RunStats {
-        Self::run_inner(graph, plan, cfg, compute, transport, None, make_sink, out_sinks)
-    }
-
-    /// [`KuduEngine::run_with_sinks`] with caller-precomputed per-machine
-    /// owned-vertex lists (see [`KuduEngine::run_on_roots`]).
+    /// Mine every pattern of `program` over `graph` partitioned across
+    /// `transport.num_machines()` machines, in **one** fused run: one
+    /// root scan per trie root, one scheduler session, one comm-fabric
+    /// session.
+    ///
+    /// Returns one [`PatternRun`] per pattern — stats and full traffic
+    /// matrix attributed exactly as that pattern's single-plan run would
+    /// report them (`counts` left empty; callers derive counts from
+    /// their sinks) — plus the [`ProgramStats`] physical totals of the
+    /// fused execution. `make_sink(pat, machine)` is called once per
+    /// (task, alive pattern); finished sinks land in
+    /// `out_sinks[pat]` machine-major in that pattern's task order.
+    /// `owned` optionally supplies precomputed per-machine owned-vertex
+    /// lists (the session's partition-once state).
     #[allow(clippy::too_many_arguments)]
-    pub fn run_with_sinks_on_roots<'g, S: EmbeddingSink + Send>(
+    pub fn run_program<'g, S: EmbeddingSink + Send>(
         graph: &'g Graph,
-        plan: &Plan,
-        cfg: &EngineConfig,
-        compute: &ComputeModel,
-        transport: &mut Transport<'g>,
-        owned: &[Vec<VertexId>],
-        make_sink: impl Fn(usize) -> S + Sync,
-        out_sinks: &mut Vec<S>,
-    ) -> RunStats {
-        Self::run_inner(graph, plan, cfg, compute, transport, Some(owned), make_sink, out_sinks)
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn run_inner<'g, S: EmbeddingSink + Send>(
-        graph: &'g Graph,
-        plan: &Plan,
+        program: &MiningProgram,
         cfg: &EngineConfig,
         compute: &ComputeModel,
         transport: &mut Transport<'g>,
         owned: Option<&[Vec<VertexId>]>,
-        make_sink: impl Fn(usize) -> S + Sync,
-        out_sinks: &mut Vec<S>,
-    ) -> RunStats {
+        hooks: Option<&dyn ExtendHooks>,
+        make_sink: impl Fn(usize, usize) -> S + Sync,
+        out_sinks: &mut Vec<Vec<S>>,
+    ) -> (Vec<PatternRun>, ProgramStats) {
         cfg.validate().unwrap_or_else(|e| panic!("invalid EngineConfig: {e}"));
-        assert!(plan.depth() >= 2, "patterns must have at least one edge");
         let n = transport.num_machines();
+        let n_pats = program.num_patterns();
         if let Some(o) = owned {
             assert_eq!(o.len(), n, "one owned-vertex list per machine");
+        }
+        if hooks.is_some() {
+            // Per-pattern control flow cannot share frames: a hooked
+            // program must be compiled without prefix fusion (the
+            // session does this automatically).
+            for id in 0..program.num_nodes() {
+                let node = program.node(id);
+                assert!(
+                    node.level == 0 || node.pats.len() == 1,
+                    "hooked programs must be compiled with fuse = false"
+                );
+            }
         }
         let wall_start = std::time::Instant::now();
         let view = transport.view();
@@ -192,21 +132,44 @@ impl KuduEngine {
         };
 
         // Work decomposition: one scheduler per machine, seeded with root
-        // mini-batch tasks over the machine's owned, label-filtered start
-        // vertices. The decomposition never depends on `sim_threads` or
-        // `workers_per_machine` — only execution placement does.
+        // mini-batch tasks per trie root over the machine's owned,
+        // label-filtered start vertices. The decomposition never depends
+        // on `sim_threads` or `workers_per_machine` — only execution
+        // placement does.
         let workers = par::resolve_threads(cfg.workers_per_machine);
-        let l0 = plan.pattern.label(0);
+        let root_nodes: Vec<usize> = program.roots().to_vec();
+        // Root tasks carry one id per pattern *continuing* at the root
+        // (== every pattern of the root group: patterns have ≥ 1 edge).
+        let root_pats: Vec<Vec<usize>> =
+            root_nodes.iter().map(|&r| program.node(r).cont.clone()).collect();
         let scheds: Vec<MachineSched<S>> = (0..n)
             .map(|m| {
-                let mut starts = match owned {
+                let base = match owned {
                     Some(o) => o[m].clone(),
                     None => view.partitioned().owned_vertices(m),
                 };
-                if l0 != 0 {
-                    starts.retain(|&v| graph.label(v) == l0);
-                }
-                MachineSched::new(m, n, starts, workers, cfg.mini_batch, cfg.max_live_chunks)
+                let lists: Vec<Vec<VertexId>> = root_nodes
+                    .iter()
+                    .map(|&r| {
+                        let l0 = program.node(r).label0;
+                        if l0 == 0 {
+                            base.clone()
+                        } else {
+                            base.iter().copied().filter(|&v| graph.label(v) == l0).collect()
+                        }
+                    })
+                    .collect();
+                MachineSched::new(
+                    m,
+                    n,
+                    n_pats,
+                    &root_nodes,
+                    &root_pats,
+                    lists,
+                    workers,
+                    cfg.mini_batch,
+                    cfg.max_live_chunks,
+                )
             })
             .collect();
 
@@ -214,6 +177,8 @@ impl KuduEngine {
         // A lone machine never fetches remotely, and `sync_fetch` is the
         // synchronous escape hatch — both skip the fabric entirely.
         let fabric = (n > 1 && !cfg.comm.sync_fetch).then(|| CommFabric::new(n, cfg.comm));
+        // Run-wide halt flag, raised only by hook callbacks.
+        let halt = AtomicBool::new(false);
 
         let sim_threads = par::resolve_threads(cfg.sim_threads);
         std::thread::scope(|scope| {
@@ -232,73 +197,232 @@ impl KuduEngine {
             // panic unwinds past us — so the scope's implicit join always
             // completes.
             let _shutdown = ShutdownGuard(fabric.as_ref());
+            let halt = &halt;
             par::run_unit_workers(sim_threads, workers, &scheds, |sched, slot| {
                 let runner = TaskRunner::new(
                     sched.machine,
                     graph,
-                    plan,
+                    program,
                     cfg,
                     compute,
                     view,
                     &cache,
                     fabric.as_ref(),
+                    hooks,
+                    halt,
                 );
-                sched.run_worker(slot, runner, &make_sink);
+                sched.run_worker(slot, runner, &make_sink, halt);
             });
         });
 
-        // Reduce machine-by-machine, tasks in TaskId order. Counters are
-        // u64 sums (associative); a machine's tasks model sequential
-        // slices of its virtual timeline — finish times add (exactly as a
-        // single depth-first worker would execute them) and the machine's
-        // peak footprint is the max over its tasks' frame stacks.
-        let mut stats = RunStats::default();
-        let mut machine_finish = vec![0.0f64; n];
-        let mut machine_exposed = vec![0.0f64; n];
-        let mut machine_peak = vec![0u64; n];
+        // Reduce machine-by-machine; within a machine, each pattern's
+        // tasks fold in that pattern's TaskId order. Counters are u64
+        // sums (associative); a pattern's tasks on a machine model
+        // sequential slices of that machine's virtual timeline — finish
+        // times add, exactly as a single depth-first worker mining that
+        // pattern alone would execute them.
+        let mut runs: Vec<PatternRun> = (0..n_pats)
+            .map(|_| PatternRun { stats: RunStats::default(), traffic: Traffic::new(n) })
+            .collect();
+        let mut pstats =
+            ProgramStats { shared_nodes: program.shared_nodes() as u64, ..Default::default() };
+        let mut machine_finish = vec![vec![0.0f64; n]; n_pats];
+        let mut machine_exposed = vec![vec![0.0f64; n]; n_pats];
+        let mut machine_peak = vec![vec![0u64; n]; n_pats];
+        out_sinks.clear();
+        for _ in 0..n_pats {
+            out_sinks.push(Vec::new());
+        }
         for sched in scheds {
             let m = sched.machine;
-            let (outcomes, agg, steals, peak_live) = sched.finish();
-            for o in outcomes {
-                machine_finish[m] += o.finish;
-                machine_exposed[m] += o.exposed;
-                out_sinks.push(o.sink);
+            let (by_pat, agg, steals, peak_live) = sched.finish(n_pats);
+            for (p, outs) in by_pat.into_iter().enumerate() {
+                for o in outs {
+                    machine_finish[p][m] += o.finish;
+                    machine_exposed[p][m] += o.exposed;
+                    out_sinks[p].push(o.sink);
+                }
+                let st = &mut runs[p].stats;
+                st.work_units += agg.units_cpu[p] + agg.units_mem[p];
+                st.embeddings_created += agg.embeddings_created[p];
+                st.numa_remote_accesses += agg.numa_remote[p];
+                st.cache_hits += agg.cache_hits[p];
+                st.cache_misses += agg.cache_misses[p];
+                st.sched_tasks += agg.tasks_run[p];
+                machine_peak[p][m] = machine_peak[p][m].max(agg.peak_bytes[p]);
+                runs[p].traffic.merge(agg.ledgers[p].traffic());
             }
-            stats.work_units += agg.units_cpu + agg.units_mem;
-            stats.embeddings_created += agg.embeddings_created;
-            stats.numa_remote_accesses += agg.numa_remote;
-            stats.cache_hits += agg.cache_hits;
-            stats.cache_misses += agg.cache_misses;
-            stats.sched_tasks += agg.tasks_run;
-            stats.sched_steals += steals;
-            stats.peak_live_chunks = stats.peak_live_chunks.max(peak_live);
-            machine_peak[m] = machine_peak[m].max(agg.peak_bytes);
-            transport.merge_ledger(&agg.ledger);
+            pstats.sched_steals += steals;
+            pstats.peak_live_chunks = pstats.peak_live_chunks.max(peak_live);
+            pstats.root_embeddings += agg.phys_root_embeddings;
+            transport.merge_ledger(&agg.phys_ledger);
         }
-        let mut worst_finish = 0.0f64;
-        let mut worst_exposed = 0.0f64;
-        for m in 0..n {
-            if machine_finish[m] > worst_finish {
-                worst_finish = machine_finish[m];
-                worst_exposed = machine_exposed[m];
+        for (p, run) in runs.iter_mut().enumerate() {
+            let mut worst_finish = 0.0f64;
+            let mut worst_exposed = 0.0f64;
+            for m in 0..n {
+                if machine_finish[p][m] > worst_finish {
+                    worst_finish = machine_finish[p][m];
+                    worst_exposed = machine_exposed[p][m];
+                }
             }
+            run.stats.virtual_time_s = worst_finish;
+            run.stats.exposed_comm_s = worst_exposed;
+            run.stats.peak_embedding_bytes = machine_peak[p].iter().copied().max().unwrap_or(0);
+            run.stats.network_bytes = run.traffic.total_bytes();
+            run.stats.network_messages = run.traffic.total_messages();
         }
-        stats.virtual_time_s = worst_finish;
-        stats.exposed_comm_s = worst_exposed;
-        stats.peak_embedding_bytes = machine_peak.iter().copied().max().unwrap_or(0);
-        stats.network_bytes = transport.traffic.total_bytes();
-        stats.network_messages = transport.traffic.total_messages();
+        pstats.physical_bytes = transport.traffic.total_bytes();
+        pstats.physical_messages = transport.traffic.total_messages();
         if let Some(f) = &fabric {
             // Wall-clock comm diagnostics (outside the determinism
             // contract, like `wall_s`): the measured counterpart of the
             // modelled `exposed_comm_s`.
             let d = f.diagnostics();
-            stats.comm_stall_s = d.stall_s;
-            stats.peak_in_flight = d.peak_in_flight;
-            stats.comm_flushes = d.flushes;
+            pstats.comm_stall_s = d.stall_s;
+            pstats.peak_in_flight = d.peak_in_flight;
+            pstats.comm_flushes = d.flushes;
         }
-        stats.wall_s = wall_start.elapsed().as_secs_f64();
+        pstats.wall_s = wall_start.elapsed().as_secs_f64();
+        (runs, pstats)
+    }
+
+    /// Fold a single-pattern program's outcome back into the legacy
+    /// one-plan [`RunStats`] shape (run-wide diagnostics attached to the
+    /// lone pattern).
+    fn single(mut runs: Vec<PatternRun>, pstats: ProgramStats) -> RunStats {
+        let mut stats = runs.pop().expect("single-pattern program").stats;
+        stats.wall_s = pstats.wall_s;
+        stats.sched_steals = pstats.sched_steals;
+        stats.peak_live_chunks = pstats.peak_live_chunks;
+        stats.comm_stall_s = pstats.comm_stall_s;
+        stats.peak_in_flight = pstats.peak_in_flight;
+        stats.comm_flushes = pstats.comm_flushes;
         stats
+    }
+
+    /// Mine `plan`'s pattern over `graph` partitioned across
+    /// `transport.num_machines()` machines. Returns merged statistics
+    /// (count, traffic, virtual time, …). Thin wrapper over a
+    /// one-pattern [`MiningProgram`].
+    pub fn run<'g>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+    ) -> RunStats {
+        let program = MiningProgram::compile(vec![plan.clone()], true);
+        let mut sinks: Vec<Vec<CountSink>> = Vec::new();
+        let (runs, pstats) = Self::run_program(
+            graph,
+            &program,
+            cfg,
+            compute,
+            transport,
+            None,
+            None,
+            |_p, _m| CountSink::default(),
+            &mut sinks,
+        );
+        let mut stats = Self::single(runs, pstats);
+        stats.counts = vec![sinks[0].iter().map(|s| s.count).sum()];
+        stats
+    }
+
+    /// Like [`KuduEngine::run`], but with the per-machine owned-vertex
+    /// lists precomputed by the caller (one slot per machine, *unfiltered*
+    /// — the engine still applies the plan's root-label filter). This is
+    /// the session entry point: a [`crate::session::MiningSession`]
+    /// partitions the graph once and reuses the lists across every pattern
+    /// and query. Results are bitwise identical to the self-partitioning
+    /// entry points.
+    pub fn run_on_roots<'g>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        owned: &[Vec<VertexId>],
+    ) -> RunStats {
+        let program = MiningProgram::compile(vec![plan.clone()], true);
+        let mut sinks: Vec<Vec<CountSink>> = Vec::new();
+        let (runs, pstats) = Self::run_program(
+            graph,
+            &program,
+            cfg,
+            compute,
+            transport,
+            Some(owned),
+            None,
+            |_p, _m| CountSink::default(),
+            &mut sinks,
+        );
+        let mut stats = Self::single(runs, pstats);
+        stats.counts = vec![sinks[0].iter().map(|s| s.count).sum()];
+        stats
+    }
+
+    /// Single-plan sink entry point: one sink **per task**, produced by
+    /// `make_sink` (which receives the task's machine index). Sinks are
+    /// returned through `out_sinks` machine-major in task order — a fixed
+    /// order, like every other reduction here, so sink contents and
+    /// sequence are independent of host parallelism. `counts` is left
+    /// empty; callers derive it from their sinks.
+    pub fn run_with_sinks<'g, S: EmbeddingSink + Send>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        make_sink: impl Fn(usize) -> S + Sync,
+        out_sinks: &mut Vec<S>,
+    ) -> RunStats {
+        let program = MiningProgram::compile(vec![plan.clone()], true);
+        let mut sinks: Vec<Vec<S>> = Vec::new();
+        let (runs, pstats) = Self::run_program(
+            graph,
+            &program,
+            cfg,
+            compute,
+            transport,
+            None,
+            None,
+            |_p, m| make_sink(m),
+            &mut sinks,
+        );
+        out_sinks.extend(sinks.remove(0));
+        Self::single(runs, pstats)
+    }
+
+    /// [`KuduEngine::run_with_sinks`] with caller-precomputed per-machine
+    /// owned-vertex lists (see [`KuduEngine::run_on_roots`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_sinks_on_roots<'g, S: EmbeddingSink + Send>(
+        graph: &'g Graph,
+        plan: &Plan,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        owned: &[Vec<VertexId>],
+        make_sink: impl Fn(usize) -> S + Sync,
+        out_sinks: &mut Vec<S>,
+    ) -> RunStats {
+        let program = MiningProgram::compile(vec![plan.clone()], true);
+        let mut sinks: Vec<Vec<S>> = Vec::new();
+        let (runs, pstats) = Self::run_program(
+            graph,
+            &program,
+            cfg,
+            compute,
+            transport,
+            Some(owned),
+            None,
+            |_p, m| make_sink(m),
+            &mut sinks,
+        );
+        out_sinks.extend(sinks.remove(0));
+        Self::single(runs, pstats)
     }
 }
 
@@ -311,7 +435,7 @@ mod tests {
     use crate::metrics::NetModel;
     use crate::partition::PartitionedGraph;
     use crate::pattern::brute::{count_embeddings, Induced};
-    use crate::pattern::Pattern;
+    use crate::pattern::{motifs, Pattern};
     use crate::plan::{automine_plan, graphpi_plan};
 
     fn run_count(
@@ -324,6 +448,34 @@ mod tests {
         let mut tr = Transport::new(pg, NetModel::default());
         let stats = KuduEngine::run(g, plan, cfg, &ComputeModel::default(), &mut tr);
         (stats.total_count(), stats)
+    }
+
+    /// Run a fused multi-plan program with counting sinks; returns
+    /// per-pattern counts, per-pattern runs, and the program stats.
+    fn run_fused(
+        g: &Graph,
+        plans: Vec<Plan>,
+        machines: usize,
+        cfg: &EngineConfig,
+    ) -> (Vec<u64>, Vec<PatternRun>, ProgramStats) {
+        let program = MiningProgram::compile(plans, true);
+        let pg = PartitionedGraph::new(g, machines);
+        let mut tr = Transport::new(pg, NetModel::default());
+        let mut sinks: Vec<Vec<CountSink>> = Vec::new();
+        let (runs, pstats) = KuduEngine::run_program(
+            g,
+            &program,
+            cfg,
+            &ComputeModel::default(),
+            &mut tr,
+            None,
+            None,
+            |_p, _m| CountSink::default(),
+            &mut sinks,
+        );
+        let counts =
+            sinks.iter().map(|s| s.iter().map(|k| k.count).sum::<u64>()).collect::<Vec<_>>();
+        (counts, runs, pstats)
     }
 
     #[test]
@@ -366,6 +518,43 @@ mod tests {
             let (got, _) = run_count(&g, &plan, 3, &EngineConfig::default());
             assert_eq!(got, expect, "{p:?}");
         }
+    }
+
+    #[test]
+    fn fused_motif_program_matches_oracle_per_pattern() {
+        // The tentpole path: all six 4-motifs in one fused program, each
+        // pattern's count exact.
+        let g = gen::rmat(7, 8, 21);
+        let pats = motifs::all_motifs(4);
+        let plans: Vec<Plan> = pats.iter().map(|p| graphpi_plan(p, Induced::Vertex)).collect();
+        let (counts, _, pstats) = run_fused(&g, plans, 3, &EngineConfig::default());
+        for (i, p) in pats.iter().enumerate() {
+            let expect = count_embeddings(&g, p, Induced::Vertex);
+            assert_eq!(counts[i], expect, "motif {i}");
+        }
+        // One root scan for all six patterns.
+        assert_eq!(pstats.root_embeddings, g.num_vertices() as u64);
+        assert!(pstats.shared_nodes >= 1);
+    }
+
+    #[test]
+    fn fused_program_physical_traffic_at_most_attributed_sum() {
+        // Physical wire traffic (shared fetches sent once) never exceeds
+        // the per-pattern attribution sum, and is strictly below it as
+        // soon as any level ≥ 1 node is shared.
+        let g = gen::rmat(8, 8, 23);
+        let plans: Vec<Plan> = motifs::all_motifs(4)
+            .iter()
+            .map(|p| graphpi_plan(p, Induced::Vertex))
+            .collect();
+        let (_, runs, pstats) = run_fused(&g, plans, 4, &EngineConfig::default());
+        let attributed: u64 = runs.iter().map(|r| r.stats.network_bytes).sum();
+        assert!(
+            pstats.physical_bytes <= attributed,
+            "physical {} > attributed {}",
+            pstats.physical_bytes,
+            attributed
+        );
     }
 
     #[test]
@@ -555,11 +744,14 @@ mod tests {
 
     #[test]
     fn workers_do_not_change_results() {
-        // The tentpole guarantee one level down: intra-machine work
-        // stealing is invisible in every reported number, bitwise, for
-        // any worker count and any steal interleaving.
+        // Intra-machine work stealing is invisible in every reported
+        // number, bitwise, for any worker count and any steal
+        // interleaving — including on a fused multi-pattern program.
         let g = gen::rmat(8, 10, 43);
-        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        let plans: Vec<Plan> = motifs::all_motifs(3)
+            .iter()
+            .map(|p| graphpi_plan(p, Induced::Vertex))
+            .collect();
         for machines in [1usize, 2, 4] {
             let run = |workers: usize| {
                 let cfg = EngineConfig {
@@ -570,17 +762,21 @@ mod tests {
                     mini_batch: 16,
                     ..Default::default()
                 };
-                run_count(&g, &plan, machines, &cfg).1
+                run_fused(&g, plans.clone(), machines, &cfg)
             };
-            let reference = run(1);
-            assert!(reference.sched_tasks > 1, "decomposition produced tasks");
+            let (ref_counts, ref_runs, _) = run(1);
+            assert!(ref_runs.iter().all(|r| r.stats.sched_tasks > 1));
             for workers in [2usize, 4, 8] {
-                let other = run(workers);
-                assert_deterministic_fields_eq(
-                    &reference,
-                    &other,
-                    &format!("machines={machines} workers={workers}"),
-                );
+                let (counts, runs, _) = run(workers);
+                assert_eq!(counts, ref_counts, "machines={machines} workers={workers}");
+                for (p, (a, b)) in ref_runs.iter().zip(&runs).enumerate() {
+                    assert_deterministic_fields_eq(
+                        &a.stats,
+                        &b.stats,
+                        &format!("machines={machines} workers={workers} pat={p}"),
+                    );
+                    assert_eq!(a.traffic, b.traffic, "traffic matrix pat={p}");
+                }
             }
         }
     }

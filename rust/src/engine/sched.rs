@@ -1,107 +1,103 @@
 //! The fine-grained per-machine task scheduler: chunk-granularity work
-//! stealing inside every simulated machine.
+//! stealing inside every simulated machine, now over *program* tasks.
 //!
 //! Each simulated machine owns a [`MachineSched`]: `workers_per_machine`
 //! worker slots, each with its own deque, seeded round-robin with the
-//! machine's root mini-batch tasks. Workers pop their own deque LIFO
-//! (newest first — depth-first order, which drains split-off child
-//! chunks before starting fresh roots and keeps the live-chunk frontier
-//! small) and steal FIFO from victims in round-robin order (oldest
-//! first — root batches, the largest work items). The host multiplexes
-//! all machines' worker slots onto `sim_threads` threads through
+//! machine's root mini-batch tasks (one series per trie root of the
+//! program — a fused multi-pattern program seeds **one** root scan, not
+//! one per pattern). Workers pop their own deque LIFO (newest first —
+//! depth-first order, which drains split-off child chunks before
+//! starting fresh roots and keeps the live-chunk frontier small) and
+//! steal FIFO from victims in round-robin order (oldest first — root
+//! batches, the largest work items). The host multiplexes all machines'
+//! worker slots onto `sim_threads` threads through
 //! [`crate::par::run_unit_workers`].
 //!
 //! **Where determinism lives.** Steal timing decides only *which worker
 //! runs a task* — never what the tasks are ([`Task`] trees are fixed by
-//! graph + config) nor how outcomes reduce (the engine folds
-//! [`TaskOutcome`]s in [`super::task::TaskId`] order; worker-side counters are u64
-//! sums and maxes, associative and commutative). The only numbers that
-//! remember the interleaving are the execution diagnostics: steal count
-//! and peak queued chunks.
+//! graph + program + config) nor how outcomes reduce: the engine folds
+//! each pattern's [`PatOutcome`]s in that pattern's
+//! [`super::task::TaskId`] order; worker-side counters are u64 sums and
+//! maxes, associative and commutative. The only numbers that remember
+//! the interleaving are the execution diagnostics: steal count and peak
+//! queued chunks.
 //!
-//! **Where the memory bound lives.** A queued frame task pins one chunk
-//! (≤ `chunk_capacity` embeddings). [`MachineSched::submit`] admits at
-//! most `max_live_chunks` such tasks into a machine's queues; past the
-//! cap the would-be child is parked on the spawning worker's private
-//! overflow stack and runs as that worker's *next* task, before any
-//! queued work — same task, same id, same outcome, different place of
-//! execution. Overflow tasks are not counted by the queue gauge but are
-//! bounded by the split budgets: total in-flight chunks per machine stay
-//! under `max_live_chunks + workers × (task_split_width + depth)`.
+//! **Memory bound and comm parking** are unchanged from the pre-program
+//! scheduler: `max_live_chunks` admission with worker-local overflow,
+//! and a shared parked list for frames with responses in flight (workers
+//! never retire past a non-empty parked list).
 //!
-//! **Comm parking.** A frame task whose remote fetches are still in
-//! flight comes back from the runner as [`RunTask::Parked`]: it goes to
-//! the machine's shared parked list (still outstanding, still pinning
-//! its chunk) and any of the machine's workers resumes it once its
-//! responses have landed ([`Task::comm_ready`]). Workers prefer parked-
-//! ready tasks over stealing — resuming frees a pinned chunk soonest —
-//! and never retire while parked tasks remain: their responses are
-//! guaranteed to arrive (requests are flushed before parking and the
-//! comm servers run until the pool joins), so the wait is bounded. This
-//! is where communication actually overlaps computation: the worker
-//! that parked the task is off running other tasks while the owner's
-//! comm thread serves the fetch. The parked list honours the same
-//! memory budget as the queues: at most `max_live_chunks` frames may be
-//! parked per machine — past the cap the worker resumes the frame in
-//! place (a blocking receive, exactly the pre-parking behaviour), so
-//! the per-machine chunk bound only widens by one `max_live_chunks`
-//! term, never unboundedly.
+//! **Halt.** When an [`crate::engine::sink::ExtendHooks`] callback
+//! raises [`crate::engine::sink::Control::Halt`], workers observe the
+//! run-wide flag between tasks: they drain their queues (dropping
+//! unstarted tasks) and retire. Only hooked runs can raise it.
 
 use super::sink::EmbeddingSink;
-use super::task::{RunTask, Task, TaskKind, TaskOutcome, TaskRunner};
+use super::task::{PatOutcome, RunTask, Task, TaskKind, TaskRunner};
 use crate::cluster::TrafficLedger;
 use crate::graph::VertexId;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Order-insensitive per-machine totals, accumulated from each worker's
-/// [`TaskRunner`] when the worker retires. Every field merges by u64
-/// sum or max, so merge order cannot change any reported bit.
+/// [`TaskRunner`] when the worker retires — all per pattern (index =
+/// program pattern id), plus the physical totals of the fused
+/// execution. Every field merges by u64 sum or max, so merge order
+/// cannot change any reported bit.
 pub struct MachineAgg {
-    pub ledger: TrafficLedger,
-    pub units_cpu: u64,
-    pub units_mem: u64,
-    pub embeddings_created: u64,
-    pub peak_bytes: u64,
-    pub numa_remote: u64,
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-    pub tasks_run: u64,
+    pub ledgers: Vec<TrafficLedger>,
+    pub units_cpu: Vec<u64>,
+    pub units_mem: Vec<u64>,
+    pub embeddings_created: Vec<u64>,
+    pub peak_bytes: Vec<u64>,
+    pub numa_remote: Vec<u64>,
+    pub cache_hits: Vec<u64>,
+    pub cache_misses: Vec<u64>,
+    pub tasks_run: Vec<u64>,
+    pub phys_ledger: TrafficLedger,
+    pub phys_root_embeddings: u64,
 }
 
 impl MachineAgg {
-    fn new(num_machines: usize) -> Self {
+    fn new(num_machines: usize, num_patterns: usize) -> Self {
         MachineAgg {
-            ledger: TrafficLedger::new(num_machines),
-            units_cpu: 0,
-            units_mem: 0,
-            embeddings_created: 0,
-            peak_bytes: 0,
-            numa_remote: 0,
-            cache_hits: 0,
-            cache_misses: 0,
-            tasks_run: 0,
+            ledgers: (0..num_patterns).map(|_| TrafficLedger::new(num_machines)).collect(),
+            units_cpu: vec![0; num_patterns],
+            units_mem: vec![0; num_patterns],
+            embeddings_created: vec![0; num_patterns],
+            peak_bytes: vec![0; num_patterns],
+            numa_remote: vec![0; num_patterns],
+            cache_hits: vec![0; num_patterns],
+            cache_misses: vec![0; num_patterns],
+            tasks_run: vec![0; num_patterns],
+            phys_ledger: TrafficLedger::new(num_machines),
+            phys_root_embeddings: 0,
         }
     }
 
     fn absorb_runner(&mut self, r: &TaskRunner<'_, '_>) {
-        self.ledger.merge(&r.ledger);
-        self.units_cpu += r.units_cpu;
-        self.units_mem += r.units_mem;
-        self.embeddings_created += r.embeddings_created;
-        self.peak_bytes = self.peak_bytes.max(r.peak_bytes);
-        self.numa_remote += r.numa_remote;
-        self.cache_hits += r.cache_hits;
-        self.cache_misses += r.cache_misses;
-        self.tasks_run += r.tasks_run;
+        for p in 0..self.ledgers.len() {
+            self.ledgers[p].merge(&r.ledgers[p]);
+            self.units_cpu[p] += r.units_cpu[p];
+            self.units_mem[p] += r.units_mem[p];
+            self.embeddings_created[p] += r.embeddings_created[p];
+            self.peak_bytes[p] = self.peak_bytes[p].max(r.peak_bytes[p]);
+            self.numa_remote[p] += r.numa_remote[p];
+            self.cache_hits[p] += r.cache_hits[p];
+            self.cache_misses[p] += r.cache_misses[p];
+            self.tasks_run[p] += r.tasks_run[p];
+        }
+        self.phys_ledger.merge(&r.phys_ledger);
+        self.phys_root_embeddings += r.phys_root_embeddings;
     }
 }
 
-/// Everything the machine's workers deposit: task outcomes (sorted by
-/// [`super::task::TaskId`] at reduction time) and the merged aggregates.
+/// Everything the machine's workers deposit: per-pattern task outcomes
+/// (sorted per pattern by [`super::task::TaskId`] at reduction time) and
+/// the merged aggregates.
 struct MachineDone<S> {
-    outcomes: Vec<TaskOutcome<S>>,
+    outcomes: Vec<PatOutcome<S>>,
     agg: MachineAgg,
 }
 
@@ -119,8 +115,9 @@ enum ParkedPoll {
 /// One simulated machine's scheduler state, shared by its worker slots.
 pub struct MachineSched<S> {
     pub machine: usize,
-    /// The machine's owned, root-label-filtered start vertices.
-    pub roots: Vec<VertexId>,
+    /// The machine's owned start vertices, label-filtered, one list per
+    /// trie root of the program.
+    pub roots: Vec<Vec<VertexId>>,
     deques: Vec<Mutex<VecDeque<Task>>>,
     /// Tasks submitted but not yet completed (including running ones).
     outstanding: AtomicUsize,
@@ -137,13 +134,20 @@ pub struct MachineSched<S> {
 
 impl<S: EmbeddingSink> MachineSched<S> {
     /// Build the machine's scheduler: one deque per worker slot, seeded
-    /// round-robin with the root mini-batch tasks (`[i·mb, (i+1)·mb)`
-    /// slices of `roots`). The seeding — like everything about the task
-    /// tree — depends only on the root list and the config.
+    /// round-robin with the root mini-batch tasks of every trie root
+    /// (`[i·mb, (i+1)·mb)` slices of that root's list; each task's
+    /// per-pattern ids are `[i]` — batch indices count per root list,
+    /// exactly as each pattern's single-plan run would count them). The
+    /// seeding — like everything about the task tree — depends only on
+    /// the root lists and the config.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         machine: usize,
         num_machines: usize,
-        roots: Vec<VertexId>,
+        num_patterns: usize,
+        root_nodes: &[usize],
+        root_pats: &[Vec<usize>],
+        roots: Vec<Vec<VertexId>>,
         workers: usize,
         mini_batch: usize,
         max_live_chunks: usize,
@@ -151,16 +155,23 @@ impl<S: EmbeddingSink> MachineSched<S> {
         let workers = workers.max(1);
         let mut deques: Vec<VecDeque<Task>> = (0..workers).map(|_| VecDeque::new()).collect();
         let mb = mini_batch.max(1);
-        let mut lo = 0usize;
-        let mut i = 0u32;
-        while lo < roots.len() {
-            let hi = (lo + mb).min(roots.len());
-            deques[i as usize % workers]
-                .push_back(Task { id: vec![i], kind: TaskKind::Roots { lo, hi } });
-            lo = hi;
-            i += 1;
+        let mut seeded = 0usize;
+        for (r, list) in roots.iter().enumerate() {
+            let mut lo = 0usize;
+            let mut i = 0u32;
+            while lo < list.len() {
+                let hi = (lo + mb).min(list.len());
+                deques[seeded % workers].push_back(Task {
+                    node: root_nodes[r],
+                    ids: root_pats[r].iter().map(|_| vec![i]).collect(),
+                    kind: TaskKind::Roots { root: r, lo, hi },
+                });
+                lo = hi;
+                i += 1;
+                seeded += 1;
+            }
         }
-        let outstanding = AtomicUsize::new(i as usize);
+        let outstanding = AtomicUsize::new(seeded);
         MachineSched {
             machine,
             roots,
@@ -173,7 +184,7 @@ impl<S: EmbeddingSink> MachineSched<S> {
             parked: Mutex::new(Vec::new()),
             done: Mutex::new(MachineDone {
                 outcomes: Vec::new(),
-                agg: MachineAgg::new(num_machines),
+                agg: MachineAgg::new(num_machines, num_patterns),
             }),
         }
     }
@@ -277,6 +288,29 @@ impl<S: EmbeddingSink> MachineSched<S> {
         None
     }
 
+    /// Drop every task this worker can reach — its own deque, the
+    /// overflow stack, and the parked list — decrementing `outstanding`
+    /// so the machine's other workers retire too. Only reached after a
+    /// hook raised the run's halt flag; a halting run reports partial
+    /// results by design.
+    fn drain_on_halt(&self, slot: usize, overflow: &mut Vec<Task>) {
+        let mut dropped = 0usize;
+        while let Some(t) = self.pop_own(slot) {
+            drop(t);
+            dropped += 1;
+        }
+        dropped += overflow.len();
+        overflow.clear();
+        {
+            let mut parked = self.parked.lock().unwrap();
+            dropped += parked.len();
+            parked.clear();
+        }
+        if dropped > 0 {
+            self.outstanding.fetch_sub(dropped, Ordering::SeqCst);
+        }
+    }
+
     /// Worker loop for one slot: drain local overflow first, then the own
     /// deque, then parked tasks whose responses have arrived, then steal;
     /// briefly spin (yielding) while other workers still hold outstanding
@@ -290,12 +324,22 @@ impl<S: EmbeddingSink> MachineSched<S> {
     /// is non-empty a worker keeps polling instead of retiring, because
     /// a parked task's responses are guaranteed to arrive (see the
     /// module docs) and nothing else would run it.
-    pub fn run_worker(&self, slot: usize, mut runner: TaskRunner<'_, '_>, make_sink: &impl Fn(usize) -> S) {
+    pub fn run_worker(
+        &self,
+        slot: usize,
+        mut runner: TaskRunner<'_, '_>,
+        make_sink: &impl Fn(usize, usize) -> S,
+        halt: &AtomicBool,
+    ) {
         const MAX_IDLE_SPINS: u32 = 1024;
-        let mut outcomes: Vec<TaskOutcome<S>> = Vec::new();
+        let mut outcomes: Vec<PatOutcome<S>> = Vec::new();
         let mut overflow: Vec<Task> = Vec::new();
         let mut idle_spins = 0u32;
         loop {
+            if halt.load(Ordering::Relaxed) {
+                self.drain_on_halt(slot, &mut overflow);
+                break;
+            }
             let task = if let Some(t) = overflow.pop() {
                 t
             } else if let Some(t) = self.pop_own(slot) {
@@ -333,8 +377,8 @@ impl<S: EmbeddingSink> MachineSched<S> {
             match runner.run_task(task, &self.roots, make_sink, &mut |t| {
                 self.submit(slot, t, &mut overflow)
             }) {
-                RunTask::Done(outcome) => {
-                    outcomes.push(outcome);
+                RunTask::Done(outs) => {
+                    outcomes.extend(outs);
                     self.outstanding.fetch_sub(1, Ordering::SeqCst);
                 }
                 // Parked tasks stay outstanding and keep their chunk
@@ -350,15 +394,21 @@ impl<S: EmbeddingSink> MachineSched<S> {
         done.outcomes.extend(outcomes);
     }
 
-    /// Tear down after the fork-join: outcomes sorted into the canonical
-    /// [`super::task::TaskId`] order plus the merged aggregates and the
+    /// Tear down after the fork-join: the per-pattern outcomes grouped
+    /// by pattern and sorted into each pattern's canonical
+    /// [`super::task::TaskId`] order, plus the merged aggregates and the
     /// execution diagnostics (steals, peak queued chunks).
-    pub fn finish(self) -> (Vec<TaskOutcome<S>>, MachineAgg, u64, u64) {
+    pub fn finish(self, num_patterns: usize) -> (Vec<Vec<PatOutcome<S>>>, MachineAgg, u64, u64) {
         let done = self.done.into_inner().unwrap();
-        let mut outcomes = done.outcomes;
-        outcomes.sort_by(|a, b| a.id.cmp(&b.id));
+        let mut by_pat: Vec<Vec<PatOutcome<S>>> = (0..num_patterns).map(|_| Vec::new()).collect();
+        for o in done.outcomes {
+            by_pat[o.pat].push(o);
+        }
+        for outs in by_pat.iter_mut() {
+            outs.sort_by(|a, b| a.id.cmp(&b.id));
+        }
         let steals = self.steals.into_inner();
         let peak_live = self.peak_live.into_inner() as u64;
-        (outcomes, done.agg, steals, peak_live)
+        (by_pat, done.agg, steals, peak_live)
     }
 }

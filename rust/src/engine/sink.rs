@@ -5,6 +5,54 @@
 
 use crate::graph::VertexId;
 
+/// What an [`ExtendHooks`] callback tells the engine to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Control {
+    /// Keep going: the embedding is kept / the subtree is explored.
+    Continue,
+    /// Drop this embedding (and, from [`ExtendHooks::filter`], the whole
+    /// subtree below it). Deterministic — pruning depends only on the
+    /// embedding.
+    Prune,
+    /// Stop the entire run as soon as possible (existence queries,
+    /// top-k). The triggering embedding is still delivered; everything
+    /// in flight finishes early with partial results, so a halting run
+    /// is *outside* the bitwise determinism contract by construction.
+    Halt,
+}
+
+/// Per-level callbacks a [`crate::session::GpmApp`] installs on its
+/// program — the richer half of the paper's Algorithm-1 user function.
+/// With hooks, existence queries, top-k, and per-embedding scoring are
+/// expressible without engine changes: `filter` prunes partial
+/// embeddings before their subtree is explored, `on_match` sees every
+/// complete embedding and can stop the run.
+///
+/// Hooks are invoked from concurrent scheduler workers (`&self`, `Sync`);
+/// apps accumulate through interior mutability (atomics, mutexes). When
+/// an app installs hooks, its program is compiled without cross-pattern
+/// prefix fusion (per-pattern control flow would make shared frames
+/// diverge); the shared root scan remains.
+pub trait ExtendHooks: Sync {
+    /// Called for every complete embedding of pattern `pat` (program
+    /// pattern index), before it reaches the sink. `Prune` drops the
+    /// embedding, `Halt` delivers it and stops the run.
+    fn on_match(&self, pat: usize, vertices: &[VertexId]) -> Control {
+        let _ = (pat, vertices);
+        Control::Continue
+    }
+
+    /// Called for every *partial* embedding of pattern `pat` as it is
+    /// extended to an interior level (`vertices.len() >= 2`, i.e. levels
+    /// 1 through k-2; complete embeddings go to
+    /// [`ExtendHooks::on_match`]). `Prune` skips the subtree below this
+    /// partial embedding.
+    fn filter(&self, pat: usize, level: usize, vertices: &[VertexId]) -> Control {
+        let _ = (pat, level, vertices);
+        Control::Continue
+    }
+}
+
 /// What to do with each discovered embedding.
 pub trait EmbeddingSink {
     /// Called once per complete embedding, unless [`Self::bulk_count`] is

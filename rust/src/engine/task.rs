@@ -1,53 +1,58 @@
-//! The unit of scheduling: one chunk-granularity exploration frame.
+//! The unit of scheduling: one chunk-granularity exploration frame of a
+//! [`MiningProgram`] trie node.
 //!
 //! A [`Task`] is either a **root mini-batch** (an unexplored slice of a
-//! machine's owned start vertices) or a **split-off frame** (a filled
-//! chunk at some level, plus the `Arc` chain of frozen ancestor chunks it
-//! needs to resolve inherited edge lists and stored sets). Executing a
-//! task interprets the plan over its frame exactly like the original
-//! monolithic loop did — circulant fetch per chunk, then extension —
-//! with one scheduling hook: while extending a frame at `level <
-//! task_split_levels`, each child chunk that fills is handed back to the
-//! scheduler as a *new task* (up to `task_split_width` per task) instead
-//! of being descended in place. Everything below the split boundary is
-//! classic depth-first descent with bounded memory.
+//! machine's owned start vertices under one trie root) or a **split-off
+//! frame** (a filled chunk at some trie node, plus the `Arc` chain of
+//! frozen ancestor chunks it needs to resolve inherited edge lists and
+//! stored sets). Executing a task interprets the program over its frame:
+//! the circulant fetch phase runs once per frame, then every **child
+//! edge** of the frame's trie node extends the chunk — one intersection
+//! per (embedding, edge), filling one child chunk per edge. A node shared
+//! by several patterns therefore does its root scan, its fetches, and its
+//! shared-prefix intersections **once**; patterns diverge only where
+//! their plans do.
 //!
-//! **Remote fetches are real messages.** A frame's circulant fetch phase
-//! is split in two: [`TaskRunner::begin_frame`] charges each remote
-//! batch's wire cost, posts its transfer on the virtual timeline, and
-//! *issues* the [`crate::comm::FetchRequest`] through the machine's comm
-//! fabric; the payloads are materialised into the chunk arena only when
-//! the responses arrive. A split-off [`TaskKind::Frame`] task whose
-//! responses are still in flight **parks**: [`TaskRunner::run_task`]
-//! returns it as [`RunTask::Parked`] — a [`TaskKind::FrameWaiting`] task
-//! carrying its pending-fetch handle ([`FramePrep`]) and its
-//! virtual-time slice — and the scheduler runs other tasks until the
-//! replies land (communication/computation overlap measured from actual
-//! stalls, not just modelled). Root tasks and depth-first descents
-//! receive in place, stalling only if the owner has not answered yet.
-//! With `EngineConfig::comm.sync_fetch` (or a single machine) the
-//! payloads are copied synchronously from the shared `ClusterView`, and
-//! nothing ever parks — the pre-comm execution, reproduced exactly.
+//! **Per-pattern attribution — the program determinism contract.** Every
+//! charge a frame makes (intersection work, per-embedding overhead,
+//! wire bytes, timeline posts) is applied to *each pattern alive at the
+//! node*, through per-pattern pending counters, traffic ledgers, and
+//! virtual timelines. Because two patterns share a node only when their
+//! steps (sources, restrictions, labels, exclusions) and storage flags
+//! are identical (see [`MiningProgram::compile`]), a shared frame's
+//! chunk contents, candidate windows, and charge sequence are exactly
+//! what each pattern's own single-plan run would produce — so per
+//! pattern, the fused program reports counts, traffic matrices, and
+//! virtual time bitwise identical to the legacy one-plan-per-run path
+//! (`tests/program_equivalence.rs`). The *physical* totals (fetches
+//! issued once, roots scanned once) are accumulated separately for
+//! [`crate::metrics::ProgramStats`].
 //!
-//! **Determinism.** The task tree — which tasks exist, what each
-//! contains, and the [`TaskId`] path naming each — is a pure function of
-//! the graph, the plan, and the config: split decisions depend only on
-//! task-local state (level, per-task spawn count), never on queue
-//! occupancy, worker count, or steal timing. Each task accumulates its
-//! own virtual-time slice; the engine folds those slices in `TaskId`
-//! order, so every reported number is byte-for-byte identical for any
-//! `workers_per_machine` and any steal interleaving — PR 1's determinism
-//! contract, extended one level down.
+//! Task identity is per pattern too: a task carries one [`TaskId`] per
+//! alive pattern, extended on spawn with that pattern's own per-task
+//! sequence number, so each pattern's task tree — and the `TaskId`-order
+//! reduction over it — is indistinguishable from its single-plan run.
+//! Split budgets are per (task, child node): at most `task_split_width`
+//! spawns per child edge per task, a rule every pattern sharing the edge
+//! observes identically (a per-task budget would let one pattern's
+//! private subtree spend another's budget).
 //!
-//! The phase split inside a frame is what makes sharing safe: a chunk is
-//! mutated only while it is filled and during its circulant fetch phase;
-//! once extension begins it is frozen behind an `Arc` and only ever read
-//! (by this task's descents and by any split-off child task, possibly on
-//! another worker).
+//! **Remote fetches are real messages** (unchanged from the comm
+//! subsystem): wire costs are charged at issue, split-off frames with
+//! responses in flight park ([`RunTask::Parked`]), and the synchronous
+//! escape hatch copies payloads from the shared `ClusterView`.
+//!
+//! **Hooks.** When the program's app installs
+//! [`ExtendHooks`], frames consult `filter` before materialising an
+//! interior child embedding and `on_match` for every complete embedding;
+//! [`Control::Halt`] raises the run's halt flag, which workers observe
+//! per embedding and between tasks. Hooked programs are compiled without
+//! cross-pattern fusion below the root, so hook callbacks always see a
+//! single-pattern frame.
 
 use super::cache::StaticCache;
 use super::chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
-use super::sink::EmbeddingSink;
+use super::sink::{Control, EmbeddingSink, ExtendHooks};
 use crate::cluster::{ClusterView, Timeline, TrafficLedger};
 use crate::comm::{CommFabric, FetchResponse, ResponseSlot};
 use crate::config::EngineConfig;
@@ -55,24 +60,29 @@ use crate::exec;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::ComputeModel;
 use crate::pattern::MAX_PATTERN;
-use crate::plan::{Plan, Source};
+use crate::plan::{MiningProgram, NodeId, ProgramNode, Source};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-/// Deterministic task identity: the path through the machine's task tree
-/// (`[root_batch_index, spawn_seq, spawn_seq, …]`). Lexicographic order
-/// over paths is the engine's fixed reduction order — it coincides with
-/// the execution order of a single depth-first worker.
+/// Deterministic per-pattern task identity: the path through that
+/// pattern's task tree (`[root_batch_index, spawn_seq, spawn_seq, …]`).
+/// Lexicographic order over paths is the engine's fixed reduction order —
+/// it coincides with the execution order of a single depth-first worker
+/// mining that pattern alone.
 pub type TaskId = Vec<u32>;
 
 /// A frame's prepared fetch state: the circulant batches, each batch's
-/// virtual data-arrival gate, and (async comm path) the reply slots of
-/// the in-flight fetches. Travels inside a parked task as its
-/// pending-fetch handle.
+/// per-pattern virtual data-arrival gates, and (async comm path) the
+/// reply slots of the in-flight fetches. Travels inside a parked task as
+/// its pending-fetch handle.
 pub struct FramePrep {
     /// Circulant batches of embedding indices (`[0]` = ready, then owner
     /// machines in circulant order after self).
     batches: Vec<Vec<u32>>,
-    /// Per-batch data-arrival gates on the task's virtual timeline.
+    /// Data-arrival gates, flattened `[batch_pos × continuing_patterns]`:
+    /// the same transfer posts on every continuing pattern's own
+    /// timeline, so each pattern gates its compute exactly as its
+    /// single-plan run would.
     gates: Vec<f64>,
     /// Outstanding logical fetches: (batch position, reply slot). Empty
     /// on the synchronous path (payloads were materialised at issue).
@@ -90,31 +100,34 @@ impl FramePrep {
 /// What a task explores.
 pub enum TaskKind {
     /// Root mini-batch: the machine's owned (label-filtered) start
-    /// vertices `[lo, hi)`. Lazy — no chunk is materialised until the
-    /// task runs.
-    Roots { lo: usize, hi: usize },
-    /// A split-off filled chunk at `level`, with the frozen chunks of
-    /// levels `0..level` it resolves ancestors through.
-    Frame { ancestors: Vec<Arc<Chunk>>, chunk: Chunk, level: usize },
+    /// vertices `[lo, hi)` of trie root `root`. Lazy — no chunk is
+    /// materialised until the task runs.
+    Roots { root: usize, lo: usize, hi: usize },
+    /// A split-off filled chunk at the task's trie node, with the frozen
+    /// chunks of the shallower levels it resolves ancestors through.
+    Frame { ancestors: Vec<Arc<Chunk>>, chunk: Chunk },
     /// A split-off frame whose circulant fetches are in flight: parked
     /// by the scheduler until every reply slot fills. Carries the
-    /// frame's pending-fetch handle and the virtual-time slice already
-    /// accumulated at issue. Same task, same [`TaskId`], same outcome as
-    /// the [`TaskKind::Frame`] it began as — only *when and where* it
-    /// runs changes, which is exactly the freedom the determinism
-    /// contract grants.
+    /// frame's pending-fetch handle and the per-pattern virtual-time
+    /// slices already accumulated at issue (parallel to the node's
+    /// continuing-pattern list). Same task, same ids, same outcome as the
+    /// [`TaskKind::Frame`] it began as — only *when and where* it runs
+    /// changes.
     FrameWaiting {
         ancestors: Vec<Arc<Chunk>>,
         chunk: Chunk,
-        level: usize,
         prep: FramePrep,
-        timeline: Timeline,
+        timelines: Vec<Timeline>,
     },
 }
 
-/// One schedulable unit of exploration work.
+/// One schedulable unit of exploration work: a trie node, one
+/// per-pattern [`TaskId`] per pattern *continuing* there (parallel to
+/// the node's `cont` list — terminal riders have no frames), and the
+/// frame payload.
 pub struct Task {
-    pub id: TaskId,
+    pub node: NodeId,
+    pub ids: Vec<TaskId>,
     pub kind: TaskKind,
 }
 
@@ -136,63 +149,79 @@ impl Task {
     }
 }
 
-/// Result of [`TaskRunner::run_task`]: the task either ran to completion
-/// or parked on in-flight fetch responses. A parked task is requeued by
-/// the scheduler and re-run — as the same task, with the same id — once
-/// its responses arrive; it produces no outcome until then.
-pub enum RunTask<S> {
-    Done(TaskOutcome<S>),
-    Parked(Task),
-}
-
-/// What one task hands back for the ordered fold: its sink and its slice
-/// of the machine's virtual timeline. (Order-insensitive counters —
-/// traffic, work units, cache hits — accumulate on the worker instead.)
-pub struct TaskOutcome<S> {
+/// One pattern's slice of a finished task: its id, its sink, and its
+/// share of the machine's virtual timeline. The engine folds these per
+/// pattern in [`TaskId`] order.
+pub struct PatOutcome<S> {
+    pub pat: usize,
     pub id: TaskId,
     pub sink: S,
     pub finish: f64,
     pub exposed: f64,
 }
 
+/// Result of [`TaskRunner::run_task`]: the task either ran to completion
+/// (one outcome per alive pattern) or parked on in-flight fetch
+/// responses. A parked task is requeued by the scheduler and re-run — as
+/// the same task, with the same ids — once its responses arrive.
+pub enum RunTask<S> {
+    Done(Vec<PatOutcome<S>>),
+    Parked(Task),
+}
+
 /// Per-worker exploration state: scratch buffers, chunk pool, and the
-/// order-insensitive accumulators (u64 sums and maxes, merged into the
-/// machine totals in any order without changing a single bit). One
-/// `TaskRunner` serves one scheduler worker for the whole run; per-task
-/// state (timeline, pending work) is reset by [`TaskRunner::run_task`].
+/// order-insensitive accumulators — all of them **per pattern** (indexed
+/// by program pattern id), plus the physical totals of the fused
+/// execution. One `TaskRunner` serves one scheduler worker for the whole
+/// run; per-task state (timelines, pendings, spawn counters) is reset by
+/// [`TaskRunner::run_task`].
 pub struct TaskRunner<'a, 'g> {
     machine: usize,
     graph: &'g Graph,
-    plan: &'a Plan,
+    program: &'a MiningProgram,
     cfg: &'a EngineConfig,
     compute: ComputeModel,
     view: ClusterView<'g>,
     cache: &'a StaticCache,
-    /// The machine's comm fabric; `None` = synchronous escape hatch
-    /// (`EngineConfig::comm.sync_fetch`, or a single-machine run, which
-    /// never fetches remotely).
+    /// The machine's comm fabric; `None` = synchronous escape hatch.
     comm: Option<&'a CommFabric>,
-    // --- per-worker accumulators (order-free reductions) ---
-    pub ledger: TrafficLedger,
-    pub units_cpu: u64,
-    pub units_mem: u64,
-    pub embeddings_created: u64,
-    pub peak_bytes: u64,
-    pub numa_remote: u64,
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-    pub tasks_run: u64,
+    /// The app's per-level callbacks, if any.
+    hooks: Option<&'a dyn ExtendHooks>,
+    /// Run-wide halt flag ([`Control::Halt`]); only consulted when hooks
+    /// are installed, so hook-less runs stay on the bitwise contract.
+    halt: &'a AtomicBool,
+    // --- per-pattern accumulators (order-free reductions) ---
+    pub ledgers: Vec<TrafficLedger>,
+    pub units_cpu: Vec<u64>,
+    pub units_mem: Vec<u64>,
+    pub embeddings_created: Vec<u64>,
+    pub peak_bytes: Vec<u64>,
+    pub numa_remote: Vec<u64>,
+    pub cache_hits: Vec<u64>,
+    pub cache_misses: Vec<u64>,
+    pub tasks_run: Vec<u64>,
+    // --- physical totals of the fused execution ---
+    pub phys_ledger: TrafficLedger,
+    pub phys_root_embeddings: u64,
     // --- per-task state ---
-    timeline: Timeline,
-    pending_cpu: u64,
-    pending_mem: u64,
+    timelines: Vec<Timeline>,
+    pending_cpu: Vec<u64>,
+    pending_mem: Vec<u64>,
+    /// Per-pattern spawn sequence within the current task (the next
+    /// [`TaskId`] element that pattern's next split-off child gets).
+    pat_seq: Vec<u32>,
+    /// Per-(task, child node) split budget gauge: every pattern sharing
+    /// an edge observes the same spawn decisions.
+    node_spawns: Vec<u32>,
+    /// The current task's per-pattern ids (cloned per spawn).
+    task_ids: Vec<TaskId>,
     // --- scratch, reused across tasks (no hot-loop allocation) ---
     cand: Vec<VertexId>,
     tmp: Vec<VertexId>,
     emb_buf: Vec<VertexId>,
     /// Per-level circulant batch buffers, reused across frames.
     batch_pool: Vec<Vec<Vec<u32>>>,
-    /// Per-level batch-gate buffers, reused across frames.
+    /// Per-level flattened gate buffers, reused across frames.
     gate_pool: Vec<Vec<f64>>,
     /// Cleared chunks awaiting reuse (all sized `cfg.chunk_capacity`).
     chunk_pool: Vec<Chunk>,
@@ -203,35 +232,46 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
     pub fn new(
         machine: usize,
         graph: &'g Graph,
-        plan: &'a Plan,
+        program: &'a MiningProgram,
         cfg: &'a EngineConfig,
         compute: &ComputeModel,
         view: ClusterView<'g>,
         cache: &'a StaticCache,
         comm: Option<&'a CommFabric>,
+        hooks: Option<&'a dyn ExtendHooks>,
+        halt: &'a AtomicBool,
     ) -> Self {
-        let depth = plan.depth();
+        let depth = program.max_depth();
+        let pats = program.num_patterns();
+        let n = view.num_machines();
         TaskRunner {
             machine,
             graph,
-            plan,
+            program,
             cfg,
             compute: *compute,
             view,
             cache,
             comm,
-            ledger: TrafficLedger::new(view.num_machines()),
-            units_cpu: 0,
-            units_mem: 0,
-            embeddings_created: 0,
-            peak_bytes: 0,
-            numa_remote: 0,
-            cache_hits: 0,
-            cache_misses: 0,
-            tasks_run: 0,
-            timeline: Timeline::default(),
-            pending_cpu: 0,
-            pending_mem: 0,
+            hooks,
+            halt,
+            ledgers: (0..pats).map(|_| TrafficLedger::new(n)).collect(),
+            units_cpu: vec![0; pats],
+            units_mem: vec![0; pats],
+            embeddings_created: vec![0; pats],
+            peak_bytes: vec![0; pats],
+            numa_remote: vec![0; pats],
+            cache_hits: vec![0; pats],
+            cache_misses: vec![0; pats],
+            tasks_run: vec![0; pats],
+            phys_ledger: TrafficLedger::new(n),
+            phys_root_embeddings: 0,
+            timelines: vec![Timeline::default(); pats],
+            pending_cpu: vec![0; pats],
+            pending_mem: vec![0; pats],
+            pat_seq: vec![0; pats],
+            node_spawns: vec![0; program.num_nodes()],
+            task_ids: vec![Vec::new(); pats],
             cand: Vec::new(),
             tmp: Vec::new(),
             emb_buf: Vec::new(),
@@ -250,120 +290,136 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         self.chunk_pool.push(chunk);
     }
 
-    /// Execute one task. `roots` is the machine's full (label-filtered)
-    /// root list; `spawn` receives split-off child tasks. Returns the
-    /// task's outcome for the ordered fold — or the task itself, parked,
-    /// when its frame's fetch responses are still in flight (split-off
-    /// frames only; root tasks and in-place descents receive in place).
+    /// Whether a hook raised [`Control::Halt`]. Hook-less runs never read
+    /// the flag, so they cannot observe (or pay for) it.
+    #[inline]
+    fn halted(&self) -> bool {
+        self.hooks.is_some() && self.halt.load(Ordering::Relaxed)
+    }
+
+    /// Execute one task. `roots` holds the machine's (label-filtered)
+    /// start-vertex list per trie root; `make_sink(pat, machine)` makes
+    /// the task's per-pattern sinks; `spawn` receives split-off child
+    /// tasks. Returns one outcome per alive pattern — or the task
+    /// itself, parked, when its frame's fetch responses are still in
+    /// flight.
     pub fn run_task<S: EmbeddingSink>(
         &mut self,
         task: Task,
-        roots: &[VertexId],
-        make_sink: &impl Fn(usize) -> S,
+        roots: &[Vec<VertexId>],
+        make_sink: &impl Fn(usize, usize) -> S,
         spawn: &mut impl FnMut(Task),
     ) -> RunTask<S> {
-        self.timeline = Timeline::default();
-        self.pending_cpu = 0;
-        self.pending_mem = 0;
-        let mut spawn_seq = 0u32;
-        let Task { id, kind } = task;
-        let mut sink;
+        let prog = self.program;
+        let Task { node: node_id, mut ids, kind } = task;
+        let node = prog.node(node_id);
+        // A task's alive patterns are the node's *continuing* patterns:
+        // terminal riders were bulk-processed at the parent frame and
+        // have no frames, fetches, or sinks here. (At a root node, cont
+        // == pats — every pattern has at least one edge.)
+        for (slot, &p) in node.cont.iter().enumerate() {
+            self.pending_cpu[p] = 0;
+            self.pending_mem[p] = 0;
+            self.pat_seq[p] = 0;
+            self.task_ids[p] = std::mem::take(&mut ids[slot]);
+        }
+        self.node_spawns.fill(0);
+        let mut sinks: Vec<Option<S>> = (0..prog.num_patterns()).map(|_| None).collect();
         match kind {
-            TaskKind::Roots { lo, hi } => {
-                sink = make_sink(self.machine);
+            TaskKind::Roots { root, lo, hi } => {
+                for &p in &node.cont {
+                    self.timelines[p] = Timeline::default();
+                    sinks[p] = Some(make_sink(p, self.machine));
+                }
                 let cap = self.cfg.chunk_capacity;
-                let needs0 = self.plan.needs_adj[0];
+                let needs0 = node.needs_adj;
+                let overhead = self.compute.per_embedding_overhead_units;
                 let ancestors: Vec<Arc<Chunk>> = Vec::new();
                 let mut chunk = self.take_chunk();
+                let rl = &roots[root];
                 let mut block = lo;
-                while block < hi {
+                while block < hi && !self.halted() {
                     let end = (block + cap).min(hi);
-                    for &v in &roots[block..end] {
+                    for &v in &rl[block..end] {
                         let mut vs = [0 as VertexId; MAX_PATTERN];
                         vs[0] = v;
                         let list = if needs0 { ListRef::Local(v) } else { ListRef::None };
                         chunk.embs.push(Emb::new(vs, 0, list));
-                        self.pending_mem += self.compute.per_embedding_overhead_units;
-                        self.embeddings_created += 1;
+                        for &p in &node.cont {
+                            self.pending_mem[p] += overhead;
+                            self.embeddings_created[p] += 1;
+                        }
+                        self.phys_root_embeddings += 1;
                     }
-                    chunk = self.process_frame(
-                        &ancestors,
-                        chunk,
-                        0,
-                        &id,
-                        &mut spawn_seq,
-                        &mut sink,
-                        spawn,
-                    );
+                    chunk = self.process_frame(&ancestors, chunk, node_id, &mut sinks, spawn);
                     chunk.clear();
                     block = end;
                 }
                 self.put_chunk(chunk);
             }
-            TaskKind::Frame { ancestors, mut chunk, level } => {
+            TaskKind::Frame { ancestors, mut chunk } => {
+                for &p in &node.cont {
+                    self.timelines[p] = Timeline::default();
+                }
                 // Issue the frame's fetches first: if any response is
                 // still in flight, park instead of blocking — the
                 // scheduler runs other tasks while the replies drain.
-                let prep = self.begin_frame(&mut chunk, level);
+                let prep = self.begin_frame(&mut chunk, node_id);
                 if !prep.ready() {
                     if let Some(fabric) = self.comm {
                         // Parked requests must be servable before anyone
                         // waits on them.
                         fabric.flush(self.machine);
                     }
+                    let timelines = node
+                        .cont
+                        .iter()
+                        .map(|&p| std::mem::take(&mut self.timelines[p]))
+                        .collect();
+                    // Hand the per-pattern ids back to the parked task.
+                    for (slot, &p) in node.cont.iter().enumerate() {
+                        ids[slot] = std::mem::take(&mut self.task_ids[p]);
+                    }
                     return RunTask::Parked(Task {
-                        id,
-                        kind: TaskKind::FrameWaiting {
-                            ancestors,
-                            chunk,
-                            level,
-                            prep,
-                            timeline: std::mem::take(&mut self.timeline),
-                        },
+                        node: node_id,
+                        ids,
+                        kind: TaskKind::FrameWaiting { ancestors, chunk, prep, timelines },
                     });
                 }
-                sink = make_sink(self.machine);
-                self.finish_fetches(&mut chunk, &prep);
-                let done = self.extend_frame(
-                    &ancestors,
-                    chunk,
-                    level,
-                    prep,
-                    &id,
-                    &mut spawn_seq,
-                    &mut sink,
-                    spawn,
-                );
+                for &p in &node.cont {
+                    sinks[p] = Some(make_sink(p, self.machine));
+                }
+                self.finish_fetches(&mut chunk, &prep, node);
+                let done = self.extend_frame(&ancestors, chunk, node_id, prep, &mut sinks, spawn);
                 self.put_chunk(done);
             }
-            TaskKind::FrameWaiting { ancestors, mut chunk, level, prep, timeline } => {
-                // Resume a parked frame: restore its virtual-time slice,
-                // receive the (now answered) payloads, extend.
-                self.timeline = timeline;
-                sink = make_sink(self.machine);
-                self.finish_fetches(&mut chunk, &prep);
-                let done = self.extend_frame(
-                    &ancestors,
-                    chunk,
-                    level,
-                    prep,
-                    &id,
-                    &mut spawn_seq,
-                    &mut sink,
-                    spawn,
-                );
+            TaskKind::FrameWaiting { ancestors, mut chunk, prep, timelines } => {
+                // Resume a parked frame: restore its per-pattern
+                // virtual-time slices, receive the (now answered)
+                // payloads, extend.
+                for (slot, &p) in node.cont.iter().enumerate() {
+                    self.timelines[p] = timelines[slot].clone();
+                    sinks[p] = Some(make_sink(p, self.machine));
+                }
+                self.finish_fetches(&mut chunk, &prep, node);
+                let done = self.extend_frame(&ancestors, chunk, node_id, prep, &mut sinks, spawn);
                 self.put_chunk(done);
             }
         }
-        // Trailing work not yet flushed.
-        self.flush_compute(0.0, 1);
-        self.tasks_run += 1;
-        RunTask::Done(TaskOutcome {
-            id,
-            sink,
-            finish: self.timeline.finish(),
-            exposed: self.timeline.exposed_comm(),
-        })
+        // Trailing work not yet flushed, then one outcome per pattern.
+        let mut outs = Vec::with_capacity(node.cont.len());
+        for &p in &node.cont {
+            self.flush_pat(p, 0.0, 1);
+            self.tasks_run[p] += 1;
+            outs.push(PatOutcome {
+                pat: p,
+                id: std::mem::take(&mut self.task_ids[p]),
+                sink: sinks[p].take().expect("sink created for every alive pattern"),
+                finish: self.timelines[p].finish(),
+                exposed: self.timelines[p].exposed_comm(),
+            });
+        }
+        RunTask::Done(outs)
     }
 
     /// NUMA memory-access multiplier (DESIGN.md §1: Table 7's policy
@@ -375,18 +431,17 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         if s <= 1 {
             return 1.0;
         }
-        let remote_frac =
-            if self.cfg.numa_aware { 0.08 } else { (s - 1) as f64 / s as f64 };
+        let remote_frac = if self.cfg.numa_aware { 0.08 } else { (s - 1) as f64 / s as f64 };
         1.0 + remote_frac * (self.compute.numa_remote_penalty - 1.0)
     }
 
-    /// Convert accumulated pending work to virtual seconds and post it on
-    /// the task's timeline, gated on `gate` (the batch's data-arrival
-    /// time). Thread scaling: mini-batches are distributed dynamically
-    /// over `threads` modelled workers; a small serial fraction covers
-    /// chunk management (paper §7).
-    fn flush_compute(&mut self, gate: f64, emb_count: usize) {
-        if self.pending_cpu == 0 && self.pending_mem == 0 {
+    /// Convert pattern `p`'s accumulated pending work to virtual seconds
+    /// and post it on `p`'s timeline, gated on `gate` (the batch's data
+    /// arrival on *that* pattern's timeline). Identical formula to the
+    /// single-plan path; sharing only changes how often this is charged
+    /// physically, never what each pattern is charged.
+    fn flush_pat(&mut self, p: usize, gate: f64, emb_count: usize) {
+        if self.pending_cpu[p] == 0 && self.pending_mem[p] == 0 {
             return;
         }
         let numa = self.numa_mult();
@@ -396,64 +451,60 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             } else {
                 (self.cfg.sockets - 1) as f64 / self.cfg.sockets as f64
             };
-            (self.pending_mem as f64 * frac) as u64
+            (self.pending_mem[p] as f64 * frac) as u64
         } else {
             0
         };
-        self.numa_remote += remote_bump;
-        let units = self.pending_cpu as f64 + self.pending_mem as f64 * numa;
+        self.numa_remote[p] += remote_bump;
+        let units = self.pending_cpu[p] as f64 + self.pending_mem[p] as f64 * numa;
         let t = self.cfg.threads.max(1);
         let minibatches = (emb_count / self.cfg.mini_batch).max(1);
         let t_eff = t.min(minibatches.max(1)) as f64;
         const SERIAL_FRAC: f64 = 0.012;
         let secs =
             units * self.compute.seconds_per_unit * (SERIAL_FRAC + (1.0 - SERIAL_FRAC) / t_eff);
-        self.timeline.post_compute(gate, secs);
-        self.units_cpu += self.pending_cpu;
-        self.units_mem += self.pending_mem;
-        self.pending_cpu = 0;
-        self.pending_mem = 0;
+        self.timelines[p].post_compute(gate, secs);
+        self.units_cpu[p] += self.pending_cpu[p];
+        self.units_mem[p] += self.pending_mem[p];
+        self.pending_cpu[p] = 0;
+        self.pending_mem[p] = 0;
     }
 
     /// Process one filled frame in place: issue its circulant fetches,
     /// receive the payloads (stalling only if the owner has not answered
-    /// yet), then extend. This is the path of root tasks and depth-first
-    /// descents; split-off frame tasks go through the same phases but
-    /// may park between issue and receive (see [`TaskRunner::run_task`]).
-    /// Returns a cleared chunk for pooling (a fresh one if the frame's
-    /// chunk escaped into split-off child tasks).
-    #[allow(clippy::too_many_arguments)]
+    /// yet), then extend through every child edge. This is the path of
+    /// root tasks and depth-first descents; split-off frame tasks go
+    /// through the same phases but may park between issue and receive.
+    /// Returns a cleared chunk for pooling.
     fn process_frame<S: EmbeddingSink>(
         &mut self,
         ancestors: &[Arc<Chunk>],
         mut chunk: Chunk,
-        level: usize,
-        task_id: &TaskId,
-        spawn_seq: &mut u32,
-        sink: &mut S,
+        node_id: NodeId,
+        sinks: &mut [Option<S>],
         spawn: &mut impl FnMut(Task),
     ) -> Chunk {
-        let prep = self.begin_frame(&mut chunk, level);
-        self.finish_fetches(&mut chunk, &prep);
-        self.extend_frame(ancestors, chunk, level, prep, task_id, spawn_seq, sink, spawn)
+        let node = self.program.node(node_id);
+        let prep = self.begin_frame(&mut chunk, node_id);
+        self.finish_fetches(&mut chunk, &prep, node);
+        self.extend_frame(ancestors, chunk, node_id, prep, sinks, spawn)
     }
 
     /// Phase 1 of a frame: group embedding indices into circulant
-    /// batches — index 0 = ready (local/cached/shared-resolved/no-list),
-    /// then owner machines in circulant order starting after self (§5.3)
-    /// — then, for every remote batch, charge its wire cost on the
-    /// ledger, post its transfer on the comm channel of the virtual
-    /// timeline (recording the data-arrival gate), and send the fetch:
-    /// synchronously materialised from the shared `ClusterView` on the
-    /// `sync_fetch` path, or issued as a real [`crate::comm::FetchRequest`]
-    /// through the fabric. The comm channel free-runs ahead of compute
-    /// (§5.3's non-strict pipelining), so posting every transfer before
-    /// any extension leaves the timeline bit-identical to the interleaved
-    /// order. Accounting and virtual time are charged **at issue**, with
-    /// the same formulas in the same order on both paths — that is the
-    /// whole determinism contract of the comm subsystem.
-    fn begin_frame(&mut self, chunk: &mut Chunk, level: usize) -> FramePrep {
+    /// batches (§5.3), then, for every remote batch, charge its wire
+    /// cost **once per continuing pattern** on that pattern's ledger, post
+    /// the transfer on that pattern's timeline (recording per-pattern
+    /// data-arrival gates), charge the physical ledger once, and send
+    /// the fetch — synchronously materialised on the `sync_fetch` path,
+    /// or issued once as a real [`crate::comm::FetchRequest`]. Formulas
+    /// and order are those of the single-plan path, which is the whole
+    /// per-pattern determinism argument.
+    fn begin_frame(&mut self, chunk: &mut Chunk, node_id: NodeId) -> FramePrep {
+        let prog = self.program;
+        let node = prog.node(node_id);
+        let level = node.level;
         let n = self.view.num_machines();
+        let nslots = node.cont.len();
         // Buffers are pooled per level and reused across frames (a parked
         // frame carries them away; the pool refills with fresh ones).
         let mut batches = std::mem::take(&mut self.batch_pool[level]);
@@ -485,7 +536,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         let mut pending: Vec<(usize, ResponseSlot)> = Vec::new();
         for pos in 0..batches.len() {
             if pos == 0 || batches[pos].is_empty() {
-                gates.push(0.0);
+                gates.extend(std::iter::repeat(0.0).take(nslots));
                 continue;
             }
             let owner = (self.machine + pos) % n;
@@ -499,16 +550,22 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 }
             }
             if verts.is_empty() {
-                gates.push(0.0);
+                gates.extend(std::iter::repeat(0.0).take(nslots));
                 continue;
             }
-            let (_bytes, time) =
-                self.view.fetch_batch(&mut self.ledger, self.machine, owner, &verts);
-            gates.push(self.timeline.post_comm(time));
+            debug_assert!(verts.iter().all(|&v| self.view.partitioned().owner(v) == owner));
+            let (request, payload, time) = self.view.fetch_cost(&verts);
+            for &p in &node.cont {
+                self.ledgers[p].record(self.machine, owner, request);
+                self.ledgers[p].record(owner, self.machine, payload);
+                gates.push(self.timelines[p].post_comm(time));
+            }
+            self.phys_ledger.record(self.machine, owner, request);
+            self.phys_ledger.record(owner, self.machine, payload);
             match self.comm {
                 None => {
                     let batch = &batches[pos];
-                    self.materialize_sync(chunk, batch);
+                    self.materialize_sync(chunk, batch, node);
                 }
                 Some(fabric) => {
                     pending.push((pos, fabric.issue_fetch(self.machine, owner, verts)));
@@ -519,14 +576,9 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
     }
 
     /// Phase 2: ensure every remote batch's payload has landed in the
-    /// chunk arena. Synchronous path: nothing to do (phase 1 materialised
-    /// at issue). Async path: flush the outbox — issued requests must be
-    /// servable before anyone waits on them — then receive in batch
-    /// order, so the arena layout is byte-identical to the synchronous
-    /// path. Stall time (responses not yet served when the data is
-    /// needed) is measured on the fabric and reported as
-    /// `RunStats::comm_stall_s`.
-    fn finish_fetches(&mut self, chunk: &mut Chunk, prep: &FramePrep) {
+    /// chunk arena (receive in batch order → arena layout byte-identical
+    /// to the synchronous path).
+    fn finish_fetches(&mut self, chunk: &mut Chunk, prep: &FramePrep, node: &ProgramNode) {
         let Some(fabric) = self.comm else { return };
         if prep.pending.is_empty() {
             return;
@@ -534,94 +586,102 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         fabric.flush(self.machine);
         for (pos, slot) in &prep.pending {
             let resp = fabric.wait(self.machine, slot);
-            self.materialize_response(chunk, &prep.batches[*pos], resp);
+            self.materialize_response(chunk, &prep.batches[*pos], resp, node);
         }
     }
 
     /// Phase 3: freeze the (fully materialised) chunk and extend it in
-    /// batch order — splitting or descending into child chunks as they
-    /// fill.
-    #[allow(clippy::too_many_arguments)]
+    /// batch order through every child edge of the trie node — splitting
+    /// or descending into child chunks as they fill.
     fn extend_frame<S: EmbeddingSink>(
         &mut self,
         ancestors: &[Arc<Chunk>],
         chunk: Chunk,
-        level: usize,
+        node_id: NodeId,
         prep: FramePrep,
-        task_id: &TaskId,
-        spawn_seq: &mut u32,
-        sink: &mut S,
+        sinks: &mut [Option<S>],
         spawn: &mut impl FnMut(Task),
     ) -> Chunk {
+        let prog = self.program;
+        let node = prog.node(node_id);
+        let level = node.level;
+        let nslots = node.cont.len();
         let FramePrep { mut batches, gates, pending: _ } = prep;
         // Freeze: from here the chunk is shared read-only.
         let cur = Arc::new(chunk);
-        // Peak accounting: this task's live frame stack (frozen ancestors
-        // + own frame; the child under construction is counted when its
-        // own frame is processed).
-        let stack_bytes =
-            ancestors.iter().map(|c| c.bytes()).sum::<u64>() + cur.bytes();
-        self.peak_bytes = self.peak_bytes.max(stack_bytes);
+        // Peak accounting: this task's live frame stack, charged to every
+        // continuing pattern (each one's own run would hold the same
+        // chunks; terminal riders never materialise a frame here).
+        let stack_bytes = ancestors.iter().map(|c| c.bytes()).sum::<u64>() + cur.bytes();
+        for &p in &node.cont {
+            self.peak_bytes[p] = self.peak_bytes[p].max(stack_bytes);
+        }
 
-        let depth = self.plan.depth();
-        let interior = level + 1 < depth - 1;
         let may_split = level < self.cfg.task_split_levels;
         // The level stack for ancestor resolution (index = level), and
-        // the ancestor chain split-off children inherit. Built once per
-        // frame; both only borrow frozen chunks.
+        // the ancestor chain split-off / descended children inherit.
         let stack: Vec<&Chunk> =
             ancestors.iter().map(|a| a.as_ref()).chain(std::iter::once(cur.as_ref())).collect();
-        let child_ancestors: Vec<Arc<Chunk>> = if interior {
+        let any_interior = node.children.iter().any(|&c| prog.node(c).interior());
+        let child_ancestors: Vec<Arc<Chunk>> = if any_interior {
             ancestors.iter().cloned().chain(std::iter::once(cur.clone())).collect()
         } else {
             Vec::new()
         };
 
-        let mut child = self.take_chunk();
+        // One child chunk per child edge; terminal-only edges leave
+        // theirs empty (their patterns bulk-process the window).
+        let mut kids: Vec<Chunk> = (0..node.children.len()).map(|_| self.take_chunk()).collect();
         for pos in 0..batches.len() {
             let batch = std::mem::take(&mut batches[pos]);
             if batch.is_empty() {
                 batches[pos] = batch;
                 continue;
             }
-            let gate = gates[pos];
             // Thread parallelism of the cost model is bounded by the
             // whole chunk's mini-batch pool (workers pull 64-embedding
             // mini-batches from a shared queue, §7), not by this
             // circulant batch alone.
             let chunk_len = stack[level].len();
+            let mut halted_now = false;
             for &idx in &batch {
-                self.extend_one(&stack, level, idx, &mut child, sink);
-                if interior && child.is_full() {
-                    self.flush_compute(gate, chunk_len);
-                    let full = std::mem::replace(&mut child, self.take_chunk());
-                    self.dispatch_child(
-                        &child_ancestors,
-                        full,
-                        level,
-                        task_id,
-                        spawn_seq,
-                        may_split,
-                        sink,
-                        spawn,
-                    );
+                if self.halted() {
+                    halted_now = true;
+                    break;
+                }
+                for (ci, &c) in node.children.iter().enumerate() {
+                    self.extend_one(&stack, node, c, idx, &mut kids[ci], sinks);
+                    let cnode = prog.node(c);
+                    if cnode.interior() && kids[ci].is_full() {
+                        for &p in &cnode.cont {
+                            self.flush_pat(p, gates[pos * nslots + node.slot_of(p)], chunk_len);
+                        }
+                        let full = std::mem::replace(&mut kids[ci], self.take_chunk());
+                        self.dispatch_child(&child_ancestors, full, c, may_split, sinks, spawn);
+                    }
                 }
             }
-            self.flush_compute(gate, chunk_len);
+            for (slot, &p) in node.cont.iter().enumerate() {
+                self.flush_pat(p, gates[pos * nslots + slot], chunk_len);
+            }
             batches[pos] = batch;
+            if halted_now {
+                break;
+            }
         }
         self.batch_pool[level] = batches;
         self.gate_pool[level] = gates;
 
-        // Trailing partial child chunk: always descend in place (it is
-        // the last frame of this subtree; splitting it would only add
+        // Trailing partial child chunks: always descend in place (each is
+        // the last frame of its subtree; splitting would only add
         // scheduling overhead).
-        if interior && !child.is_empty() {
-            let done =
-                self.process_frame(&child_ancestors, child, level + 1, task_id, spawn_seq, sink, spawn);
-            self.put_chunk(done);
-        } else {
-            self.put_chunk(child);
+        for (kid, &c) in kids.into_iter().zip(node.children.iter()) {
+            if prog.node(c).interior() && !kid.is_empty() && !self.halted() {
+                let done = self.process_frame(&child_ancestors, kid, c, sinks, spawn);
+                self.put_chunk(done);
+            } else {
+                self.put_chunk(kid);
+            }
         }
 
         drop(stack);
@@ -638,44 +698,51 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         }
     }
 
-    /// Hand one full child chunk onward: split it off as a new task while
-    /// the budgets allow (deterministic — depends only on `level` and the
-    /// per-task spawn count), otherwise descend depth-first in place.
-    #[allow(clippy::too_many_arguments)]
+    /// Hand one full child chunk onward: split it off as a new task
+    /// while the budgets allow — deterministic, depending only on the
+    /// parent level and the per-(task, child node) spawn count, which
+    /// every pattern sharing the edge observes identically — otherwise
+    /// descend depth-first in place. A spawned task gets one id per
+    /// alive pattern, extending that pattern's parent id with that
+    /// pattern's own spawn sequence.
     fn dispatch_child<S: EmbeddingSink>(
         &mut self,
         child_ancestors: &[Arc<Chunk>],
         full: Chunk,
-        level: usize,
-        task_id: &TaskId,
-        spawn_seq: &mut u32,
+        child_id: NodeId,
         may_split: bool,
-        sink: &mut S,
+        sinks: &mut [Option<S>],
         spawn: &mut impl FnMut(Task),
     ) {
-        if may_split && (*spawn_seq as usize) < self.cfg.task_split_width {
-            let mut id = task_id.clone();
-            id.push(*spawn_seq);
-            *spawn_seq += 1;
+        let cnode = self.program.node(child_id);
+        if may_split && (self.node_spawns[child_id] as usize) < self.cfg.task_split_width {
+            self.node_spawns[child_id] += 1;
+            let ids: Vec<TaskId> = cnode
+                .cont
+                .iter()
+                .map(|&p| {
+                    let mut id = self.task_ids[p].clone();
+                    id.push(self.pat_seq[p]);
+                    self.pat_seq[p] += 1;
+                    id
+                })
+                .collect();
             spawn(Task {
-                id,
-                kind: TaskKind::Frame {
-                    ancestors: child_ancestors.to_vec(),
-                    chunk: full,
-                    level: level + 1,
-                },
+                node: child_id,
+                ids,
+                kind: TaskKind::Frame { ancestors: child_ancestors.to_vec(), chunk: full },
             });
         } else {
-            let done =
-                self.process_frame(child_ancestors, full, level + 1, task_id, spawn_seq, sink, spawn);
+            let done = self.process_frame(child_ancestors, full, child_id, sinks, spawn);
             self.put_chunk(done);
         }
     }
 
     /// Materialise the pending edge lists of `batch` into the chunk
     /// arena directly from the shared CSR — the synchronous path's
-    /// "receive" (copy = receive; memory work charged per list).
-    fn materialize_sync(&mut self, chunk: &mut Chunk, batch: &[u32]) {
+    /// "receive" (copy = receive; memory work charged per list, to every
+    /// pattern alive at the node).
+    fn materialize_sync(&mut self, chunk: &mut Chunk, batch: &[u32], node: &ProgramNode) {
         for &i in batch {
             let e = chunk.embs[i as usize];
             if let ListRef::Pending { vertex, .. } = e.list {
@@ -683,17 +750,25 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 let nb = self.graph.neighbors(vertex);
                 let r = chunk.arena_push(nb);
                 chunk.embs[i as usize].list = r;
-                self.pending_mem += deg as u64 / 4 + 1;
+                let m = deg as u64 / 4 + 1;
+                for &p in &node.cont {
+                    self.pending_mem[p] += m;
+                }
             }
         }
     }
 
-    /// Materialise a batch from a fetch response's payloads. Payloads
-    /// are parallel to the batch's `Pending` entries in batch order (the
-    /// order the request was built in), and each payload is the owner's
-    /// copy of the same CSR slice the synchronous path reads — so arena
-    /// contents, offsets, and memory-work charges are byte-identical.
-    fn materialize_response(&mut self, chunk: &mut Chunk, batch: &[u32], resp: &FetchResponse) {
+    /// Materialise a batch from a fetch response's payloads (parallel to
+    /// the batch's `Pending` entries in batch order; arena contents,
+    /// offsets, and memory-work charges byte-identical to the
+    /// synchronous path).
+    fn materialize_response(
+        &mut self,
+        chunk: &mut Chunk,
+        batch: &[u32],
+        resp: &FetchResponse,
+        node: &ProgramNode,
+    ) {
         let mut k = 0usize;
         for &i in batch {
             if let ListRef::Pending { .. } = chunk.embs[i as usize].list {
@@ -702,31 +777,39 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 let deg = data.len();
                 let r = chunk.arena_push(data);
                 chunk.embs[i as usize].list = r;
-                self.pending_mem += deg as u64 / 4 + 1;
+                let m = deg as u64 / 4 + 1;
+                for &p in &node.cont {
+                    self.pending_mem[p] += m;
+                }
             }
         }
         debug_assert_eq!(k, resp.num_payloads(), "one payload per pending entry");
     }
 
-    /// Extend one embedding at `level` to `level+1` (paper Algorithm 1's
-    /// EXTEND, interpreted from the plan). `stack[0..=level]` are the
-    /// frozen chunks of this frame's lineage; interior children are
-    /// appended to `child`.
+    /// Extend one embedding through one child edge (paper Algorithm 1's
+    /// EXTEND, interpreted from the program). `stack[0..=level]` are the
+    /// frozen chunks of this frame's lineage. Work is computed once and
+    /// charged to every pattern alive at the child; terminal patterns
+    /// bulk-process the candidate window into their sinks, continuing
+    /// patterns materialise child embeddings into `child`.
     fn extend_one<S: EmbeddingSink>(
         &mut self,
         stack: &[&Chunk],
-        level: usize,
+        node: &ProgramNode,
+        child_id: NodeId,
         idx: u32,
         child: &mut Chunk,
-        sink: &mut S,
+        sinks: &mut [Option<S>],
     ) {
-        let depth = self.plan.depth();
-        let step = &self.plan.steps[level]; // describes level+1
+        let prog = self.program;
+        let cnode = prog.node(child_id);
+        let step = cnode.step.as_ref().expect("non-root node has a step");
+        let level = node.level;
         let new_level = level + 1;
         let e = stack[level].embs[idx as usize];
         let vertices = e.vertices;
 
-        // --- Candidate set: intersect the plan's sources. ---
+        // --- Candidate set: intersect the step's sources. ---
         {
             let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
             for s in &step.sources {
@@ -751,14 +834,20 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 2 => exec::intersect(slices[0], slices[1], &mut self.cand),
                 _ => exec::intersect_many(slices[0], &slices[1..], &mut self.cand),
             };
-            self.pending_cpu += w.0;
+            for &p in &cnode.pats {
+                self.pending_cpu[p] += w.0;
+            }
         }
 
-        // --- Vertical sharing: store the raw intersection for children. ---
-        let stored_ref = if self.plan.store_set[new_level] && new_level < depth - 1 {
+        // --- Vertical sharing: store the raw intersection for children
+        // of the continuing patterns. ---
+        let stored_ref = if cnode.store && cnode.interior() {
             let off = child.arena.len() as u32;
             child.arena.extend_from_slice(&self.cand);
-            self.pending_mem += self.cand.len() as u64 / 4 + 1;
+            let m = self.cand.len() as u64 / 4 + 1;
+            for &p in &cnode.cont {
+                self.pending_mem[p] += m;
+            }
             Some((off, self.cand.len() as u32))
         } else {
             None
@@ -770,7 +859,9 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 let a = ancestor_idx(stack, level, idx, j);
                 let ex = resolve_list(stack, j, a, self.graph);
                 let w = exec::difference(&self.cand, ex, &mut self.tmp);
-                self.pending_cpu += w.0;
+                for &p in &cnode.pats {
+                    self.pending_cpu[p] += w.0;
+                }
                 std::mem::swap(&mut self.cand, &mut self.tmp);
             }
         }
@@ -786,7 +877,10 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         }
         let start = self.cand.partition_point(|&v| v < lo);
         let end = self.cand.partition_point(|&v| v < hi);
-        self.pending_cpu += 2 * (self.cand.len().max(2).ilog2() as u64);
+        let wsearch = 2 * (self.cand.len().max(2).ilog2() as u64);
+        for &p in &cnode.pats {
+            self.pending_cpu[p] += wsearch;
+        }
         if start >= end {
             return;
         }
@@ -804,9 +898,35 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         }
         let dups = &dups[..ndups];
 
-        if new_level == depth - 1 {
-            // --- Last level: process embeddings (Algorithm 1, l.13-14). ---
-            if sink.bulk_count() && step.label == 0 {
+        // --- Terminal patterns: process complete embeddings (Algorithm
+        // 1, l.13-14) into their own sinks. ---
+        for &p in &cnode.terminal {
+            let sink = sinks[p].as_mut().expect("sink exists for every alive pattern");
+            if let Some(hooks) = self.hooks {
+                // Hooked runs deliver every complete embedding to
+                // `on_match` (bulk counting would hide them).
+                self.emb_buf.clear();
+                self.emb_buf.extend_from_slice(&vertices[..new_level]);
+                self.emb_buf.push(0);
+                for k in start..end {
+                    let v = self.cand[k];
+                    if dups.contains(&v) || (step.label != 0 && self.graph.label(v) != step.label)
+                    {
+                        continue;
+                    }
+                    *self.emb_buf.last_mut().unwrap() = v;
+                    match hooks.on_match(p, &self.emb_buf) {
+                        Control::Continue => sink.emit(&self.emb_buf),
+                        Control::Prune => {}
+                        Control::Halt => {
+                            sink.emit(&self.emb_buf);
+                            self.pending_cpu[p] += (end - start) as u64;
+                            self.halt.store(true, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                }
+            } else if sink.bulk_count() && step.label == 0 {
                 let mut count = (end - start) as u64;
                 // Remove earlier vertices that slipped into the window.
                 for &u in &vertices[..new_level] {
@@ -824,7 +944,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                         count += 1;
                     }
                 }
-                self.pending_cpu += (end - start) as u64;
+                self.pending_cpu[p] += (end - start) as u64;
                 sink.add_count(count);
             } else {
                 self.emb_buf.clear();
@@ -833,8 +953,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 // Iterate the window, skipping earlier vertices.
                 for k in start..end {
                     let v = self.cand[k];
-                    if dups.contains(&v)
-                        || (step.label != 0 && self.graph.label(v) != step.label)
+                    if dups.contains(&v) || (step.label != 0 && self.graph.label(v) != step.label)
                     {
                         continue;
                     }
@@ -842,13 +961,16 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                     sink.emit(&self.emb_buf);
                 }
             }
-            self.pending_cpu += (end - start) as u64;
-            return;
+            self.pending_cpu[p] += (end - start) as u64;
         }
 
-        // --- Interior level: create child extendable embeddings. ---
-        let needs = self.plan.needs_adj[new_level];
+        // --- Continuing patterns: create child extendable embeddings. ---
+        if !cnode.interior() {
+            return;
+        }
+        let needs = cnode.needs_adj;
         let hds = self.cfg.horizontal_sharing;
+        let overhead = self.compute.per_embedding_overhead_units;
         for k in start..end {
             let v = self.cand[k];
             if (!dups.is_empty() && dups.contains(&v))
@@ -858,15 +980,33 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             }
             let mut vs = vertices;
             vs[new_level] = v;
+            if let Some(hooks) = self.hooks {
+                debug_assert!(
+                    cnode.cont.len() == 1,
+                    "hooked programs are compiled without prefix fusion"
+                );
+                match hooks.filter(cnode.cont[0], new_level, &vs[..new_level + 1]) {
+                    Control::Continue => {}
+                    Control::Prune => continue,
+                    Control::Halt => {
+                        self.halt.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
             let list = if !needs {
                 ListRef::None
             } else if self.view.partitioned().is_local(self.machine, v) {
                 ListRef::Local(v)
             } else if self.cache.contains(v) {
-                self.cache_hits += 1;
+                for &p in &cnode.cont {
+                    self.cache_hits[p] += 1;
+                }
                 ListRef::Cached(v)
             } else {
-                self.cache_misses += 1;
+                for &p in &cnode.cont {
+                    self.cache_misses[p] += 1;
+                }
                 let next_idx = child.embs.len() as u32;
                 if hds {
                     match child.hds_lookup(v) {
@@ -880,10 +1020,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                         }
                     }
                 } else {
-                    ListRef::Pending {
-                        vertex: v,
-                        owner: self.view.partitioned().owner(v) as u8,
-                    }
+                    ListRef::Pending { vertex: v, owner: self.view.partitioned().owner(v) as u8 }
                 }
             };
             let mut emb = Emb::new(vs, idx, list);
@@ -892,8 +1029,10 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 emb.stored_len = len;
             }
             child.embs.push(emb);
-            self.pending_mem += self.compute.per_embedding_overhead_units;
-            self.embeddings_created += 1;
+            for &p in &cnode.cont {
+                self.pending_mem[p] += overhead;
+                self.embeddings_created[p] += 1;
+            }
         }
     }
 }
@@ -912,14 +1051,7 @@ mod tests {
         ids.sort();
         assert_eq!(
             ids,
-            vec![
-                vec![0],
-                vec![0, 0],
-                vec![0, 0, 2],
-                vec![0, 1],
-                vec![1],
-                vec![2]
-            ]
+            vec![vec![0], vec![0, 0], vec![0, 0, 2], vec![0, 1], vec![1], vec![2]]
         );
     }
 
@@ -932,11 +1064,13 @@ mod tests {
 
     #[test]
     fn root_tasks_are_lazy_frames_hold_chunks() {
-        let root = Task { id: vec![0], kind: TaskKind::Roots { lo: 0, hi: 64 } };
+        let root =
+            Task { node: 0, ids: vec![vec![0]], kind: TaskKind::Roots { root: 0, lo: 0, hi: 64 } };
         assert!(!root.holds_chunk());
         let frame = Task {
-            id: vec![0, 0],
-            kind: TaskKind::Frame { ancestors: Vec::new(), chunk: Chunk::new(4), level: 1 },
+            node: 1,
+            ids: vec![vec![0, 0]],
+            kind: TaskKind::Frame { ancestors: Vec::new(), chunk: Chunk::new(4) },
         };
         assert!(frame.holds_chunk());
     }
@@ -951,13 +1085,13 @@ mod tests {
             pending: vec![(1, slot.clone())],
         };
         let t = Task {
-            id: vec![0, 0],
+            node: 1,
+            ids: vec![vec![0, 0]],
             kind: TaskKind::FrameWaiting {
                 ancestors: Vec::new(),
                 chunk: Chunk::new(4),
-                level: 1,
                 prep,
-                timeline: Timeline::default(),
+                timelines: vec![Timeline::default()],
             },
         };
         assert!(t.holds_chunk(), "a parked frame still pins its chunk");

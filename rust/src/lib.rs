@@ -12,6 +12,30 @@
 //! intersection loops) into fine-grained tasks with well-defined remote-
 //! data dependencies.
 //!
+//! ## Mining programs
+//!
+//! The unit of execution is a **mining program**
+//! ([`plan::MiningProgram`]): *all* of an app's compiled plans, merged
+//! into a shared prefix trie. Plans whose leading levels are compatible
+//! — identical intersection sources, identical symmetry-breaking
+//! restrictions, identical label/exclusion constraints and storage flags
+//! (the *restriction compatibility check*) — share one trie node per
+//! common level and diverge into per-pattern continuations below. One
+//! engine run mines the whole program: a 4-motif-count job does **one**
+//! root scan instead of six, shares one scheduler and one comm-fabric
+//! session across all patterns, and a remote edge list fetched for a
+//! shared frame crosses the wire once.
+//!
+//! Sharing is an execution optimisation, never an accounting one: the
+//! engine attributes every charge to each pattern alive at a frame with
+//! the single-plan formulas in the single-plan order, so **per pattern**
+//! the fused program reports counts, traffic matrices (cell for cell),
+//! and virtual time bitwise identical to the legacy one-plan-per-run
+//! path ([`session::Job::fused`]`(false)`) — pinned by
+//! `tests/program_equivalence.rs`. The physical wins (root scans,
+//! deduplicated wire bytes) are reported in
+//! [`metrics::ProgramStats`].
+//!
 //! ## The mining-session API
 //!
 //! All mining goes through a [`session::MiningSession`], which owns the
@@ -26,8 +50,9 @@
 //! let g = kudu::graph::gen::rmat(12, 12, 42);
 //! let session = MiningSession::new(&g, 8);
 //!
-//! // Triangle counting on the Kudu engine with GraphPi plans (default):
-//! let tc = session.job(&App::Tc).run();
+//! // 4-motif counting: one fused program, one root scan for all six
+//! // motifs (the default; .fused(false) reproduces per-pattern runs).
+//! let mc = session.job(&App::Mc(4)).run();
 //!
 //! // 4-clique counting, Automine plans, vertical sharing ablated:
 //! let cc = session
@@ -35,50 +60,66 @@
 //!     .client(ClientSystem::Automine)
 //!     .vertical_sharing(false)
 //!     .run();
-//! println!("triangles {} / 4-cliques {}", tc.total_count(), cc.total_count());
+//! println!("4-motifs {:?} / 4-cliques {}", mc.counts, cc.total_count());
 //! ```
 //!
 //! Two traits keep the surface open:
 //!
 //! * [`session::GpmApp`] — *what* to mine: patterns, embedding semantics,
-//!   an optional per-unit sink factory, and result aggregation. The
-//!   built-in counting apps ([`workloads::App`]) and the labelled-query
-//!   app ([`session::LabeledQuery`]) are ordinary implementations.
-//! * [`session::Executor`] — *how* to mine: the Kudu engine
-//!   ([`session::KuduExec`]) and the four comparator baselines implement
-//!   it, so harnesses swap execution models through one trait
-//!   ([`workloads::EngineKind::executor`] maps the CLI-facing enum onto
-//!   it).
+//!   an optional per-unit sink factory, optional per-level hooks, and
+//!   result aggregation. The built-in counting apps ([`workloads::App`])
+//!   and the labelled-query app ([`session::LabeledQuery`]) are ordinary
+//!   implementations.
+//! * [`session::Executor`] — *how* to mine one compiled program: the
+//!   Kudu engine ([`session::KuduExec`]) executes it fused; the four
+//!   comparator baselines interpret it as a loop over its plans
+//!   (preserving their execution models), so harnesses swap execution
+//!   models through one trait ([`workloads::EngineKind::executor`] maps
+//!   the CLI-facing enum onto it).
 //!
 //! ## Extending Kudu with your own app
 //!
-//! A counting app only names its patterns:
+//! A counting app only names its patterns — multiple patterns
+//! automatically fuse into one program:
 //!
 //! ```no_run
 //! use kudu::pattern::{brute::Induced, Pattern};
 //! use kudu::session::{GpmApp, MiningSession};
 //!
-//! struct Squares;
-//! impl GpmApp for Squares {
-//!     fn name(&self) -> String { "squares".into() }
-//!     fn patterns(&self) -> Vec<Pattern> { vec![Pattern::cycle(4)] }
+//! struct SquaresAndTriangles;
+//! impl GpmApp for SquaresAndTriangles {
+//!     fn name(&self) -> String { "squares+triangles".into() }
+//!     fn patterns(&self) -> Vec<Pattern> {
+//!         vec![Pattern::cycle(4), Pattern::triangle()]
+//!     }
 //!     fn induced(&self) -> Induced { Induced::Edge }
 //! }
 //!
 //! let g = kudu::graph::gen::rmat(10, 8, 7);
-//! let squares = MiningSession::new(&g, 4).job(&Squares).run();
-//! println!("4-cycles: {}", squares.total_count());
+//! let st = MiningSession::new(&g, 4).job(&SquaresAndTriangles).run();
+//! println!("4-cycles: {} / triangles: {}", st.counts[0], st.counts[1]);
 //! ```
 //!
-//! Apps that must see each embedding (the user function of the paper's
+//! Apps that must *see* each embedding (the user function of the paper's
 //! Algorithm 1) override `needs_sinks`/`unit_sink`/`aggregate`: the
-//! session calls `unit_sink` once per execution unit — one scheduler
-//! task, i.e. a root mini-batch or a split-off chunk (sinks run on
-//! concurrent, work-stealing host workers) — then hands the finished
-//! sinks back to `aggregate` in deterministic task order for
-//! app-specific reduction. See [`session::LabeledQuery`]
-//! (support-thresholded labelled queries) and `examples/fraud_detection.rs`
-//! (per-vertex triangle statistics) for complete implementations.
+//! session calls `unit_sink(pattern, machine)` once per (execution unit,
+//! pattern) — a unit is one scheduler task, i.e. a root mini-batch or a
+//! split-off chunk — then hands the finished sinks back to `aggregate`
+//! in deterministic per-pattern task order. See
+//! [`session::LabeledQuery`] (support-thresholded labelled queries) and
+//! `examples/fraud_detection.rs` (per-vertex triangle statistics).
+//!
+//! Apps that need per-embedding *control flow* override
+//! [`session::GpmApp::hooks`] with an [`session::ExtendHooks`]
+//! implementation: `filter(pat, level, partial)` prunes subtrees before
+//! they are explored, `on_match(pat, embedding)` sees every complete
+//! embedding and may return [`session::Control::Halt`] to stop the whole
+//! distributed run — existence queries, top-k, and per-embedding scoring
+//! without engine changes. See `examples/existence.rs` for a first-match
+//! query end to end. (Hooked programs skip cross-pattern prefix fusion —
+//! per-pattern control flow would make shared frames diverge — but keep
+//! the shared root scan; runs that halt report partial results and are
+//! excluded from the bitwise determinism contract.)
 //!
 //! ## Crate layout
 //!
@@ -89,32 +130,37 @@
 //! * [`graph`], [`pattern`], [`plan`], [`partition`], [`cluster`] — the
 //!   substrates: CSR graphs and generators, pattern graphs and isomorphism,
 //!   pattern-aware matching plans (the Automine / GraphPi "code
-//!   generators"), 1-D partitioning, and a deterministic simulated cluster
-//!   with an accounted transport.
+//!   generators") and their fusion into prefix-trie mining programs
+//!   ([`plan::program`]), 1-D partitioning, and a deterministic simulated
+//!   cluster with an accounted transport.
 //! * [`comm`] — the message-passing communication subsystem: typed
 //!   `FetchRequest`/`FetchResponse` (and embedding-shipping) wire
 //!   messages between per-machine mailboxes, aggregated into
 //!   size-bounded envelopes under an in-flight request window and served
 //!   by a dedicated comm thread per machine. Wire costs are charged at
-//!   issue with the formulas defined here (the transport layer
-//!   delegates), so every window/batch setting — including the
-//!   `sync_fetch` escape hatch that bypasses messaging — reports
+//!   issue with the formulas defined here, so every window/batch setting
+//!   — including the `sync_fetch` escape hatch — reports
 //!   bitwise-identical counts, traffic, and virtual time.
 //! * [`engine`] — the paper's contribution: BFS-DFS hybrid chunk
-//!   exploration decomposed into chunk-granularity tasks
-//!   ([`engine::task`]) under a per-machine work-stealing scheduler
-//!   ([`engine::sched`]), circulant scheduling with remote fetches
-//!   issued through [`comm`] (tasks *park* on in-flight responses
-//!   instead of blocking), hierarchical extendable-embedding storage,
-//!   vertical/horizontal sharing, the static cache, and NUMA-aware mode.
+//!   exploration of a program trie, decomposed into chunk-granularity
+//!   tasks ([`engine::task`]) under a per-machine work-stealing
+//!   scheduler ([`engine::sched`]); circulant scheduling with remote
+//!   fetches issued through [`comm`] (tasks *park* on in-flight
+//!   responses instead of blocking); hierarchical extendable-embedding
+//!   storage; vertical/horizontal sharing, the static cache, NUMA-aware
+//!   mode; per-pattern attribution of every metric; and the hooks
+//!   interpreter ([`engine::sink::ExtendHooks`]).
 //! * [`baselines`] — the comparator execution models (G-thinker-like,
 //!   moving-computation-to-data, replicated GraphPi-like, single-machine),
-//!   reached through [`session::Executor`].
+//!   reached through [`session::Executor`] as per-plan loops over a
+//!   program.
 //! * [`runtime`] — the dense hot-core decomposition, plus (behind the
 //!   `pjrt` cargo feature) the PJRT bridge that loads AOT-compiled
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) for the XLA offload.
 //! * [`exec`], [`metrics`], [`config`] — intersection kernels, traffic and
-//!   virtual-time accounting, and run configuration.
+//!   virtual-time accounting (including the per-pattern
+//!   [`metrics::PatternRun`] / physical [`metrics::ProgramStats`] split),
+//!   and run configuration.
 //! * [`par`] — deterministic fork-join execution: the two-level
 //!   machine × worker pool multiplexing every machine's scheduler
 //!   workers onto host threads (results are bitwise independent of the
@@ -142,5 +188,5 @@ pub use config::{EngineConfig, RunConfig};
 pub use engine::KuduEngine;
 pub use graph::{Graph, VertexId};
 pub use pattern::Pattern;
-pub use plan::Plan;
-pub use session::{Executor, GpmApp, MiningSession};
+pub use plan::{MiningProgram, Plan};
+pub use session::{Control, Executor, ExtendHooks, GpmApp, MiningSession};

@@ -37,6 +37,7 @@ fn usage() -> ! {
     eprintln!("           --workers N (scheduler workers per machine, 0=all cores)");
     eprintln!("           --comm-window N (in-flight fetch window)");
     eprintln!("           [--no-cache] [--no-hds] [--no-vcs] [--sync-fetch]");
+    eprintln!("           [--serial-patterns]  (legacy one-plan-per-run; default: fused program)");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
     eprintln!("  generate --dataset <abbr> --out <path>");
@@ -78,7 +79,13 @@ fn main() {
                     kudu::config::CommConfig::default().max_in_flight,
                 ))
                 .horizontal_sharing(!args.has("no-hds"))
-                .vertical_sharing(!args.has("no-vcs"));
+                .vertical_sharing(!args.has("no-vcs"))
+                // Multi-pattern apps run as one fused program (single
+                // root scan, shared prefix frames) unless the legacy
+                // one-plan-per-run execution is requested explicitly.
+                // Per-pattern reported metrics are bitwise identical
+                // either way.
+                .fused(!args.has("serial-patterns"));
             if args.has("sync-fetch") {
                 // Flag only forces the hatch on; absent, the env default
                 // (KUDU_SYNC_FETCH) stands.

@@ -234,6 +234,66 @@ impl RunStats {
     }
 }
 
+/// What one pattern of a program run reports: its [`RunStats`] plus its
+/// full traffic matrix (the per-pattern attribution the fused engine
+/// keeps next to the physical totals).
+#[derive(Clone, Debug)]
+pub struct PatternRun {
+    pub stats: RunStats,
+    pub traffic: Traffic,
+}
+
+/// Physical totals of one *program* run — what the fused execution
+/// actually did, as opposed to the per-pattern attribution in
+/// [`PatternRun`]. The gap between the two is the measured win of
+/// prefix sharing: one root scan instead of one per pattern, and a
+/// shared frame's remote fetch crossing the wire once.
+///
+/// Everything here except `wall_s` and the comm/scheduler diagnostics is
+/// deterministic (fixed by graph + program + config).
+#[derive(Clone, Debug, Default)]
+pub struct ProgramStats {
+    /// Wall-clock of the whole program run, measured once (multi-pattern
+    /// apps previously summed per-pattern walls — see `GpmApp::aggregate`).
+    pub wall_s: f64,
+    /// Physical bytes moved between machines (shared fetches counted
+    /// once). Σ of per-pattern `network_bytes` minus this = bytes saved
+    /// by sharing.
+    pub physical_bytes: u64,
+    /// Physical batched messages.
+    pub physical_messages: u64,
+    /// Level-0 extendable embeddings actually materialised (the root
+    /// scan, done once per root group however many patterns share it).
+    pub root_embeddings: u64,
+    /// Trie nodes shared by ≥ 2 patterns in the executed program.
+    pub shared_nodes: u64,
+    /// Scheduler / comm execution diagnostics of the run (same semantics
+    /// and same exclusion from the determinism contract as the
+    /// [`RunStats`] fields of the same names).
+    pub sched_steals: u64,
+    pub peak_live_chunks: u64,
+    pub comm_stall_s: f64,
+    pub peak_in_flight: u64,
+    pub comm_flushes: u64,
+}
+
+impl ProgramStats {
+    /// Fold another program run's physical totals into this one (the
+    /// serial per-pattern comparison path sums its single-pattern runs).
+    pub fn absorb(&mut self, other: &ProgramStats) {
+        self.wall_s += other.wall_s;
+        self.physical_bytes += other.physical_bytes;
+        self.physical_messages += other.physical_messages;
+        self.root_embeddings += other.root_embeddings;
+        self.shared_nodes += other.shared_nodes;
+        self.sched_steals += other.sched_steals;
+        self.peak_live_chunks = self.peak_live_chunks.max(other.peak_live_chunks);
+        self.comm_stall_s += other.comm_stall_s;
+        self.peak_in_flight = self.peak_in_flight.max(other.peak_in_flight);
+        self.comm_flushes += other.comm_flushes;
+    }
+}
+
 /// Pretty-print helpers for the table harness.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];

@@ -19,10 +19,12 @@
 //! system is writing a new planner (the paper's ~500-line "modify the code
 //! generator" porting cost).
 
+pub mod program;
 pub mod restrict;
 
 use crate::pattern::brute::Induced;
 use crate::pattern::Pattern;
+pub use program::{MiningProgram, NodeId, ProgramNode};
 pub use restrict::symmetry_restrictions;
 
 /// One source feeding the candidate-set intersection at some level.
@@ -35,8 +37,10 @@ pub enum Source {
     Stored(usize),
 }
 
-/// Per-level step of the plan.
-#[derive(Clone, Debug)]
+/// Per-level step of the plan. `PartialEq` is structural — the program
+/// compiler ([`MiningProgram::compile`]) merges two plans' levels only
+/// when their steps compare equal (the restriction compatibility check).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Step {
     /// Levels of earlier pattern vertices adjacent to this one (the
     /// backward neighbours B_i). Non-empty for every level ≥ 1 — matching
@@ -440,5 +444,94 @@ mod tests {
     fn describe_is_nonempty() {
         let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
         assert!(plan.describe().contains("level 3"));
+    }
+
+    /// Golden pin of `Plan::describe()` on the 4-clique, for both
+    /// planners. Every order of a clique yields the same permuted
+    /// pattern, so the step structure is planner-independent and can be
+    /// pinned line by line: the full orbit–stabiliser restriction chain
+    /// v0 < v1 < v2 < v3 and vertical sharing at level 3 (level 2's
+    /// unfiltered N(v0) ∩ N(v1) reused as Stored(2)).
+    #[test]
+    fn golden_clique4_describe_both_planners() {
+        for (name, plan) in [
+            ("automine", automine_plan(&Pattern::clique(4), Induced::Edge)),
+            ("graphpi", graphpi_plan(&Pattern::clique(4), Induced::Edge)),
+        ] {
+            let d = plan.describe();
+            assert!(d.contains("k=4"), "{name}: {d}");
+            assert!(d.contains("|Aut|=24"), "{name}: {d}");
+            assert!(
+                d.contains("level 1: sources=[Adj(0)] restrict>[[0]] <[[]] exclude=[]"),
+                "{name}: {d}"
+            );
+            assert!(
+                d.contains("level 2: sources=[Adj(0), Adj(1)] restrict>[[0, 1]] <[[]] exclude=[]"),
+                "{name}: {d}"
+            );
+            assert!(
+                d.contains("level 3: sources=[Stored(2), Adj(2)] restrict>[[0, 1, 2]] <[[]] exclude=[]"),
+                "{name}: {d}"
+            );
+            // Level 2's candidate set is the one stored for reuse; its
+            // line carries the [store] marker.
+            let l2 = d.lines().find(|l| l.trim_start().starts_with("level 2")).unwrap();
+            assert!(l2.ends_with("[store] [adj active]"), "{name}: {l2}");
+            // Restrictions are reported as raw pairs too.
+            assert_eq!(
+                plan.restrictions,
+                vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],
+                "{name}"
+            );
+            // describe() is a pure function of the plan.
+            assert_eq!(d, plan.describe(), "{name}: describe must be stable");
+        }
+    }
+
+    /// Golden invariants of every 4-motif plan under both planners:
+    /// depth, automorphism factor (reported in the describe header),
+    /// orbit-product exactness, and vertex-induced exclusions appearing
+    /// exactly for the non-complete motifs.
+    #[test]
+    fn golden_four_motif_plans_automine_vs_graphpi() {
+        use crate::pattern::motifs::all_motifs;
+        let expected: [(Pattern, u64); 6] = [
+            (Pattern::clique(4), 24),
+            (Pattern::cycle(4), 8),
+            (Pattern::star(4), 6),
+            (Pattern::diamond(), 4),
+            (Pattern::chain(4), 2),
+            (Pattern::tailed_triangle(), 2),
+        ];
+        for motif in all_motifs(4) {
+            let (_, aut) = expected
+                .iter()
+                .find(|(p, _)| motif.isomorphic(p))
+                .expect("every 4-motif is one of the six known shapes");
+            for (name, plan) in [
+                ("automine", automine_plan(&motif, Induced::Vertex)),
+                ("graphpi", graphpi_plan(&motif, Induced::Vertex)),
+            ] {
+                let d = plan.describe();
+                assert_eq!(plan.depth(), 4, "{name} {motif:?}");
+                assert_eq!(plan.automorphism_factor(), *aut, "{name} {motif:?}");
+                assert!(d.contains(&format!("|Aut|={aut}")), "{name} {motif:?}: {d}");
+                assert!(d.contains("level 3:"), "{name} {motif:?}: {d}");
+                assert!(!d.contains("level 4:"), "{name} {motif:?}: {d}");
+                // Orbit product == |Aut|: the restriction set cancels the
+                // overcount exactly (cross-checked against brute force in
+                // tests/proptests.rs).
+                assert_eq!(
+                    restrict::restriction_factor(&plan.pattern),
+                    *aut,
+                    "{name} {motif:?}"
+                );
+                // Vertex-induced: exactly the non-complete motifs exclude.
+                let excludes = plan.steps.iter().any(|s| !s.exclude.is_empty());
+                assert_eq!(excludes, *aut != 24, "{name} {motif:?}");
+                // Matching orders are connectivity-respecting.
+                assert!(plan.steps.iter().all(|s| !s.backward.is_empty()), "{name} {motif:?}");
+            }
+        }
     }
 }

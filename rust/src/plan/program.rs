@@ -1,0 +1,413 @@
+//! Mining programs: all of an app's plans compiled into one shared
+//! prefix trie (the multi-pattern face of the extendable-embedding
+//! abstraction).
+//!
+//! A [`Plan`] describes one pattern's enumeration as a chain of per-level
+//! steps. A [`MiningProgram`] merges the chains of *every* pattern an app
+//! mines into a trie: plans whose first `k` levels are **compatible**
+//! (identical intersection sources, identical symmetry-breaking
+//! restrictions, identical label/exclusion constraints, and identical
+//! storage/active-vertex flags — the *restriction compatibility check*)
+//! share one trie node per level up to `k`, and diverge into per-pattern
+//! continuations below. The engine then explores each shared node's
+//! frames **once**: a 4-motif-count program does one root scan instead of
+//! six, and a remote edge list fetched for a shared frame crosses the
+//! wire once however many patterns extend through it (HUGE and
+//! DwarvesGraph report the same cross-pattern wins).
+//!
+//! **Per-pattern attribution.** Sharing is an execution optimisation,
+//! never an accounting one: the engine charges every shared frame's
+//! work, traffic, and virtual time to *each* pattern alive at the node,
+//! with the same formulas in the same order as a single-pattern run. Per
+//! pattern, the fused program therefore reports counts, traffic matrices
+//! (cell for cell), and virtual time bitwise identical to running that
+//! pattern's plan alone — pinned by `tests/program_equivalence.rs`. What
+//! the fusion changes is the *physical* totals (one root scan, deduped
+//! wire traffic), reported separately in
+//! [`crate::metrics::ProgramStats`].
+//!
+//! A node may be **terminal** for one pattern (its last matching level)
+//! and interior for another — a 3-chain query rides along inside a
+//! 4-chain query's program. Terminal patterns never materialise
+//! embeddings at their last level (the engine bulk-processes the
+//! candidate window), so a node's `store`/`needs_adj` flags belong to
+//! the patterns that *continue* below it; terminal riders merge on step
+//! equality alone.
+
+use super::{Plan, Step};
+
+/// Index of a node in its program's arena.
+pub type NodeId = usize;
+
+/// One trie node: a level of one or more plans whose prefixes coincide.
+#[derive(Clone, Debug)]
+pub struct ProgramNode {
+    /// Matching level of this node (0 = root scan).
+    pub level: usize,
+    /// The step extending level-1 ancestors into this node; `None` for
+    /// root nodes (level 0 enumerates start vertices).
+    pub step: Option<Step>,
+    /// Whether the candidate set computed *at this node* is stored for
+    /// reuse by descendants (vertical sharing). Owned by the continuing
+    /// patterns; meaningless when none continue.
+    pub store: bool,
+    /// Whether the adjacency list of the vertex matched at this node is
+    /// active (needed by some later step of a continuing pattern).
+    pub needs_adj: bool,
+    /// Root nodes only: required label of the start vertices (0 = any).
+    pub label0: u8,
+    /// Whether `store`/`needs_adj` have been claimed by a continuing
+    /// pattern (a node created by a terminal rider leaves them open).
+    flags_set: bool,
+    /// Child nodes, in first-plan order (the engine's deterministic
+    /// extension order).
+    pub children: Vec<NodeId>,
+    /// Patterns alive at this node (passing through or terminating),
+    /// ascending program indices.
+    pub pats: Vec<usize>,
+    /// Patterns continuing below this node (`pats` minus `terminal`).
+    pub cont: Vec<usize>,
+    /// Patterns whose last matching level is exactly this node.
+    pub terminal: Vec<usize>,
+}
+
+impl ProgramNode {
+    fn new_root(label0: u8, needs_adj: bool) -> Self {
+        ProgramNode {
+            level: 0,
+            step: None,
+            store: false,
+            needs_adj,
+            label0,
+            flags_set: true,
+            children: Vec::new(),
+            pats: Vec::new(),
+            cont: Vec::new(),
+            terminal: Vec::new(),
+        }
+    }
+
+    /// Position of pattern `p` in this node's `cont` list (the engine's
+    /// per-frame attribution slot). Frames, fetches, and tasks at a node
+    /// involve only the *continuing* patterns — a terminal rider's last
+    /// level is bulk-processed from the candidate window at the parent
+    /// frame and never materialises here.
+    #[inline]
+    pub fn slot_of(&self, p: usize) -> usize {
+        self.cont.iter().position(|&q| q == p).expect("pattern continues at node")
+    }
+
+    /// Whether any pattern continues below this node (the node's frames
+    /// produce child chunks).
+    #[inline]
+    pub fn interior(&self) -> bool {
+        !self.cont.is_empty()
+    }
+}
+
+/// A compiled multi-pattern mining program: the plans plus their merged
+/// prefix trie. Built once per job by [`MiningProgram::compile`] and
+/// interpreted generically by the engine ([`crate::engine::KuduEngine::run_program`])
+/// or as a plain plan list by the baselines.
+#[derive(Clone, Debug)]
+pub struct MiningProgram {
+    plans: Vec<Plan>,
+    nodes: Vec<ProgramNode>,
+    roots: Vec<NodeId>,
+}
+
+impl MiningProgram {
+    /// Compile `plans` into a program. With `fuse`, maximal compatible
+    /// prefixes are merged; without it only root nodes merge (one root
+    /// scan, per-pattern chains below — the mode used when an app
+    /// installs [`crate::engine::sink::ExtendHooks`], whose per-pattern
+    /// control flow would make deeper shared frames diverge).
+    ///
+    /// Two plans share a node at level `l ≥ 1` only when their steps at
+    /// every level `≤ l` are equal — same backward sources, same
+    /// symmetry restrictions (`greater_than`/`less_than`), same label and
+    /// exclusion constraints — and, for levels some pattern continues
+    /// past, the same `store_set`/`needs_adj` flags. Equal restrictions
+    /// are what make a shared frame's candidate windows, and therefore
+    /// its chunk contents, bit-identical to each pattern's own run.
+    pub fn compile(plans: Vec<Plan>, fuse: bool) -> MiningProgram {
+        assert!(!plans.is_empty(), "a program mines at least one pattern");
+        let mut nodes: Vec<ProgramNode> = Vec::new();
+        let mut roots: Vec<NodeId> = Vec::new();
+        for (i, plan) in plans.iter().enumerate() {
+            let k = plan.depth();
+            assert!(k >= 2, "patterns must have at least one edge");
+            let l0 = plan.pattern.label(0);
+            let needs0 = plan.needs_adj[0];
+            let root = match roots
+                .iter()
+                .copied()
+                .find(|&r| nodes[r].label0 == l0 && nodes[r].needs_adj == needs0)
+            {
+                Some(r) => r,
+                None => {
+                    nodes.push(ProgramNode::new_root(l0, needs0));
+                    roots.push(nodes.len() - 1);
+                    nodes.len() - 1
+                }
+            };
+            nodes[root].pats.push(i);
+            nodes[root].cont.push(i);
+            let mut cur = root;
+            for l in 1..k {
+                let step = &plan.steps[l - 1];
+                let terminal_here = l == k - 1;
+                let want_store = plan.store_set[l] && !terminal_here;
+                let want_needs = plan.needs_adj[l] && !terminal_here;
+                let found = if fuse {
+                    nodes[cur].children.iter().copied().find(|&c| {
+                        nodes[c].step.as_ref() == Some(step)
+                            && (terminal_here
+                                || !nodes[c].flags_set
+                                || (nodes[c].store == want_store
+                                    && nodes[c].needs_adj == want_needs))
+                    })
+                } else {
+                    None
+                };
+                let child = match found {
+                    Some(c) => {
+                        if !terminal_here && !nodes[c].flags_set {
+                            nodes[c].store = want_store;
+                            nodes[c].needs_adj = want_needs;
+                            nodes[c].flags_set = true;
+                        }
+                        c
+                    }
+                    None => {
+                        nodes.push(ProgramNode {
+                            level: l,
+                            step: Some(step.clone()),
+                            store: want_store,
+                            needs_adj: want_needs,
+                            label0: 0,
+                            flags_set: !terminal_here,
+                            children: Vec::new(),
+                            pats: Vec::new(),
+                            cont: Vec::new(),
+                            terminal: Vec::new(),
+                        });
+                        let c = nodes.len() - 1;
+                        nodes[cur].children.push(c);
+                        c
+                    }
+                };
+                nodes[child].pats.push(i);
+                if terminal_here {
+                    nodes[child].terminal.push(i);
+                } else {
+                    nodes[child].cont.push(i);
+                }
+                cur = child;
+            }
+        }
+        MiningProgram { plans, nodes, roots }
+    }
+
+    /// The program's plans, in pattern order.
+    pub fn plans(&self) -> &[Plan] {
+        &self.plans
+    }
+
+    /// Number of patterns the program mines.
+    pub fn num_patterns(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Deepest matching level over all plans.
+    pub fn max_depth(&self) -> usize {
+        self.plans.iter().map(|p| p.depth()).max().unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn node(&self, id: NodeId) -> &ProgramNode {
+        &self.nodes[id]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Root nodes (level-0 scans), one per compatible (root label,
+    /// root-activity) group. A fully fused counting program usually has
+    /// exactly one.
+    pub fn roots(&self) -> &[NodeId] {
+        &self.roots
+    }
+
+    /// Nodes shared by more than one pattern — the frames the engine
+    /// explores once instead of once per pattern.
+    pub fn shared_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.pats.len() > 1).count()
+    }
+
+    /// Sum over plans of their level count — what a per-pattern
+    /// execution explores; `num_nodes()` is what the fused trie
+    /// explores. The gap is the sharing.
+    pub fn chain_nodes(&self) -> usize {
+        self.plans.iter().map(|p| p.depth()).sum()
+    }
+
+    /// Human-readable trie dump (tests, `kudu plan` debugging).
+    pub fn describe(&self) -> String {
+        fn rec(prog: &MiningProgram, id: NodeId, depth: usize, out: &mut String) {
+            let n = prog.node(id);
+            let indent = "  ".repeat(depth + 1);
+            out.push_str(&format!(
+                "{indent}level {} pats={:?}{}{}{}\n",
+                n.level,
+                n.pats,
+                if n.terminal.is_empty() {
+                    String::new()
+                } else {
+                    format!(" terminal={:?}", n.terminal)
+                },
+                if n.store { " [store]" } else { "" },
+                if n.needs_adj { " [adj active]" } else { "" },
+            ));
+            for &c in &n.children {
+                rec(prog, c, depth + 1, out);
+            }
+        }
+        let mut s = format!(
+            "program: {} patterns, {} trie nodes ({} shared) vs {} chain nodes\n",
+            self.num_patterns(),
+            self.num_nodes(),
+            self.shared_nodes(),
+            self.chain_nodes()
+        );
+        for &r in &self.roots {
+            rec(self, r, 0, &mut s);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::brute::Induced;
+    use crate::pattern::{motifs, Pattern};
+    use crate::plan::{automine_plan, graphpi_plan};
+
+    #[test]
+    fn single_plan_program_is_a_chain() {
+        let plan = graphpi_plan(&Pattern::clique(4), Induced::Edge);
+        let prog = MiningProgram::compile(vec![plan.clone()], true);
+        assert_eq!(prog.num_patterns(), 1);
+        assert_eq!(prog.num_nodes(), plan.depth());
+        assert_eq!(prog.roots().len(), 1);
+        assert_eq!(prog.shared_nodes(), 0);
+        // Chain structure: every node has at most one child; the last is
+        // terminal for pattern 0.
+        let mut cur = prog.roots()[0];
+        for _ in 0..plan.depth() - 1 {
+            assert_eq!(prog.node(cur).children.len(), 1);
+            cur = prog.node(cur).children[0];
+        }
+        assert!(prog.node(cur).children.is_empty());
+        assert_eq!(prog.node(cur).terminal, vec![0]);
+        assert!(!prog.node(cur).interior());
+    }
+
+    #[test]
+    fn identical_plans_fuse_completely() {
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let prog = MiningProgram::compile(vec![plan.clone(), plan.clone()], true);
+        // Full overlap: the trie is one chain, every node shared.
+        assert_eq!(prog.num_nodes(), plan.depth());
+        assert_eq!(prog.shared_nodes(), plan.depth());
+        let last = (0..prog.num_nodes())
+            .find(|&i| !prog.node(i).terminal.is_empty())
+            .unwrap();
+        assert_eq!(prog.node(last).terminal, vec![0, 1]);
+    }
+
+    #[test]
+    fn unfused_program_merges_only_roots() {
+        let plan = automine_plan(&Pattern::triangle(), Induced::Edge);
+        let prog = MiningProgram::compile(vec![plan.clone(), plan.clone()], false);
+        assert_eq!(prog.roots().len(), 1, "roots always merge");
+        // Below the root: disjoint per-pattern chains.
+        assert_eq!(prog.num_nodes(), 1 + 2 * (plan.depth() - 1));
+        assert_eq!(prog.node(prog.roots()[0]).children.len(), 2);
+        assert_eq!(prog.shared_nodes(), 1);
+    }
+
+    #[test]
+    fn motif_program_shares_root_scan_and_prefixes() {
+        for client in [automine_plan, graphpi_plan] {
+            let plans: Vec<Plan> =
+                motifs::all_motifs(4).iter().map(|p| client(p, Induced::Vertex)).collect();
+            let prog = MiningProgram::compile(plans, true);
+            assert_eq!(prog.roots().len(), 1, "all 4-motifs share one root scan");
+            assert_eq!(prog.node(prog.roots()[0]).pats.len(), 6);
+            // The trie is strictly smaller than the six chains laid side
+            // by side (prefix sharing beyond the root).
+            assert!(
+                prog.num_nodes() < prog.chain_nodes(),
+                "nodes {} !< chains {}:\n{}",
+                prog.num_nodes(),
+                prog.chain_nodes(),
+                prog.describe()
+            );
+            assert!(prog.shared_nodes() >= 2, "sharing beyond the root:\n{}", prog.describe());
+        }
+    }
+
+    #[test]
+    fn incompatible_restrictions_do_not_merge() {
+        // Clique-4 (v0<v1 at level 1) and star-4 (no level-1 restriction)
+        // must not share level-1 frames: their candidate windows differ.
+        let a = automine_plan(&Pattern::clique(4), Induced::Edge);
+        let b = automine_plan(&Pattern::star(4), Induced::Edge);
+        let s1a = &a.steps[0];
+        let s1b = &b.steps[0];
+        assert_ne!(
+            (&s1a.greater_than, &s1a.less_than),
+            (&s1b.greater_than, &s1b.less_than),
+            "test premise: restriction placement differs"
+        );
+        let prog = MiningProgram::compile(vec![a, b], true);
+        let root = prog.node(prog.roots()[0]);
+        if root.pats.len() == 2 {
+            // Shared root, split immediately below.
+            assert_eq!(root.children.len(), 2);
+        }
+    }
+
+    #[test]
+    fn mixed_depth_terminal_rides_inside_longer_chain() {
+        // A 3-chain whose plan is a prefix of the 4-chain's plan (when
+        // compatible) terminates at an interior node of the 4-chain.
+        let p3 = automine_plan(&Pattern::chain(2), Induced::Edge); // single edge
+        let p4 = automine_plan(&Pattern::chain(3), Induced::Edge);
+        let prog = MiningProgram::compile(vec![p3, p4], true);
+        // Whether or not level 1 merged, every pattern has exactly one
+        // terminal node and the trie is consistent.
+        let mut term = [0usize; 2];
+        for i in 0..prog.num_nodes() {
+            for &p in &prog.node(i).terminal {
+                term[p] += 1;
+            }
+        }
+        assert_eq!(term, [1, 1]);
+    }
+
+    #[test]
+    fn describe_mentions_sharing() {
+        let plans: Vec<Plan> = motifs::all_motifs(3)
+            .iter()
+            .map(|p| graphpi_plan(p, Induced::Vertex))
+            .collect();
+        let prog = MiningProgram::compile(plans, true);
+        let d = prog.describe();
+        assert!(d.contains("2 patterns"));
+        assert!(d.contains("level 0"));
+    }
+}

@@ -6,19 +6,19 @@
 //!
 //! * [`MiningSession`] — owns the graph, the 1-D partitioning, and the
 //!   per-machine owned-vertex lists **once**, shared by every pattern,
-//!   query, and executor of the session. (The pre-session entry points
-//!   re-partitioned per pattern: a 4-motif-count app partitioned the
-//!   graph six times.)
+//!   query, and executor of the session.
 //! * [`GpmApp`] — what to mine: the pattern set, the embedding semantics,
-//!   an optional per-unit sink factory for per-embedding processing, and
-//!   the result aggregation. The built-in counting apps
+//!   an optional per-unit sink factory for per-embedding processing,
+//!   optional per-level [`ExtendHooks`] (pruning, early exit), and the
+//!   result aggregation. The built-in counting apps
 //!   ([`crate::workloads::App`]) and the labelled-query app
 //!   ([`LabeledQuery`]) are both ordinary implementations.
-//! * [`Executor`] — how to mine: one compiled [`Plan`] at a time over the
-//!   session's shared cluster state. Implemented by the Kudu engine
-//!   ([`KuduExec`]) and all four comparator baselines, so the table
-//!   harness selects execution models through one trait instead of an
-//!   enum match.
+//! * [`Executor`] — how to mine: one compiled [`MiningProgram`] per job
+//!   over the session's shared cluster state. The Kudu engine
+//!   ([`KuduExec`]) executes the program *fused* — all patterns in one
+//!   run, shared prefix frames explored once; the four comparator
+//!   baselines interpret a program as a loop over its plans, preserving
+//!   their execution models exactly.
 //!
 //! Jobs are built fluently:
 //!
@@ -38,9 +38,15 @@
 //! println!("4-cliques: {}", stats.total_count());
 //! ```
 //!
-//! Every result a job reports — counts, traffic, virtual time — is
-//! bitwise identical to the pre-session entry points (property-tested in
-//! `tests/session_equivalence.rs`).
+//! **Determinism.** Per pattern, everything a fused job reports —
+//! counts, traffic matrices, virtual time — is bitwise identical to the
+//! legacy one-plan-per-run path ([`Job::fused`]`(false)`), pinned by
+//! `tests/program_equivalence.rs`; the fusion win shows up only in the
+//! physical totals ([`crate::metrics::ProgramStats`]) and the wall
+//! clock. Wall-clock time is measured **once per job** (the old default
+//! aggregation summed per-pattern walls, overstating elapsed time once
+//! patterns run fused); per-pattern virtual-time breakdowns stay in
+//! [`PatternOutcome`].
 
 use crate::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
 use crate::cluster::Transport;
@@ -48,37 +54,55 @@ use crate::config::RunConfig;
 use crate::engine::sink::{AppSink, BoxSink, CountSink, EmbeddingSink};
 use crate::engine::KuduEngine;
 use crate::graph::{Graph, VertexId};
-use crate::metrics::RunStats;
+use crate::metrics::{ProgramStats, RunStats, Traffic};
 use crate::partition::PartitionedGraph;
 use crate::pattern::brute::Induced;
 use crate::pattern::Pattern;
-use crate::plan::{ClientSystem, Plan};
+use crate::plan::{ClientSystem, MiningProgram, Plan};
 use std::collections::HashSet;
 use std::sync::Mutex;
+use std::time::Instant;
 
-/// Everything one pattern's run hands back to its app for aggregation.
+pub use crate::engine::sink::{Control, ExtendHooks};
+
+/// Everything one pattern of a program run hands back to its app for
+/// aggregation.
 pub struct PatternOutcome {
     /// Index into the app's pattern list.
     pub pattern_idx: usize,
     /// Single-pattern run statistics; `counts` holds one entry (the raw
-    /// embedding count reported by the executor).
+    /// embedding count reported by the executor). On the fused path
+    /// these are the engine's per-pattern attribution — bitwise
+    /// identical to a one-plan run — with `wall_s` zero (wall is a
+    /// whole-job quantity, reported once by [`Job::run`]).
     pub stats: RunStats,
-    /// The finished per-unit sinks, in unit order. Empty for counting apps
-    /// (executors bulk-count without materialising sinks).
+    /// The pattern's full traffic matrix (per-pattern attribution).
+    pub traffic: Traffic,
+    /// The finished per-unit sinks, in unit order. Empty for counting
+    /// apps (executors bulk-count without materialising sinks).
     pub sinks: Vec<BoxSink>,
+}
+
+/// Outcome of executing one [`MiningProgram`]: per-pattern outcomes in
+/// pattern order plus the physical totals of the execution.
+pub struct ProgramOutcome {
+    pub patterns: Vec<PatternOutcome>,
+    pub program: ProgramStats,
 }
 
 /// A graph pattern mining application: *what* to mine and what to do with
 /// each embedding. Object-safe, so apps are passed as `&dyn GpmApp`;
-/// `Sync` because sink factories are invoked from concurrent executor
-/// threads.
+/// `Sync` because sink factories and hooks are invoked from concurrent
+/// executor threads.
 ///
 /// The default methods implement a plain counting app — the only code a
 /// new counting workload needs is [`GpmApp::name`], [`GpmApp::patterns`],
 /// and [`GpmApp::induced`]. Apps that process embeddings (support
 /// counting, per-vertex statistics, …) override [`GpmApp::needs_sinks`],
-/// [`GpmApp::unit_sink`], and [`GpmApp::aggregate`]; see [`LabeledQuery`]
-/// for a complete example.
+/// [`GpmApp::unit_sink`], and [`GpmApp::aggregate`]; apps that need
+/// per-embedding *control flow* (existence queries, top-k, pruning)
+/// override [`GpmApp::hooks`]. See [`LabeledQuery`] and
+/// `examples/existence.rs` for complete examples.
 pub trait GpmApp: Sync {
     /// Display name (table/report headers).
     fn name(&self) -> String;
@@ -96,6 +120,18 @@ pub trait GpmApp: Sync {
         false
     }
 
+    /// Per-level callbacks ([`ExtendHooks`]) giving the app control flow
+    /// inside the enumeration: prune partial embeddings, stop at the
+    /// first match, score embeddings as they appear. `None` (default)
+    /// keeps the engine on its bulk-counting fast path and the bitwise
+    /// determinism contract. Installing hooks compiles the app's program
+    /// without cross-pattern prefix fusion (the shared root scan
+    /// remains) and requires an executor with
+    /// [`Executor::supports_hooks`].
+    fn hooks(&self) -> Option<&dyn ExtendHooks> {
+        None
+    }
+
     /// Per-execution-unit sink factory for pattern `pattern_idx`. A unit
     /// is one scheduler task of a simulated machine (a root mini-batch or
     /// a split-off chunk — see [`crate::engine::task`]); `machine` is the
@@ -110,6 +146,8 @@ pub trait GpmApp: Sync {
     /// Fold the per-pattern outcomes (in pattern order) into the job's
     /// final statistics. The default appends counts and sums times and
     /// traffic — exactly the multi-pattern merge the counting apps need.
+    /// Wall-clock is *not* the aggregate's concern: [`Job::run`]
+    /// overwrites `wall_s` with the measured wall of the whole job.
     fn aggregate(&self, outcomes: Vec<PatternOutcome>) -> RunStats {
         let mut merged = RunStats::default();
         for o in &outcomes {
@@ -119,24 +157,28 @@ pub trait GpmApp: Sync {
     }
 }
 
-/// Shared per-plan execution context an [`Executor`] runs against: the
-/// session's graph, partitioning, and owned-vertex lists, plus the
-/// job-resolved configuration and one compiled plan.
-pub struct PlanCtx<'s, 'g> {
+/// Shared execution context an [`Executor`] runs one compiled
+/// [`MiningProgram`] against: the session's graph, partitioning, and
+/// owned-vertex lists, plus the job-resolved configuration and the
+/// app's hooks.
+pub struct ProgramCtx<'s, 'g> {
     pub graph: &'g Graph,
-    pub plan: &'s Plan,
+    pub program: &'s MiningProgram,
     pub cfg: &'s RunConfig,
     /// The session's shared 1-D partitioning (computed once per session).
     pub pg: PartitionedGraph<'g>,
     /// Per-machine owned-vertex lists, unfiltered (computed once per
-    /// session; executors apply plan-specific root filters themselves).
+    /// session; executors apply root-label filters themselves).
     pub roots: &'s [Vec<VertexId>],
+    /// The app's per-level callbacks, if any.
+    pub hooks: Option<&'s dyn ExtendHooks>,
 }
 
-/// An execution model that can mine one compiled [`Plan`] over the
-/// session's shared cluster state. Implemented by the Kudu engine and all
-/// four comparator baselines; object-safe so the harnesses select
-/// executors dynamically.
+/// An execution model that can mine a compiled [`MiningProgram`] over
+/// the session's shared cluster state. The Kudu engine executes programs
+/// fused; the four comparator baselines interpret a program as a loop
+/// over its plans (their execution models are per-plan by nature).
+/// Object-safe so the harnesses select executors dynamically.
 pub trait Executor: Send + Sync {
     /// Display name (table headers).
     fn name(&self) -> String;
@@ -148,25 +190,33 @@ pub trait Executor: Send + Sync {
         ClientSystem::GraphPi
     }
 
-    /// Mine one plan, counting embeddings. Returns single-pattern stats
-    /// with `counts = [n]`.
-    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats;
+    /// Mine every pattern of the program, counting embeddings. Returns
+    /// per-pattern outcomes (each with `counts = [n]`) plus the
+    /// execution's physical totals.
+    fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome;
 
-    /// Whether [`Executor::run_plan_with_sinks`] is available (per-
+    /// Whether [`Executor::run_program_with_sinks`] is available (per-
     /// embedding processing). Only the fine-grained Kudu engine exposes
     /// the paper's Algorithm-1 user function; the baselines count only.
     fn supports_sinks(&self) -> bool {
         false
     }
 
-    /// Mine one plan, feeding every embedding through per-unit sinks from
-    /// `make_sink`. Returns the stats (counts = sum of sink totals) and
-    /// the finished sinks in unit order.
-    fn run_plan_with_sinks(
+    /// Whether [`ProgramCtx::hooks`] are honoured. Only the Kudu engine
+    /// interprets hooks; the baselines ignore per-embedding control flow.
+    fn supports_hooks(&self) -> bool {
+        false
+    }
+
+    /// Mine every pattern of the program, feeding each embedding through
+    /// per-unit sinks from `make_sink(pattern_idx, machine)`. Outcomes
+    /// carry the finished sinks in unit order and `counts` = sum of sink
+    /// totals.
+    fn run_program_with_sinks(
         &self,
-        ctx: &PlanCtx<'_, '_>,
-        make_sink: &(dyn Fn(usize) -> BoxSink + Sync),
-    ) -> (RunStats, Vec<BoxSink>) {
+        ctx: &ProgramCtx<'_, '_>,
+        make_sink: &(dyn Fn(usize, usize) -> BoxSink + Sync),
+    ) -> ProgramOutcome {
         let _ = (ctx, make_sink);
         panic!(
             "executor '{}' does not support per-embedding sinks; \
@@ -176,8 +226,53 @@ pub trait Executor: Send + Sync {
     }
 }
 
+/// Index-translating hook adapter: the engine reports *program-local*
+/// pattern indices, apps expect *their own* pattern indices. Identical
+/// for a fused whole-app program; diverging under [`Job::fused`]`(false)`,
+/// where every program is single-pattern (program index always 0) —
+/// exactly like the sink factory, hooks must be remapped through the
+/// job's index map.
+struct MappedHooks<'h> {
+    inner: &'h dyn ExtendHooks,
+    idx_map: &'h [usize],
+}
+
+impl ExtendHooks for MappedHooks<'_> {
+    fn on_match(&self, pat: usize, vertices: &[VertexId]) -> Control {
+        self.inner.on_match(self.idx_map[pat], vertices)
+    }
+
+    fn filter(&self, pat: usize, level: usize, vertices: &[VertexId]) -> Control {
+        self.inner.filter(self.idx_map[pat], level, vertices)
+    }
+}
+
+/// Run a program as the baselines do — one independent engine run per
+/// plan (own transport, own traffic) — and package the outcomes.
+/// `run_plan` returns the plan's stats plus the traffic it moved.
+fn run_plans_serially(
+    ctx: &ProgramCtx<'_, '_>,
+    mut run_plan: impl FnMut(&Plan) -> (RunStats, Traffic),
+) -> ProgramOutcome {
+    let wall_start = Instant::now();
+    let mut patterns = Vec::with_capacity(ctx.program.num_patterns());
+    let mut program = ProgramStats::default();
+    for (i, plan) in ctx.program.plans().iter().enumerate() {
+        let (mut stats, traffic) = run_plan(plan);
+        // Wall is a whole-job quantity, reported once (see Job::run).
+        stats.wall_s = 0.0;
+        program.physical_bytes += stats.network_bytes;
+        program.physical_messages += stats.network_messages;
+        patterns.push(PatternOutcome { pattern_idx: i, stats, traffic, sinks: Vec::new() });
+    }
+    program.wall_s = wall_start.elapsed().as_secs_f64();
+    ProgramOutcome { patterns, program }
+}
+
 /// The Kudu engine as an [`Executor`], parameterised by the client system
-/// whose planner compiles its plans.
+/// whose planner compiles its plans. Executes programs **fused**: one
+/// root scan per trie root, one scheduler and comm-fabric session for
+/// all patterns.
 pub struct KuduExec {
     pub client: ClientSystem,
 }
@@ -191,45 +286,75 @@ impl Executor for KuduExec {
         self.client
     }
 
-    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
+    fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome {
         let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
-        KuduEngine::run_on_roots(
+        let mut sinks: Vec<Vec<CountSink>> = Vec::new();
+        let (runs, program) = KuduEngine::run_program(
             ctx.graph,
-            ctx.plan,
+            ctx.program,
             &ctx.cfg.engine,
             &ctx.cfg.compute,
             &mut tr,
-            ctx.roots,
-        )
+            Some(ctx.roots),
+            ctx.hooks,
+            |_p, _m| CountSink::default(),
+            &mut sinks,
+        );
+        let patterns = runs
+            .into_iter()
+            .enumerate()
+            .map(|(i, pr)| {
+                let mut stats = pr.stats;
+                stats.counts = vec![sinks[i].iter().map(|s| s.count).sum()];
+                PatternOutcome { pattern_idx: i, stats, traffic: pr.traffic, sinks: Vec::new() }
+            })
+            .collect();
+        ProgramOutcome { patterns, program }
     }
 
     fn supports_sinks(&self) -> bool {
         true
     }
 
-    fn run_plan_with_sinks(
+    fn supports_hooks(&self) -> bool {
+        true
+    }
+
+    fn run_program_with_sinks(
         &self,
-        ctx: &PlanCtx<'_, '_>,
-        make_sink: &(dyn Fn(usize) -> BoxSink + Sync),
-    ) -> (RunStats, Vec<BoxSink>) {
+        ctx: &ProgramCtx<'_, '_>,
+        make_sink: &(dyn Fn(usize, usize) -> BoxSink + Sync),
+    ) -> ProgramOutcome {
         let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
-        let mut sinks: Vec<BoxSink> = Vec::new();
-        let mut stats = KuduEngine::run_with_sinks_on_roots(
+        let mut sinks: Vec<Vec<BoxSink>> = Vec::new();
+        let (runs, program) = KuduEngine::run_program(
             ctx.graph,
-            ctx.plan,
+            ctx.program,
             &ctx.cfg.engine,
             &ctx.cfg.compute,
             &mut tr,
-            ctx.roots,
+            Some(ctx.roots),
+            ctx.hooks,
             make_sink,
             &mut sinks,
         );
-        stats.counts = vec![sinks.iter().map(|s| s.total()).sum()];
-        (stats, sinks)
+        let mut sinks = sinks.into_iter();
+        let patterns = runs
+            .into_iter()
+            .enumerate()
+            .map(|(i, pr)| {
+                let psinks = sinks.next().expect("one sink list per pattern");
+                let mut stats = pr.stats;
+                stats.counts = vec![psinks.iter().map(|s| s.total()).sum()];
+                PatternOutcome { pattern_idx: i, stats, traffic: pr.traffic, sinks: psinks }
+            })
+            .collect();
+        ProgramOutcome { patterns, program }
     }
 }
 
-/// G-thinker-like baseline as an [`Executor`].
+/// G-thinker-like baseline as an [`Executor`] (interprets a program as a
+/// loop over its plans).
 pub struct GThinkerExec;
 
 impl Executor for GThinkerExec {
@@ -237,21 +362,25 @@ impl Executor for GThinkerExec {
         "G-thinker".into()
     }
 
-    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
-        let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
-        GThinker::run(
-            ctx.graph,
-            ctx.plan,
-            ctx.cfg.engine.threads,
-            ctx.cfg.engine.sim_threads,
-            &ctx.cfg.engine.comm,
-            &ctx.cfg.compute,
-            &mut tr,
-        )
+    fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome {
+        run_plans_serially(ctx, |plan| {
+            let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
+            let s = GThinker::run(
+                ctx.graph,
+                plan,
+                ctx.cfg.engine.threads,
+                ctx.cfg.engine.sim_threads,
+                &ctx.cfg.engine.comm,
+                &ctx.cfg.compute,
+                &mut tr,
+            );
+            (s, tr.traffic)
+        })
     }
 }
 
-/// Moving-computation-to-data baseline as an [`Executor`].
+/// Moving-computation-to-data baseline as an [`Executor`] (loops over the
+/// program's plans).
 pub struct MovingCompExec;
 
 impl Executor for MovingCompExec {
@@ -259,20 +388,24 @@ impl Executor for MovingCompExec {
         "MovingComp".into()
     }
 
-    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
-        let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
-        MovingComputation::run(
-            ctx.graph,
-            ctx.plan,
-            ctx.cfg.engine.threads,
-            &ctx.cfg.engine.comm,
-            &ctx.cfg.compute,
-            &mut tr,
-        )
+    fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome {
+        run_plans_serially(ctx, |plan| {
+            let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
+            let s = MovingComputation::run(
+                ctx.graph,
+                plan,
+                ctx.cfg.engine.threads,
+                &ctx.cfg.engine.comm,
+                &ctx.cfg.compute,
+                &mut tr,
+            );
+            (s, tr.traffic)
+        })
     }
 }
 
-/// Replicated-graph GraphPi-like baseline as an [`Executor`].
+/// Replicated-graph GraphPi-like baseline as an [`Executor`] (loops over
+/// the program's plans; a replicated graph moves no traffic).
 pub struct ReplicatedExec;
 
 impl Executor for ReplicatedExec {
@@ -280,20 +413,23 @@ impl Executor for ReplicatedExec {
         "GraphPi(repl)".into()
     }
 
-    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
-        Replicated::run(
-            ctx.graph,
-            ctx.plan,
-            ctx.cfg.num_machines,
-            ctx.cfg.engine.threads,
-            ctx.cfg.engine.sim_threads,
-            &ctx.cfg.compute,
-        )
+    fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome {
+        run_plans_serially(ctx, |plan| {
+            let s = Replicated::run(
+                ctx.graph,
+                plan,
+                ctx.cfg.num_machines,
+                ctx.cfg.engine.threads,
+                ctx.cfg.engine.sim_threads,
+                &ctx.cfg.compute,
+            );
+            (s, Traffic::new(ctx.cfg.num_machines))
+        })
     }
 }
 
 /// Single-machine DFS reference as an [`Executor`] (ignores the machine
-/// count).
+/// count; loops over the program's plans).
 pub struct SingleMachineExec;
 
 impl Executor for SingleMachineExec {
@@ -301,8 +437,11 @@ impl Executor for SingleMachineExec {
         "single".into()
     }
 
-    fn run_plan(&self, ctx: &PlanCtx<'_, '_>) -> RunStats {
-        SingleMachine::run(ctx.graph, ctx.plan, &ctx.cfg.compute)
+    fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome {
+        run_plans_serially(ctx, |plan| {
+            let s = SingleMachine::run(ctx.graph, plan, &ctx.cfg.compute);
+            (s, Traffic::new(ctx.cfg.num_machines))
+        })
     }
 }
 
@@ -356,15 +495,29 @@ impl<'g> MiningSession<'g> {
     }
 
     /// Start building a job that mines `app` on this session. Defaults:
-    /// the Kudu engine with the GraphPi planner and the session's config.
+    /// the Kudu engine with the GraphPi planner, fused program execution,
+    /// and the session's config.
     pub fn job<'a>(&'a self, app: &'a dyn GpmApp) -> Job<'a, 'g> {
         Job {
             sess: self,
             app,
             exec: Box::new(KuduExec { client: ClientSystem::GraphPi }),
             cfg: self.cfg.clone(),
+            fused: true,
         }
     }
+}
+
+/// Everything one job run reports: the app-aggregated statistics, the
+/// per-pattern views (stats + traffic matrix) the aggregation consumed,
+/// and the physical totals of the program execution.
+pub struct JobReport {
+    pub stats: RunStats,
+    /// Per-pattern (stats, traffic matrix) in pattern order — the fused
+    /// engine's per-pattern attribution, bitwise identical to legacy
+    /// one-plan runs.
+    pub patterns: Vec<(RunStats, Traffic)>,
+    pub program: ProgramStats,
 }
 
 /// Fluent builder for one mining job: an app × an executor × config
@@ -374,6 +527,7 @@ pub struct Job<'a, 'g> {
     app: &'a dyn GpmApp,
     exec: Box<dyn Executor>,
     cfg: RunConfig,
+    fused: bool,
 }
 
 impl<'a, 'g> Job<'a, 'g> {
@@ -386,6 +540,19 @@ impl<'a, 'g> Job<'a, 'g> {
     /// Mine with an explicit executor (baselines, custom execution models).
     pub fn executor(mut self, exec: Box<dyn Executor>) -> Self {
         self.exec = exec;
+        self
+    }
+
+    /// Fused program execution (default `true`): compile all the app's
+    /// plans into one [`MiningProgram`] and mine them in a single engine
+    /// run — one root scan, shared prefix frames, one comm session.
+    /// `false` reproduces the legacy one-plan-per-run execution exactly
+    /// (separate root scans and comm sessions per pattern) — the serial
+    /// reference of `tests/program_equivalence.rs` and
+    /// `benches/program.rs`. Per-pattern reported metrics are bitwise
+    /// identical either way.
+    pub fn fused(mut self, on: bool) -> Self {
+        self.fused = on;
         self
     }
 
@@ -457,9 +624,9 @@ impl<'a, 'g> Job<'a, 'g> {
     }
 
     /// Task-split budgets: frames at `level < levels` hand full child
-    /// chunks to the scheduler as new tasks, at most `width` per task.
-    /// Changes the (deterministic) task decomposition — and with it
-    /// virtual-time granularity — not the mining answer.
+    /// chunks to the scheduler as new tasks, at most `width` per child
+    /// edge per task. Changes the (deterministic) task decomposition —
+    /// and with it virtual-time granularity — not the mining answer.
     pub fn task_split(mut self, levels: usize, width: usize) -> Self {
         self.cfg.engine.task_split_levels = levels;
         self.cfg.engine.task_split_width = width;
@@ -486,14 +653,48 @@ impl<'a, 'g> Job<'a, 'g> {
         self
     }
 
-    /// Run the job: compile one plan per app pattern with the executor's
-    /// client planner, execute each over the session's shared cluster
-    /// state, and hand the outcomes to the app for aggregation.
-    ///
-    /// Multi-pattern apps run pattern-by-pattern; with the default
-    /// aggregation, counts append and times/traffic sum — identical to the
-    /// pre-session entry points, bit for bit.
-    pub fn run(self) -> RunStats {
+    /// Compile one program (over `plans`, whose program indices map to
+    /// app pattern indices through `idx_map`) and execute it.
+    fn exec_once(
+        &self,
+        plans: Vec<Plan>,
+        idx_map: &[usize],
+        hooks: Option<&dyn ExtendHooks>,
+    ) -> ProgramOutcome {
+        // Hooked programs skip cross-pattern fusion: per-pattern control
+        // flow would make shared frames diverge (the root scan still
+        // merges — filtering happens on edges, not on the root chunk).
+        let program = MiningProgram::compile(plans, hooks.is_none());
+        // Hooks, like sinks, see app pattern indices, not program-local
+        // ones.
+        let mapped = hooks.map(|h| MappedHooks { inner: h, idx_map });
+        let ctx = ProgramCtx {
+            graph: self.sess.graph,
+            program: &program,
+            cfg: &self.cfg,
+            pg: self.sess.pg,
+            roots: &self.sess.roots,
+            hooks: mapped.as_ref().map(|m| m as &dyn ExtendHooks),
+        };
+        let mut out = if self.app.needs_sinks() {
+            self.exec.run_program_with_sinks(&ctx, &|p, m| self.app.unit_sink(idx_map[p], m))
+        } else {
+            self.exec.run_program(&ctx)
+        };
+        for po in out.patterns.iter_mut() {
+            po.pattern_idx = idx_map[po.pattern_idx];
+        }
+        out
+    }
+
+    /// Run the job and return the full report: compile the app's plans
+    /// with the executor's client planner into one fused program (or one
+    /// program per pattern with [`Job::fused`]`(false)`), execute over
+    /// the session's shared cluster state, and hand the outcomes to the
+    /// app for aggregation. Wall-clock is measured once for the whole
+    /// job; run-wide execution diagnostics are folded into the final
+    /// stats.
+    pub fn run_report(self) -> JobReport {
         // Reject degenerate configurations here, at the API boundary,
         // with the error's message — not via a hang or index panic deep
         // inside the engine.
@@ -503,38 +704,71 @@ impl<'a, 'g> Job<'a, 'g> {
         let patterns = self.app.patterns();
         let induced = self.app.induced();
         let client = self.exec.client();
-        let needs_sinks = self.app.needs_sinks();
+        let hooks = self.app.hooks();
         assert!(
-            !needs_sinks || self.exec.supports_sinks(),
+            !self.app.needs_sinks() || self.exec.supports_sinks(),
             "app '{}' needs per-embedding sinks but executor '{}' only counts",
             self.app.name(),
             self.exec.name()
         );
-        let mut outcomes = Vec::with_capacity(patterns.len());
-        for (i, p) in patterns.iter().enumerate() {
-            let plan = {
+        assert!(
+            hooks.is_none() || self.exec.supports_hooks(),
+            "app '{}' installs extend hooks but executor '{}' ignores them",
+            self.app.name(),
+            self.exec.name()
+        );
+        let wall_start = Instant::now();
+        if patterns.is_empty() {
+            // Nothing to mine: aggregate over zero outcomes.
+            let mut stats = self.app.aggregate(Vec::new());
+            stats.wall_s = wall_start.elapsed().as_secs_f64();
+            return JobReport { stats, patterns: Vec::new(), program: ProgramStats::default() };
+        }
+        let plans: Vec<Plan> = patterns
+            .iter()
+            .map(|p| {
                 let plan = client.plan(p, induced);
                 if self.cfg.engine.vertical_sharing {
                     plan
                 } else {
                     plan.without_vertical_sharing()
                 }
-            };
-            let ctx = PlanCtx {
-                graph: self.sess.graph,
-                plan: &plan,
-                cfg: &self.cfg,
-                pg: self.sess.pg,
-                roots: &self.sess.roots,
-            };
-            let (stats, sinks) = if needs_sinks {
-                self.exec.run_plan_with_sinks(&ctx, &|m| self.app.unit_sink(i, m))
-            } else {
-                (self.exec.run_plan(&ctx), Vec::new())
-            };
-            outcomes.push(PatternOutcome { pattern_idx: i, stats, sinks });
-        }
-        self.app.aggregate(outcomes)
+            })
+            .collect();
+        let outcome = if self.fused {
+            let idx_map: Vec<usize> = (0..plans.len()).collect();
+            self.exec_once(plans, &idx_map, hooks)
+        } else {
+            // Legacy one-plan-per-run execution: an independent program
+            // (own root scan, own comm session) per pattern.
+            let mut acc =
+                ProgramOutcome { patterns: Vec::new(), program: ProgramStats::default() };
+            for (i, plan) in plans.into_iter().enumerate() {
+                let one = self.exec_once(vec![plan], &[i], hooks);
+                acc.patterns.extend(one.patterns);
+                acc.program.absorb(&one.program);
+            }
+            acc
+        };
+        let pattern_views: Vec<(RunStats, Traffic)> =
+            outcome.patterns.iter().map(|po| (po.stats.clone(), po.traffic.clone())).collect();
+        let program = outcome.program;
+        let mut stats = self.app.aggregate(outcome.patterns);
+        // Wall-clock once for the whole job (per-pattern virtual-time
+        // breakdowns stay in the outcomes), plus the run-wide execution
+        // diagnostics the fused engine reports at program level.
+        stats.wall_s = wall_start.elapsed().as_secs_f64();
+        stats.sched_steals += program.sched_steals;
+        stats.peak_live_chunks = stats.peak_live_chunks.max(program.peak_live_chunks);
+        stats.comm_stall_s += program.comm_stall_s;
+        stats.peak_in_flight = stats.peak_in_flight.max(program.peak_in_flight);
+        stats.comm_flushes += program.comm_flushes;
+        JobReport { stats, patterns: pattern_views, program }
+    }
+
+    /// Run the job; see [`Job::run_report`] for the full report.
+    pub fn run(self) -> RunStats {
+        self.run_report().stats
     }
 }
 
@@ -589,13 +823,14 @@ pub struct QueryResult {
     pub kept: bool,
 }
 
-/// Labelled pattern queries with a support threshold — a genuinely new
-/// workload that ships entirely on the [`GpmApp`] trait, with no
-/// engine-internal changes: mine a set of vertex-labelled patterns,
-/// compute each pattern's MNI support from per-embedding sinks, and
-/// report only patterns whose support reaches `min_support` (patterns
-/// below threshold report a zero count, as an FSM-style pruning pass
-/// would discard them).
+/// Labelled pattern queries with a support threshold — a workload that
+/// ships entirely on the [`GpmApp`] trait, with no engine-internal
+/// changes: mine a set of vertex-labelled patterns, compute each
+/// pattern's MNI support from per-embedding sinks, and report only
+/// patterns whose support reaches `min_support` (patterns below
+/// threshold report a zero count, as an FSM-style pruning pass would
+/// discard them). Multi-pattern queries run as one fused program:
+/// compatible prefixes share frames, the root scan happens once.
 pub struct LabeledQuery {
     patterns: Vec<Pattern>,
     induced: Induced,
@@ -674,6 +909,7 @@ mod tests {
     use crate::graph::gen;
     use crate::pattern::brute::count_embeddings;
     use crate::workloads::{App, EngineKind};
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn session_counts_match_oracle_for_every_executor() {
@@ -721,6 +957,27 @@ mod tests {
         assert_eq!(on.total_count(), off.total_count());
         // The ablations cost work: no-sharing does strictly more.
         assert!(off.work_units > on.work_units);
+    }
+
+    #[test]
+    fn fused_job_reports_one_root_scan_and_wall_once() {
+        let g = gen::rmat(8, 8, 29);
+        let sess = MiningSession::new(&g, 2);
+        let fused = sess.job(&App::Mc(4)).run_report();
+        let serial = sess.job(&App::Mc(4)).fused(false).run_report();
+        // Same mining answers, pattern for pattern.
+        assert_eq!(fused.stats.counts, serial.stats.counts);
+        // One root scan instead of six.
+        assert_eq!(fused.program.root_embeddings, g.num_vertices() as u64);
+        assert_eq!(serial.program.root_embeddings, 6 * g.num_vertices() as u64);
+        // Wall is measured once, not summed per pattern: with six fused
+        // patterns it must be far below the per-pattern virtual sum
+        // heuristic the old default produced (wall_s ≥ 0 and finite is
+        // all we can assert portably, plus that per-pattern walls are
+        // zeroed in the outcomes).
+        assert!(fused.stats.wall_s > 0.0);
+        assert!(fused.patterns.iter().all(|(s, _)| s.wall_s == 0.0));
+        assert!(serial.patterns.iter().all(|(s, _)| s.wall_s == 0.0));
     }
 
     #[test]
@@ -791,5 +1048,72 @@ mod tests {
         let app = LabeledQuery::new(vec![Pattern::triangle()], Induced::Edge, 1);
         let sess = MiningSession::new(&g, 2);
         let _ = sess.job(&app).executor(EngineKind::Replicated.executor()).run();
+    }
+
+    /// Minimal hook app: count triangles but prune every subtree rooted
+    /// at an odd second vertex — per-embedding control flow through the
+    /// public API only.
+    struct OddPrune {
+        seen: AtomicU64,
+    }
+
+    impl ExtendHooks for OddPrune {
+        fn filter(&self, _pat: usize, _level: usize, vertices: &[VertexId]) -> Control {
+            if vertices[1] % 2 == 1 {
+                Control::Prune
+            } else {
+                Control::Continue
+            }
+        }
+
+        fn on_match(&self, _pat: usize, _vertices: &[VertexId]) -> Control {
+            self.seen.fetch_add(1, Ordering::Relaxed);
+            Control::Continue
+        }
+    }
+
+    impl GpmApp for OddPrune {
+        fn name(&self) -> String {
+            "odd-prune".into()
+        }
+
+        fn patterns(&self) -> Vec<Pattern> {
+            vec![Pattern::triangle()]
+        }
+
+        fn induced(&self) -> Induced {
+            Induced::Edge
+        }
+
+        fn hooks(&self) -> Option<&dyn ExtendHooks> {
+            Some(self)
+        }
+    }
+
+    #[test]
+    fn hooks_prune_subtrees_and_see_matches() {
+        let g = gen::erdos_renyi(80, 320, 97);
+        let sess = MiningSession::new(&g, 3);
+        let app = OddPrune { seen: AtomicU64::new(0) };
+        let st = sess.job(&app).run();
+        let full = sess.job(&App::Tc).run();
+        // Pruning removed work, deterministically.
+        assert!(st.total_count() < full.total_count());
+        assert_eq!(st.total_count(), app.seen.load(Ordering::Relaxed));
+        // Bitwise-deterministic even with hooks, as long as nothing
+        // halts: same job, same answer.
+        let app2 = OddPrune { seen: AtomicU64::new(0) };
+        let st2 = sess.job(&app2).run();
+        assert_eq!(st.counts, st2.counts);
+        assert_eq!(st.work_units, st2.work_units);
+    }
+
+    #[test]
+    #[should_panic(expected = "installs extend hooks")]
+    fn hook_app_on_baseline_executor_panics() {
+        let g = gen::erdos_renyi(30, 60, 3);
+        let app = OddPrune { seen: AtomicU64::new(0) };
+        let sess = MiningSession::new(&g, 2);
+        let _ = sess.job(&app).executor(EngineKind::GThinker.executor()).run();
     }
 }

@@ -1,0 +1,392 @@
+//! Acceptance suite for the mining-program redesign: a **fused**
+//! multi-pattern program (one root scan, shared prefix frames, one comm
+//! session) must report, *per pattern*, counts, full traffic matrices
+//! (cell for cell), and virtual time **bitwise identical** to the legacy
+//! one-plan-per-run path (`Job::fused(false)`) — across engines × apps ×
+//! machine counts. Fusion is an execution optimisation, never an
+//! accounting one: only the physical totals (`ProgramStats`) and wall
+//! clock may differ, and they must differ in the right direction (fewer
+//! root embeddings materialised, fewer bytes on the wire).
+//!
+//! Also here: the hooks API end to end (filter pruning, first-match
+//! halt), mixed-depth programs (a terminal pattern riding inside a
+//! longer pattern's chain), and the fused path's host-parallelism
+//! determinism (the CI matrix re-runs this file under
+//! `KUDU_SIM_THREADS=1 KUDU_WORKERS_PER_MACHINE=1` and
+//! `KUDU_SYNC_FETCH=1`).
+
+use kudu::config::RunConfig;
+use kudu::graph::gen::{self, Rng};
+use kudu::graph::VertexId;
+use kudu::metrics::RunStats;
+use kudu::pattern::brute::{count_embeddings, Induced};
+use kudu::pattern::{motifs, Pattern};
+use kudu::plan::ClientSystem;
+use kudu::session::{
+    Control, ExtendHooks, GpmApp, JobReport, LabeledQuery, MiningSession,
+};
+use kudu::workloads::{App, EngineKind};
+use std::sync::Mutex;
+
+/// Bitwise comparison of every field the determinism contract covers
+/// (floats by bit pattern; wall clock and the execution diagnostics are
+/// excluded by design — `wall_s` is additionally a whole-job quantity
+/// now, zeroed in per-pattern outcomes).
+#[track_caller]
+fn assert_bitwise_eq(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.work_units, b.work_units, "{what}: work_units");
+    assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(
+        a.virtual_time_s.to_bits(),
+        b.virtual_time_s.to_bits(),
+        "{what}: virtual time"
+    );
+    assert_eq!(
+        a.exposed_comm_s.to_bits(),
+        b.exposed_comm_s.to_bits(),
+        "{what}: exposed comm"
+    );
+    assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+    assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+    assert_eq!(a.sched_tasks, b.sched_tasks, "{what}: tasks");
+}
+
+/// Per-pattern bitwise comparison of two job reports, including the
+/// traffic matrices cell for cell, plus the aggregate.
+#[track_caller]
+fn assert_reports_equivalent(fused: &JobReport, serial: &JobReport, what: &str) {
+    assert_eq!(fused.patterns.len(), serial.patterns.len(), "{what}: pattern count");
+    for (i, ((fs, ft), (ss, st))) in
+        fused.patterns.iter().zip(serial.patterns.iter()).enumerate()
+    {
+        assert_bitwise_eq(fs, ss, &format!("{what} pattern {i}"));
+        assert_eq!(ft, st, "{what} pattern {i}: traffic matrix");
+    }
+    assert_bitwise_eq(&fused.stats, &serial.stats, &format!("{what} aggregate"));
+}
+
+const ALL_ENGINES: [EngineKind; 6] = [
+    EngineKind::Kudu(ClientSystem::Automine),
+    EngineKind::Kudu(ClientSystem::GraphPi),
+    EngineKind::GThinker,
+    EngineKind::MovingComp,
+    EngineKind::Replicated,
+    EngineKind::SingleMachine,
+];
+
+/// The acceptance matrix: engines × apps × machine counts, fused
+/// bitwise-equal to the legacy per-pattern path, pattern for pattern.
+#[test]
+fn fused_bitwise_equals_serial_across_engines_apps_machines() {
+    let g = gen::rmat(8, 8, 0x9406);
+    for machines in [1usize, 2, 4, 8] {
+        let sess = MiningSession::with_config(&g, RunConfig::with_machines(machines));
+        for app in [App::Mc(3), App::Cc(4), App::Mc(4)] {
+            for engine in ALL_ENGINES {
+                let fused = sess.job(&app).executor(engine.executor()).run_report();
+                let serial =
+                    sess.job(&app).executor(engine.executor()).fused(false).run_report();
+                assert_reports_equivalent(
+                    &fused,
+                    &serial,
+                    &format!("{} × {} × {machines}m", app.name(), engine.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Oracle pinning: the fused 4-motif program's per-pattern counts equal
+/// the brute-force oracle, for both planners, across machine counts.
+#[test]
+fn fused_motif_counts_match_oracle() {
+    let g = gen::erdos_renyi(90, 360, 0x9410);
+    let pats = motifs::all_motifs(4);
+    for machines in [1usize, 3] {
+        let sess = MiningSession::new(&g, machines);
+        for client in [ClientSystem::Automine, ClientSystem::GraphPi] {
+            let st = sess.job(&App::Mc(4)).client(client).run();
+            assert_eq!(st.counts.len(), 6);
+            for (i, p) in pats.iter().enumerate() {
+                let expect = count_embeddings(&g, p, Induced::Vertex);
+                assert_eq!(
+                    st.counts[i],
+                    expect,
+                    "motif {i} machines={machines} {}",
+                    client.name()
+                );
+            }
+        }
+    }
+}
+
+/// The fusion *wins*, physically: one root scan for all six 4-motifs and
+/// strictly fewer bytes on the wire than the serial per-pattern runs —
+/// while the per-pattern attribution stays exactly the serial totals.
+/// (For vertex-induced 4-motif plans, level-1 merge keys collapse to
+/// the restriction set ∅ vs {v0<v1}: the step is always `intersect
+/// Adj(0)`, `store_set[1]` is structurally false, and `needs_adj[1]` is
+/// always active — v1's list is either an intersection source or,
+/// non-adjacent, an exclusion source. Six patterns, two buckets ⇒ a
+/// level-1 node shared by ≥ 3 patterns, whose fetches dedupe.)
+#[test]
+fn fusion_reduces_root_scan_work_and_traffic() {
+    let g = gen::rmat(9, 10, 0x9407);
+    let sess = MiningSession::new(&g, 4);
+    for client in [ClientSystem::Automine, ClientSystem::GraphPi] {
+        let fused = sess.job(&App::Mc(4)).client(client).run_report();
+        let serial = sess.job(&App::Mc(4)).client(client).fused(false).run_report();
+        let what = client.name();
+        assert_eq!(fused.stats.counts, serial.stats.counts, "{what}: counts");
+        // Root scan: once for the fused program, once per pattern serially.
+        assert_eq!(fused.program.root_embeddings, g.num_vertices() as u64, "{what}");
+        assert_eq!(
+            serial.program.root_embeddings,
+            6 * g.num_vertices() as u64,
+            "{what}"
+        );
+        // Prefix sharing beyond the root scan.
+        assert!(
+            fused.program.shared_nodes >= 2,
+            "{what}: expected shared level-1 nodes, got {}",
+            fused.program.shared_nodes
+        );
+        // Physical traffic: shared frames fetch once.
+        assert!(serial.program.physical_bytes > 0, "{what}: serial run must communicate");
+        assert!(
+            fused.program.physical_bytes < serial.program.physical_bytes,
+            "{what}: fused physical {} !< serial physical {}",
+            fused.program.physical_bytes,
+            serial.program.physical_bytes
+        );
+        // Per-pattern attribution is *not* discounted by sharing: the
+        // attributed sum equals what the serial runs physically moved.
+        let attributed: u64 = fused.patterns.iter().map(|(s, _)| s.network_bytes).sum();
+        assert_eq!(attributed, serial.program.physical_bytes, "{what}: attribution");
+    }
+}
+
+/// Sink apps (per-embedding processing) fuse too: LabeledQuery reports
+/// identical per-query results and identical bits either way.
+#[test]
+fn labeled_query_fused_equals_serial() {
+    let base = gen::erdos_renyi(110, 440, 0x9413);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8 + 1).collect();
+    let g = base.with_labels(labels);
+    let queries = vec![
+        Pattern::triangle().with_labels(&[1, 2, 3]),
+        Pattern::triangle().with_labels(&[1, 1, 1]),
+        Pattern::chain(3).with_labels(&[2, 1, 2]),
+        Pattern::chain(4).with_labels(&[1, 2, 2, 3]),
+    ];
+    let sess = MiningSession::new(&g, 4);
+    let fused_app = LabeledQuery::new(queries.clone(), Induced::Edge, 1);
+    let fused = sess.job(&fused_app).run_report();
+    let fused_results: Vec<_> = fused_app
+        .results()
+        .iter()
+        .map(|r| (r.embeddings, r.support, r.kept))
+        .collect();
+    let serial_app = LabeledQuery::new(queries, Induced::Edge, 1);
+    let serial = sess.job(&serial_app).fused(false).run_report();
+    let serial_results: Vec<_> = serial_app
+        .results()
+        .iter()
+        .map(|r| (r.embeddings, r.support, r.kept))
+        .collect();
+    assert_eq!(fused_results, serial_results);
+    assert_reports_equivalent(&fused, &serial, "labeled query");
+}
+
+/// A mixed-depth counting app: short patterns terminate at interior
+/// levels of longer patterns' chains (terminal riders).
+struct MixedDepth;
+
+impl GpmApp for MixedDepth {
+    fn name(&self) -> String {
+        "mixed-depth".into()
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        vec![Pattern::chain(3), Pattern::triangle(), Pattern::chain(4), Pattern::clique(4)]
+    }
+
+    fn induced(&self) -> Induced {
+        Induced::Edge
+    }
+}
+
+#[test]
+fn mixed_depth_program_fused_equals_serial_and_oracle() {
+    let g = gen::erdos_renyi(80, 300, 0x9414);
+    for machines in [1usize, 4] {
+        let sess = MiningSession::new(&g, machines);
+        let fused = sess.job(&MixedDepth).run_report();
+        let serial = sess.job(&MixedDepth).fused(false).run_report();
+        assert_reports_equivalent(&fused, &serial, &format!("mixed × {machines}m"));
+        for (i, p) in MixedDepth.patterns().iter().enumerate() {
+            let expect = count_embeddings(&g, p, Induced::Edge);
+            assert_eq!(fused.stats.counts[i], expect, "pattern {i} machines={machines}");
+        }
+    }
+}
+
+/// Seeded sweep: random graphs × machine counts × apps — fused and
+/// serial never diverge in any covered bit. Failures print the case
+/// seed for reproduction.
+#[test]
+fn prop_program_equivalence_random_sweep() {
+    let mut rng = Rng::new(0x9406_5EED);
+    for case in 0..10 {
+        let seed = rng.next_u64();
+        let n = 30 + rng.below(80) as usize;
+        let m = n + rng.below(4 * n as u64) as usize;
+        let g = gen::erdos_renyi(n, m, seed);
+        let machines = 1 + rng.below(8) as usize;
+        let mut cfg = RunConfig::with_machines(machines);
+        cfg.engine.chunk_capacity = 16 + rng.below(512) as usize;
+        cfg.engine.mini_batch = 1 + rng.below(64) as usize;
+        cfg.engine.task_split_levels = rng.below(3) as usize;
+        cfg.engine.task_split_width = 1 + rng.below(8) as usize;
+        let sess = MiningSession::with_config(&g, cfg);
+        let app = match rng.below(3) {
+            0 => App::Mc(3),
+            1 => App::Mc(4),
+            _ => App::Cc(4),
+        };
+        let fused = sess.job(&app).run_report();
+        let serial = sess.job(&app).fused(false).run_report();
+        assert_reports_equivalent(
+            &fused,
+            &serial,
+            &format!("case {case} seed {seed} machines {machines} {}", app.name()),
+        );
+    }
+}
+
+/// Fused programs stay bitwise invariant to host parallelism (the
+/// scheduler/comm contracts extend to multi-pattern runs).
+#[test]
+fn fused_program_invariant_to_host_parallelism() {
+    let g = gen::rmat(8, 9, 0x9415);
+    let run = |sim: usize, workers: usize| {
+        let mut cfg = RunConfig::with_machines(4);
+        cfg.engine.sim_threads = sim;
+        cfg.engine.workers_per_machine = workers;
+        cfg.engine.chunk_capacity = 128;
+        cfg.engine.mini_batch = 16;
+        MiningSession::with_config(&g, cfg).job(&App::Mc(4)).run_report()
+    };
+    let reference = run(1, 1);
+    for (sim, workers) in [(4usize, 1usize), (1, 4), (4, 4)] {
+        let other = run(sim, workers);
+        assert_reports_equivalent(
+            &reference,
+            &other,
+            &format!("sim={sim} workers={workers}"),
+        );
+    }
+}
+
+// ---- Hooks: per-embedding control flow through the public API. ----
+
+/// Existence query: stop the whole run at the first match.
+struct ExistsApp {
+    pattern: Pattern,
+    found: Mutex<Option<Vec<VertexId>>>,
+}
+
+impl ExtendHooks for ExistsApp {
+    fn on_match(&self, _pat: usize, vertices: &[VertexId]) -> Control {
+        let mut f = self.found.lock().unwrap();
+        if f.is_none() {
+            *f = Some(vertices.to_vec());
+        }
+        Control::Halt
+    }
+}
+
+impl GpmApp for ExistsApp {
+    fn name(&self) -> String {
+        "exists".into()
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        vec![self.pattern.clone()]
+    }
+
+    fn induced(&self) -> Induced {
+        Induced::Edge
+    }
+
+    fn hooks(&self) -> Option<&dyn ExtendHooks> {
+        Some(self)
+    }
+}
+
+#[test]
+fn halt_hook_stops_after_first_match_with_a_valid_embedding() {
+    let g = gen::rmat(9, 10, 0x9416);
+    let sess = MiningSession::new(&g, 4);
+    let app = ExistsApp { pattern: Pattern::triangle(), found: Mutex::new(None) };
+    let st = sess.job(&app).run();
+    let found = app.found.lock().unwrap().clone().expect("a triangle exists in this graph");
+    assert_eq!(found.len(), 3);
+    for i in 0..3 {
+        for j in (i + 1)..3 {
+            assert!(g.has_edge(found[i], found[j]), "{found:?} is not a triangle");
+        }
+    }
+    // The run stopped early: it delivered at least the found match but
+    // (on this graph, with thousands of triangles) nowhere near all of
+    // them.
+    let full = sess.job(&App::Tc).run();
+    assert!(st.total_count() >= 1);
+    assert!(
+        st.total_count() < full.total_count(),
+        "halt must cut the run short ({} vs {})",
+        st.total_count(),
+        full.total_count()
+    );
+}
+
+/// All-Continue hooks observe without perturbing the mining answer.
+struct TransparentHooks;
+
+impl ExtendHooks for TransparentHooks {}
+
+impl GpmApp for TransparentHooks {
+    fn name(&self) -> String {
+        "transparent".into()
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        vec![Pattern::triangle()]
+    }
+
+    fn induced(&self) -> Induced {
+        Induced::Edge
+    }
+
+    fn hooks(&self) -> Option<&dyn ExtendHooks> {
+        Some(self)
+    }
+}
+
+#[test]
+fn transparent_hooks_do_not_change_counts() {
+    let g = gen::erdos_renyi(100, 400, 0x9417);
+    let sess = MiningSession::new(&g, 3);
+    let hooked = sess.job(&TransparentHooks).run();
+    let plain = sess.job(&App::Tc).run();
+    assert_eq!(hooked.total_count(), plain.total_count());
+    assert_eq!(
+        hooked.total_count(),
+        count_embeddings(&g, &Pattern::triangle(), Induced::Edge)
+    );
+}

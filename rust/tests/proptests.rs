@@ -242,6 +242,100 @@ fn prop_parallel_determinism_and_oracle() {
     }
 }
 
+/// Brute-force count of *labelled* matches of `p` in `g` that satisfy
+/// every symmetry-breaking restriction (assignment search with edge,
+/// induced-semantics, and restriction-window pruning).
+fn restricted_match_count(
+    g: &Graph,
+    p: &Pattern,
+    restr: &[(usize, usize)],
+    induced: Induced,
+) -> u64 {
+    fn rec(
+        g: &Graph,
+        p: &Pattern,
+        restr: &[(usize, usize)],
+        induced: Induced,
+        a: &mut Vec<u32>,
+        lvl: usize,
+        count: &mut u64,
+    ) {
+        if lvl == p.num_vertices() {
+            *count += 1;
+            return;
+        }
+        'v: for v in 0..g.num_vertices() as u32 {
+            for j in 0..lvl {
+                if a[j] == v {
+                    continue 'v;
+                }
+                let has = g.has_edge(a[j], v);
+                if p.has_edge(j, lvl) {
+                    if !has {
+                        continue 'v;
+                    }
+                } else if induced == Induced::Vertex && has {
+                    continue 'v;
+                }
+            }
+            for &(x, y) in restr {
+                if x < lvl && y == lvl && a[x] >= v {
+                    continue 'v;
+                }
+                if y < lvl && x == lvl && v >= a[y] {
+                    continue 'v;
+                }
+            }
+            a[lvl] = v;
+            rec(g, p, restr, induced, a, lvl + 1, count);
+            a[lvl] = u32::MAX;
+        }
+    }
+    let mut count = 0u64;
+    let mut assignment = vec![u32::MAX; p.num_vertices()];
+    rec(g, p, restr, induced, &mut assignment, 0, &mut count);
+    count
+}
+
+/// Property (plan/): `symmetry_restrictions` admits **exactly one**
+/// labelled match per subgraph — never two automorphic embeddings of the
+/// same vertex set, never zero. Brute-force cross-check on random
+/// connected patterns of size 3–5: the restricted labelled match count
+/// must equal the unlabelled embedding count under both induced
+/// semantics.
+#[test]
+fn prop_symmetry_restrictions_admit_one_match_per_subgraph() {
+    let mut rng = Rng::new(0x5711_ABCD);
+    let g = gen::erdos_renyi(16, 42, 0x5711);
+    let mut tested = 0usize;
+    while tested < 24 {
+        let k = 3 + rng.below(3) as usize; // 3..=5
+        let pairs: Vec<(usize, usize)> =
+            (0..k).flat_map(|u| ((u + 1)..k).map(move |v| (u, v))).collect();
+        let mask = rng.below(1u64 << pairs.len());
+        let edges: Vec<(usize, usize)> = pairs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, &e)| e)
+            .collect();
+        if edges.len() < k - 1 {
+            continue;
+        }
+        let p = Pattern::new(k, &edges);
+        if !p.is_connected() {
+            continue;
+        }
+        let restr = restrict::symmetry_restrictions(&p);
+        for induced in [Induced::Edge, Induced::Vertex] {
+            let expect = count_embeddings(&g, &p, induced);
+            let got = restricted_match_count(&g, &p, &restr, induced);
+            assert_eq!(got, expect, "pattern {p:?} induced {induced:?} restr {restr:?}");
+        }
+        tested += 1;
+    }
+}
+
 /// Property: traffic with HDS ≤ traffic without HDS, always (sharing can
 /// only remove requests); same for the cache on skew-heavy graphs.
 #[test]
