@@ -1,30 +1,72 @@
 //! Micro-bench for the intersection kernels — the L3 hot path. Drives the
-//! GALLOP_RATIO tuning recorded in EXPERIMENTS.md §Perf. Emits
-//! machine-readable results to BENCH_intersect.json so the perf
-//! trajectory is tracked across PRs.
+//! GALLOP_RATIO and SIMD_MIN_LEN tuning recorded in EXPERIMENTS.md §Perf
+//! and §SIMD. Emits machine-readable results to BENCH_intersect.json so
+//! the perf trajectory is tracked across PRs.
+//!
+//! Three kernel families are swept against each other:
+//! * `merge`/`count` — the scalar two-cursor tier (reference);
+//! * `simd`/`count_simd` — the AVX2 all-pairs block tier (falls back to
+//!   scalar off x86_64 or without AVX2, in which case the two legs tie);
+//! * `gallop` — the asymmetric binary-probe tier;
+//! * `adaptive` — the production dispatcher (`exec::intersect`), which
+//!   should track the best tier at every shape.
+//!
+//! Shapes: balanced dense sizes (where SIMD pays), the historical
+//! unbalanced ratios (where gallop pays), and a disjoint-lists leg (the
+//! SIMD worst case: full scan, zero emits).
 
-use kudu::bench::Group;
-use kudu::exec::{intersect, intersect_gallop, intersect_merge};
+use kudu::bench::{BenchResult, Group};
+use kudu::exec::{
+    intersect, intersect_count, intersect_count_merge, intersect_gallop, intersect_merge, simd,
+};
 
 /// The short list is spread across the long list's whole range (realistic
 /// for adjacency intersections; clustering it at the front would let merge
-/// exit early and bias the comparison).
-fn lists(n_small: usize, n_big: usize) -> (Vec<u32>, Vec<u32>) {
+/// exit early and bias the comparison). `overlap` picks whether the small
+/// list's elements actually occur in the big list (both lists use even
+/// strides when they do) or are offset to be disjoint.
+fn lists(n_small: usize, n_big: usize, overlap: bool) -> (Vec<u32>, Vec<u32>) {
     let stride = (n_big / n_small).max(1) as u32 * 2;
-    let small: Vec<u32> = (0..n_small as u32).map(|i| i * stride + 1).collect();
+    let off = if overlap { 0 } else { 1 };
+    let small: Vec<u32> = (0..n_small as u32).map(|i| i * stride + off).collect();
     let big: Vec<u32> = (0..n_big as u32).map(|i| i * 2).collect();
     (small, big)
 }
 
+/// Find a group result by exact name (all legs are recorded before the
+/// crossover table is printed).
+fn median_of(results: &[BenchResult], name: &str) -> f64 {
+    results.iter().find(|r| r.name == name).map(|r| r.median_s).unwrap_or(f64::NAN)
+}
+
 fn main() {
+    let simd_on = simd::available();
+    println!("intersect bench: simd::available() = {simd_on}");
     let mut group = Group::new("intersect");
     group.sample_size(30);
-    for (s, b_) in
-        [(64usize, 64usize), (64, 1024), (64, 4096), (64, 16384), (1024, 16384), (1024, 65536)]
-    {
-        let (a, b) = lists(s, b_);
+
+    // (small, big, overlap, tag). Balanced dense shapes first (the SIMD
+    // target), then the historical unbalanced ratios (the gallop target),
+    // then a disjoint control.
+    let shapes: Vec<(usize, usize, bool, &str)> = vec![
+        (64, 64, true, "bal"),
+        (256, 256, true, "bal"),
+        (1024, 1024, true, "bal"),
+        (4096, 4096, true, "bal"),
+        (16384, 16384, true, "bal"),
+        (64, 1024, false, "skew"),
+        (64, 4096, false, "skew"),
+        (64, 16384, false, "skew"),
+        (1024, 16384, false, "skew"),
+        (1024, 65536, false, "skew"),
+        (1024, 1024, false, "disj"),
+    ];
+    let mut names: Vec<String> = Vec::new();
+    for &(s, b_, overlap, tag) in &shapes {
+        let (a, b) = lists(s, b_, overlap);
+        let base = format!("{tag}/{s}x{b_}");
         let mut out = Vec::new();
-        group.bench(&format!("merge/{s}x{b_}"), || {
+        group.bench(&format!("merge/{base}"), || {
             // Repeat to get above timer resolution.
             for _ in 0..100 {
                 intersect_merge(&a, &b, &mut out);
@@ -32,21 +74,87 @@ fn main() {
             out.len()
         });
         let mut out = Vec::new();
-        group.bench(&format!("gallop/{s}x{b_}"), || {
+        group.bench(&format!("simd/{base}"), || {
+            for _ in 0..100 {
+                simd::intersect(&a, &b, &mut out);
+            }
+            out.len()
+        });
+        let mut out = Vec::new();
+        group.bench(&format!("gallop/{base}"), || {
             for _ in 0..100 {
                 intersect_gallop(&a, &b, &mut out);
             }
             out.len()
         });
+        group.bench(&format!("count/{base}"), || {
+            let mut n = 0;
+            for _ in 0..100 {
+                n = intersect_count_merge(&a, &b).0;
+            }
+            n
+        });
+        group.bench(&format!("count_simd/{base}"), || {
+            let mut n = 0;
+            for _ in 0..100 {
+                n = simd::intersect_count(&a, &b).0;
+            }
+            n
+        });
+        group.bench(&format!("count_adaptive/{base}"), || {
+            let mut n = 0;
+            for _ in 0..100 {
+                n = intersect_count(&a, &b).0;
+            }
+            n
+        });
         let mut out = Vec::new();
-        group.bench(&format!("adaptive/{s}x{b_}"), || {
+        group.bench(&format!("adaptive/{base}"), || {
             for _ in 0..100 {
                 intersect(&a, &b, &mut out);
             }
             out.len()
         });
+        names.push(base);
     }
     group.finish();
+
+    // Crossover table: per shape, every leg's median relative to scalar
+    // merge. >1.0 = faster than merge. This is the data SIMD_MIN_LEN and
+    // GALLOP_RATIO are tuned from (EXPERIMENTS.md §SIMD).
+    let results = group.results().to_vec();
+    println!();
+    println!(
+        "{:<16} {:>8} {:>8} {:>8} {:>8} {:>12} {:>10}",
+        "shape", "merge", "simd", "gallop", "count", "count_simd", "adaptive"
+    );
+    for base in &names {
+        let m = median_of(&results, &format!("merge/{base}"));
+        let rel = |leg: &str| m / median_of(&results, &format!("{leg}/{base}"));
+        println!(
+            "{:<16} {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x {:>11.2}x {:>9.2}x",
+            base,
+            1.0,
+            rel("simd"),
+            rel("gallop"),
+            rel("count"),
+            rel("count_simd"),
+            rel("adaptive")
+        );
+    }
+    println!();
+    // The ISSUE acceptance bar: on balanced >= 64-element intersections
+    // with AVX2, the SIMD merge should beat scalar merge by >= 1.5x.
+    if simd_on {
+        for base in names.iter().filter(|n| n.starts_with("bal/")) {
+            let speedup = median_of(&results, &format!("merge/{base}"))
+                / median_of(&results, &format!("simd/{base}"));
+            println!("simd speedup {base}: {speedup:.2}x");
+        }
+    } else {
+        println!("simd unavailable on this host: simd legs alias the scalar tier");
+    }
+
     group.write_json("BENCH_intersect.json").expect("write BENCH_intersect.json");
     println!("wrote BENCH_intersect.json ({} results)", group.results().len());
 }

@@ -99,6 +99,35 @@ fn main() {
         serial_s / fused_s
     );
 
+    // SIMD kernel tier on/off wall-clock on the fused path. Counts must
+    // match bitwise (the kernel-tier determinism contract); the speedup is
+    // reported but not asserted — wall-clock on shared CI runners is too
+    // noisy for a hard gate (the kernel-level bar lives in
+    // BENCH_intersect.json).
+    let run_simd = |simd: bool| -> (JobReport, f64) {
+        let t0 = Instant::now();
+        let report =
+            sess.job(&App::Mc(4)).client(ClientSystem::GraphPi).simd(simd).run_report();
+        let wall = t0.elapsed().as_secs_f64();
+        (report, wall)
+    };
+    let mut simd_walls = Vec::with_capacity(reps);
+    let mut scalar_walls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (r, w) = run_simd(true);
+        assert_eq!(r.stats.counts, fused.stats.counts, "simd tier must not change the answers");
+        simd_walls.push(w);
+        let (r, w) = run_simd(false);
+        assert_eq!(r.stats.counts, fused.stats.counts, "scalar tier must not change the answers");
+        scalar_walls.push(w);
+    }
+    let simd_s = median(simd_walls);
+    let scalar_s = median(scalar_walls);
+    println!(
+        "bench program/simd  on {simd_s:.4}s  off {scalar_s:.4}s  speedup {:.2}x",
+        scalar_s / simd_s
+    );
+
     assert!(reduces_root_scan, "acceptance: fused must reduce root-scan work");
     assert!(reduces_traffic, "acceptance: fused must reduce total traffic");
 
@@ -115,10 +144,13 @@ fn main() {
          \"serial_bytes\": {bytes_serial},\n    \"reduction\": {traffic_reduction},\n    \
          \"fused_reduces_traffic\": {reduces_traffic}\n  }},\n  \
          \"wall\": {{\n    \"fused_median_s\": {fused_s},\n    \
-         \"serial_median_s\": {serial_s},\n    \"speedup\": {}\n  }}\n}}\n",
+         \"serial_median_s\": {serial_s},\n    \"speedup\": {}\n  }},\n  \
+         \"simd\": {{\n    \"on_median_s\": {simd_s},\n    \
+         \"off_median_s\": {scalar_s},\n    \"speedup\": {}\n  }}\n}}\n",
         counts.join(", "),
         fused.program.shared_nodes,
-        serial_s / fused_s
+        serial_s / fused_s,
+        scalar_s / simd_s
     );
     std::fs::write("BENCH_program.json", json).expect("write BENCH_program.json");
     println!("wrote BENCH_program.json");

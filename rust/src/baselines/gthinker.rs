@@ -208,6 +208,7 @@ fn enumerate_local(g: &Graph, plan: &Plan, v0: VertexId) -> (u64, u64) {
     let mut work = 0u64;
     let depth = plan.depth();
     let mut stored: Vec<Vec<VertexId>> = vec![Vec::new(); depth];
+    #[allow(clippy::too_many_arguments)]
     fn rec(
         g: &Graph,
         plan: &Plan,
@@ -216,6 +217,7 @@ fn enumerate_local(g: &Graph, plan: &Plan, v0: VertexId) -> (u64, u64) {
         level: usize,
         count: &mut u64,
         work: &mut u64,
+        many: &mut exec::MultiScratch,
     ) {
         let depth = plan.depth();
         let step = &plan.steps[level - 1];
@@ -235,7 +237,7 @@ fn enumerate_local(g: &Graph, plan: &Plan, v0: VertexId) -> (u64, u64) {
                     exec::Work(1)
                 }
                 2 => exec::intersect(slices[0], slices[1], &mut cand),
-                _ => exec::intersect_many(slices[0], &slices[1..], &mut cand),
+                _ => exec::intersect_many(slices[0], &slices[1..], &mut cand, many),
             };
             *work += w.0;
         }
@@ -276,11 +278,12 @@ fn enumerate_local(g: &Graph, plan: &Plan, v0: VertexId) -> (u64, u64) {
                     continue;
                 }
                 vertices[level] = v;
-                rec(g, plan, vertices, stored, level + 1, count, work);
+                rec(g, plan, vertices, stored, level + 1, count, work, many);
             }
         }
     }
-    rec(g, plan, &mut vertices, &mut stored, 1, &mut count, &mut work);
+    let mut many = exec::MultiScratch::default();
+    rec(g, plan, &mut vertices, &mut stored, 1, &mut count, &mut work, &mut many);
     (count, work)
 }
 

@@ -200,7 +200,10 @@ fn extend_partial(
                 exec::Work(1)
             }
             2 => exec::intersect(slices[0], slices[1], &mut cand),
-            _ => exec::intersect_many(slices[0], &slices[1..], &mut cand),
+            _ => {
+                let mut many = exec::MultiScratch::default();
+                exec::intersect_many(slices[0], &slices[1..], &mut cand, &mut many)
+            }
         };
         work += w.0;
     }

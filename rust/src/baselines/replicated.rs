@@ -98,6 +98,7 @@ fn mine_split(g: &Graph, plan: &Plan, m: VertexId, stride: VertexId, n: VertexId
         plan: &'a Plan,
         stored: Vec<Vec<VertexId>>,
         scratch: Vec<Vec<VertexId>>,
+        many: exec::MultiScratch,
         vertices: [VertexId; MAX_PATTERN],
         count: u64,
         work: u64,
@@ -122,14 +123,15 @@ fn mine_split(g: &Graph, plan: &Plan, m: VertexId, stride: VertexId, n: VertexId
             let step = &self.plan.steps[level - 1];
             let mut cand = std::mem::take(&mut self.scratch[level]);
             {
-                let slices: Vec<&[VertexId]> = step
-                    .sources
-                    .iter()
-                    .map(|s| match *s {
+                // Explicit pushes (not a closure) so the slice borrows
+                // stay field-disjoint from the `&mut self.many` below.
+                let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
+                for s in &step.sources {
+                    slices.push(match *s {
                         Source::Adj(j) => self.g.neighbors(self.vertices[j]),
                         Source::Stored(j) => self.stored[j].as_slice(),
-                    })
-                    .collect();
+                    });
+                }
                 let w = match slices.len() {
                     1 => {
                         cand.clear();
@@ -137,7 +139,9 @@ fn mine_split(g: &Graph, plan: &Plan, m: VertexId, stride: VertexId, n: VertexId
                         exec::Work(1)
                     }
                     2 => exec::intersect(slices[0], slices[1], &mut cand),
-                    _ => exec::intersect_many(slices[0], &slices[1..], &mut cand),
+                    _ => {
+                        exec::intersect_many(slices[0], &slices[1..], &mut cand, &mut self.many)
+                    }
                 };
                 self.work += w.0;
             }
@@ -214,6 +218,7 @@ fn mine_split(g: &Graph, plan: &Plan, m: VertexId, stride: VertexId, n: VertexId
         plan,
         stored: vec![Vec::new(); plan.depth()],
         scratch: vec![Vec::new(); plan.depth() + 1],
+        many: exec::MultiScratch::default(),
         vertices: [0; MAX_PATTERN],
         count: 0,
         work: 0,

@@ -26,6 +26,7 @@ impl SingleMachine {
             // compiled Automine loops get from hoisting intersections.
             stored: vec![Vec::new(); plan.depth()],
             scratch: vec![Vec::new(); plan.depth() + 1],
+            many: exec::MultiScratch::default(),
             vertices: [0; MAX_PATTERN],
             count: 0,
             work: 0,
@@ -52,6 +53,7 @@ struct State<'a> {
     plan: &'a Plan,
     stored: Vec<Vec<VertexId>>,
     scratch: Vec<Vec<VertexId>>,
+    many: exec::MultiScratch,
     vertices: [VertexId; MAX_PATTERN],
     count: u64,
     work: u64,
@@ -66,14 +68,15 @@ impl<'a> State<'a> {
         // per-level stored sets).
         let mut cand = std::mem::take(&mut self.scratch[level]);
         {
-            let slices: Vec<&[VertexId]> = step
-                .sources
-                .iter()
-                .map(|s| match *s {
+            // Explicit pushes (not a closure) so the slice borrows stay
+            // field-disjoint from the `&mut self.many` scratch below.
+            let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
+            for s in &step.sources {
+                slices.push(match *s {
                     Source::Adj(j) => self.g.neighbors(self.vertices[j]),
                     Source::Stored(j) => self.stored[j].as_slice(),
-                })
-                .collect();
+                });
+            }
             let w = match slices.len() {
                 1 => {
                     cand.clear();
@@ -81,7 +84,7 @@ impl<'a> State<'a> {
                     exec::Work(1)
                 }
                 2 => exec::intersect(slices[0], slices[1], &mut cand),
-                _ => exec::intersect_many(slices[0], &slices[1..], &mut cand),
+                _ => exec::intersect_many(slices[0], &slices[1..], &mut cand, &mut self.many),
             };
             self.work += w.0;
         }

@@ -123,6 +123,13 @@ pub struct EngineConfig {
     /// Every setting reports bitwise-identical counts/traffic/virtual
     /// time — see [`crate::comm`] and `tests/comm_equivalence.rs`.
     pub comm: CommConfig,
+    /// Data-parallel intersection kernels ([`crate::exec::simd`]). `true`
+    /// uses the vector tier wherever the host supports it (AVX2, probed
+    /// at runtime; scalar fallback elsewhere, and the `KUDU_NO_SIMD`
+    /// environment hatch force-disables process-wide); `false` pins the
+    /// scalar tier. Wall-clock only: counts, traffic, and virtual time
+    /// are bitwise identical either way (`tests/sched_determinism.rs`).
+    pub simd: bool,
 }
 
 impl Default for EngineConfig {
@@ -143,6 +150,7 @@ impl Default for EngineConfig {
             task_split_width: 8,
             max_live_chunks: 64,
             comm: CommConfig::default(),
+            simd: true,
         }
     }
 }
@@ -222,6 +230,9 @@ mod tests {
         }
         assert!(c.engine.task_split_width >= 1);
         assert!(c.engine.max_live_chunks >= 1);
+        // SIMD defaults on; the env hatch acts inside Kernel::auto, not
+        // here, so it also covers paths that bypass the config.
+        assert!(c.engine.simd);
         // Comm defaults: a real in-flight window and, unless the env pins
         // the escape hatch (the CI determinism matrix sets
         // KUDU_SYNC_FETCH=1), the async message-passing path.

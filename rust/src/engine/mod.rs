@@ -743,6 +743,31 @@ mod tests {
     }
 
     #[test]
+    fn simd_kernel_tier_does_not_change_results() {
+        // Kernel selection is a wall-clock decision only: every reported
+        // number is bitwise identical with the vector tier on or off —
+        // the kernels report identical Work by construction, on the
+        // count-only terminal path (edge-induced cliques) and the
+        // difference-heavy path (vertex-induced patterns) alike.
+        let g = gen::rmat(8, 10, 53);
+        for plan in [
+            graphpi_plan(&Pattern::clique(4), Induced::Edge),
+            graphpi_plan(&Pattern::cycle(4), Induced::Vertex),
+        ] {
+            for machines in [1usize, 4] {
+                let run = |simd: bool| {
+                    let cfg = EngineConfig { simd, ..Default::default() };
+                    run_count(&g, &plan, machines, &cfg)
+                };
+                let (c_on, on) = run(true);
+                let (c_off, off) = run(false);
+                assert_eq!(c_on, c_off, "machines={machines}");
+                assert_deterministic_fields_eq(&on, &off, &format!("simd machines={machines}"));
+            }
+        }
+    }
+
+    #[test]
     fn workers_do_not_change_results() {
         // Intra-machine work stealing is invisible in every reported
         // number, bitwise, for any worker count and any steal

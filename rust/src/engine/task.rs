@@ -42,6 +42,18 @@
 //! responses in flight park ([`RunTask::Parked`]), and the synchronous
 //! escape hatch copies payloads from the shared `ClusterView`.
 //!
+//! **Batched extension.** Every (frame, child edge) carries a reused
+//! [`EdgeScratch`]: consecutive embeddings that resolve the *same*
+//! source slices (the chunk layout groups siblings, which share their
+//! parent's adjacency) replay the memoized intersection — and its exact
+//! [`exec::Work`] — instead of recomputing it, and terminal-only edges
+//! with pure bulk-count sinks go through the count-only kernels without
+//! materialising candidates at all. Both are physical-CPU savings only:
+//! the charge sequence each pattern observes is bit-for-bit the one the
+//! unbatched path produces, so the determinism contract is oblivious to
+//! them. The kernel tier itself ([`exec::Kernel`]) is resolved once per
+//! runner from `EngineConfig::simd` and the `KUDU_NO_SIMD` hatch.
+//!
 //! **Hooks.** When the program's app installs
 //! [`ExtendHooks`], frames consult `filter` before materialising an
 //! interior child embedding and `on_match` for every complete embedding;
@@ -60,7 +72,7 @@ use crate::exec;
 use crate::graph::{Graph, VertexId};
 use crate::metrics::ComputeModel;
 use crate::pattern::MAX_PATTERN;
-use crate::plan::{MiningProgram, NodeId, ProgramNode, Source};
+use crate::plan::{MiningProgram, NodeId, ProgramNode, Source, Step};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -70,6 +82,39 @@ use std::sync::Arc;
 /// it coincides with the execution order of a single depth-first worker
 /// mining that pattern alone.
 pub type TaskId = Vec<u32>;
+
+/// Per-(frame, child-edge) extension scratch, pooled per level and
+/// reused across frames. The memo key identifies the step's resolved
+/// source slices by pointer + length: the frame's chunk stack and the
+/// CSR are frozen for the frame's lifetime, so an equal key implies
+/// equal slice contents — hence an identical intersection and identical
+/// [`exec::Work`], which a hit replays without recomputing. Rows are
+/// invalidated at frame entry; memo entries never survive a frame.
+#[derive(Default)]
+struct EdgeScratch {
+    valid: bool,
+    nsrc: usize,
+    key: [(usize, usize); MAX_PATTERN],
+    /// Memoized raw intersection of the source slices.
+    cand: Vec<VertexId>,
+    /// Work units of the memoized intersection, replayed on every hit.
+    work: u64,
+    /// Post-exclusion candidates (per embedding — never memoized).
+    filt: Vec<VertexId>,
+    tmp: Vec<VertexId>,
+}
+
+/// The sub-slice of sorted `s` inside the restriction window `[lo, hi)`;
+/// empty when the bounds cross.
+fn window(s: &[VertexId], lo: VertexId, hi: VertexId) -> &[VertexId] {
+    let a = s.partition_point(|&v| v < lo);
+    let b = s.partition_point(|&v| v < hi);
+    if a >= b {
+        &[]
+    } else {
+        &s[a..b]
+    }
+}
 
 /// A frame's prepared fetch state: the circulant batches, each batch's
 /// per-pattern virtual data-arrival gates, and (async comm path) the
@@ -215,10 +260,15 @@ pub struct TaskRunner<'a, 'g> {
     node_spawns: Vec<u32>,
     /// The current task's per-pattern ids (cloned per spawn).
     task_ids: Vec<TaskId>,
+    /// Kernel tier for every intersection this runner issues, resolved
+    /// once from `EngineConfig::simd` and the `KUDU_NO_SIMD` hatch.
+    kern: exec::Kernel,
     // --- scratch, reused across tasks (no hot-loop allocation) ---
-    cand: Vec<VertexId>,
-    tmp: Vec<VertexId>,
     emb_buf: Vec<VertexId>,
+    /// Multi-way intersection scratch, lent to [`exec::intersect_many_with`].
+    many: exec::MultiScratch,
+    /// Per-level rows of per-child-edge extension scratch (memo + buffers).
+    edge_scratch: Vec<Vec<EdgeScratch>>,
     /// Per-level circulant batch buffers, reused across frames.
     batch_pool: Vec<Vec<Vec<u32>>>,
     /// Per-level flattened gate buffers, reused across frames.
@@ -272,9 +322,10 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             pat_seq: vec![0; pats],
             node_spawns: vec![0; program.num_nodes()],
             task_ids: vec![Vec::new(); pats],
-            cand: Vec::new(),
-            tmp: Vec::new(),
+            kern: if cfg.simd { exec::Kernel::auto() } else { exec::Kernel::Scalar },
             emb_buf: Vec::new(),
+            many: exec::MultiScratch::default(),
+            edge_scratch: (0..depth).map(|_| Vec::new()).collect(),
             batch_pool: vec![Vec::new(); depth],
             gate_pool: vec![Vec::new(); depth],
             chunk_pool: Vec::new(),
@@ -632,6 +683,15 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         // One child chunk per child edge; terminal-only edges leave
         // theirs empty (their patterns bulk-process the window).
         let mut kids: Vec<Chunk> = (0..node.children.len()).map(|_| self.take_chunk()).collect();
+        // Per-(frame, child-edge) extension scratch: taken out of the
+        // per-level pool for the frame (descents only ever touch deeper
+        // levels) and invalidated — memo entries must not outlive the
+        // chunks their keys point into.
+        let mut edge_scratch = std::mem::take(&mut self.edge_scratch[level]);
+        edge_scratch.resize_with(node.children.len(), EdgeScratch::default);
+        for es in edge_scratch.iter_mut() {
+            es.valid = false;
+        }
         for pos in 0..batches.len() {
             let batch = std::mem::take(&mut batches[pos]);
             if batch.is_empty() {
@@ -650,7 +710,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                     break;
                 }
                 for (ci, &c) in node.children.iter().enumerate() {
-                    self.extend_one(&stack, node, c, idx, &mut kids[ci], sinks);
+                    self.extend_one(&stack, node, c, idx, &mut kids[ci], sinks, &mut edge_scratch[ci]);
                     let cnode = prog.node(c);
                     if cnode.interior() && kids[ci].is_full() {
                         for &p in &cnode.cont {
@@ -671,6 +731,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         }
         self.batch_pool[level] = batches;
         self.gate_pool[level] = gates;
+        self.edge_scratch[level] = edge_scratch;
 
         // Trailing partial child chunks: always descend in place (each is
         // the last frame of its subtree; splitting would only add
@@ -791,7 +852,11 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
     /// frozen chunks of this frame's lineage. Work is computed once and
     /// charged to every pattern alive at the child; terminal patterns
     /// bulk-process the candidate window into their sinks, continuing
-    /// patterns materialise child embeddings into `child`.
+    /// patterns materialise child embeddings into `child`. `es` is the
+    /// edge's frame-lifetime scratch: embeddings resolving the same
+    /// source slices replay its memoized intersection, and terminal-only
+    /// bulk-count edges skip materialisation entirely.
+    #[allow(clippy::too_many_arguments)]
     fn extend_one<S: EmbeddingSink>(
         &mut self,
         stack: &[&Chunk],
@@ -800,6 +865,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         idx: u32,
         child: &mut Chunk,
         sinks: &mut [Option<S>],
+        es: &mut EdgeScratch,
     ) {
         let prog = self.program;
         let cnode = prog.node(child_id);
@@ -809,62 +875,105 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         let e = stack[level].embs[idx as usize];
         let vertices = e.vertices;
 
-        // --- Candidate set: intersect the step's sources. ---
+        // --- Resolve the step's source slices (fixed stack array —
+        // MAX_PATTERN bounds the step arity — not a per-embedding Vec). ---
+        let mut srcs: [&[VertexId]; MAX_PATTERN] = [&[]; MAX_PATTERN];
+        let nsrc = step.sources.len();
+        for (slot, s) in srcs.iter_mut().zip(step.sources.iter()) {
+            *slot = match *s {
+                Source::Adj(j) => {
+                    let a = ancestor_idx(stack, level, idx, j);
+                    resolve_list(stack, j, a, self.graph)
+                }
+                Source::Stored(j) => {
+                    let a = ancestor_idx(stack, level, idx, j);
+                    resolve_stored(stack, j, a)
+                }
+            };
+        }
+        let slices = &srcs[..nsrc];
+
+        // --- Count-only fast path: a terminal-only child whose sinks all
+        // bulk-count (and with no hooks, labels, or exclusions in the
+        // way) never materialises its candidate set. The classification
+        // is constant across a frame, so this edge's `es` stays unused. ---
+        if !cnode.interior()
+            && self.hooks.is_none()
+            && step.exclude.is_empty()
+            && step.label == 0
+            && nsrc <= 2
+            && cnode.terminal.iter().all(|&p| sinks[p].as_ref().map_or(false, |s| s.bulk_count()))
         {
-            let mut slices: Vec<&[VertexId]> = Vec::with_capacity(step.sources.len());
-            for s in &step.sources {
-                let sl: &[VertexId] = match *s {
-                    Source::Adj(j) => {
-                        let a = ancestor_idx(stack, level, idx, j);
-                        resolve_list(stack, j, a, self.graph)
-                    }
-                    Source::Stored(j) => {
-                        let a = ancestor_idx(stack, level, idx, j);
-                        resolve_stored(stack, j, a)
-                    }
-                };
-                slices.push(sl);
-            }
-            let w = match slices.len() {
+            self.extend_terminal_counting(cnode, step, slices, &vertices[..new_level], sinks);
+            return;
+        }
+
+        // --- Candidate set: intersect the step's sources, memoized per
+        // (frame, child edge) on the resolved slice identities. ---
+        let mut key = [(0usize, 0usize); MAX_PATTERN];
+        for (k, s) in key.iter_mut().zip(slices.iter()) {
+            *k = (s.as_ptr() as usize, s.len());
+        }
+        if !(es.valid && es.nsrc == nsrc && es.key == key) {
+            let w = match nsrc {
                 1 => {
-                    self.cand.clear();
-                    self.cand.extend_from_slice(slices[0]);
+                    es.cand.clear();
+                    es.cand.extend_from_slice(slices[0]);
                     exec::Work(1)
                 }
-                2 => exec::intersect(slices[0], slices[1], &mut self.cand),
-                _ => exec::intersect_many(slices[0], &slices[1..], &mut self.cand),
+                2 => exec::intersect_with(self.kern, slices[0], slices[1], &mut es.cand),
+                _ => exec::intersect_many_with(
+                    self.kern,
+                    slices[0],
+                    &slices[1..],
+                    &mut es.cand,
+                    &mut self.many,
+                ),
             };
-            for &p in &cnode.pats {
-                self.pending_cpu[p] += w.0;
-            }
+            es.valid = true;
+            es.nsrc = nsrc;
+            es.key = key;
+            es.work = w.0;
+        }
+        // Hit or miss, every pattern is charged the same units its own
+        // unshared run would pay — memoization is invisible to the model.
+        for &p in &cnode.pats {
+            self.pending_cpu[p] += es.work;
         }
 
         // --- Vertical sharing: store the raw intersection for children
         // of the continuing patterns. ---
         let stored_ref = if cnode.store && cnode.interior() {
             let off = child.arena.len() as u32;
-            child.arena.extend_from_slice(&self.cand);
-            let m = self.cand.len() as u64 / 4 + 1;
+            child.arena.extend_from_slice(&es.cand);
+            let m = es.cand.len() as u64 / 4 + 1;
             for &p in &cnode.cont {
                 self.pending_mem[p] += m;
             }
-            Some((off, self.cand.len() as u32))
+            Some((off, es.cand.len() as u32))
         } else {
             None
         };
 
-        // --- Vertex-induced exclusions. ---
-        if !step.exclude.is_empty() {
+        // --- Vertex-induced exclusions: the first difference reads the
+        // memoized candidates, chained ones ping-pong filt ↔ tmp, so the
+        // memo itself is never clobbered. ---
+        let has_excl = !step.exclude.is_empty();
+        if has_excl {
+            let mut first = true;
             for &j in &step.exclude {
                 let a = ancestor_idx(stack, level, idx, j);
                 let ex = resolve_list(stack, j, a, self.graph);
-                let w = exec::difference(&self.cand, ex, &mut self.tmp);
+                let src: &[VertexId] = if first { &es.cand } else { &es.filt };
+                let w = exec::difference_with(self.kern, src, ex, &mut es.tmp);
                 for &p in &cnode.pats {
                     self.pending_cpu[p] += w.0;
                 }
-                std::mem::swap(&mut self.cand, &mut self.tmp);
+                std::mem::swap(&mut es.filt, &mut es.tmp);
+                first = false;
             }
         }
+        let cand: &[VertexId] = if has_excl { &es.filt } else { &es.cand };
 
         // --- Symmetry-breaking restriction window [lo, hi). ---
         let mut lo: VertexId = 0;
@@ -875,9 +984,9 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         for &j in &step.less_than {
             hi = hi.min(vertices[j]);
         }
-        let start = self.cand.partition_point(|&v| v < lo);
-        let end = self.cand.partition_point(|&v| v < hi);
-        let wsearch = 2 * (self.cand.len().max(2).ilog2() as u64);
+        let start = cand.partition_point(|&v| v < lo);
+        let end = cand.partition_point(|&v| v < hi);
+        let wsearch = 2 * (cand.len().max(2).ilog2() as u64);
         for &p in &cnode.pats {
             self.pending_cpu[p] += wsearch;
         }
@@ -909,7 +1018,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 self.emb_buf.extend_from_slice(&vertices[..new_level]);
                 self.emb_buf.push(0);
                 for k in start..end {
-                    let v = self.cand[k];
+                    let v = cand[k];
                     if dups.contains(&v) || (step.label != 0 && self.graph.label(v) != step.label)
                     {
                         continue;
@@ -930,7 +1039,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 let mut count = (end - start) as u64;
                 // Remove earlier vertices that slipped into the window.
                 for &u in &vertices[..new_level] {
-                    if u >= lo && u < hi && self.cand[start..end].binary_search(&u).is_ok() {
+                    if u >= lo && u < hi && cand[start..end].binary_search(&u).is_ok() {
                         count -= 1;
                     }
                 }
@@ -939,7 +1048,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 // Labelled: iterate and filter by label.
                 let mut count = 0u64;
                 for k in start..end {
-                    let v = self.cand[k];
+                    let v = cand[k];
                     if self.graph.label(v) == step.label && !dups.contains(&v) {
                         count += 1;
                     }
@@ -952,7 +1061,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 self.emb_buf.push(0);
                 // Iterate the window, skipping earlier vertices.
                 for k in start..end {
-                    let v = self.cand[k];
+                    let v = cand[k];
                     if dups.contains(&v) || (step.label != 0 && self.graph.label(v) != step.label)
                     {
                         continue;
@@ -972,7 +1081,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         let hds = self.cfg.horizontal_sharing;
         let overhead = self.compute.per_embedding_overhead_units;
         for k in start..end {
-            let v = self.cand[k];
+            let v = cand[k];
             if (!dups.is_empty() && dups.contains(&v))
                 || (step.label != 0 && self.graph.label(v) != step.label)
             {
@@ -1033,6 +1142,77 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 self.pending_mem[p] += overhead;
                 self.embeddings_created[p] += 1;
             }
+        }
+    }
+
+    /// Bulk-count a terminal-only child edge without materialising its
+    /// candidate set: the count-only kernels produce the intersection
+    /// size, the restriction window is counted on the source slices, and
+    /// earlier matched vertices are corrected by membership probes —
+    /// exactly the value the materialising path would `add_count`.
+    /// Every [`exec::Work`] charge (intersection, window search,
+    /// per-terminal window scan) mirrors the materialising branch bit
+    /// for bit, so counting is invisible to the determinism contract.
+    fn extend_terminal_counting<S: EmbeddingSink>(
+        &mut self,
+        cnode: &ProgramNode,
+        step: &Step,
+        slices: &[&[VertexId]],
+        prefix: &[VertexId],
+        sinks: &mut [Option<S>],
+    ) {
+        let (total, w) = match slices.len() {
+            1 => (slices[0].len() as u64, exec::Work(1)),
+            _ => exec::intersect_count_with(self.kern, slices[0], slices[1]),
+        };
+        for &p in &cnode.pats {
+            self.pending_cpu[p] += w.0;
+        }
+
+        // Symmetry-breaking restriction window [lo, hi).
+        let mut lo: VertexId = 0;
+        let mut hi: VertexId = VertexId::MAX;
+        for &j in &step.greater_than {
+            lo = lo.max(prefix[j].saturating_add(1));
+        }
+        for &j in &step.less_than {
+            hi = hi.min(prefix[j]);
+        }
+        let wsearch = 2 * ((total as usize).max(2).ilog2() as u64);
+        for &p in &cnode.pats {
+            self.pending_cpu[p] += wsearch;
+        }
+        let in_win = if lo == 0 && hi == VertexId::MAX {
+            total
+        } else if slices.len() == 1 {
+            window(slices[0], lo, hi).len() as u64
+        } else {
+            // Candidates inside the window = common elements of the
+            // windowed slices. Physical CPU only — the materialising
+            // path's window is the two searches already charged above.
+            exec::intersect_count_with(
+                self.kern,
+                window(slices[0], lo, hi),
+                window(slices[1], lo, hi),
+            )
+            .0
+        };
+        if in_win == 0 {
+            return;
+        }
+
+        // Earlier matched vertices inside the window that are also in
+        // the intersection would be skipped by the materialising path.
+        let mut dup_hits = 0u64;
+        for &u in prefix {
+            if u >= lo && u < hi && slices.iter().all(|s| s.binary_search(&u).is_ok()) {
+                dup_hits += 1;
+            }
+        }
+        for &p in &cnode.terminal {
+            let sink = sinks[p].as_mut().expect("sink exists for every alive pattern");
+            sink.add_count(in_win - dup_hits);
+            self.pending_cpu[p] += in_win;
         }
     }
 }

@@ -2,14 +2,40 @@
 //! enumeration (paper §2.2: "the key operation is the intersection on two
 //! edge lists").
 //!
-//! Three variants are provided: merge (linear), galloping (when lengths
-//! are very unbalanced), and an adaptive dispatcher. All operate on sorted
+//! Three kernel **tiers** sit behind the adaptive dispatchers:
+//!
+//! 1. **Merge** ([`intersect_merge`]) — branchless linear merge,
+//!    O(|a| + |b|); the default for balanced inputs.
+//! 2. **Gallop** ([`intersect_gallop`]) — exponential search,
+//!    O(|short| · log |long|); wins when the lengths differ by more than
+//!    [`GALLOP_RATIO`].
+//! 3. **SIMD** ([`simd`]) — runtime-feature-detected AVX2 block kernels
+//!    (8 × u32 lanes, all-pairs block compare); wins on balanced inputs
+//!    of at least [`SIMD_MIN_LEN`] elements. Falls back to merge on
+//!    hosts without AVX2 and on non-x86_64 targets, and is disabled by
+//!    the `KUDU_NO_SIMD` environment hatch ([`Kernel::auto`]).
+//!
+//! [`intersect`] / [`intersect_count`] / [`difference`] /
+//! [`intersect_many`] dispatch adaptively; the `*_with` variants take an
+//! explicit [`Kernel`] so the engine resolves the tier once per task
+//! instead of per call. The count-only kernels serve terminal trie nodes
+//! that never materialise their candidate set.
+//!
+//! **The Work invariant.** All kernels operate on sorted, duplicate-free
 //! `&[VertexId]` slices and report **work units** — an abstract cost in
 //! element-steps used by the deterministic virtual-time model
-//! ([`crate::metrics`]) so that scheduling experiments are reproducible on
-//! one core.
+//! ([`crate::metrics`]). `Work` is a *pure function of the input slices*:
+//! for any given pair of inputs, every tier of a kernel family reports
+//! the same units (the vector tiers use the closed forms [`merge_work`] /
+//! [`difference_work`], which equal the scalar cursor accounting on
+//! duplicate-free sorted inputs). Counts, traffic matrices, and virtual
+//! time are therefore bitwise identical for any kernel selection —
+//! pinned per kernel by `tests/proptests.rs` and end-to-end by
+//! `tests/sched_determinism.rs`.
 
 use crate::graph::VertexId;
+
+pub mod simd;
 
 /// Cost accounting for one intersection call, in element-steps.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -20,6 +46,69 @@ impl Work {
     pub fn add(&mut self, units: u64) {
         self.0 += units;
     }
+}
+
+/// Kernel tier selection, resolved once per task by the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Merge/gallop only — the reference tier.
+    Scalar,
+    /// Vectorised merge tier where input lengths permit; merge/gallop
+    /// otherwise. Work-neutral by construction.
+    Simd,
+}
+
+impl Kernel {
+    /// The process-wide default tier: [`Kernel::Simd`] when the host
+    /// really has the vector kernels ([`simd::available`]) and the
+    /// `KUDU_NO_SIMD` escape hatch is not set (any non-empty value other
+    /// than `0` disables). Probed once and cached.
+    pub fn auto() -> Kernel {
+        use std::sync::OnceLock;
+        static AUTO: OnceLock<Kernel> = OnceLock::new();
+        *AUTO.get_or_init(|| {
+            let off =
+                matches!(std::env::var("KUDU_NO_SIMD"), Ok(v) if !v.is_empty() && v != "0");
+            if !off && simd::available() {
+                Kernel::Simd
+            } else {
+                Kernel::Scalar
+            }
+        })
+    }
+}
+
+/// Closed-form merge cost: the final cursor positions of
+/// [`intersect_merge`] on duplicate-free sorted inputs, computed from the
+/// inputs alone so block-advancing kernels can report identical units.
+///
+/// The scalar merge stops when one cursor reaches its end; the other has
+/// consumed exactly the elements ≤ the exhausted list's maximum.
+pub fn merge_work(a: &[VertexId], b: &[VertexId]) -> Work {
+    if a.is_empty() || b.is_empty() {
+        return Work(1);
+    }
+    let a_last = *a.last().unwrap();
+    let b_last = *b.last().unwrap();
+    let (i, j) = if a_last < b_last {
+        (a.len(), b.partition_point(|&y| y <= a_last))
+    } else if b_last < a_last {
+        (a.partition_point(|&x| x <= b_last), b.len())
+    } else {
+        (a.len(), b.len())
+    };
+    Work((i + j) as u64 + 1)
+}
+
+/// Closed-form difference cost: the final exclude-cursor position of
+/// [`difference_scalar`] on duplicate-free sorted inputs — every exclude
+/// element ≤ `set`'s maximum is consumed.
+pub fn difference_work(set: &[VertexId], exclude: &[VertexId]) -> Work {
+    let j = match set.last() {
+        Some(&s_last) => exclude.partition_point(|&e| e <= s_last),
+        None => 0,
+    };
+    Work((set.len() + j) as u64 + 1)
 }
 
 /// Merge-based intersection of two sorted lists into `out`.
@@ -44,6 +133,25 @@ pub fn intersect_merge(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
         }
     }
     Work((i + j) as u64 + 1)
+}
+
+/// Count-only merge intersection: `|a ∩ b|` without materialising the
+/// result. Same cursor accounting as [`intersect_merge`].
+pub fn intersect_count_merge(a: &[VertexId], b: &[VertexId]) -> (u64, Work) {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut count = 0u64;
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            count += 1;
+            i += 1;
+            j += 1;
+        } else {
+            i += (x < y) as usize;
+            j += (y < x) as usize;
+        }
+    }
+    (count, Work((i + j) as u64 + 1))
 }
 
 /// Galloping (exponential search) intersection: for each element of the
@@ -83,26 +191,117 @@ pub fn intersect_gallop(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>)
     Work(work)
 }
 
+/// Count-only galloping intersection: same search sequence and cost
+/// accounting as [`intersect_gallop`], no materialisation.
+pub fn intersect_count_gallop(a: &[VertexId], b: &[VertexId]) -> (u64, Work) {
+    let (short, long) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut lo = 0usize;
+    let mut work = 1u64;
+    let mut count = 0u64;
+    for &x in short {
+        if lo >= long.len() {
+            break;
+        }
+        let mut step = 1usize;
+        let mut hi = lo;
+        while hi < long.len() && long[hi] < x {
+            hi += step;
+            step <<= 1;
+            work += 1;
+        }
+        let right = (hi + 1).min(long.len());
+        match long[lo..right].binary_search(&x) {
+            Ok(k) => {
+                count += 1;
+                lo += k + 1;
+            }
+            Err(k) => {
+                lo += k;
+            }
+        }
+        work += (right - lo.min(right)).max(1).ilog2() as u64 + 1;
+    }
+    (count, Work(work))
+}
+
 /// Ratio at which galloping beats merging, tuned by `benches/intersect.rs`
-/// (see EXPERIMENTS.md §Perf).
+/// (see EXPERIMENTS.md §Perf; §SIMD documents the re-validation sweep).
 pub const GALLOP_RATIO: usize = 16;
 
-/// Adaptive intersection: gallop when lengths are very unbalanced, merge
-/// otherwise.
+/// Minimum *shorter-input* length at which the vector merge tier is
+/// engaged: below this the block setup does not amortise and the scalar
+/// merge wins (`benches/intersect.rs` sweep, EXPERIMENTS.md §SIMD). One
+/// cache line of u32s — two full AVX2 blocks.
+pub const SIMD_MIN_LEN: usize = 16;
+
+/// Adaptive intersection with an explicit kernel tier: gallop when the
+/// lengths are very unbalanced (both tiers — galloping is already
+/// search-bound), the vector merge when `kern` permits and both inputs
+/// reach [`SIMD_MIN_LEN`], the scalar merge otherwise.
 #[inline]
-pub fn intersect(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+pub fn intersect_with(
+    kern: Kernel,
+    a: &[VertexId],
+    b: &[VertexId],
+    out: &mut Vec<VertexId>,
+) -> Work {
     let (s, l) = if a.len() <= b.len() { (a.len(), b.len()) } else { (b.len(), a.len()) };
     if s * GALLOP_RATIO < l {
         intersect_gallop(a, b, out)
+    } else if kern == Kernel::Simd && s >= SIMD_MIN_LEN {
+        simd::intersect(a, b, out)
     } else {
         intersect_merge(a, b, out)
     }
 }
 
-/// Intersect a sorted list with many sorted lists: `base ∩ lists[0] ∩ …`.
-/// Used for multi-way candidate-set computation. Intersects smallest-first
-/// to shrink the working set early.
-pub fn intersect_many(base: &[VertexId], lists: &[&[VertexId]], out: &mut Vec<VertexId>) -> Work {
+/// Adaptive intersection under the process default tier ([`Kernel::auto`]).
+#[inline]
+pub fn intersect(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+    intersect_with(Kernel::auto(), a, b, out)
+}
+
+/// Adaptive count-only intersection with an explicit kernel tier. Same
+/// tier selection as [`intersect_with`]; never materialises candidates.
+#[inline]
+pub fn intersect_count_with(kern: Kernel, a: &[VertexId], b: &[VertexId]) -> (u64, Work) {
+    let (s, l) = if a.len() <= b.len() { (a.len(), b.len()) } else { (b.len(), a.len()) };
+    if s * GALLOP_RATIO < l {
+        intersect_count_gallop(a, b)
+    } else if kern == Kernel::Simd && s >= SIMD_MIN_LEN {
+        simd::intersect_count(a, b)
+    } else {
+        intersect_count_merge(a, b)
+    }
+}
+
+/// Adaptive count-only intersection under the process default tier.
+#[inline]
+pub fn intersect_count(a: &[VertexId], b: &[VertexId]) -> (u64, Work) {
+    intersect_count_with(Kernel::auto(), a, b)
+}
+
+/// Reusable scratch for [`intersect_many_with`]: the working set,
+/// double-buffer, and smallest-first ordering live across calls so the
+/// multi-way path allocates nothing in steady state.
+#[derive(Debug, Default)]
+pub struct MultiScratch {
+    cur: Vec<VertexId>,
+    tmp: Vec<VertexId>,
+    order: Vec<u32>,
+}
+
+/// Intersect a sorted list with many sorted lists: `base ∩ lists[0] ∩ …`,
+/// with an explicit kernel tier and caller-provided scratch. Used for
+/// multi-way candidate-set computation. Intersects smallest-first to
+/// shrink the working set early.
+pub fn intersect_many_with(
+    kern: Kernel,
+    base: &[VertexId],
+    lists: &[&[VertexId]],
+    out: &mut Vec<VertexId>,
+    scratch: &mut MultiScratch,
+) -> Work {
     let mut work = Work::default();
     if lists.is_empty() {
         out.clear();
@@ -110,25 +309,36 @@ pub fn intersect_many(base: &[VertexId], lists: &[&[VertexId]], out: &mut Vec<Ve
         work.add(1);
         return work;
     }
-    let mut order: Vec<usize> = (0..lists.len()).collect();
-    order.sort_by_key(|&i| lists[i].len());
-    let mut cur: Vec<VertexId> = Vec::new();
-    work.add(intersect(base, lists[order[0]], &mut cur).0);
-    let mut tmp: Vec<VertexId> = Vec::new();
+    let MultiScratch { cur, tmp, order } = scratch;
+    order.clear();
+    order.extend(0..lists.len() as u32);
+    order.sort_by_key(|&i| lists[i as usize].len());
+    work.add(intersect_with(kern, base, lists[order[0] as usize], cur).0);
     for &i in &order[1..] {
         if cur.is_empty() {
             break;
         }
-        work.add(intersect(&cur, lists[i], &mut tmp).0);
-        std::mem::swap(&mut cur, &mut tmp);
+        work.add(intersect_with(kern, cur, lists[i as usize], tmp).0);
+        std::mem::swap(cur, tmp);
     }
-    std::mem::swap(out, &mut cur);
+    std::mem::swap(out, cur);
     work
 }
 
+/// Multi-way intersection under the process default tier.
+pub fn intersect_many(
+    base: &[VertexId],
+    lists: &[&[VertexId]],
+    out: &mut Vec<VertexId>,
+    scratch: &mut MultiScratch,
+) -> Work {
+    intersect_many_with(Kernel::auto(), base, lists, out, scratch)
+}
+
 /// Remove from `set` (sorted) every element present in `exclude` (sorted),
-/// in place into `out`. Used by vertex-induced candidate filtering.
-pub fn difference(set: &[VertexId], exclude: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+/// in place into `out` — the scalar reference tier. Used by
+/// vertex-induced candidate filtering.
+pub fn difference_scalar(set: &[VertexId], exclude: &[VertexId], out: &mut Vec<VertexId>) -> Work {
     out.clear();
     let (mut i, mut j) = (0usize, 0usize);
     while i < set.len() {
@@ -145,6 +355,29 @@ pub fn difference(set: &[VertexId], exclude: &[VertexId], out: &mut Vec<VertexId
     Work((set.len() + j) as u64 + 1)
 }
 
+/// Sorted difference with an explicit kernel tier: the vector kernel when
+/// `kern` permits and both inputs reach [`SIMD_MIN_LEN`], scalar
+/// otherwise.
+#[inline]
+pub fn difference_with(
+    kern: Kernel,
+    set: &[VertexId],
+    exclude: &[VertexId],
+    out: &mut Vec<VertexId>,
+) -> Work {
+    if kern == Kernel::Simd && set.len() >= SIMD_MIN_LEN && exclude.len() >= SIMD_MIN_LEN {
+        simd::difference(set, exclude, out)
+    } else {
+        difference_scalar(set, exclude, out)
+    }
+}
+
+/// Sorted difference under the process default tier ([`Kernel::auto`]).
+#[inline]
+pub fn difference(set: &[VertexId], exclude: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+    difference_with(Kernel::auto(), set, exclude, out)
+}
+
 /// Binary-search membership with cost accounting.
 #[inline]
 pub fn contains(list: &[VertexId], v: VertexId) -> (bool, Work) {
@@ -157,10 +390,19 @@ mod tests {
 
     fn check_all(a: &[u32], b: &[u32], expect: &[u32]) {
         let mut out = Vec::new();
-        intersect_merge(a, b, &mut out);
+        let w_merge = intersect_merge(a, b, &mut out);
         assert_eq!(out, expect, "merge {a:?} ∩ {b:?}");
         intersect_gallop(a, b, &mut out);
         assert_eq!(out, expect, "gallop {a:?} ∩ {b:?}");
+        let w_simd = simd::intersect(a, b, &mut out);
+        assert_eq!(out, expect, "simd {a:?} ∩ {b:?}");
+        assert_eq!(w_simd, w_merge, "simd work {a:?} ∩ {b:?}");
+        for kern in [Kernel::Scalar, Kernel::Simd] {
+            intersect_with(kern, a, b, &mut out);
+            assert_eq!(out, expect, "adaptive/{kern:?} {a:?} ∩ {b:?}");
+            let (n, _) = intersect_count_with(kern, a, b);
+            assert_eq!(n, expect.len() as u64, "count/{kern:?} {a:?} ∩ {b:?}");
+        }
         intersect(a, b, &mut out);
         assert_eq!(out, expect, "adaptive {a:?} ∩ {b:?}");
     }
@@ -175,10 +417,47 @@ mod tests {
     }
 
     #[test]
+    fn block_sized_intersections() {
+        // Lengths straddling the 8-lane block width exercise both the
+        // vector loop and the scalar tails.
+        let a: Vec<u32> = (0..37).map(|i| i * 2).collect();
+        let b: Vec<u32> = (0..41).map(|i| i * 3).collect();
+        let expect: Vec<u32> = (0..13).map(|i| i * 6).collect();
+        check_all(&a, &b, &expect);
+        let disjoint: Vec<u32> = (0..32).map(|i| i * 2 + 1).collect();
+        let evens: Vec<u32> = (0..32).map(|i| i * 2).collect();
+        check_all(&disjoint, &evens, &[]);
+        check_all(&evens, &evens, &evens);
+    }
+
+    #[test]
     fn unbalanced_gallop() {
         let long: Vec<u32> = (0..10_000).map(|i| i * 3).collect();
         let short = vec![3u32, 2_997, 29_997, 50_000];
         check_all(&short, &long, &[3, 2_997, 29_997]);
+    }
+
+    #[test]
+    fn closed_form_work_matches_cursors() {
+        let cases: [(&[u32], &[u32]); 6] = [
+            (&[1, 3, 5, 7], &[2, 3, 5, 8]),
+            (&[], &[1, 2]),
+            (&[1], &[2]),
+            (&[1, 2, 3], &[1, 2, 3]),
+            (&[10, 20, 30], &[1, 2, 3]),
+            (&[1, 2, 3, 40], &[3, 40]),
+        ];
+        let mut out = Vec::new();
+        for (a, b) in cases {
+            assert_eq!(merge_work(a, b), intersect_merge(a, b, &mut out), "{a:?} {b:?}");
+            let (_, wc) = intersect_count_merge(a, b);
+            assert_eq!(merge_work(a, b), wc, "count {a:?} {b:?}");
+            assert_eq!(
+                difference_work(a, b),
+                difference_scalar(a, b, &mut out),
+                "diff {a:?} {b:?}"
+            );
+        }
     }
 
     #[test]
@@ -187,10 +466,14 @@ mod tests {
         let b = vec![2u32, 4, 6, 8];
         let c = vec![4u32, 5, 6, 7];
         let mut out = Vec::new();
-        intersect_many(&a, &[&b, &c], &mut out);
+        let mut scratch = MultiScratch::default();
+        intersect_many(&a, &[&b, &c], &mut out, &mut scratch);
         assert_eq!(out, vec![4, 6]);
-        intersect_many(&a, &[], &mut out);
+        intersect_many(&a, &[], &mut out, &mut scratch);
         assert_eq!(out, a);
+        // Scratch reuse across calls must not leak previous contents.
+        intersect_many(&a, &[&b], &mut out, &mut scratch);
+        assert_eq!(out, vec![2, 4, 6]);
     }
 
     #[test]
@@ -202,6 +485,17 @@ mod tests {
         assert_eq!(out, vec![1, 2]);
         difference(&[], &[1], &mut out);
         assert!(out.is_empty());
+        // Block-width inputs through every tier, with Work pinned.
+        let set: Vec<u32> = (0..40).collect();
+        let exclude: Vec<u32> = (0..40).step_by(3).collect();
+        let expect: Vec<u32> = (0..40).filter(|v| v % 3 != 0).collect();
+        let w_scalar = difference_scalar(&set, &exclude, &mut out);
+        assert_eq!(out, expect);
+        let w_simd = simd::difference(&set, &exclude, &mut out);
+        assert_eq!(out, expect);
+        assert_eq!(w_simd, w_scalar);
+        difference_with(Kernel::Simd, &set, &exclude, &mut out);
+        assert_eq!(out, expect);
     }
 
     #[test]
@@ -216,5 +510,7 @@ mod tests {
         let mut out = Vec::new();
         assert!(intersect_merge(&[1, 2], &[2, 3], &mut out).0 > 0);
         assert!(intersect_gallop(&[1], &(0..100).collect::<Vec<_>>(), &mut out).0 > 0);
+        assert!(simd::intersect(&[1, 2], &[2, 3], &mut out).0 > 0);
+        assert!(intersect_count(&[1, 2], &[2, 3]).1 .0 > 0);
     }
 }

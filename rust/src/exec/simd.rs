@@ -1,0 +1,304 @@
+//! Tier-3 **data-parallel kernels**: runtime-feature-detected AVX2
+//! implementations of merge intersection, count-only intersection, and
+//! sorted difference, with scalar fallbacks everywhere else.
+//!
+//! Selection is per call: each wrapper consults the (cached) CPUID probe
+//! and falls back to the scalar kernel in [`crate::exec`] when AVX2 is
+//! unavailable or the crate is built for a non-x86_64 target, so this
+//! module is safe to call unconditionally. The adaptive dispatcher
+//! ([`crate::exec::intersect_with`]) additionally gates on
+//! [`crate::exec::SIMD_MIN_LEN`] and the `KUDU_NO_SIMD` escape hatch
+//! (through [`crate::exec::Kernel::auto`]).
+//!
+//! **The Work invariant.** Every kernel here reports exactly the
+//! [`Work`] its scalar counterpart would. A vector kernel cannot track
+//! the scalar cursors (blocks advance eight lanes at a time), but for
+//! duplicate-free sorted inputs — the engine's adjacency and stored
+//! lists always are — the scalar cursors' final positions are a
+//! closed-form function of the inputs alone ([`merge_work`] /
+//! [`difference_work`]), independent of how the elements were actually
+//! compared. Counts, traffic, and virtual time are therefore bitwise
+//! identical for any kernel selection: `tests/proptests.rs` pins output
+//! and Work equivalence per kernel, `tests/sched_determinism.rs` the
+//! end-to-end contract.
+
+use super::{difference_work, merge_work, Work};
+use crate::graph::VertexId;
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> bool {
+    false
+}
+
+/// Whether the vectorised kernels are really available on this host
+/// (x86_64 with AVX2, probed once at first use).
+#[inline]
+pub fn available() -> bool {
+    detect()
+}
+
+/// Vectorised merge intersection: `a ∩ b` into `out`. Output and
+/// [`Work`] are identical to [`crate::exec::intersect_merge`] on
+/// duplicate-free sorted inputs; falls back to it when AVX2 is
+/// unavailable.
+pub fn intersect(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        // SAFETY: `available()` verified AVX2 support at runtime.
+        return unsafe { avx2::intersect(a, b, out) };
+    }
+    super::intersect_merge(a, b, out)
+}
+
+/// Vectorised count-only intersection: `|a ∩ b|` without materialising
+/// the result. Count and [`Work`] are identical to
+/// [`crate::exec::intersect_count_merge`] on duplicate-free sorted
+/// inputs; falls back to it when AVX2 is unavailable.
+pub fn intersect_count(a: &[VertexId], b: &[VertexId]) -> (u64, Work) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        // SAFETY: `available()` verified AVX2 support at runtime.
+        return unsafe { avx2::intersect_count(a, b) };
+    }
+    super::intersect_count_merge(a, b)
+}
+
+/// Vectorised sorted difference: `set \ exclude` into `out`. Output and
+/// [`Work`] are identical to [`crate::exec::difference_scalar`] on
+/// duplicate-free sorted inputs; falls back to it when AVX2 is
+/// unavailable.
+pub fn difference(set: &[VertexId], exclude: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        // SAFETY: `available()` verified AVX2 support at runtime.
+        return unsafe { avx2::difference(set, exclude, out) };
+    }
+    super::difference_scalar(set, exclude, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The AVX2 bodies. Blocks are 8 × u32 lanes; an **all-pairs block
+    //! compare** ORs `a == rot_r(b)` over the 8 rotations of the `b`
+    //! block, then the sign-bit movemask flags the `a` lanes with a
+    //! match. Blocks advance by their max element exactly as the scalar
+    //! merge advances cursors, so no pair is skipped: when a block is
+    //! retired, every element that could still match it is provably
+    //! larger than its max. Scalar tails finish the sub-8-lane
+    //! suffixes.
+
+    use super::{difference_work, merge_work, Work};
+    use crate::graph::VertexId;
+    use std::arch::x86_64::*;
+
+    /// The 7 non-trivial lane rotations, materialised as independent
+    /// permute indices so the 8 block compares have no serial
+    /// dependency chain.
+    struct Rot(__m256i, __m256i, __m256i, __m256i, __m256i, __m256i, __m256i);
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn rotations() -> Rot {
+        Rot(
+            _mm256_setr_epi32(1, 2, 3, 4, 5, 6, 7, 0),
+            _mm256_setr_epi32(2, 3, 4, 5, 6, 7, 0, 1),
+            _mm256_setr_epi32(3, 4, 5, 6, 7, 0, 1, 2),
+            _mm256_setr_epi32(4, 5, 6, 7, 0, 1, 2, 3),
+            _mm256_setr_epi32(5, 6, 7, 0, 1, 2, 3, 4),
+            _mm256_setr_epi32(6, 7, 0, 1, 2, 3, 4, 5),
+            _mm256_setr_epi32(7, 0, 1, 2, 3, 4, 5, 6),
+        )
+    }
+
+    /// All-pairs equality mask of two 8-lane blocks: bit `k` set iff
+    /// `a` lane `k` equals some `b` lane.
+    #[target_feature(enable = "avx2")]
+    unsafe fn block_match(va: __m256i, vb: __m256i, rot: &Rot) -> u32 {
+        let eq = _mm256_or_si256(
+            _mm256_or_si256(
+                _mm256_or_si256(
+                    _mm256_cmpeq_epi32(va, vb),
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.0)),
+                ),
+                _mm256_or_si256(
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.1)),
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.2)),
+                ),
+            ),
+            _mm256_or_si256(
+                _mm256_or_si256(
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.3)),
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.4)),
+                ),
+                _mm256_or_si256(
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.5)),
+                    _mm256_cmpeq_epi32(va, _mm256_permutevar8x32_epi32(vb, rot.6)),
+                ),
+            ),
+        );
+        _mm256_movemask_ps(_mm256_castsi256_ps(eq)) as u32 & 0xFF
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (`super::available()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intersect(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) -> Work {
+        out.clear();
+        out.reserve(a.len().min(b.len()));
+        let (mut i, mut j) = (0usize, 0usize);
+        if a.len() >= 8 && b.len() >= 8 {
+            let rot = rotations();
+            while i + 8 <= a.len() && j + 8 <= b.len() {
+                let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+                let mut m = block_match(va, vb, &rot);
+                while m != 0 {
+                    let k = m.trailing_zeros() as usize;
+                    out.push(*a.get_unchecked(i + k));
+                    m &= m - 1;
+                }
+                let a_max = *a.get_unchecked(i + 7);
+                let b_max = *b.get_unchecked(j + 7);
+                if a_max <= b_max {
+                    i += 8;
+                }
+                if b_max <= a_max {
+                    j += 8;
+                }
+            }
+        }
+        // Scalar tail over the remaining sub-block suffixes.
+        while i < a.len() && j < b.len() {
+            let (x, y) = (*a.get_unchecked(i), *b.get_unchecked(j));
+            if x == y {
+                out.push(x);
+                i += 1;
+                j += 1;
+            } else {
+                i += (x < y) as usize;
+                j += (y < x) as usize;
+            }
+        }
+        merge_work(a, b)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (`super::available()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intersect_count(a: &[VertexId], b: &[VertexId]) -> (u64, Work) {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut count = 0u64;
+        if a.len() >= 8 && b.len() >= 8 {
+            let rot = rotations();
+            while i + 8 <= a.len() && j + 8 <= b.len() {
+                let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+                count += block_match(va, vb, &rot).count_ones() as u64;
+                let a_max = *a.get_unchecked(i + 7);
+                let b_max = *b.get_unchecked(j + 7);
+                if a_max <= b_max {
+                    i += 8;
+                }
+                if b_max <= a_max {
+                    j += 8;
+                }
+            }
+        }
+        while i < a.len() && j < b.len() {
+            let (x, y) = (*a.get_unchecked(i), *b.get_unchecked(j));
+            if x == y {
+                count += 1;
+                i += 1;
+                j += 1;
+            } else {
+                i += (x < y) as usize;
+                j += (y < x) as usize;
+            }
+        }
+        (count, merge_work(a, b))
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (`super::available()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn difference(
+        set: &[VertexId],
+        exclude: &[VertexId],
+        out: &mut Vec<VertexId>,
+    ) -> Work {
+        out.clear();
+        out.reserve(set.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        // Lanes of the current `set` block already found in `exclude`;
+        // accumulated across exclude blocks until the set block retires.
+        let mut matched = 0u32;
+        if set.len() >= 8 && exclude.len() >= 8 {
+            let rot = rotations();
+            while i + 8 <= set.len() && j + 8 <= exclude.len() {
+                let va = _mm256_loadu_si256(set.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(exclude.as_ptr().add(j) as *const __m256i);
+                matched |= block_match(va, vb, &rot);
+                let a_max = *set.get_unchecked(i + 7);
+                let b_max = *exclude.get_unchecked(j + 7);
+                if b_max < a_max {
+                    // More exclude elements ≤ a_max may follow: keep the
+                    // mask, advance exclude only.
+                    j += 8;
+                    continue;
+                }
+                // Every exclude element that could hit this set block
+                // has been compared: emit the unmatched lanes.
+                let mut keep = !matched & 0xFF;
+                while keep != 0 {
+                    let k = keep.trailing_zeros() as usize;
+                    out.push(*set.get_unchecked(i + k));
+                    keep &= keep - 1;
+                }
+                i += 8;
+                matched = 0;
+                if b_max == a_max {
+                    j += 8;
+                }
+            }
+        }
+        if matched != 0 {
+            // The block loop ran out of exclude blocks mid-set-block:
+            // finish this block's lanes against the exclude tail.
+            for k in 0..8usize {
+                if matched & (1 << k) != 0 {
+                    continue;
+                }
+                let v = *set.get_unchecked(i + k);
+                while j < exclude.len() && *exclude.get_unchecked(j) < v {
+                    j += 1;
+                }
+                if j < exclude.len() && *exclude.get_unchecked(j) == v {
+                    j += 1;
+                } else {
+                    out.push(v);
+                }
+            }
+            i += 8;
+        }
+        // Scalar tail.
+        while i < set.len() {
+            let v = *set.get_unchecked(i);
+            if j >= exclude.len() || v < *exclude.get_unchecked(j) {
+                out.push(v);
+                i += 1;
+            } else if v == *exclude.get_unchecked(j) {
+                i += 1;
+                j += 1;
+            } else {
+                j += 1;
+            }
+        }
+        difference_work(set, exclude)
+    }
+}

@@ -36,7 +36,7 @@ fn usage() -> ! {
     eprintln!("           --machines N --threads N --sim-threads N (0=all cores)");
     eprintln!("           --workers N (scheduler workers per machine, 0=all cores)");
     eprintln!("           --comm-window N (in-flight fetch window)");
-    eprintln!("           [--no-cache] [--no-hds] [--no-vcs] [--sync-fetch]");
+    eprintln!("           [--no-cache] [--no-hds] [--no-vcs] [--sync-fetch] [--no-simd]");
     eprintln!("           [--serial-patterns]  (legacy one-plan-per-run; default: fused program)");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
@@ -93,6 +93,11 @@ fn main() {
             }
             if args.has("no-cache") {
                 job = job.cache_frac(0.0);
+            }
+            if args.has("no-simd") {
+                // Pin the scalar kernel tier (KUDU_NO_SIMD=1 does the
+                // same process-wide). Metrics are bitwise unaffected.
+                job = job.simd(false);
             }
             let st = job.run();
             println!("counts: {:?}  (total {})", st.counts, st.total_count());

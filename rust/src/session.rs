@@ -595,6 +595,17 @@ impl<'a, 'g> Job<'a, 'g> {
         self
     }
 
+    /// Toggle the data-parallel intersection kernel tier
+    /// ([`crate::exec::simd`]; default on, with runtime AVX2 detection
+    /// and scalar fallback). Wall-clock only: counts, traffic matrices,
+    /// and virtual time are bitwise identical for either setting — the
+    /// kernels report identical [`crate::exec::Work`] by construction.
+    /// `KUDU_NO_SIMD=1` in the environment force-disables regardless.
+    pub fn simd(mut self, on: bool) -> Self {
+        self.cfg.engine.simd = on;
+        self
+    }
+
     /// Synchronous-fetch escape hatch: `true` bypasses the
     /// message-passing comm subsystem and reads remote partitions
     /// directly through the shared cluster view (the pre-comm

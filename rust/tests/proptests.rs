@@ -61,6 +61,111 @@ fn prop_difference_kernel() {
     }
 }
 
+/// Property (the tier-3 Work invariant): every SIMD kernel produces the
+/// same output AND reports the same [`exec::Work`] as its scalar
+/// counterpart, on adversarial shapes — empty, singleton, disjoint,
+/// fully equal, duplicate-free randoms across densities, lengths
+/// straddling the 8-lane vector width, and unaligned tails. On hosts
+/// without AVX2 the simd entry points fall back to the scalar kernels
+/// and the property is trivially true; the x86_64 CI leg is the
+/// load-bearing run.
+#[test]
+fn prop_simd_kernels_match_scalar_bit_for_bit() {
+    let mut rng = Rng::new(0x51D0);
+    let mut cases: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+    let lens = [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64];
+    for &la in &lens {
+        for &lb in &lens {
+            // Interleaved strides: partial overlap at every block offset.
+            cases.push((
+                (0..la as u32).map(|i| i * 3).collect(),
+                (0..lb as u32).map(|i| i * 2).collect(),
+            ));
+            // Disjoint (odds vs evens).
+            cases.push((
+                (0..la as u32).map(|i| i * 2 + 1).collect(),
+                (0..lb as u32).map(|i| i * 2).collect(),
+            ));
+        }
+        // Fully equal.
+        let eq: Vec<u32> = (0..la as u32).map(|i| i * 5 + 2).collect();
+        cases.push((eq.clone(), eq));
+    }
+    for _ in 0..300 {
+        let universe = 50 + rng.below(3) * 400;
+        cases.push((
+            random_sorted_list(&mut rng, 160, universe),
+            random_sorted_list(&mut rng, 160, universe),
+        ));
+    }
+    let (mut s_out, mut v_out) = (Vec::new(), Vec::new());
+    for (case, (a0, b0)) in cases.iter().enumerate() {
+        // The sliced views exercise unaligned loads and odd tails.
+        let views: [(&[u32], &[u32]); 2] = [
+            (a0, b0),
+            (
+                if a0.is_empty() { &[] } else { &a0[1..] },
+                if b0.is_empty() { &[] } else { &b0[1..] },
+            ),
+        ];
+        for (a, b) in views {
+            let ws = exec::intersect_merge(a, b, &mut s_out);
+            let wv = exec::simd::intersect(a, b, &mut v_out);
+            assert_eq!(v_out, s_out, "intersect case {case}");
+            assert_eq!(wv, ws, "intersect work case {case}");
+            let (ns, wcs) = exec::intersect_count_merge(a, b);
+            let (nv, wcv) = exec::simd::intersect_count(a, b);
+            assert_eq!(nv, ns, "count case {case}");
+            assert_eq!(wcv, wcs, "count work case {case}");
+            assert_eq!(ns, s_out.len() as u64, "count == |intersection| case {case}");
+            let wds = exec::difference_scalar(a, b, &mut s_out);
+            let wdv = exec::simd::difference(a, b, &mut v_out);
+            assert_eq!(v_out, s_out, "difference case {case}");
+            assert_eq!(wdv, wds, "difference work case {case}");
+        }
+    }
+}
+
+/// Property: the adaptive dispatchers report identical output and Work
+/// for both kernel tiers on every input — tier selection is invisible to
+/// the cost model — and count-only dispatch agrees with materialising
+/// dispatch on both the result size and the charge.
+#[test]
+fn prop_dispatcher_tiers_agree() {
+    let mut rng = Rng::new(0xD15C);
+    let (mut a_out, mut b_out) = (Vec::new(), Vec::new());
+    let mut scratch_s = exec::MultiScratch::default();
+    let mut scratch_v = exec::MultiScratch::default();
+    for case in 0..400 {
+        // Mix balanced and very unbalanced lengths so the merge, SIMD,
+        // and gallop regions of the dispatcher are all hit.
+        let max_a = if case % 3 == 0 { 14 } else { 300 };
+        let a = random_sorted_list(&mut rng, max_a, 2_000);
+        let b = random_sorted_list(&mut rng, 300, 2_000);
+        let c = random_sorted_list(&mut rng, 300, 2_000);
+        let ws = exec::intersect_with(exec::Kernel::Scalar, &a, &b, &mut a_out);
+        let wv = exec::intersect_with(exec::Kernel::Simd, &a, &b, &mut b_out);
+        assert_eq!(b_out, a_out, "intersect_with case {case}");
+        assert_eq!(wv, ws, "intersect_with work case {case}");
+        for kern in [exec::Kernel::Scalar, exec::Kernel::Simd] {
+            let (n, wc) = exec::intersect_count_with(kern, &a, &b);
+            assert_eq!(n, a_out.len() as u64, "count {kern:?} case {case}");
+            assert_eq!(wc, ws, "count work {kern:?} case {case}");
+        }
+        let wds = exec::difference_with(exec::Kernel::Scalar, &a, &b, &mut a_out);
+        let wdv = exec::difference_with(exec::Kernel::Simd, &a, &b, &mut b_out);
+        assert_eq!(b_out, a_out, "difference_with case {case}");
+        assert_eq!(wdv, wds, "difference_with work case {case}");
+        let lists: [&[u32]; 2] = [&b, &c];
+        let wms =
+            exec::intersect_many_with(exec::Kernel::Scalar, &a, &lists, &mut a_out, &mut scratch_s);
+        let wmv =
+            exec::intersect_many_with(exec::Kernel::Simd, &a, &lists, &mut b_out, &mut scratch_v);
+        assert_eq!(b_out, a_out, "intersect_many case {case}");
+        assert_eq!(wmv, wms, "intersect_many work case {case}");
+    }
+}
+
 /// Property: for every connected pattern up to size 4 and random graphs,
 /// both planners' engine counts equal the brute-force oracle, under both
 /// induced semantics.

@@ -156,6 +156,34 @@ fn prop_random_sweep_workers_invariant() {
     }
 }
 
+/// Kernel tier selection (the SIMD intersection kernels vs the scalar
+/// reference tier) is a wall-clock decision only: every covered field is
+/// bitwise identical with the vector tier on or off, across engines ×
+/// apps × machine counts. (With `KUDU_NO_SIMD=1` in the environment —
+/// the CI scalar leg — both settings resolve to the scalar tier and the
+/// assertion still must hold.)
+#[test]
+fn simd_kernel_tier_is_bitwise_invisible() {
+    let g = gen::rmat(8, 8, 0x5C4E_D51D);
+    for machines in [1usize, 4] {
+        let mut cfg = RunConfig::with_machines(machines);
+        cfg.engine.chunk_capacity = 128;
+        cfg.engine.mini_batch = 16;
+        let sess = MiningSession::with_config(&g, cfg);
+        for app in [App::Tc, App::Mc(3), App::Cc(4)] {
+            for engine in ALL_ENGINES {
+                let on = sess.job(&app).executor(engine.executor()).simd(true).run();
+                let off = sess.job(&app).executor(engine.executor()).simd(false).run();
+                assert_bitwise_eq(
+                    &on,
+                    &off,
+                    &format!("simd × {} × {} × {machines}m", app.name(), engine.name()),
+                );
+            }
+        }
+    }
+}
+
 /// Per-embedding sinks (the paper's Algorithm-1 user function) flow
 /// through per-task sinks reduced in task order: a sink-based app must
 /// aggregate to identical results for any worker count.
