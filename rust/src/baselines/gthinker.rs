@@ -54,6 +54,8 @@ impl GThinker {
         compute: &ComputeModel,
         transport: &mut Transport,
     ) -> RunStats {
+        // audit: wall-clock — RunStats::wall_s diagnostic, outside the
+        // determinism contract.
         let wall = std::time::Instant::now();
         let spu = compute.seconds_per_unit / threads.max(1) as f64;
         let n = transport.num_machines();
@@ -287,7 +289,9 @@ fn enumerate_local(g: &Graph, plan: &Plan, v0: VertexId) -> (u64, u64) {
     (count, work)
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

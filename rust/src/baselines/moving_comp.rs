@@ -38,6 +38,8 @@ impl MovingComputation {
         compute: &ComputeModel,
         transport: &mut Transport,
     ) -> RunStats {
+        // audit: wall-clock — RunStats::wall_s diagnostic, outside the
+        // determinism contract.
         let wall = std::time::Instant::now();
         let spu = compute.seconds_per_unit / threads.max(1) as f64;
         let n = transport.num_machines();
@@ -252,7 +254,9 @@ fn extend_partial(
     }
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

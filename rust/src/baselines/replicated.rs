@@ -42,6 +42,8 @@ impl Replicated {
         sim_threads: usize,
         compute: &ComputeModel,
     ) -> RunStats {
+        // audit: wall-clock — RunStats::wall_s diagnostic, outside the
+        // determinism contract.
         let wall = std::time::Instant::now();
         let n = g.num_vertices() as VertexId;
         let mut total = 0u64;
@@ -233,7 +235,9 @@ fn mine_split(g: &Graph, plan: &Plan, m: VertexId, stride: VertexId, n: VertexId
     (s.count, s.work)
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

@@ -39,13 +39,15 @@
 //! serialises them into blocking round trips.
 
 pub mod proto;
+pub mod window;
 
 pub use proto::{FetchRequest, FetchResponse, Message, ResponseSlot, ShipEmbeddings, WireBatch};
+pub use window::{InFlightWindow, StopFlag};
 
 use crate::graph::{Graph, VertexId};
 use crate::metrics::NetModel;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
@@ -140,11 +142,12 @@ struct MachinePort {
     inbox: Mutex<VecDeque<WireBatch>>,
     /// Per-destination outgoing aggregation buffers.
     out: Vec<Mutex<Outbox>>,
-    /// Logical fetches issued by this machine and not yet answered.
-    in_flight: AtomicUsize,
+    /// Logical fetches issued by this machine and not yet answered — the
+    /// bounded reservation pool, extracted into its own model-checked
+    /// type (see [`window`]).
+    window: InFlightWindow,
     // --- diagnostics (wall-clock artefacts, outside the determinism
     // contract like `RunStats::wall_s`) ---
-    peak_in_flight: AtomicUsize,
     flushes: AtomicU64,
     stall_ns: AtomicU64,
 }
@@ -190,7 +193,7 @@ impl Drop for ShutdownGuard<'_> {
 pub struct CommFabric {
     cfg: CommConfig,
     ports: Vec<MachinePort>,
-    stop: AtomicBool,
+    stop: StopFlag,
 }
 
 impl CommFabric {
@@ -207,13 +210,12 @@ impl CommFabric {
                 out: (0..num_machines)
                     .map(|_| Mutex::new(Outbox { msgs: Vec::new(), bytes: 0 }))
                     .collect(),
-                in_flight: AtomicUsize::new(0),
-                peak_in_flight: AtomicUsize::new(0),
+                window: InFlightWindow::new(cfg.max_in_flight),
                 flushes: AtomicU64::new(0),
                 stall_ns: AtomicU64::new(0),
             })
             .collect();
-        CommFabric { cfg, ports, stop: AtomicBool::new(false) }
+        CommFabric { cfg, ports, stop: StopFlag::new() }
     }
 
     pub fn num_machines(&self) -> usize {
@@ -239,35 +241,24 @@ impl CommFabric {
     ) -> ResponseSlot {
         debug_assert_ne!(machine, owner, "local reads never go through the fabric");
         let port = &self.ports[machine];
-        // Reserve a window slot (CAS loop; while full, flush so the
-        // outstanding requests are servable, then spin-yield).
+        // Reserve a window slot; while the window is full, flush so the
+        // outstanding requests are servable, then spin-yield. The
+        // reservation CAS itself lives in [`InFlightWindow`], where it
+        // is model-checked (`tests/loom_models.rs`).
         let mut flushed = false;
         let mut stall_t0: Option<Instant> = None;
-        let mut cur = port.in_flight.load(Ordering::Relaxed);
-        loop {
-            if cur >= self.cfg.max_in_flight {
-                if !flushed {
-                    self.flush(machine);
-                    flushed = true;
-                }
-                if stall_t0.is_none() {
-                    stall_t0 = Some(Instant::now());
-                }
-                std::thread::yield_now();
-                cur = port.in_flight.load(Ordering::Relaxed);
-                continue;
+        while !port.window.try_reserve() {
+            if !flushed {
+                self.flush(machine);
+                flushed = true;
             }
-            match port.in_flight.compare_exchange_weak(
-                cur,
-                cur + 1,
-                Ordering::AcqRel,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => break,
-                Err(seen) => cur = seen,
+            if stall_t0.is_none() {
+                // audit: wall-clock — comm_stall_s diagnostic, outside
+                // the determinism contract.
+                stall_t0 = Some(Instant::now());
             }
+            std::thread::yield_now();
         }
-        port.peak_in_flight.fetch_max(cur + 1, Ordering::Relaxed);
         if let Some(t0) = stall_t0 {
             port.stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
@@ -338,7 +329,7 @@ impl CommFabric {
                         debug_assert!(!dup, "a request is served exactly once");
                         // Response received ⇒ the requester's window slot
                         // frees (completion of a non-blocking request).
-                        self.ports[batch.from].in_flight.fetch_sub(1, Ordering::AcqRel);
+                        self.ports[batch.from].window.complete();
                         served += 1;
                     }
                     Message::Ship(_) => {
@@ -355,7 +346,7 @@ impl CommFabric {
     /// sleeps when idle.
     pub fn run_server(&self, machine: usize, graph: &Graph) {
         let mut idle = 0u32;
-        while !self.stop.load(Ordering::Acquire) {
+        while !self.stop.is_signaled() {
             if self.serve(machine, graph) > 0 {
                 idle = 0;
                 continue;
@@ -372,7 +363,7 @@ impl CommFabric {
     /// Signal the comm server threads to exit (called after the worker
     /// pool has joined — no requester is waiting by then).
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::Release);
+        self.stop.signal();
     }
 
     /// Block until `slot` is filled, recording the stall on `machine`'s
@@ -383,6 +374,8 @@ impl CommFabric {
         if let Some(r) = slot.get() {
             return r;
         }
+        // audit: wall-clock — comm_stall_s diagnostic, outside the
+        // determinism contract.
         let t0 = Instant::now();
         loop {
             if let Some(r) = slot.get() {
@@ -433,7 +426,7 @@ impl CommFabric {
         let mut flushes = 0u64;
         for p in &self.ports {
             stall_ns += p.stall_ns.load(Ordering::Relaxed);
-            peak = peak.max(p.peak_in_flight.load(Ordering::Relaxed));
+            peak = peak.max(p.window.peak());
             flushes += p.flushes.load(Ordering::Relaxed);
         }
         CommDiagnostics {
@@ -444,7 +437,9 @@ impl CommFabric {
     }
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::cluster::Transport;
@@ -494,7 +489,7 @@ mod tests {
             assert_eq!(resp.payload(i), g.neighbors(v), "vertex {v}");
         }
         // The window slot freed on service.
-        assert_eq!(fabric.ports[0].in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(fabric.ports[0].window.outstanding(), 0);
     }
 
     #[test]

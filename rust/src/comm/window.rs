@@ -1,0 +1,163 @@
+//! The in-flight request window and server stop flag: the two lock-free
+//! protocols of the comm fabric, extracted into small types so they can
+//! be model-checked in isolation.
+//!
+//! `tests/loom_models.rs` drives these exact types through every
+//! interleaving of requester and server steps with the
+//! [`crate::modelcheck`] explorer, proving the properties the fabric
+//! relies on: the window never holds more than `max_in_flight`
+//! reservations, a full window cannot deadlock (whenever it is full the
+//! server has servable work, because requesters flush before waiting),
+//! and the stop flag's release store pairs with the server loop's
+//! acquire load so shutdown is observed after all requester writes.
+//!
+//! **Memory-ordering contract** (registered in `tools/audit/atomics.toml`
+//! under `count` / `peak` / `stop`, `comm/window.rs`):
+//!
+//! * `count` — the reservation CAS uses `AcqRel` on success and the
+//!   completion `fetch_sub` uses `AcqRel`, making the window slot itself
+//!   a synchronization point between the server that freed a slot and
+//!   the requester that reuses it — conservative and independent of the
+//!   reply-slot `OnceLock` (which already synchronizes the response
+//!   payload). The pre-CAS load and the retry loads are `Relaxed`: a
+//!   stale value only causes a retry or one more spin, never a bound
+//!   violation (the CAS re-validates against the latest value).
+//! * `stop` — classic `Release` store / `Acquire` load handshake:
+//!   everything written before [`StopFlag::signal`] is visible to a
+//!   server that observes it and exits.
+//! * `peak` — diagnostic high-water mark, `Relaxed`, outside the
+//!   determinism contract.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Bounded pool of outstanding non-blocking requests: at most
+/// `max_in_flight` reservations held at once.
+pub struct InFlightWindow {
+    /// Logical fetches reserved and not yet completed.
+    count: AtomicUsize,
+    limit: usize,
+    /// Diagnostic high-water mark of `count`.
+    peak: AtomicUsize,
+}
+
+impl InFlightWindow {
+    /// A window of `limit` slots (clamped to at least 1 — a zero window
+    /// would turn every reservation into an unbounded spin).
+    pub fn new(limit: usize) -> Self {
+        InFlightWindow {
+            count: AtomicUsize::new(0),
+            limit: limit.max(1),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Try to reserve one window slot. `true` holds a slot until
+    /// [`InFlightWindow::complete`]; `false` means the window is full
+    /// right now — the caller decides how to wait (the fabric flushes
+    /// its outboxes once, then spin-yields, so the server always has the
+    /// servable work that will free a slot). Never blocks.
+    pub fn try_reserve(&self) -> bool {
+        let mut cur = self.count.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return false;
+            }
+            match self.count.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + 1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Complete one reserved request, freeing its slot (the server calls
+    /// this after filling the reply slot).
+    pub fn complete(&self) {
+        let prev = self.count.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "complete without a matching reserve");
+    }
+
+    /// Currently reserved slots (diagnostic / model-check observation).
+    pub fn outstanding(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// The window size.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Diagnostic high-water mark of reserved slots.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// Release/acquire shutdown handshake for the comm server threads.
+pub struct StopFlag {
+    stop: AtomicBool,
+}
+
+impl StopFlag {
+    pub fn new() -> Self {
+        StopFlag { stop: AtomicBool::new(false) }
+    }
+
+    /// Signal shutdown. The `Release` store pairs with the `Acquire`
+    /// load in [`StopFlag::is_signaled`]: everything the signaler wrote
+    /// beforehand is visible to an observer that sees `true`.
+    pub fn signal(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Has shutdown been signaled? (`Acquire` — see [`StopFlag::signal`].)
+    pub fn is_signaled(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+}
+
+impl Default for StopFlag {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_reserves_up_to_limit() {
+        let w = InFlightWindow::new(2);
+        assert!(w.try_reserve());
+        assert!(w.try_reserve());
+        assert!(!w.try_reserve());
+        w.complete();
+        assert!(w.try_reserve());
+        assert_eq!(w.peak(), 2);
+        assert_eq!(w.outstanding(), 2);
+    }
+
+    #[test]
+    fn zero_window_clamps_to_one() {
+        let w = InFlightWindow::new(0);
+        assert_eq!(w.limit(), 1);
+        assert!(w.try_reserve());
+        assert!(!w.try_reserve());
+    }
+
+    #[test]
+    fn stop_flag_round_trip() {
+        let s = StopFlag::new();
+        assert!(!s.is_signaled());
+        s.signal();
+        assert!(s.is_signaled());
+    }
+}

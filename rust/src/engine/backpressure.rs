@@ -1,0 +1,123 @@
+//! Chunk-admission backpressure: the lock-free gauge that bounds how
+//! many split-off frame chunks a machine may have buffered across its
+//! scheduler deques and parked list (the paper's bounded-memory
+//! argument, §4, enforced per machine by `max_live_chunks`).
+//!
+//! The protocol is extracted into its own type so it is small enough to
+//! model-check: `tests/loom_models.rs` drives this exact [`ChunkGate`]
+//! through every interleaving of its operations with the
+//! [`crate::modelcheck`] explorer and proves the two properties the
+//! scheduler relies on — the gauge never exceeds its limit, and a full
+//! gauge can never block a worker (a failed admission has a
+//! non-blocking fallback: the task runs from the worker-local overflow
+//! stack instead of a deque).
+//!
+//! **Memory-ordering contract** (registered in `tools/audit/atomics.toml`
+//! under `live` / `peak`, `engine/backpressure.rs`): every operation is
+//! `Relaxed`. The gauge is a *count*, not a publication channel — chunk
+//! contents travel between workers through the scheduler's `Mutex`
+//! deques, whose lock/unlock pairs provide all the happens-before edges
+//! the data needs. The bound `live <= limit` is a single-location
+//! invariant, which `compare_exchange` preserves under any ordering
+//! (RMWs on one location always see the latest value in the
+//! modification order). `peak` is a diagnostic high-water mark, outside
+//! the determinism contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Bounded admission gauge for buffered frame chunks.
+pub struct ChunkGate {
+    /// Frame tasks currently buffered (each pins a chunk).
+    live: AtomicUsize,
+    limit: usize,
+    /// Diagnostic high-water mark of `live`.
+    peak: AtomicUsize,
+}
+
+impl ChunkGate {
+    /// A gate admitting at most `limit` concurrent chunks (clamped to at
+    /// least 1 — a zero budget would starve the deques entirely and
+    /// force every child task through the overflow stack).
+    pub fn new(limit: usize) -> Self {
+        ChunkGate {
+            live: AtomicUsize::new(0),
+            limit: limit.max(1),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Try to admit one more buffered chunk. `true` reserves a slot that
+    /// must later be returned with [`ChunkGate::release`]; `false` means
+    /// the budget is exhausted and the caller must fall back to its
+    /// non-blocking path (the worker-local overflow stack). Never
+    /// blocks, never spins unboundedly: the CAS loop only retries while
+    /// other admissions race it below the limit.
+    pub fn try_admit(&self) -> bool {
+        let mut cur = self.live.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return false;
+            }
+            match self.live.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + 1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Return a slot reserved by a successful [`ChunkGate::try_admit`]
+    /// (a buffered chunk was taken off a deque or dropped on halt).
+    pub fn release(&self) {
+        let prev = self.live.fetch_sub(1, Ordering::Relaxed);
+        debug_assert!(prev > 0, "release without a matching admit");
+    }
+
+    /// Currently admitted chunks (diagnostic / model-check observation).
+    pub fn current(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// The admission limit (also used by the scheduler as the parked-list
+    /// budget — both bound the same resource, pinned chunks).
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Diagnostic high-water mark of admitted chunks.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_limit_then_refuses() {
+        let gate = ChunkGate::new(2);
+        assert!(gate.try_admit());
+        assert!(gate.try_admit());
+        assert!(!gate.try_admit());
+        assert_eq!(gate.current(), 2);
+        gate.release();
+        assert!(gate.try_admit());
+        assert_eq!(gate.peak(), 2);
+    }
+
+    #[test]
+    fn zero_limit_clamps_to_one() {
+        let gate = ChunkGate::new(0);
+        assert_eq!(gate.limit(), 1);
+        assert!(gate.try_admit());
+        assert!(!gate.try_admit());
+    }
+}

@@ -50,6 +50,7 @@
 //! static cache), and NUMA modelling are unchanged from the comm and
 //! scheduler subsystems — see [`crate::comm`], [`task`], and [`sched`].
 
+pub mod backpressure;
 pub mod cache;
 pub mod chunk;
 pub mod sched;
@@ -119,6 +120,8 @@ impl KuduEngine {
                 );
             }
         }
+        // audit: wall-clock — RunStats::wall_s diagnostic, outside the
+        // determinism contract.
         let wall_start = std::time::Instant::now();
         let view = transport.view();
 
@@ -426,7 +429,9 @@ impl KuduEngine {
     }
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::cluster::Transport;

@@ -32,6 +32,7 @@
 //! run-wide flag between tasks: they drain their queues (dropping
 //! unstarted tasks) and retire. Only hooked runs can raise it.
 
+use super::backpressure::ChunkGate;
 use super::sink::EmbeddingSink;
 use super::task::{PatOutcome, RunTask, Task, TaskKind, TaskRunner};
 use crate::cluster::TrafficLedger;
@@ -121,10 +122,10 @@ pub struct MachineSched<S> {
     deques: Vec<Mutex<VecDeque<Task>>>,
     /// Tasks submitted but not yet completed (including running ones).
     outstanding: AtomicUsize,
-    /// Frame tasks currently buffered in the deques (each pins a chunk).
-    live_chunks: AtomicUsize,
-    max_live_chunks: usize,
-    peak_live: AtomicUsize,
+    /// The machine-wide buffered-chunk budget (`max_live_chunks`
+    /// admission), extracted into its own model-checked type — see
+    /// [`super::backpressure`].
+    gate: ChunkGate,
     steals: AtomicU64,
     /// Tasks parked on in-flight fetch responses, shared by the
     /// machine's workers (any worker may resume a ready one).
@@ -177,9 +178,7 @@ impl<S: EmbeddingSink> MachineSched<S> {
             roots,
             deques: deques.into_iter().map(Mutex::new).collect(),
             outstanding,
-            live_chunks: AtomicUsize::new(0),
-            max_live_chunks: max_live_chunks.max(1),
-            peak_live: AtomicUsize::new(0),
+            gate: ChunkGate::new(max_live_chunks),
             steals: AtomicU64::new(0),
             parked: Mutex::new(Vec::new()),
             done: Mutex::new(MachineDone {
@@ -200,37 +199,16 @@ impl<S: EmbeddingSink> MachineSched<S> {
     /// buffered chunks without touching task identity.
     fn submit(&self, slot: usize, task: Task, overflow: &mut Vec<Task>) {
         self.outstanding.fetch_add(1, Ordering::SeqCst);
-        if task.holds_chunk() && !self.try_admit_chunk() {
+        if task.holds_chunk() && !self.gate.try_admit() {
             overflow.push(task);
             return;
         }
         self.deques[slot].lock().unwrap().push_back(task);
     }
 
-    fn try_admit_chunk(&self) -> bool {
-        let mut cur = self.live_chunks.load(Ordering::Relaxed);
-        loop {
-            if cur >= self.max_live_chunks {
-                return false;
-            }
-            match self.live_chunks.compare_exchange_weak(
-                cur,
-                cur + 1,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => {
-                    self.peak_live.fetch_max(cur + 1, Ordering::Relaxed);
-                    return true;
-                }
-                Err(seen) => cur = seen,
-            }
-        }
-    }
-
     fn note_taken(&self, task: &Task) {
         if task.holds_chunk() {
-            self.live_chunks.fetch_sub(1, Ordering::Relaxed);
+            self.gate.release();
         }
     }
 
@@ -264,7 +242,7 @@ impl<S: EmbeddingSink> MachineSched<S> {
     /// behaviour, always correct).
     fn park_or_resume(&self, task: Task, overflow: &mut Vec<Task>) {
         let mut parked = self.parked.lock().unwrap();
-        if parked.len() < self.max_live_chunks {
+        if parked.len() < self.gate.limit() {
             parked.push(task);
         } else {
             drop(parked);
@@ -336,7 +314,12 @@ impl<S: EmbeddingSink> MachineSched<S> {
         let mut overflow: Vec<Task> = Vec::new();
         let mut idle_spins = 0u32;
         loop {
-            if halt.load(Ordering::Relaxed) {
+            // Acquire pairs with the Release store in the halting
+            // worker's hook dispatch (`engine/task.rs`): a worker that
+            // observes the flag also observes every sink write the
+            // halting callback made first. See `tools/audit/atomics.toml`
+            // (`halt`).
+            if halt.load(Ordering::Acquire) {
                 self.drain_on_halt(slot, &mut overflow);
                 break;
             }
@@ -408,7 +391,7 @@ impl<S: EmbeddingSink> MachineSched<S> {
             outs.sort_by(|a, b| a.id.cmp(&b.id));
         }
         let steals = self.steals.into_inner();
-        let peak_live = self.peak_live.into_inner() as u64;
+        let peak_live = self.gate.peak() as u64;
         (by_pat, done.agg, steals, peak_live)
     }
 }

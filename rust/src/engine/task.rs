@@ -345,7 +345,10 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
     /// the flag, so they cannot observe (or pay for) it.
     #[inline]
     fn halted(&self) -> bool {
-        self.hooks.is_some() && self.halt.load(Ordering::Relaxed)
+        // Acquire pairs with the Release stores below: an observer of
+        // the flag also observes the halting callback's final sink emit.
+        // See `tools/audit/atomics.toml` (`halt`).
+        self.hooks.is_some() && self.halt.load(Ordering::Acquire)
     }
 
     /// Execute one task. `roots` holds the machine's (label-filtered)
@@ -1030,7 +1033,10 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                         Control::Halt => {
                             sink.emit(&self.emb_buf);
                             self.pending_cpu[p] += (end - start) as u64;
-                            self.halt.store(true, Ordering::Relaxed);
+                            // Release: publish the emit above to workers
+                            // that observe the flag (Acquire in
+                            // `halted()` / `run_worker`).
+                            self.halt.store(true, Ordering::Release);
                             return;
                         }
                     }
@@ -1098,7 +1104,8 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                     Control::Continue => {}
                     Control::Prune => continue,
                     Control::Halt => {
-                        self.halt.store(true, Ordering::Relaxed);
+                        // Release — same handshake as the on_match site.
+                        self.halt.store(true, Ordering::Release);
                         return;
                     }
                 }

@@ -103,6 +103,10 @@ mod avx2 {
     /// dependency chain.
     struct Rot(__m256i, __m256i, __m256i, __m256i, __m256i, __m256i, __m256i);
 
+    /// # Safety
+    /// Caller must have verified AVX2 support (`super::available()`);
+    /// the body is pure constant materialisation, `unsafe` only because
+    /// `#[target_feature]` makes the fn unsafe to call.
     #[target_feature(enable = "avx2")]
     unsafe fn rotations() -> Rot {
         Rot(
@@ -118,6 +122,12 @@ mod avx2 {
 
     /// All-pairs equality mask of two 8-lane blocks: bit `k` set iff
     /// `a` lane `k` equals some `b` lane.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support (`super::available()`);
+    /// operands are plain `__m256i` values, so there are no pointer
+    /// obligations — `unsafe` only because `#[target_feature]` makes
+    /// the fn unsafe to call.
     #[target_feature(enable = "avx2")]
     unsafe fn block_match(va: __m256i, vb: __m256i, rot: &Rot) -> u32 {
         let eq = _mm256_or_si256(

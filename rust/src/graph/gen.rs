@@ -296,6 +296,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // dataset stand-ins are too large for Miri
     fn datasets_build_and_are_deterministic() {
         let a = Dataset::Mico.build();
         let b = Dataset::Mico.build();

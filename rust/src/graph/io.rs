@@ -99,7 +99,9 @@ pub fn load_csr(path: &Path) -> std::io::Result<Graph> {
     Ok(Graph::from_csr(offsets, edges))
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

@@ -121,6 +121,39 @@
 //! the shared root scan; runs that halt report partial results and are
 //! excluded from the bitwise determinism contract.)
 //!
+//! ## Determinism contract and how it's enforced
+//!
+//! Everything a run reports — counts, per-pattern traffic matrices,
+//! virtual time — is **bitwise identical** for any host thread count
+//! ([`par`]), worker count, comm window/batch setting (including the
+//! `sync_fetch` escape hatch), and intersection-kernel tier. Wall-clock
+//! fields (`wall_s`, `comm_stall_s`) are explicitly *diagnostics*
+//! outside the contract, as are runs halted early by
+//! [`session::Control::Halt`].
+//!
+//! The contract is enforced in three layers (see `EXPERIMENTS.md`
+//! §Audit for the full reproduction commands):
+//!
+//! 1. **Equivalence tests** pin it end to end across sampled
+//!    configuration sweeps (`tests/sched_determinism.rs`,
+//!    `tests/comm_equivalence.rs`, `tests/program_equivalence.rs`,
+//!    `tests/proptests.rs`).
+//! 2. **The `kudu-audit` lint pass** (`cargo run -p kudu-audit`) bans
+//!    the code patterns that break it in ways sampling can miss:
+//!    unordered `HashMap`/`HashSet` iteration in the accounted modules
+//!    (annotate `// audit: order-insensitive` with a proof sketch when
+//!    harmless), wall-clock reads outside the registered sites (each
+//!    marked `// audit: wall-clock`), `unsafe` without a `// SAFETY:`
+//!    contract, atomics outside the protocols registered in
+//!    `tools/audit/atomics.toml`, and entropy sources outside the
+//!    seeded generators in [`graph::gen`].
+//! 3. **Dynamic checkers**: Miri over the per-module tests and unsafe
+//!    kernels, exhaustive interleaving models of the two hand-rolled
+//!    CAS protocols ([`engine::backpressure::ChunkGate`],
+//!    [`comm::window::InFlightWindow`]/[`comm::window::StopFlag`]) via
+//!    [`modelcheck`] in `tests/loom_models.rs`, and a ThreadSanitizer
+//!    CI leg racing the Release/Acquire pairs the registry justifies.
+//!
 //! ## Crate layout
 //!
 //! The crate is organised as the three-layer architecture described in
@@ -176,6 +209,7 @@ pub mod engine;
 pub mod exec;
 pub mod graph;
 pub mod metrics;
+pub mod modelcheck;
 pub mod par;
 pub mod partition;
 pub mod pattern;

@@ -92,7 +92,9 @@ where
         .collect()
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;

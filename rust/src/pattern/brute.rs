@@ -85,7 +85,9 @@ pub fn triangle_count(g: &Graph) -> u64 {
     count_embeddings(g, &Pattern::triangle(), Induced::Edge)
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

@@ -59,7 +59,9 @@ pub fn restriction_factor(p: &Pattern) -> u64 {
     factor
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

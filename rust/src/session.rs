@@ -254,6 +254,8 @@ fn run_plans_serially(
     ctx: &ProgramCtx<'_, '_>,
     mut run_plan: impl FnMut(&Plan) -> (RunStats, Traffic),
 ) -> ProgramOutcome {
+    // audit: wall-clock — RunStats::wall_s diagnostic, outside the
+    // determinism contract.
     let wall_start = Instant::now();
     let mut patterns = Vec::with_capacity(ctx.program.num_patterns());
     let mut program = ProgramStats::default();
@@ -728,6 +730,8 @@ impl<'a, 'g> Job<'a, 'g> {
             self.app.name(),
             self.exec.name()
         );
+        // audit: wall-clock — RunStats::wall_s diagnostic, outside the
+        // determinism contract.
         let wall_start = Instant::now();
         if patterns.is_empty() {
             // Nothing to mine: aggregate over zero outcomes.
@@ -914,7 +918,9 @@ impl GpmApp for LabeledQuery {
     }
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

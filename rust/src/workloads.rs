@@ -177,7 +177,9 @@ fn count_cold_triangles(graph: &Graph, cfg: &RunConfig, member: &[bool]) -> (Run
     (stats, cold_counter.load(Ordering::Relaxed))
 }
 
-#[cfg(test)]
+// Heavy under Miri (full engine runs / threads / file I/O): the Miri
+// leg covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::graph::gen;

@@ -14,6 +14,9 @@
 //! change is excluded by contract: wall clock and the comm diagnostics
 //! (`comm_stall_s`, `peak_in_flight`, `comm_flushes`).
 
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 use kudu::cluster::Transport;
 use kudu::comm::CommConfig;
 use kudu::config::{EngineConfig, RunConfig};

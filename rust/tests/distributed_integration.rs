@@ -4,6 +4,9 @@
 //! memory gates) must hold on the real simulated cluster. Everything
 //! routes through the mining-session API.
 
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 use kudu::config::RunConfig;
 use kudu::graph::gen::{self, Dataset};
 use kudu::partition::PartitionedGraph;

@@ -1,0 +1,367 @@
+//! Exhaustive interleaving models of the runtime's two hand-rolled CAS
+//! protocols, driven through the in-repo explorer ([`kudu::modelcheck`])
+//! against the **real** protocol types the scheduler and comm fabric
+//! use — not copies:
+//!
+//! * [`ChunkGate`] — the `max_live_chunks` admission gauge of
+//!   `engine/sched.rs`. Properties: admitted chunks never exceed the
+//!   limit; a full gate never blocks a worker (the overflow fallback
+//!   keeps every thread enabled), even while one holder pins its
+//!   admission across the whole schedule — the parked-frame scenario.
+//! * [`InFlightWindow`] + [`StopFlag`] — the `max_in_flight`
+//!   reservation pool and shutdown handshake of `comm/mod.rs`.
+//!   Properties: outstanding reservations never exceed the window; a
+//!   full window always leaves the server servable work (no deadlock);
+//!   `stop` is signaled only after every response is served and the
+//!   server exits only after observing it — the release/acquire pairing
+//!   of `CommFabric::shutdown` with `run_server`.
+//!
+//! Default `cargo test` runs bounded configurations; the CI loom leg
+//! (`RUSTFLAGS="--cfg loom"`) widens them (more threads, more
+//! operations) for an exhaustive sweep. See the soundness discussion in
+//! [`kudu::modelcheck`]: these are sequential-consistency checks of
+//! linearizable single-location protocols; the cross-location ordering
+//! choices are justified in `tools/audit/atomics.toml` and raced for
+//! real by the CI ThreadSanitizer leg.
+
+use kudu::comm::window::{InFlightWindow, StopFlag};
+use kudu::engine::backpressure::ChunkGate;
+use kudu::modelcheck::{explore, Model, StepOutcome, ThreadState};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// --- Model 1: chunk-admission backpressure -------------------------------
+
+struct GateShared {
+    gate: ChunkGate,
+    completed: AtomicUsize,
+}
+
+/// `workers` threads each run `tasks` split-off chunks through the
+/// scheduler's admission protocol: try to admit (buffer in a deque) and
+/// later release on take, or — when the gate refuses — run the task
+/// from the worker-local overflow stack without touching the gate.
+///
+/// Thread state: `pc` = tasks completed, `acc` = 1 while holding an
+/// admitted (buffered) chunk.
+struct GateModel {
+    workers: usize,
+    tasks: usize,
+    limit: usize,
+}
+
+impl GateModel {
+    fn finish_task(&self, shared: &GateShared, st: &mut ThreadState) -> StepOutcome {
+        shared.completed.fetch_add(1, Ordering::Relaxed);
+        st.pc += 1;
+        if st.pc as usize == self.tasks {
+            StepOutcome::Done
+        } else {
+            StepOutcome::Ran
+        }
+    }
+}
+
+impl Model for GateModel {
+    type Shared = GateShared;
+
+    fn make_shared(&self) -> GateShared {
+        GateShared { gate: ChunkGate::new(self.limit), completed: AtomicUsize::new(0) }
+    }
+
+    fn num_threads(&self) -> usize {
+        self.workers
+    }
+
+    fn enabled(&self, _s: &GateShared, _t: usize, _st: &ThreadState) -> bool {
+        // The liveness property in one line: admission never blocks —
+        // a refused chunk falls back to the overflow stack, so every
+        // unfinished worker always has a step.
+        true
+    }
+
+    fn step(&self, s: &GateShared, _t: usize, st: &mut ThreadState) -> StepOutcome {
+        if st.acc == 1 {
+            // The buffered chunk is taken off the deque: release.
+            s.gate.release();
+            st.acc = 0;
+            self.finish_task(s, st)
+        } else if s.gate.try_admit() {
+            // Chunk buffered; it pins a gate slot until taken.
+            st.acc = 1;
+            StepOutcome::Ran
+        } else {
+            // Gate full: overflow fallback, no gate interaction.
+            self.finish_task(s, st)
+        }
+    }
+
+    fn invariant(&self, s: &GateShared) {
+        assert!(
+            s.gate.current() <= s.gate.limit(),
+            "live chunks {} exceed limit {}",
+            s.gate.current(),
+            s.gate.limit()
+        );
+    }
+
+    fn finale(&self, s: &GateShared) {
+        assert_eq!(s.completed.load(Ordering::Relaxed), self.workers * self.tasks);
+        assert_eq!(s.gate.current(), 0, "every admitted chunk was released");
+        assert!(s.gate.peak() <= s.gate.limit());
+    }
+}
+
+/// The parked-frame scenario: thread 0 admits one chunk and *holds* it
+/// until every other worker has finished (a frame parked on in-flight
+/// responses pins its chunk for arbitrarily long), while the remaining
+/// workers run the full admission protocol. The explorer proves the
+/// hold can never deadlock the machine: the other workers' overflow
+/// fallback keeps them enabled with the gate full, and the holder's
+/// release becomes enabled once they finish.
+struct HoldModel {
+    workers: usize,
+    tasks: usize,
+    limit: usize,
+}
+
+impl HoldModel {
+    fn others_total(&self) -> usize {
+        (self.workers - 1) * self.tasks
+    }
+}
+
+impl Model for HoldModel {
+    type Shared = GateShared;
+
+    fn make_shared(&self) -> GateShared {
+        GateShared { gate: ChunkGate::new(self.limit), completed: AtomicUsize::new(0) }
+    }
+
+    fn num_threads(&self) -> usize {
+        self.workers
+    }
+
+    fn enabled(&self, s: &GateShared, t: usize, st: &ThreadState) -> bool {
+        if t != 0 {
+            return true;
+        }
+        match st.pc {
+            // Admit-and-hold: wait for a free slot (pure load).
+            0 => s.gate.current() < s.gate.limit(),
+            // Release only after every other worker finished.
+            _ => s.completed.load(Ordering::Relaxed) == self.others_total(),
+        }
+    }
+
+    fn step(&self, s: &GateShared, t: usize, st: &mut ThreadState) -> StepOutcome {
+        if t == 0 {
+            if st.pc == 0 {
+                // Guarded on a free slot, and the explorer runs steps
+                // sequentially, so the admission must succeed.
+                assert!(s.gate.try_admit(), "guarded admit cannot fail");
+                st.pc = 1;
+                StepOutcome::Ran
+            } else {
+                s.gate.release();
+                s.completed.fetch_add(1, Ordering::Relaxed);
+                StepOutcome::Done
+            }
+        } else if st.acc == 1 {
+            s.gate.release();
+            st.acc = 0;
+            s.completed.fetch_add(1, Ordering::Relaxed);
+            st.pc += 1;
+            if st.pc as usize == self.tasks {
+                StepOutcome::Done
+            } else {
+                StepOutcome::Ran
+            }
+        } else if s.gate.try_admit() {
+            st.acc = 1;
+            StepOutcome::Ran
+        } else {
+            s.completed.fetch_add(1, Ordering::Relaxed);
+            st.pc += 1;
+            if st.pc as usize == self.tasks {
+                StepOutcome::Done
+            } else {
+                StepOutcome::Ran
+            }
+        }
+    }
+
+    fn invariant(&self, s: &GateShared) {
+        assert!(s.gate.current() <= s.gate.limit());
+    }
+
+    fn finale(&self, s: &GateShared) {
+        assert_eq!(s.completed.load(Ordering::Relaxed), self.others_total() + 1);
+        assert_eq!(s.gate.current(), 0);
+    }
+}
+
+// --- Model 2: comm in-flight window + stop handshake ---------------------
+
+struct WinShared {
+    win: InFlightWindow,
+    stop: StopFlag,
+    /// Requests reserved+sent and not yet served (== win.outstanding()
+    /// by construction: the fabric flushes before anyone waits, so every
+    /// reservation is servable — the liveness invariant of the batching
+    /// layer, baked into the model as a single reserve+send step).
+    pending: AtomicUsize,
+    issued: AtomicUsize,
+    served: AtomicUsize,
+}
+
+/// `clients` requester threads issue `requests` fetches each through
+/// the real window; one server thread serves them and exits on the stop
+/// flag. Client 0 doubles as the shutdown signaler: it signals only
+/// after everything is issued *and* served (the engine joins the worker
+/// pool before `CommFabric::shutdown`).
+struct WindowModel {
+    clients: usize,
+    requests: usize,
+    limit: usize,
+}
+
+impl WindowModel {
+    fn total(&self) -> usize {
+        self.clients * self.requests
+    }
+
+    fn server(&self) -> usize {
+        self.clients
+    }
+}
+
+impl Model for WindowModel {
+    type Shared = WinShared;
+
+    fn make_shared(&self) -> WinShared {
+        WinShared {
+            win: InFlightWindow::new(self.limit),
+            stop: StopFlag::new(),
+            pending: AtomicUsize::new(0),
+            issued: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+        }
+    }
+
+    fn num_threads(&self) -> usize {
+        self.clients + 1
+    }
+
+    fn enabled(&self, s: &WinShared, t: usize, st: &ThreadState) -> bool {
+        if t == self.server() {
+            // Serve while anything is queued; once shutdown is
+            // observable the final (exit) step is enabled too.
+            return s.pending.load(Ordering::Relaxed) > 0 || s.stop.is_signaled();
+        }
+        if (st.pc as usize) < self.requests {
+            // Reserve: wait for a free window slot (pure load — the
+            // fabric's spin-yield, as a guard).
+            return s.win.outstanding() < s.win.limit();
+        }
+        // Client 0's extra shutdown step: all issued and all served.
+        t == 0
+            && s.issued.load(Ordering::Relaxed) == self.total()
+            && s.served.load(Ordering::Relaxed) == self.total()
+    }
+
+    fn step(&self, s: &WinShared, t: usize, st: &mut ThreadState) -> StepOutcome {
+        if t == self.server() {
+            if s.pending.load(Ordering::Relaxed) > 0 {
+                // Serve one request: fill the reply slot, then free the
+                // requester's window slot (`CommFabric::serve`).
+                s.pending.fetch_sub(1, Ordering::Relaxed);
+                s.served.fetch_add(1, Ordering::Relaxed);
+                s.win.complete();
+                return StepOutcome::Ran;
+            }
+            // `run_server` exits only on an observed stop signal.
+            assert!(s.stop.is_signaled(), "server exit requires the stop flag");
+            return StepOutcome::Done;
+        }
+        if (st.pc as usize) < self.requests {
+            // Reserve a slot and send (flushed) in one linearizable
+            // step; guarded on a free slot, so it must succeed.
+            assert!(s.win.try_reserve(), "guarded reserve cannot fail");
+            s.pending.fetch_add(1, Ordering::Relaxed);
+            s.issued.fetch_add(1, Ordering::Relaxed);
+            st.pc += 1;
+            if (st.pc as usize) == self.requests && t != 0 {
+                return StepOutcome::Done;
+            }
+            return StepOutcome::Ran;
+        }
+        // Client 0: shutdown after the run fully drained.
+        assert_eq!(s.served.load(Ordering::Relaxed), self.total());
+        s.stop.signal();
+        StepOutcome::Done
+    }
+
+    fn invariant(&self, s: &WinShared) {
+        let out = s.win.outstanding();
+        assert!(out <= s.win.limit(), "in-flight {} exceeds window {}", out, s.win.limit());
+        // Every reservation is servable (the flush-before-wait
+        // invariant): a full window always leaves the server enabled.
+        assert_eq!(out, s.pending.load(Ordering::Relaxed));
+    }
+
+    fn finale(&self, s: &WinShared) {
+        assert_eq!(s.served.load(Ordering::Relaxed), self.total());
+        assert_eq!(s.win.outstanding(), 0);
+        assert!(s.win.peak() <= s.win.limit());
+        assert!(s.stop.is_signaled(), "every schedule ends shut down");
+    }
+}
+
+// --- Configurations: default = bounded, --cfg loom = widened -------------
+
+/// (workers, tasks per worker, gate limit)
+#[cfg(not(loom))]
+const GATE_CFGS: &[(usize, usize, usize)] = &[(2, 2, 1), (3, 1, 2), (2, 3, 2)];
+#[cfg(loom)]
+const GATE_CFGS: &[(usize, usize, usize)] =
+    &[(2, 2, 1), (3, 1, 2), (2, 3, 2), (3, 2, 1), (3, 2, 2), (2, 4, 2)];
+
+/// (clients, requests per client, window limit)
+#[cfg(not(loom))]
+const WIN_CFGS: &[(usize, usize, usize)] = &[(1, 2, 1), (2, 2, 2), (2, 2, 1)];
+#[cfg(loom)]
+const WIN_CFGS: &[(usize, usize, usize)] =
+    &[(1, 2, 1), (2, 2, 2), (2, 2, 1), (2, 3, 2), (3, 2, 1), (3, 2, 4)];
+
+#[test]
+#[cfg_attr(miri, ignore)] // exhaustive replay-based DFS is too slow under Miri
+fn chunk_gate_bound_and_liveness() {
+    for &(workers, tasks, limit) in GATE_CFGS {
+        let stats = explore(&GateModel { workers, tasks, limit });
+        assert!(
+            stats.schedules > 1,
+            "model ({workers},{tasks},{limit}) must explore real interleavings"
+        );
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // exhaustive replay-based DFS is too slow under Miri
+fn chunk_gate_parked_holder_never_deadlocks() {
+    for &(workers, tasks, limit) in GATE_CFGS {
+        let stats = explore(&HoldModel { workers, tasks, limit });
+        assert!(stats.schedules >= 1);
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore)] // exhaustive replay-based DFS is too slow under Miri
+fn comm_window_bound_and_shutdown_handshake() {
+    for &(clients, requests, limit) in WIN_CFGS {
+        let stats = explore(&WindowModel { clients, requests, limit });
+        assert!(
+            stats.schedules >= 1,
+            "model ({clients},{requests},{limit}) must complete schedules"
+        );
+    }
+}

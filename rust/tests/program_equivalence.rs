@@ -15,6 +15,9 @@
 //! `KUDU_SIM_THREADS=1 KUDU_WORKERS_PER_MACHINE=1` and
 //! `KUDU_SYNC_FETCH=1`).
 
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 use kudu::config::RunConfig;
 use kudu::graph::gen::{self, Rng};
 use kudu::graph::VertexId;

@@ -3,6 +3,9 @@
 //! crate). Each property runs across a seeded sweep of cases; failures
 //! print the seed for reproduction.
 
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 use kudu::config::EngineConfig;
 use kudu::exec;
 use kudu::graph::gen::Rng;

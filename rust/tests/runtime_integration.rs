@@ -3,6 +3,9 @@
 //! Requires `make artifacts` (skips with a message otherwise) and the
 //! `pjrt` cargo feature (this whole target compiles to nothing without
 //! it — the default build carries no `xla` dependency).
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 #![cfg(feature = "pjrt")]
 
 use kudu::config::RunConfig;

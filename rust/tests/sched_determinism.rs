@@ -9,6 +9,9 @@
 //! scheduler granularity, and the sink-path determinism check (per-task
 //! sinks must reduce in the same order for any worker count).
 
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 use kudu::config::RunConfig;
 use kudu::graph::gen::{self, Rng};
 use kudu::metrics::RunStats;

@@ -12,6 +12,9 @@
 //! Also here: the object-safety / `Send` compile checks for the new
 //! traits.
 
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
 use kudu::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
 use kudu::cluster::Transport;
 use kudu::config::RunConfig;

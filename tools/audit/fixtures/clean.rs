@@ -1,0 +1,18 @@
+//! audit-fixture: engine/fixture_clean.rs
+//! Exercises each annotation path the lints accept; must audit clean.
+use std::collections::HashMap;
+
+pub fn sum_values(counts: &HashMap<u32, u64>) -> u64 {
+    let mut total = 0;
+    // audit: order-insensitive — integer addition commutes and the sum
+    // is the only output, so no reported bit depends on map order.
+    for v in counts.values() {
+        total += v;
+    }
+    total
+}
+
+pub fn head(xs: &[u32]) -> u32 {
+    // SAFETY: callers guarantee `xs` is non-empty.
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,9 @@
+//! audit-fixture: comm/window.rs
+//! Seeded violation: a *registered* coordination atomic (`stop`, whose
+//! protocol is store:release / load:acquire) accessed with an ordering
+//! outside its registered protocol. Data file — never compiled.
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn sloppy_shutdown(stop: &AtomicBool) {
+    stop.store(true, Ordering::Relaxed);
+}

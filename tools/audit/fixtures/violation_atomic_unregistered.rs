@@ -1,0 +1,15 @@
+//! audit-fixture: engine/fixture_atomic.rs
+//! Seeded violations (two): an atomic declared but not registered in
+//! atomics.toml, and an ordering used on that unregistered atomic.
+//! Data file — never compiled.
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct Rogue {
+    ticks: AtomicU32,
+}
+
+impl Rogue {
+    pub fn tick(&self) -> u32 {
+        self.ticks.fetch_add(1, Ordering::SeqCst)
+    }
+}

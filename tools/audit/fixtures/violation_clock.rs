@@ -1,0 +1,8 @@
+//! audit-fixture: engine/fixture_clock.rs
+//! Seeded violation: wall-clock read outside the registered diagnostics
+//! sites. Data file — never compiled.
+
+pub fn measure() -> std::time::Duration {
+    let t0 = std::time::Instant::now();
+    t0.elapsed()
+}

@@ -1,0 +1,8 @@
+//! audit-fixture: engine/fixture_rng.rs
+//! Seeded violation: an entropy source outside graph/gen.rs. Data
+//! file — never compiled.
+
+pub fn jitter() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

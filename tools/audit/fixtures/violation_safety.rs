@@ -1,0 +1,7 @@
+//! audit-fixture: engine/fixture_safety.rs
+//! Seeded violation: `unsafe` without a `// SAFETY:` comment. Data
+//! file — never compiled.
+
+pub fn first(xs: &[u32]) -> u32 {
+    unsafe { *xs.get_unchecked(0) }
+}

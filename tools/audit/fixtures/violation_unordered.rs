@@ -1,0 +1,13 @@
+//! audit-fixture: engine/fixture_unordered.rs
+//! Seeded violation: HashMap iteration in an accounted module without
+//! the `// audit: order-insensitive` annotation. Data file — never
+//! compiled.
+use std::collections::HashMap;
+
+pub fn charge_in_map_order(counts: HashMap<u32, u64>) -> Vec<u64> {
+    let mut charges = Vec::new();
+    for (_, c) in counts.iter() {
+        charges.push(*c);
+    }
+    charges
+}

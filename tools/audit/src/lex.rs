@@ -1,0 +1,299 @@
+//! A purpose-built Rust lexer: splits a source file into per-line *code*
+//! and *comment* channels, with string/char-literal contents collapsed,
+//! and marks the line ranges covered by `#[cfg(test)]` modules.
+//!
+//! This is not a general Rust parser — it is exactly the token-level
+//! understanding the lints need (the build image has no `syn`):
+//!
+//! * line (`//`) and nested block (`/* */`) comments, doc comments
+//!   included, routed to the comment channel;
+//! * string literals (`"…"`, `b"…"`), raw strings (`r"…"`, `r#"…"#`,
+//!   `br#"…"#`), and char/byte literals (`'x'`, `'\n'`, `b'\0'`)
+//!   collapsed to their delimiters, so nothing inside a literal can
+//!   fake or hide a token;
+//! * lifetimes (`'a`) kept distinct from char literals;
+//! * `#[cfg(test)] mod … { … }` regions brace-matched so lints can
+//!   scope themselves to shipped code.
+
+/// One file, lexed: parallel per-line channels plus test-region marks.
+pub struct LexedFile {
+    /// Code text per line — comments removed, literal contents collapsed
+    /// to their delimiters.
+    pub code: Vec<String>,
+    /// Comment text per line (contents of `//`, `///`, `//!`, `/* */`).
+    pub comment: Vec<String>,
+    /// `true` for lines inside a `#[cfg(test)] mod { … }` region.
+    pub test_line: Vec<bool>,
+}
+
+impl LexedFile {
+    pub fn num_lines(&self) -> usize {
+        self.code.len()
+    }
+
+    /// The whole code channel joined with newlines (for cross-line
+    /// token attribution), plus the byte offset of each line start so
+    /// positions map back to line numbers.
+    pub fn joined_code(&self) -> (String, Vec<usize>) {
+        let mut text = String::new();
+        let mut starts = Vec::with_capacity(self.code.len());
+        for line in &self.code {
+            starts.push(text.len());
+            text.push_str(line);
+            text.push('\n');
+        }
+        (text, starts)
+    }
+
+    /// Map a byte offset in [`LexedFile::joined_code`] text to its
+    /// 0-based line index.
+    pub fn line_of(starts: &[usize], pos: usize) -> usize {
+        match starts.binary_search(&pos) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        }
+    }
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+pub fn lex(src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code: Vec<String> = vec![String::new()];
+    let mut comment: Vec<String> = vec![String::new()];
+    let mut st = State::Code;
+    let mut i = 0usize;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, State::LineComment) {
+                st = State::Code;
+            }
+            code.push(String::new());
+            comment.push(String::new());
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied();
+        match st {
+            State::Code => {
+                if c == '/' && next == Some('/') {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.last_mut().unwrap().push('"');
+                    st = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    // Possible raw / byte string prefix.
+                    let body = if c == 'b' && next == Some('r') {
+                        i + 2
+                    } else {
+                        i + 1
+                    };
+                    let raw = c == 'r' || (c == 'b' && next == Some('r'));
+                    if raw {
+                        let mut hashes = 0usize;
+                        while chars.get(body + hashes) == Some(&'#') {
+                            hashes += 1;
+                        }
+                        if chars.get(body + hashes) == Some(&'"') {
+                            code.last_mut().unwrap().push('"');
+                            st = State::RawStr(hashes as u32);
+                            i = body + hashes + 1;
+                            continue;
+                        }
+                    }
+                    // Not a raw string after all (plain identifier, or
+                    // b"…" which the '"' arm will catch next round).
+                    code.last_mut().unwrap().push(c);
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if next == Some('\\') {
+                        // Escaped char literal: skip the escape lead-in,
+                        // then scan to the closing quote.
+                        let mut j = i + 3;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        code.last_mut().unwrap().push('\'');
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        // Simple one-char literal 'x'.
+                        code.last_mut().unwrap().push('\'');
+                        i += 3;
+                    } else {
+                        // Lifetime — keep as code.
+                        code.last_mut().unwrap().push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.last_mut().unwrap().push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.last_mut().unwrap().push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && next == Some('/') {
+                    if depth == 1 {
+                        st = State::Code;
+                    } else {
+                        st = State::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.last_mut().unwrap().push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    code.last_mut().unwrap().push('"');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let h = hashes as usize;
+                    if (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                        code.last_mut().unwrap().push('"');
+                        st = State::Code;
+                        i += 1 + h;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    let test_line = mark_test_regions(&code);
+    LexedFile { code, comment, test_line }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Brace-match every `#[cfg(test)] mod … { … }` (and
+/// `#[cfg(all(test, …))] mod`) region. A cfg(test) attribute not
+/// followed by a `mod` within a few lines is ignored (items like a
+/// test-only `use` don't open a region).
+fn mark_test_regions(code: &[String]) -> Vec<bool> {
+    let mut marks = vec![false; code.len()];
+    let mut l = 0usize;
+    while l < code.len() {
+        let line = &code[l];
+        let is_cfg_test = line.contains("#[cfg(test)]") || line.contains("#[cfg(all(test");
+        if !is_cfg_test {
+            l += 1;
+            continue;
+        }
+        // Require a `mod` item close by.
+        let has_mod = (l..code.len().min(l + 4)).any(|j| {
+            let c = code[j].trim_start();
+            c.starts_with("mod ") || c.contains(" mod ") || c.starts_with("pub mod ")
+        });
+        if !has_mod {
+            l += 1;
+            continue;
+        }
+        // Brace-match from the attribute line forward.
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = l;
+        while j < code.len() {
+            for ch in code[j].chars() {
+                if ch == '{' {
+                    depth += 1;
+                    opened = true;
+                } else if ch == '}' {
+                    depth -= 1;
+                }
+            }
+            marks[j] = true;
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        l = j + 1;
+    }
+    marks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_split_from_code() {
+        let f = lex("let x = 1; // audit: wall-clock\n/* block */ let y = 2;\n");
+        assert_eq!(f.code[0].trim(), "let x = 1;");
+        assert!(f.comment[0].contains("audit: wall-clock"));
+        assert_eq!(f.code[1].trim(), "let y = 2;");
+        assert!(f.comment[1].contains("block"));
+    }
+
+    #[test]
+    fn strings_are_collapsed() {
+        let f = lex("let s = \"HashMap // not a comment\"; let t = 1;\n");
+        assert!(!f.code[0].contains("HashMap"));
+        assert!(f.comment[0].is_empty());
+        assert!(f.code[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let r = r#\"Instant::now\"#; let c = 'x'; let e = '\\n';\n";
+        let f = lex(src);
+        let g = lex("let lt: &'a u32 = v;\n");
+        assert!(!f.code[0].contains("Instant"));
+        assert!(g.code[0].contains("&'a u32"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = lex("/* a /* b */ still comment */ let z = 3;\n");
+        assert!(f.code[0].contains("let z = 3;"));
+        assert!(f.comment[0].contains("still comment"));
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let src =
+            "fn shipped() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn shipped2() {}\n";
+        let f = lex(src);
+        assert!(!f.test_line[0]);
+        assert!(f.test_line[1] && f.test_line[2] && f.test_line[3] && f.test_line[4]);
+        assert!(!f.test_line[5]);
+    }
+
+    #[test]
+    fn cfg_test_without_mod_is_not_a_region() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn shipped() {}\n";
+        let f = lex(src);
+        assert!(f.test_line.iter().all(|&b| !b));
+    }
+}

@@ -1,0 +1,113 @@
+//! kudu-audit — the determinism-contract lint pass.
+//!
+//! The kudu runtime promises **bitwise determinism**: identical results,
+//! traffic matrices, and virtual time for any host thread count, worker
+//! count, comm window, and kernel tier. Most of that contract is pinned
+//! by equivalence tests; this crate guards the parts a test suite can
+//! only sample — sources of nondeterminism in the *code itself*:
+//!
+//! 1. **unordered-iteration** — iterating a `HashMap`/`HashSet` in an
+//!    accounted module (`engine/`, `comm/`, `exec/`, `plan/`,
+//!    `baselines/`) unless annotated `// audit: order-insensitive`;
+//! 2. **clock** — `Instant::now` / `SystemTime` anywhere but the
+//!    registered wall-clock diagnostics sites, each of which must carry
+//!    `// audit: wall-clock`;
+//! 3. **safety** — every `unsafe` block or fn needs a `// SAFETY:`
+//!    comment (or `/// # Safety` doc section);
+//! 4. **atomics** — every `Atomic*` in the lock-free runtime must be
+//!    registered in `atomics.toml` as `diagnostic` (Relaxed-only) or
+//!    `coordination` (only the registered `method:ordering` protocol);
+//! 5. **rng** — no entropy sources outside the seeded generators in
+//!    `graph/gen.rs`.
+//!
+//! Run as `cargo run -p kudu-audit` from the workspace; see
+//! `src/main.rs` for the CLI and `tests/self_test.rs` for the seeded
+//! violation fixtures that keep the pass honest.
+
+pub mod lex;
+pub mod lints;
+pub mod registry;
+
+pub use lints::Violation;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Load and validate `tools/audit/atomics.toml` under `repo_root`.
+pub fn load_registry(repo_root: &Path) -> Result<registry::Registry, String> {
+    let path = repo_root.join("tools/audit/atomics.toml");
+    let src = fs::read_to_string(&path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    registry::parse(&src)
+}
+
+/// Audit every `.rs` file under `rust/src/`, in sorted relative-path
+/// order, plus the registry staleness check.
+pub fn audit_tree(repo_root: &Path) -> Result<Vec<Violation>, String> {
+    let reg = load_registry(repo_root)?;
+    let src_root = repo_root.join("rust/src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)
+        .map_err(|e| format!("walking {}: {e}", src_root.display()))?;
+    files.sort();
+    let mut decl_seen = vec![false; reg.entries.len()];
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("collected under src_root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let lexed = lex::lex(&src);
+        out.extend(lints::lint_file(&rel, &lexed, &reg, &mut decl_seen));
+    }
+    out.extend(lints::stale_registry_entries(&reg, &decl_seen));
+    Ok(out)
+}
+
+/// Audit a single fixture file. Fixtures are data, never compiled; the
+/// first line must be `//! audit-fixture: <virtual-path>` naming the
+/// path (relative to `rust/src/`) the lints should pretend the file
+/// lives at — that is what puts a fixture in or out of the accounted
+/// modules. Returns the virtual path and the violations.
+pub fn audit_fixture(
+    repo_root: &Path,
+    fixture: &Path,
+) -> Result<(String, Vec<Violation>), String> {
+    let reg = load_registry(repo_root)?;
+    let src = fs::read_to_string(fixture)
+        .map_err(|e| format!("cannot read {}: {e}", fixture.display()))?;
+    let first = src.lines().next().unwrap_or("");
+    let rel = first
+        .strip_prefix("//! audit-fixture:")
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| {
+            format!(
+                "{}: fixtures must start with `//! audit-fixture: <virtual-path>`",
+                fixture.display()
+            )
+        })?
+        .to_string();
+    let lexed = lex::lex(&src);
+    // Fixtures skip the staleness check — a fixture exercises one
+    // violation, not the whole registry.
+    let mut decl_seen = vec![true; reg.entries.len()];
+    let violations = lints::lint_file(&rel, &lexed, &reg, &mut decl_seen);
+    Ok((rel, violations))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,632 @@
+//! The five determinism-contract lints. Each operates on a
+//! [`LexedFile`] (comments and literal contents already separated — see
+//! [`crate::lex`]) plus the file's path relative to `rust/src/`.
+//!
+//! Annotation vocabulary (checked on the flagged line or up to two
+//! comment lines above it):
+//!
+//! * `// audit: order-insensitive` — this HashMap/HashSet iteration
+//!   provably cannot influence any reported bit.
+//! * `// audit: wall-clock` — this clock read feeds a registered
+//!   wall-clock diagnostic (`wall_s`, `comm_stall_s`), outside the
+//!   determinism contract.
+//! * `// SAFETY:` (or a `/// # Safety` doc section) — the contract
+//!   discharged by an `unsafe` block / required of an `unsafe fn`'s
+//!   callers.
+
+use crate::lex::LexedFile;
+use crate::registry::{Registry, Role};
+use std::fmt;
+
+pub struct Violation {
+    /// Path relative to `rust/src/`.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rust/src/{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// Modules where iteration order and atomic protocols are part of the
+/// bitwise determinism contract (virtual time + results accounting).
+const ACCOUNTED: &[&str] = &["engine/", "comm/", "exec/", "plan/", "baselines/"];
+
+/// Files whose wall-clock reads feed registered diagnostics. Everything
+/// else in the tree is virtual-time-pure by contract.
+const CLOCK_SITES: &[(&str, &str)] = &[
+    ("engine/mod.rs", "RunStats::wall_s"),
+    ("session.rs", "RunStats::wall_s (session jobs)"),
+    ("bench.rs", "bench-harness wall timing"),
+    ("baselines/gthinker.rs", "RunStats::wall_s"),
+    ("baselines/replicated.rs", "RunStats::wall_s"),
+    ("baselines/moving_comp.rs", "RunStats::wall_s"),
+    ("baselines/single_machine.rs", "RunStats::wall_s"),
+    ("comm/mod.rs", "RunStats::comm_stall_s"),
+];
+
+fn accounted(rel: &str) -> bool {
+    ACCOUNTED.iter().any(|p| rel.starts_with(p))
+}
+
+fn atomic_scope(rel: &str) -> bool {
+    accounted(rel) || rel == "par.rs"
+}
+
+fn ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of `token` in `s` with non-identifier characters (or
+/// edges) on both sides.
+fn find_token(s: &str, token: &str) -> Vec<usize> {
+    let bytes = s.as_bytes();
+    s.match_indices(token)
+        .filter(|&(i, _)| {
+            let before_ok = i == 0 || !ident_byte(bytes[i - 1]);
+            let end = i + token.len();
+            let after_ok = end >= bytes.len() || !ident_byte(bytes[end]);
+            before_ok && after_ok
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Does the flagged line (or up to two lines directly above) carry the
+/// annotation tag in a comment?
+fn annotated(lexed: &LexedFile, line: usize, tag: &str) -> bool {
+    (line.saturating_sub(2)..=line).any(|j| lexed.comment[j].contains(tag))
+}
+
+/// Lint a single file. `decl_seen[i]` is set when registry entry `i`
+/// matches a declaration (the tree pass uses it for staleness).
+pub fn lint_file(
+    rel: &str,
+    lexed: &LexedFile,
+    reg: &Registry,
+    decl_seen: &mut [bool],
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    lint_unordered_iteration(rel, lexed, &mut out);
+    lint_clocks(rel, lexed, &mut out);
+    lint_safety(rel, lexed, &mut out);
+    lint_atomics(rel, lexed, reg, decl_seen, &mut out);
+    lint_rng(rel, lexed, &mut out);
+    out
+}
+
+// --- lint 1: unordered iteration ----------------------------------------
+
+const ITER_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".retain(",
+];
+
+fn lint_unordered_iteration(rel: &str, lexed: &LexedFile, out: &mut Vec<Violation>) {
+    if !accounted(rel) {
+        return;
+    }
+    // Pass 1: names declared with a HashMap/HashSet type (including
+    // references — iterating a borrowed map is just as unordered).
+    let mut names: Vec<String> = Vec::new();
+    for (l, line) in lexed.code.iter().enumerate() {
+        if lexed.test_line[l] || line.contains("use ") {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            for pos in find_token(line, ty) {
+                if let Some(name) = hash_decl_name(line, pos) {
+                    if !names.contains(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // Pass 2: iteration over any declared name.
+    for (l, line) in lexed.code.iter().enumerate() {
+        if lexed.test_line[l] {
+            continue;
+        }
+        for name in &names {
+            let mut hit = false;
+            for pos in find_token(line, name) {
+                let after = &line[pos + name.len()..];
+                if ITER_METHODS.iter().any(|m| after.starts_with(m)) {
+                    hit = true;
+                }
+            }
+            if !hit && line.contains("for ") {
+                if let Some(inpos) = line.find(" in ") {
+                    if !find_token(&line[inpos..], name).is_empty() {
+                        hit = true;
+                    }
+                }
+            }
+            if hit && !annotated(lexed, l, "audit: order-insensitive") {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: l + 1,
+                    lint: "unordered-iteration",
+                    msg: format!(
+                        "iteration over unordered `{name}` (HashMap/HashSet) in an accounted \
+                         module — charge order is part of the bitwise contract; use a BTreeMap/\
+                         sorted Vec, or annotate `// audit: order-insensitive` with a proof \
+                         sketch if no reported bit can depend on the order"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Name a HashMap/HashSet occurrence declares, if it is a declaration:
+/// `name: [&[mut]] HashMap<…>` (field / param / let type) or
+/// `let [mut] name = HashMap::new()`.
+fn hash_decl_name(line: &str, pos: usize) -> Option<String> {
+    let seg = segment_before(line, pos);
+    if let Some(eq) = seg.rfind('=') {
+        if let Some(name) = last_ident(&seg[..eq]) {
+            return Some(name);
+        }
+    }
+    if let Some(colon) = first_type_colon(seg) {
+        return last_ident(&seg[..colon]);
+    }
+    None
+}
+
+/// The slice of `line` before `pos`, cut at the last statement-ish
+/// delimiter so unrelated earlier text can't confuse name extraction.
+fn segment_before(line: &str, pos: usize) -> &str {
+    let seg = &line[..pos];
+    match seg.rfind([',', '(', '{', ';']) {
+        Some(cut) => &seg[cut + 1..],
+        None => seg,
+    }
+}
+
+/// First `:` that is a type annotation (not part of `::`).
+fn first_type_colon(seg: &str) -> Option<usize> {
+    let b = seg.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b':' {
+            if i + 1 < b.len() && b[i + 1] == b':' {
+                i += 2;
+                continue;
+            }
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Trailing identifier of `s` (skipping trailing whitespace), if any.
+fn last_ident(s: &str) -> Option<String> {
+    let b = s.trim_end().as_bytes();
+    if b.is_empty() || !ident_byte(b[b.len() - 1]) {
+        return None;
+    }
+    let mut start = b.len();
+    while start > 0 && ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    let name = std::str::from_utf8(&b[start..]).ok()?.to_string();
+    if name == "mut" || name == "let" || name.chars().next()?.is_ascii_digit() {
+        return None;
+    }
+    Some(name)
+}
+
+// --- lint 2: clocks ------------------------------------------------------
+
+fn lint_clocks(rel: &str, lexed: &LexedFile, out: &mut Vec<Violation>) {
+    for (l, line) in lexed.code.iter().enumerate() {
+        let has_clock = (!find_token(line, "SystemTime").is_empty()
+            || line.contains("Instant::now"))
+            && !line.contains("use ");
+        if !has_clock {
+            continue;
+        }
+        let registered = CLOCK_SITES.iter().any(|&(f, _)| f == rel);
+        if !registered {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "clock",
+                msg: "wall-clock read outside the registered diagnostics sites — results and \
+                      virtual time must be clock-free (register the site in kudu-audit's \
+                      CLOCK_SITES if it feeds a new diagnostic)"
+                    .to_string(),
+            });
+        } else if !annotated(lexed, l, "audit: wall-clock") {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "clock",
+                msg: "registered clock site missing its `// audit: wall-clock` annotation"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// --- lint 3: SAFETY comments ---------------------------------------------
+
+fn lint_safety(rel: &str, lexed: &LexedFile, out: &mut Vec<Violation>) {
+    for (l, line) in lexed.code.iter().enumerate() {
+        if find_token(line, "unsafe").is_empty() {
+            continue;
+        }
+        if has_safety_comment(lexed, l) {
+            continue;
+        }
+        out.push(Violation {
+            file: rel.to_string(),
+            line: l + 1,
+            lint: "safety",
+            msg: "`unsafe` without a `// SAFETY:` comment (or `/// # Safety` doc section) \
+                  stating the discharged/required contract"
+                .to_string(),
+        });
+    }
+}
+
+/// A `// SAFETY:` on the same line, or reachable by walking up through
+/// comment/attribute/blank lines (doc `# Safety` sections count — the
+/// attribute walk skips `#[target_feature]` between docs and fn).
+fn has_safety_comment(lexed: &LexedFile, line: usize) -> bool {
+    let matches_tag =
+        |j: usize| lexed.comment[j].contains("SAFETY:") || lexed.comment[j].contains("# Safety");
+    if matches_tag(line) {
+        return true;
+    }
+    let mut j = line;
+    while j > 0 && line - j < 16 {
+        j -= 1;
+        if matches_tag(j) {
+            return true;
+        }
+        let code = lexed.code[j].trim();
+        let walkable = code.is_empty() || code.starts_with("#[") || code.starts_with("#!");
+        if !walkable {
+            return false;
+        }
+    }
+    false
+}
+
+// --- lint 4: atomics registry --------------------------------------------
+
+const ATOMIC_TYPES: &[&str] = &[
+    "AtomicBool",
+    "AtomicUsize",
+    "AtomicIsize",
+    "AtomicU8",
+    "AtomicU16",
+    "AtomicU32",
+    "AtomicU64",
+    "AtomicI8",
+    "AtomicI16",
+    "AtomicI32",
+    "AtomicI64",
+    "AtomicPtr",
+];
+
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_max",
+    "fetch_min",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_nand",
+    "fetch_update",
+];
+
+fn lint_atomics(
+    rel: &str,
+    lexed: &LexedFile,
+    reg: &Registry,
+    decl_seen: &mut [bool],
+    out: &mut Vec<Violation>,
+) {
+    if !atomic_scope(rel) {
+        return;
+    }
+    // Part A: every declaration must be registered.
+    for (l, line) in lexed.code.iter().enumerate() {
+        if lexed.test_line[l] || line.contains("use ") {
+            continue;
+        }
+        for ty in ATOMIC_TYPES {
+            for pos in find_token(line, ty) {
+                match atomic_decl(line, pos) {
+                    AtomicDecl::Reference | AtomicDecl::NotADecl => {}
+                    AtomicDecl::Unnamed => out.push(Violation {
+                        file: rel.to_string(),
+                        line: l + 1,
+                        lint: "atomics",
+                        msg: format!(
+                            "unnamed {ty} declaration (tuple field?) — give it a named field \
+                             so it can be registered in tools/audit/atomics.toml"
+                        ),
+                    }),
+                    AtomicDecl::Named(name) => match reg.lookup_idx(&name, rel) {
+                        None => out.push(Violation {
+                            file: rel.to_string(),
+                            line: l + 1,
+                            lint: "atomics",
+                            msg: format!(
+                                "atomic `{name}` is not registered in tools/audit/atomics.toml \
+                                 (declare it with role `diagnostic` or `coordination` and a \
+                                 justification note)"
+                            ),
+                        }),
+                        Some(i) => {
+                            let entry = &reg.entries[i];
+                            if entry.ty != *ty {
+                                out.push(Violation {
+                                    file: rel.to_string(),
+                                    line: l + 1,
+                                    lint: "atomics",
+                                    msg: format!(
+                                        "atomic `{name}` declared as {ty} but registered as {}",
+                                        entry.ty
+                                    ),
+                                });
+                            }
+                            decl_seen[i] = true;
+                        }
+                    },
+                }
+            }
+        }
+    }
+    // Part B: every Ordering:: use must match the registered protocol.
+    let (text, starts) = lexed.joined_code();
+    for (pos, _) in text.match_indices("Ordering::") {
+        let l = LexedFile::line_of(&starts, pos);
+        if lexed.test_line[l] {
+            continue;
+        }
+        let ordering = ident_after(&text, pos + "Ordering::".len()).to_ascii_lowercase();
+        let Some((method, receiver)) = attribute_ordering(&text, pos) else {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "atomics",
+                msg: format!(
+                    "cannot attribute `Ordering::{}` to an atomic method call",
+                    ident_after(&text, pos + "Ordering::".len())
+                ),
+            });
+            continue;
+        };
+        match reg.lookup(&receiver, rel) {
+            None => out.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "atomics",
+                msg: format!(
+                    "`{receiver}.{method}` uses Ordering::{} but `{receiver}` is not registered \
+                     in tools/audit/atomics.toml for this file",
+                    ident_after(&text, pos + "Ordering::".len())
+                ),
+            }),
+            Some(entry) => match entry.role {
+                Role::Diagnostic => {
+                    if ordering != "relaxed" {
+                        out.push(Violation {
+                            file: rel.to_string(),
+                            line: l + 1,
+                            lint: "atomics",
+                            msg: format!(
+                                "diagnostic atomic `{receiver}` must use Relaxed everywhere \
+                                 (found {method}:{ordering}); stronger orderings claim \
+                                 coordination the registry doesn't record"
+                            ),
+                        });
+                    }
+                }
+                Role::Coordination => {
+                    let allowed = entry
+                        .ops
+                        .iter()
+                        .any(|(m, o)| m == &method && o == &ordering);
+                    if !allowed {
+                        let protocol: Vec<String> =
+                            entry.ops.iter().map(|(m, o)| format!("{m}:{o}")).collect();
+                        out.push(Violation {
+                            file: rel.to_string(),
+                            line: l + 1,
+                            lint: "atomics",
+                            msg: format!(
+                                "`{receiver}.{method}` with Ordering::{} is outside the \
+                                 registered protocol [{}]",
+                                ident_after(&text, pos + "Ordering::".len()),
+                                protocol.join(", ")
+                            ),
+                        });
+                    }
+                }
+            },
+        }
+    }
+}
+
+enum AtomicDecl {
+    /// `name: AtomicX` or `let name = AtomicX::new(..)`.
+    Named(String),
+    /// `&AtomicX` — a borrow of an atomic declared elsewhere.
+    Reference,
+    /// A declaration position with no name to register.
+    Unnamed,
+    /// Not a declaration (e.g. a bare `AtomicX::new` expression).
+    NotADecl,
+}
+
+fn atomic_decl(line: &str, pos: usize) -> AtomicDecl {
+    let seg = segment_before(line, pos);
+    if let Some(eq) = seg.rfind('=') {
+        // `let name = AtomicX::new(..)` (also covers `=>` arms, whose
+        // arrow leaves no trailing ident and falls through).
+        return match last_ident(&seg[..eq]) {
+            Some(name) => AtomicDecl::Named(name),
+            None => AtomicDecl::NotADecl,
+        };
+    }
+    if let Some(colon) = first_type_colon(seg) {
+        let between = &seg[colon + 1..];
+        if between.contains('&') {
+            return AtomicDecl::Reference;
+        }
+        return match last_ident(&seg[..colon]) {
+            Some(name) => AtomicDecl::Named(name),
+            None => AtomicDecl::Unnamed,
+        };
+    }
+    let trimmed = seg.trim_end();
+    if trimmed.ends_with('(') || line[..pos].trim_end().ends_with('(') {
+        // Tuple-struct field like `struct Flag(AtomicBool)`.
+        if line.contains("struct ") {
+            return AtomicDecl::Unnamed;
+        }
+    }
+    AtomicDecl::NotADecl
+}
+
+/// Identifier starting at byte offset `at`.
+fn ident_after(text: &str, at: usize) -> String {
+    let b = text.as_bytes();
+    let mut end = at;
+    while end < b.len() && ident_byte(b[end]) {
+        end += 1;
+    }
+    text[at..end].to_string()
+}
+
+/// Walk back from an `Ordering::` occurrence to the atomic method call
+/// it parameterises: the nearest preceding `.method(` token, then the
+/// receiver identifier before the dot (skipping whitespace, so chained
+/// multi-line receivers like `.stall_ns\n.fetch_add(` resolve).
+fn attribute_ordering(text: &str, pos: usize) -> Option<(String, String)> {
+    let window_start = pos.saturating_sub(400);
+    let window = &text[window_start..pos];
+    let mut best: Option<(usize, &str)> = None;
+    for m in ATOMIC_METHODS {
+        let pat = format!(".{m}(");
+        if let Some(i) = window.rfind(&pat) {
+            if best.map_or(true, |(bi, _)| i > bi) {
+                best = Some((i, m));
+            }
+        }
+    }
+    let (dot, method) = best?;
+    let before = window[..dot].as_bytes();
+    let mut j = before.len();
+    while j > 0 && (before[j - 1] as char).is_whitespace() {
+        j -= 1;
+    }
+    let mut start = j;
+    while start > 0 && ident_byte(before[start - 1]) {
+        start -= 1;
+    }
+    if start == j {
+        return None;
+    }
+    let receiver = std::str::from_utf8(&before[start..j]).ok()?.to_string();
+    Some((method.to_string(), receiver))
+}
+
+// --- lint 5: RNG / entropy ----------------------------------------------
+
+const RNG_TOKENS: &[&str] = &[
+    "thread_rng",
+    "OsRng",
+    "from_entropy",
+    "getrandom",
+    "fastrand",
+    "RandomState",
+    "SmallRng",
+    "StdRng",
+];
+
+fn lint_rng(rel: &str, lexed: &LexedFile, out: &mut Vec<Violation>) {
+    if rel == "graph/gen.rs" {
+        // The seeded generators live here — the one sanctioned RNG home.
+        return;
+    }
+    for (l, line) in lexed.code.iter().enumerate() {
+        let mut hit: Option<&str> = None;
+        for tok in RNG_TOKENS {
+            if !find_token(line, tok).is_empty() {
+                hit = Some(tok);
+                break;
+            }
+        }
+        if hit.is_none() {
+            for pos in find_token(line, "rand") {
+                if line[pos + 4..].starts_with("::") {
+                    hit = Some("rand::");
+                    break;
+                }
+            }
+        }
+        if let Some(tok) = hit {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "rng",
+                msg: format!(
+                    "entropy source `{tok}` outside graph/gen.rs — all randomness must flow \
+                     from the seeded generators so runs are reproducible"
+                ),
+            });
+        }
+    }
+}
+
+/// Tree-level staleness check: registry entries that matched no
+/// declaration anywhere are dead weight (or typos) and fail the audit.
+pub fn stale_registry_entries(reg: &Registry, decl_seen: &[bool]) -> Vec<Violation> {
+    reg.entries
+        .iter()
+        .zip(decl_seen)
+        .filter(|(_, &seen)| !seen)
+        .map(|(e, _)| Violation {
+            file: e.files.first().cloned().unwrap_or_default(),
+            line: 0,
+            lint: "atomics",
+            msg: format!(
+                "stale registry entry: atomic `{}` ({}) matched no declaration in the tree",
+                e.name,
+                e.files.join(", ")
+            ),
+        })
+        .collect()
+}

@@ -1,0 +1,154 @@
+//! CLI for the kudu-audit determinism-contract lint pass.
+//!
+//! ```text
+//! cargo run -p kudu-audit                 # audit rust/src of this repo
+//! cargo run -p kudu-audit -- --root DIR   # audit another checkout
+//! cargo run -p kudu-audit -- --fixture F  # lint one fixture file
+//! cargo run -p kudu-audit -- --self-test  # fixtures trip, clean passes
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or internal error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn default_root() -> PathBuf {
+    // tools/audit/ → workspace root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root = default_root();
+    let mut fixtures: Vec<PathBuf> = Vec::new();
+    let mut self_test = false;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => match it.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a path"),
+            },
+            "--fixture" => match it.next() {
+                Some(v) => fixtures.push(PathBuf::from(v)),
+                None => return usage("--fixture needs a file"),
+            },
+            "--self-test" => self_test = true,
+            "--help" | "-h" => {
+                eprintln!(
+                    "kudu-audit [--root DIR] [--fixture FILE]... [--self-test]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    if self_test {
+        return run_self_test(&root);
+    }
+    if !fixtures.is_empty() {
+        let mut total = 0usize;
+        for f in &fixtures {
+            match kudu_audit::audit_fixture(&root, f) {
+                Ok((rel, violations)) => {
+                    for v in &violations {
+                        println!("{v}    [fixture {} as {rel}]", f.display());
+                    }
+                    total += violations.len();
+                }
+                Err(e) => {
+                    eprintln!("kudu-audit: {e}");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+        return finish(total);
+    }
+    match kudu_audit::audit_tree(&root) {
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            finish(violations.len())
+        }
+        Err(e) => {
+            eprintln!("kudu-audit: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn finish(violations: usize) -> ExitCode {
+    if violations == 0 {
+        println!("kudu-audit: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("kudu-audit: {violations} violation(s)");
+        ExitCode::from(1)
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("kudu-audit: {msg} (see --help)");
+    ExitCode::from(2)
+}
+
+/// Prove the pass is live: every `fixtures/violation_*.rs` must trip at
+/// least one lint, every `fixtures/clean*.rs` must come back clean.
+fn run_self_test(root: &std::path::Path) -> ExitCode {
+    let dir = root.join("tools/audit/fixtures");
+    let mut entries: Vec<PathBuf> = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd.filter_map(|e| e.ok().map(|e| e.path())).collect(),
+        Err(e) => {
+            eprintln!("kudu-audit: cannot read {}: {e}", dir.display());
+            return ExitCode::from(2);
+        }
+    };
+    entries.sort();
+    let mut failures = 0usize;
+    let mut checked = 0usize;
+    for path in entries {
+        let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+        if !name.ends_with(".rs") {
+            continue;
+        }
+        let expect_violation = name.starts_with("violation_");
+        let expect_clean = name.starts_with("clean");
+        if !expect_violation && !expect_clean {
+            continue;
+        }
+        checked += 1;
+        match kudu_audit::audit_fixture(root, &path) {
+            Ok((_, violations)) => {
+                if expect_violation && violations.is_empty() {
+                    println!("FAIL {name}: expected >=1 violation, lint pass saw none");
+                    failures += 1;
+                } else if expect_clean && !violations.is_empty() {
+                    println!("FAIL {name}: expected clean, got:");
+                    for v in &violations {
+                        println!("    {v}");
+                    }
+                    failures += 1;
+                } else {
+                    println!("ok   {name} ({} violation(s))", violations.len());
+                }
+            }
+            Err(e) => {
+                println!("FAIL {name}: {e}");
+                failures += 1;
+            }
+        }
+    }
+    if checked == 0 {
+        eprintln!("kudu-audit: no fixtures found in {}", dir.display());
+        return ExitCode::from(2);
+    }
+    if failures == 0 {
+        println!("kudu-audit self-test: {checked} fixture(s) ok");
+        ExitCode::SUCCESS
+    } else {
+        println!("kudu-audit self-test: {failures}/{checked} fixture(s) FAILED");
+        ExitCode::from(1)
+    }
+}

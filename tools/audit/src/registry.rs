@@ -1,0 +1,263 @@
+//! Reader for `tools/audit/atomics.toml` — the checked-in registry every
+//! `Atomic*` in the accounted modules must appear in.
+//!
+//! The parser handles exactly the TOML subset the registry uses (no
+//! external crates in the build image): `[[atomic]]` array-of-tables
+//! headers, `key = "string"` pairs, and single-line
+//! `key = ["a", "b"]` string arrays. Anything else is a hard error —
+//! a registry that fails to parse fails the audit.
+
+/// How an atomic participates in the runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Pure observability counter/gauge outside the determinism
+    /// contract: every access must be `Relaxed` (anything stronger is
+    /// claiming coordination the registry doesn't record).
+    Diagnostic,
+    /// Part of a synchronization protocol: only the registered
+    /// `method:ordering` pairs are allowed.
+    Coordination,
+}
+
+/// One registered atomic.
+#[derive(Clone, Debug)]
+pub struct AtomicEntry {
+    /// Variable / field name the atomic is declared as.
+    pub name: String,
+    /// Files (relative to `rust/src/`) where this atomic is declared
+    /// and/or accessed through a reference.
+    pub files: Vec<String>,
+    /// `AtomicUsize`, `AtomicBool`, …
+    pub ty: String,
+    pub role: Role,
+    /// For `coordination`: allowed `(method, ordering)` pairs, both
+    /// lowercase (e.g. `("store", "release")`).
+    pub ops: Vec<(String, String)>,
+    /// Human justification — why these orderings are correct.
+    pub note: String,
+}
+
+pub struct Registry {
+    pub entries: Vec<AtomicEntry>,
+}
+
+impl Registry {
+    /// Look up the entry covering atomic `name` in file `rel`.
+    pub fn lookup(&self, name: &str, rel: &str) -> Option<&AtomicEntry> {
+        self.lookup_idx(name, rel).map(|i| &self.entries[i])
+    }
+
+    /// Index of the entry covering atomic `name` in file `rel`.
+    pub fn lookup_idx(&self, name: &str, rel: &str) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.name == name && e.files.iter().any(|f| f == rel))
+    }
+}
+
+const ORDERINGS: &[&str] = &["relaxed", "acquire", "release", "acqrel", "seqcst"];
+
+pub fn parse(src: &str) -> Result<Registry, String> {
+    let mut entries: Vec<AtomicEntry> = Vec::new();
+    let mut cur: Option<PartialEntry> = None;
+    for (idx, raw_line) in src.lines().enumerate() {
+        let line = strip_comment(raw_line).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[atomic]]" {
+            if let Some(p) = cur.take() {
+                entries.push(p.finish(idx)?);
+            }
+            cur = Some(PartialEntry::default());
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(format!("atomics.toml:{}: expected `key = value`", idx + 1));
+        };
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        let Some(p) = cur.as_mut() else {
+            return Err(format!("atomics.toml:{}: `{key}` outside an [[atomic]] entry", idx + 1));
+        };
+        match key {
+            "name" => p.name = Some(parse_string(value, idx)?),
+            "type" => p.ty = Some(parse_string(value, idx)?),
+            "note" => p.note = Some(parse_string(value, idx)?),
+            "role" => p.role = Some(parse_string(value, idx)?),
+            "files" => p.files = Some(parse_array(value, idx)?),
+            "ops" => p.ops = Some(parse_array(value, idx)?),
+            other => {
+                return Err(format!("atomics.toml:{}: unknown key `{other}`", idx + 1));
+            }
+        }
+    }
+    if let Some(p) = cur.take() {
+        entries.push(p.finish(src.lines().count())?);
+    }
+    if entries.is_empty() {
+        return Err("atomics.toml: registry is empty".to_string());
+    }
+    Ok(Registry { entries })
+}
+
+#[derive(Default)]
+struct PartialEntry {
+    name: Option<String>,
+    files: Option<Vec<String>>,
+    ty: Option<String>,
+    role: Option<String>,
+    ops: Option<Vec<String>>,
+    note: Option<String>,
+}
+
+impl PartialEntry {
+    fn finish(self, line: usize) -> Result<AtomicEntry, String> {
+        let at = |what: &str| format!("atomics.toml (entry ending near line {line}): {what}");
+        let name = self.name.ok_or_else(|| at("missing `name`"))?;
+        let files = self.files.ok_or_else(|| at("missing `files`"))?;
+        let ty = self.ty.ok_or_else(|| at("missing `type`"))?;
+        let role_s = self.role.ok_or_else(|| at("missing `role`"))?;
+        let note = self.note.ok_or_else(|| at("missing `note` (justify the orderings)"))?;
+        if files.is_empty() {
+            return Err(at("`files` must not be empty"));
+        }
+        let role = match role_s.as_str() {
+            "diagnostic" => Role::Diagnostic,
+            "coordination" => Role::Coordination,
+            other => {
+                return Err(at(&format!(
+                    "role must be `diagnostic` or `coordination`, got `{other}`"
+                )))
+            }
+        };
+        let mut ops = Vec::new();
+        match role {
+            Role::Diagnostic => {
+                if self.ops.is_some() {
+                    return Err(at("`ops` is only for coordination atomics \
+                                   (diagnostic ⇒ every access Relaxed)"));
+                }
+            }
+            Role::Coordination => {
+                let raw = self.ops.ok_or_else(|| {
+                    at("coordination atomics must register their `ops` protocol")
+                })?;
+                if raw.is_empty() {
+                    return Err(at("`ops` must not be empty"));
+                }
+                for op in raw {
+                    let Some((method, ordering)) = op.split_once(':') else {
+                        return Err(at(&format!("op `{op}` must be `method:ordering`")));
+                    };
+                    let ordering = ordering.to_ascii_lowercase();
+                    if !ORDERINGS.contains(&ordering.as_str()) {
+                        return Err(at(&format!("unknown ordering `{ordering}` in `{op}`")));
+                    }
+                    ops.push((method.to_string(), ordering));
+                }
+            }
+        }
+        Ok(AtomicEntry { name, files, ty, role, ops, note })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(value: &str, idx: usize) -> Result<String, String> {
+    let v = value.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("atomics.toml:{}: expected a quoted string, got `{v}`", idx + 1))
+    }
+}
+
+fn parse_array(value: &str, idx: usize) -> Result<Vec<String>, String> {
+    let v = value.trim();
+    if !(v.starts_with('[') && v.ends_with(']')) {
+        return Err(format!("atomics.toml:{}: expected a single-line array, got `{v}`", idx + 1));
+    }
+    let inner = &v[1..v.len() - 1];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse_string(part, idx)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+# comment
+[[atomic]]
+name = "halt"
+files = ["engine/mod.rs", "engine/task.rs"]
+type = "AtomicBool"
+role = "coordination"
+ops = ["store:release", "load:acquire"]
+note = "why"
+
+[[atomic]]
+name = "steals"
+files = ["engine/sched.rs"]
+type = "AtomicU64"
+role = "diagnostic"
+note = "why"
+"#;
+
+    #[test]
+    fn parses_both_roles() {
+        let reg = parse(GOOD).unwrap();
+        assert_eq!(reg.entries.len(), 2);
+        let halt = reg.lookup("halt", "engine/task.rs").unwrap();
+        assert_eq!(halt.role, Role::Coordination);
+        assert!(halt.ops.contains(&("store".to_string(), "release".to_string())));
+        assert!(reg.lookup("halt", "comm/mod.rs").is_none());
+        assert_eq!(reg.lookup("steals", "engine/sched.rs").unwrap().role, Role::Diagnostic);
+    }
+
+    #[test]
+    fn coordination_requires_ops() {
+        let bad = concat!(
+            "[[atomic]]\nname = \"x\"\nfiles = [\"a.rs\"]\ntype = \"AtomicBool\"\n",
+            "role = \"coordination\"\nnote = \"n\"\n"
+        );
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn diagnostic_rejects_ops() {
+        let bad = concat!(
+            "[[atomic]]\nname = \"x\"\nfiles = [\"a.rs\"]\ntype = \"AtomicU64\"\n",
+            "role = \"diagnostic\"\nops = [\"load:relaxed\"]\nnote = \"n\"\n"
+        );
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn unknown_ordering_rejected() {
+        let bad = concat!(
+            "[[atomic]]\nname = \"x\"\nfiles = [\"a.rs\"]\ntype = \"AtomicBool\"\n",
+            "role = \"coordination\"\nops = [\"load:consume\"]\nnote = \"n\"\n"
+        );
+        assert!(parse(bad).is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! The audit pass audits itself: every seeded violation fixture must
+//! trip its lint (proving the pass is live, not vacuously green), the
+//! clean fixture must pass, and the real tree under `rust/src/` must be
+//! clean — so `cargo test -p kudu-audit` enforces the determinism
+//! contract end to end.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn fixture_lints(name: &str) -> Vec<String> {
+    let path = repo_root().join("tools/audit/fixtures").join(name);
+    let (_, violations) = kudu_audit::audit_fixture(&repo_root(), &path)
+        .unwrap_or_else(|e| panic!("{name}: {e}"));
+    violations.iter().map(|v| v.lint.to_string()).collect()
+}
+
+#[test]
+fn unordered_fixture_trips() {
+    assert!(fixture_lints("violation_unordered.rs").contains(&"unordered-iteration".into()));
+}
+
+#[test]
+fn clock_fixture_trips() {
+    assert!(fixture_lints("violation_clock.rs").contains(&"clock".into()));
+}
+
+#[test]
+fn safety_fixture_trips() {
+    assert!(fixture_lints("violation_safety.rs").contains(&"safety".into()));
+}
+
+#[test]
+fn unregistered_atomic_fixture_trips_twice() {
+    // One error for the unregistered declaration, one for the ordering
+    // use on it.
+    let lints = fixture_lints("violation_atomic_unregistered.rs");
+    assert_eq!(lints.iter().filter(|l| *l == "atomics").count(), 2, "got {lints:?}");
+}
+
+#[test]
+fn off_protocol_ordering_fixture_trips_exactly_once() {
+    // `stop` IS registered — only the Relaxed store is outside its
+    // store:release/load:acquire protocol.
+    let lints = fixture_lints("violation_atomic_ordering.rs");
+    assert_eq!(lints, vec!["atomics".to_string()]);
+}
+
+#[test]
+fn rng_fixture_trips() {
+    assert!(fixture_lints("violation_rng.rs").contains(&"rng".into()));
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let lints = fixture_lints("clean.rs");
+    assert!(lints.is_empty(), "clean fixture flagged: {lints:?}");
+}
+
+#[test]
+fn registry_parses_and_covers_both_roles() {
+    let reg = kudu_audit::load_registry(&repo_root()).expect("atomics.toml must parse");
+    use kudu_audit::registry::Role;
+    assert!(reg.entries.iter().any(|e| e.role == Role::Diagnostic));
+    assert!(reg.entries.iter().any(|e| e.role == Role::Coordination));
+    // The protocols satellite: the halt handshake and both model-checked
+    // protocols must be registered.
+    for (name, file) in [
+        ("halt", "engine/task.rs"),
+        ("live", "engine/backpressure.rs"),
+        ("count", "comm/window.rs"),
+        ("stop", "comm/window.rs"),
+    ] {
+        let e = reg
+            .lookup(name, file)
+            .unwrap_or_else(|| panic!("`{name}` in {file} missing from atomics.toml"));
+        assert_eq!(e.role, Role::Coordination);
+    }
+}
+
+#[test]
+fn whole_tree_is_clean() {
+    let violations = kudu_audit::audit_tree(&repo_root()).expect("tree audit must run");
+    assert!(
+        violations.is_empty(),
+        "rust/src violates the determinism contract:\n{}",
+        violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
