@@ -140,8 +140,10 @@ fn main() {
          async_reduces_exposed_comm {reduces}"
     );
 
+    let bpe = g.bytes_per_edge();
     let json = format!(
         "{{\n  \"bench\": \"comm\",\n  \"workload\": \"tc_rmat12_{MACHINES}machines\",\n  \
+         \"bytes_per_edge\": {bpe:.4},\n  \
          \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
          \"count\": {},\n  \"network_bytes\": {},\n  \"deterministic\": true,\n  \
          \"modes\": [\n{}\n  ],\n  \

@@ -44,6 +44,9 @@ fn main() {
     println!("intersect bench: simd::available() = {simd_on}");
     let mut group = Group::new("intersect");
     group.sample_size(30);
+    // Kernel microbench over raw u32 lists: 4 bytes per element by
+    // construction (no storage tier in play).
+    group.meta_bytes_per_edge(4.0);
 
     // (small, big, overlap, tag). Balanced dense shapes first (the SIMD
     // target), then the historical unbalanced ratios (the gallop target),

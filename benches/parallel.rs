@@ -136,8 +136,10 @@ fn main() {
          session {session_s:.4}s  speedup {part_speedup:.2}x"
     );
 
+    let bpe = g.bytes_per_edge();
     let json = format!(
         "{{\n  \"bench\": \"parallel_speedup\",\n  \"workload\": \"tc_rmat13_{MACHINES}machines\",\n  \
+         \"bytes_per_edge\": {bpe:.4},\n  \
          \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
          \"serial_median_s\": {serial_s},\n  \"parallel_median_s\": {parallel_s},\n  \
          \"speedup\": {speedup},\n  \"count\": {},\n  \"deterministic\": true,\n  \

@@ -133,8 +133,10 @@ fn main() {
 
     let counts: Vec<String> =
         fused.stats.counts.iter().map(|c| c.to_string()).collect();
+    let bpe = g.bytes_per_edge();
     let json = format!(
         "{{\n  \"bench\": \"program\",\n  \"workload\": \"mc4_rmat10_4machines\",\n  \
+         \"bytes_per_edge\": {bpe:.4},\n  \
          \"samples\": {reps},\n  \"counts\": [{}],\n  \
          \"shared_nodes\": {},\n  \
          \"root_scan\": {{\n    \"fused_embeddings\": {root_fused},\n    \

@@ -154,8 +154,10 @@ fn main() {
         })
         .collect::<Vec<_>>()
         .join(",\n");
+    let bpe = g.bytes_per_edge();
     let json = format!(
         "{{\n  \"bench\": \"sched\",\n  \"workload\": \"tc_rmat13_1machine\",\n  \
+         \"bytes_per_edge\": {bpe:.4},\n  \
          \"host_threads\": {host_threads},\n  \"samples\": {reps},\n  \
          \"count\": {},\n  \"tasks\": {},\n  \"deterministic\": true,\n  \
          \"scaling\": [\n{scaling_rows}\n  ],\n  \

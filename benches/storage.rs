@@ -1,0 +1,183 @@
+//! Storage-tier bench: the compressed graph tier's three acceptance
+//! claims, measured end to end (emits `BENCH_storage.json`):
+//!
+//! 1. **Compression** — degree-ordered relabeling + varint-delta blocks
+//!    hold an rmat-18 graph in ≤ 0.5× the bytes/edge of the `Vec`-CSR
+//!    tier.
+//! 2. **Out-of-core scale** — a full mining run over rmat-19 (4× the
+//!    vertex count of the previous bench ceiling, `Dataset::RmatLarge` =
+//!    rmat-17) with the compressed payload spilled to an mmap-backed
+//!    segment, so resident heap stays a small fraction of what `Vec`-CSR
+//!    would pin.
+//! 3. **Determinism** — counts, traffic, and virtual time are bitwise
+//!    identical across tiers for every engine × app combination (the
+//!    engine seam contract; `KUDU_NO_COMPACT=1` would void the compact
+//!    legs, so don't set it when benching).
+
+use kudu::bench::Group;
+use kudu::cluster::Transport;
+use kudu::config::{RunConfig, StorageTier};
+use kudu::engine::sink::CountSink;
+use kudu::engine::KuduEngine;
+use kudu::graph::{gen, relabel_by_degree, CompactGraph, GraphStore};
+use kudu::metrics::ComputeModel;
+use kudu::partition::PartitionedGraph;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::{graphpi_plan, ClientSystem, MiningProgram};
+use kudu::session::MiningSession;
+use kudu::workloads::{App, EngineKind};
+use std::time::Instant;
+
+fn main() {
+    let mut group = Group::new("storage");
+    group.sample_size(5);
+
+    // ---- 1. Compression ratio on rmat-18, relabeled and not ----------
+    let g18 = gen::rmat(18, 16, 42);
+    let csr_bpe = g18.bytes_per_edge();
+    let plain = CompactGraph::from_graph(&g18);
+    let (relab, _perm) = relabel_by_degree(&g18);
+    let compact = CompactGraph::from_graph(&relab);
+    let plain_ratio = plain.bytes_per_edge() / csr_bpe;
+    let ratio = compact.bytes_per_edge() / csr_bpe;
+    println!(
+        "bench storage/compression  csr {csr_bpe:.3} B/e  compact {:.3} B/e \
+         (ratio {plain_ratio:.3})  relabeled {:.3} B/e (ratio {ratio:.3})",
+        plain.bytes_per_edge(),
+        compact.bytes_per_edge()
+    );
+    assert!(
+        ratio <= 0.5,
+        "acceptance: relabeled compact tier must be <= 0.5x CSR bytes/edge, got {ratio:.3}"
+    );
+    group.meta_bytes_per_edge(compact.bytes_per_edge());
+    group.meta("csr_bytes_per_edge", format!("{csr_bpe:.4}"));
+    group.meta("compression_ratio", format!("{ratio:.4}"));
+    drop(plain);
+
+    // Decode throughput: stream every adjacency list once through the
+    // pooled scratch path the engine uses.
+    let mut scratch: Vec<u32> = Vec::new();
+    group.bench("decode/rmat18-full-sweep", || {
+        let mut sum = 0u64;
+        for v in 0..compact.num_vertices() as u32 {
+            compact.neighbors_into(v, &mut scratch);
+            sum += scratch.len() as u64;
+        }
+        sum
+    });
+    drop(compact);
+    drop(relab);
+    drop(g18);
+
+    // ---- 2. Out-of-core run on rmat-19 (4x the old bench ceiling) ----
+    let g19 = gen::rmat(19, 16, 42);
+    let csr19_bytes = g19.csr_bytes();
+    let mut c19 = CompactGraph::from_graph(&g19);
+    let expect_plan = graphpi_plan(&Pattern::triangle(), Induced::Edge);
+    drop(g19); // from here on, only the compact tier is resident
+    let spill = std::env::temp_dir()
+        .join(format!("kudu_bench_storage_rmat19_{}.kseg", std::process::id()));
+    let mapped = c19.spill_to(&spill).expect("spill compact payload");
+    println!(
+        "bench storage/out-of-core  csr would pin {:.1} MiB  compact heap {:.1} MiB \
+         (payload mmapped: {mapped})",
+        csr19_bytes as f64 / (1024.0 * 1024.0),
+        c19.heap_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    assert!(
+        c19.heap_bytes() * 4 < csr19_bytes,
+        "acceptance: spilled compact tier must hold < 1/4 of CSR bytes on heap \
+         (heap {} vs csr {csr19_bytes})",
+        c19.heap_bytes()
+    );
+    let t0 = Instant::now();
+    let store = GraphStore::Compact(&c19);
+    let pg = PartitionedGraph::from_store(store, 4);
+    let mut tr = Transport::new(pg, Default::default());
+    let program = MiningProgram::compile(vec![expect_plan], true);
+    let mut sinks: Vec<Vec<CountSink>> = Vec::new();
+    let (_, pstats) = KuduEngine::run_program(
+        store,
+        &program,
+        &RunConfig::with_machines(4).engine,
+        &ComputeModel::default(),
+        &mut tr,
+        None,
+        None,
+        |_p, _m| CountSink::default(),
+        &mut sinks,
+    );
+    let count: u64 = sinks[0].iter().map(|s| s.count).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "bench storage/rmat19-tc  count {count}  wall {wall:.2}s  \
+         decode {:.3}s (modelled)  {:.3} B/e",
+        pstats.decode_s, pstats.bytes_per_edge
+    );
+    assert!(count > 0, "rmat-19 must contain triangles");
+    group.meta("rmat19_tc_wall_s", format!("{wall:.4}"));
+    group.meta("rmat19_mmapped", mapped);
+    group.meta("rmat19_heap_bytes", c19.heap_bytes());
+    group.meta("rmat19_csr_bytes", csr19_bytes);
+    drop(c19);
+    std::fs::remove_file(&spill).ok();
+
+    // ---- 3. Bitwise tier invariance: engines x apps ------------------
+    let g = gen::rmat(8, 8, 0x5C4E_D51D);
+    let sess = MiningSession::with_config(&g, RunConfig::with_machines(4));
+    let engines = [
+        EngineKind::Kudu(ClientSystem::Automine),
+        EngineKind::Kudu(ClientSystem::GraphPi),
+        EngineKind::GThinker,
+        EngineKind::MovingComp,
+        EngineKind::Replicated,
+        EngineKind::SingleMachine,
+    ];
+    let (tc, mc, cc) = (App::Tc, App::Mc(3), App::Cc(4));
+    let apps: [&dyn kudu::session::GpmApp; 3] = [&tc, &mc, &cc];
+    for kind in engines {
+        for app in apps {
+            let a = sess
+                .job(app)
+                .executor(kind.executor())
+                .storage(StorageTier::Csr)
+                .run_report();
+            let b = sess
+                .job(app)
+                .executor(kind.executor())
+                .storage(StorageTier::Compact)
+                .run_report();
+            let what = format!("{}/{}", kind.name(), app.name());
+            assert_eq!(a.stats.counts, b.stats.counts, "{what}: counts");
+            assert_eq!(a.stats.network_bytes, b.stats.network_bytes, "{what}: bytes");
+            assert_eq!(a.stats.network_messages, b.stats.network_messages, "{what}: msgs");
+            assert_eq!(a.stats.work_units, b.stats.work_units, "{what}: work");
+            assert_eq!(
+                a.stats.virtual_time_s.to_bits(),
+                b.stats.virtual_time_s.to_bits(),
+                "{what}: virtual time"
+            );
+        }
+    }
+    println!(
+        "bench storage/tier-invariance  {} engine x app legs bitwise identical",
+        engines.len() * apps.len()
+    );
+    group.meta("tier_invariant", true);
+
+    // Wall-clock comparison of the two tiers on a mid-size fused job.
+    let gm = gen::rmat(10, 10, 42);
+    let sess_m = MiningSession::with_config(&gm, RunConfig::with_machines(4));
+    group.bench("tc-rmat10/csr", || {
+        sess_m.job(&App::Tc).storage(StorageTier::Csr).run().total_count()
+    });
+    group.bench("tc-rmat10/compact", || {
+        sess_m.job(&App::Tc).storage(StorageTier::Compact).run().total_count()
+    });
+
+    group.write_json("BENCH_storage.json").expect("write BENCH_storage.json");
+    println!("wrote BENCH_storage.json");
+    group.finish();
+}

@@ -31,11 +31,34 @@ pub struct Group {
     samples: usize,
     warmup: usize,
     results: Vec<BenchResult>,
+    meta: Vec<(String, String)>,
 }
 
 impl Group {
     pub fn new(name: &str) -> Self {
-        Group { name: name.to_string(), samples: 10, warmup: 2, results: Vec::new() }
+        Group {
+            name: name.to_string(),
+            samples: 10,
+            warmup: 2,
+            results: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    /// Attach a header metadata entry, emitted into the JSON document
+    /// before the results array (`"key": value`). `value` must render as
+    /// valid JSON on its own — a number, or a string the caller quotes.
+    /// Benches use this to stamp run context (e.g. the active storage
+    /// tier's `bytes_per_edge`) into every `BENCH_*.json`.
+    pub fn meta(&mut self, key: &str, value: impl std::fmt::Display) -> &mut Self {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Stamp the standard storage header: physical bytes per edge of the
+    /// graph the bench mines over.
+    pub fn meta_bytes_per_edge(&mut self, bpe: f64) -> &mut Self {
+        self.meta("bytes_per_edge", format!("{bpe:.4}"))
     }
 
     /// Number of timed samples per benchmark (default 10).
@@ -92,6 +115,9 @@ impl Group {
         let mut out = std::fs::File::create(path)?;
         writeln!(out, "{{")?;
         writeln!(out, "  \"group\": \"{}\",", json_escape(&self.name))?;
+        for (k, v) in &self.meta {
+            writeln!(out, "  \"{}\": {},", json_escape(k), v)?;
+        }
         writeln!(out, "  \"results\": [")?;
         for (i, r) in self.results.iter().enumerate() {
             let comma = if i + 1 < self.results.len() { "," } else { "" };
@@ -161,10 +187,12 @@ mod tests {
         let path = dir.join("out.json");
         let mut g = Group::new("grp\"x");
         g.sample_size(3);
+        g.meta_bytes_per_edge(4.25);
         g.bench("a/b", || 1 + 1);
         g.write_json(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"group\": \"grp\\\"x\""));
+        assert!(text.contains("\"bytes_per_edge\": 4.2500"));
         assert!(text.contains("\"name\": \"a/b\""));
         assert!(text.contains("\"median_s\": "));
         // Balanced braces/brackets (cheap well-formedness check).

@@ -23,7 +23,7 @@
 //!   a single-ledger convenience for serial callers and tests.
 
 use crate::comm;
-use crate::graph::{Graph, VertexId};
+use crate::graph::{GraphStore, VertexId};
 use crate::metrics::{NetModel, Traffic};
 use crate::partition::PartitionedGraph;
 
@@ -46,9 +46,12 @@ impl<'g> ClusterView<'g> {
         ClusterView { pg, net }
     }
 
+    /// The shared graph behind the storage-tier seam. Adjacency access
+    /// goes through [`GraphStore::neighbors_into`] with a caller-owned
+    /// scratch; degree/label/size queries never decode.
     #[inline]
-    pub fn graph(&self) -> &'g Graph {
-        self.pg.graph
+    pub fn graph(&self) -> GraphStore<'g> {
+        self.pg.store
     }
 
     #[inline]
@@ -71,7 +74,7 @@ impl<'g> ClusterView<'g> {
     /// [`comm::fetch_cost`], the single definition of the formula.
     #[inline]
     pub fn fetch_cost(&self, vertices: &[VertexId]) -> (u64, u64, f64) {
-        comm::fetch_cost(self.pg.graph, &self.net, vertices)
+        comm::fetch_cost(self.pg.store, &self.net, vertices)
     }
 
     /// Fetch the edge lists of `vertices` (all owned by `from`) into
@@ -180,7 +183,7 @@ impl<'g> Transport<'g> {
     }
 
     #[inline]
-    pub fn graph(&self) -> &'g Graph {
+    pub fn graph(&self) -> GraphStore<'g> {
         self.view.graph()
     }
 

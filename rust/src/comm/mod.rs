@@ -44,7 +44,7 @@ pub mod window;
 pub use proto::{FetchRequest, FetchResponse, Message, ResponseSlot, ShipEmbeddings, WireBatch};
 pub use window::{InFlightWindow, StopFlag};
 
-use crate::graph::{Graph, VertexId};
+use crate::graph::{GraphStore, VertexId};
 use crate::metrics::NetModel;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,8 +61,13 @@ pub const PER_MESSAGE_BYTES: u64 = 64;
 /// bytes, transfer time). Pure — no accounting, no side effects. This is
 /// the single definition of the fetch cost formula; the transport layer
 /// ([`crate::cluster::ClusterView::fetch_cost`]) delegates here.
+///
+/// Degree-only: adjacency always crosses the simulated wire in its
+/// decoded 4-bytes-per-id form regardless of the storage tier (the paper
+/// ships edge lists, not compressed pages), so traffic matrices and
+/// transfer times are bitwise identical across tiers by construction.
 #[inline]
-pub fn fetch_cost(graph: &Graph, net: &NetModel, vertices: &[VertexId]) -> (u64, u64, f64) {
+pub fn fetch_cost(graph: GraphStore<'_>, net: &NetModel, vertices: &[VertexId]) -> (u64, u64, f64) {
     let payload: u64 = vertices
         .iter()
         .map(|&v| graph.degree(v) as u64 * 4 + PER_VERTEX_HEADER_BYTES)
@@ -310,8 +315,9 @@ impl CommFabric {
     /// slot. Ship messages are one-way and must be drained with
     /// [`CommFabric::recv_ships`] instead. Returns the number of logical
     /// fetches served.
-    pub fn serve(&self, machine: usize, graph: &Graph) -> usize {
+    pub fn serve(&self, machine: usize, graph: GraphStore<'_>) -> usize {
         let mut served = 0usize;
+        let mut scratch: Vec<VertexId> = Vec::new();
         loop {
             let batch = { self.ports[machine].inbox.lock().unwrap().pop_front() };
             let Some(batch) = batch else { break };
@@ -322,7 +328,8 @@ impl CommFabric {
                         let mut data = Vec::new();
                         offsets.push(0u32);
                         for &v in &req.vertices {
-                            data.extend_from_slice(graph.neighbors(v));
+                            let nb = graph.neighbors_into(v, &mut scratch);
+                            data.extend_from_slice(nb);
                             offsets.push(data.len() as u32);
                         }
                         let dup = req.reply.set(FetchResponse { offsets, data }).is_err();
@@ -344,7 +351,7 @@ impl CommFabric {
     /// Body of `machine`'s dedicated comm server thread: serve incoming
     /// fetches until [`CommFabric::shutdown`], backing off to short
     /// sleeps when idle.
-    pub fn run_server(&self, machine: usize, graph: &Graph) {
+    pub fn run_server(&self, machine: usize, graph: GraphStore<'_>) {
         let mut idle = 0u32;
         while !self.stop.is_signaled() {
             if self.serve(machine, graph) > 0 {
@@ -457,7 +464,7 @@ mod tests {
         // Degrees: v0 → 3, v1 → 1, v2 → 2, v3 → 2.
         let g = crate::graph::Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (2, 3)]);
         let net = NetModel::default();
-        let (req, pay, time) = fetch_cost(&g, &net, &[0, 1]);
+        let (req, pay, time) = fetch_cost(GraphStore::Csr(&g), &net, &[0, 1]);
         // Request: 2 ids × 4B + 64B envelope.
         assert_eq!(req, 2 * 4 + PER_MESSAGE_BYTES);
         // Payload: (3 + 1) adjacency ids × 4B + 2 × 8B headers + 64B.
@@ -482,7 +489,7 @@ mod tests {
         // batch_bytes = 0 ⇒ the request flushed immediately; the owner's
         // serve call answers it.
         assert!(slot.get().is_none());
-        assert_eq!(fabric.serve(1, &g), 1);
+        assert_eq!(fabric.serve(1, GraphStore::Csr(&g)), 1);
         let resp = fabric.wait(0, &slot);
         assert_eq!(resp.num_payloads(), verts.len());
         for (i, &v) in verts.iter().enumerate() {
@@ -501,12 +508,12 @@ mod tests {
         let s2 = fabric.issue_fetch(0, 1, vec![3]);
         let s3 = fabric.issue_fetch(0, 1, vec![5]);
         // Buffered: the owner sees nothing yet.
-        assert_eq!(fabric.serve(1, &g), 0);
+        assert_eq!(fabric.serve(1, GraphStore::Csr(&g)), 0);
         assert_eq!(fabric.diagnostics().flushes, 0);
         fabric.flush(0);
         // One physical envelope carried all three logical requests.
         assert_eq!(fabric.diagnostics().flushes, 1);
-        assert_eq!(fabric.serve(1, &g), 3);
+        assert_eq!(fabric.serve(1, GraphStore::Csr(&g)), 3);
         for s in [&s1, &s2, &s3] {
             assert!(s.get().is_some());
         }
@@ -520,7 +527,7 @@ mod tests {
         fabric.issue_fetch(0, 2, vec![2]);
         fabric.issue_fetch(0, 1, vec![3]);
         assert_eq!(fabric.diagnostics().flushes, 3);
-        assert_eq!(fabric.serve(1, &g) + fabric.serve(2, &g), 3);
+        assert_eq!(fabric.serve(1, GraphStore::Csr(&g)) + fabric.serve(2, GraphStore::Csr(&g)), 3);
     }
 
     #[test]
@@ -530,7 +537,7 @@ mod tests {
         let fabric = CommFabric::new(2, async_cfg(window, 0));
         std::thread::scope(|scope| {
             let f = &fabric;
-            let gr = &g;
+            let gr = GraphStore::Csr(&g);
             let server = scope.spawn(move || f.run_server(1, gr));
             let mut slots = Vec::new();
             for i in 0..50u32 {
@@ -557,7 +564,7 @@ mod tests {
         assert_eq!(fabric.config().max_in_flight, 1);
         let g = gen::erdos_renyi(20, 40, 5);
         let slot = fabric.issue_fetch(0, 1, vec![3]);
-        assert_eq!(fabric.serve(1, &g), 1);
+        assert_eq!(fabric.serve(1, GraphStore::Csr(&g)), 1);
         assert!(slot.get().is_some());
     }
 
@@ -580,7 +587,7 @@ mod tests {
         let fabric = CommFabric::new(2, async_cfg(2, 0));
         std::thread::scope(|scope| {
             let f = &fabric;
-            let gr = &g;
+            let gr = GraphStore::Csr(&g);
             let handles: Vec<_> =
                 (0..2).map(|m| scope.spawn(move || f.run_server(m, gr))).collect();
             let slot = fabric.issue_fetch(0, 1, vec![0]);

@@ -51,6 +51,47 @@ fn env_knob(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Which graph representation the run materializes and mines over — see
+/// [`crate::graph::GraphStore`]. Purely a wall-clock/footprint knob: the
+/// determinism contract guarantees counts, traffic, and virtual time are
+/// bitwise identical across tiers (`tests/sched_determinism.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageTier {
+    /// Plain `Vec`-backed CSR (the default and reference tier).
+    Csr,
+    /// Varint-delta block-compressed adjacency
+    /// ([`crate::graph::CompactGraph`]), ~2–2.5× smaller; decode charges
+    /// land in the `decode_s` diagnostic.
+    Compact,
+}
+
+impl StorageTier {
+    /// Apply the process-wide `KUDU_NO_COMPACT` escape hatch (mirrors
+    /// `KUDU_NO_SIMD` for kernels): when set, every run is forced onto
+    /// the CSR tier regardless of config. Read once per process.
+    pub fn resolve(self) -> StorageTier {
+        static NO_COMPACT: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        let off = *NO_COMPACT.get_or_init(|| std::env::var_os("KUDU_NO_COMPACT").is_some());
+        if off {
+            StorageTier::Csr
+        } else {
+            self
+        }
+    }
+}
+
+impl Default for StorageTier {
+    /// CSR unless `KUDU_COMPACT_GRAPH` is set (the CI determinism matrix
+    /// uses the env form to run the whole suite on the compact tier).
+    fn default() -> Self {
+        if std::env::var_os("KUDU_COMPACT_GRAPH").is_some() {
+            StorageTier::Compact
+        } else {
+            StorageTier::Csr
+        }
+    }
+}
+
 /// Kudu engine feature toggles and sizing (paper §5–§6 knobs).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -130,6 +171,11 @@ pub struct EngineConfig {
     /// scalar tier. Wall-clock only: counts, traffic, and virtual time
     /// are bitwise identical either way (`tests/sched_determinism.rs`).
     pub simd: bool,
+    /// Graph storage tier (see [`StorageTier`]). `Compact` mines over
+    /// block-compressed adjacency with pooled per-frame decode scratch;
+    /// the `KUDU_NO_COMPACT` env hatch force-pins CSR process-wide.
+    /// Footprint/wall-clock only: every reported bit is tier-invariant.
+    pub storage: StorageTier,
 }
 
 impl Default for EngineConfig {
@@ -151,6 +197,7 @@ impl Default for EngineConfig {
             max_live_chunks: 64,
             comm: CommConfig::default(),
             simd: true,
+            storage: StorageTier::default(),
         }
     }
 }
@@ -233,6 +280,19 @@ mod tests {
         // SIMD defaults on; the env hatch acts inside Kernel::auto, not
         // here, so it also covers paths that bypass the config.
         assert!(c.engine.simd);
+        // Storage defaults to CSR unless the CI matrix pins the compact
+        // tier via the environment; KUDU_NO_COMPACT wins over both.
+        if std::env::var("KUDU_COMPACT_GRAPH").is_err() {
+            assert_eq!(c.engine.storage, StorageTier::Csr, "default = CSR tier");
+        } else {
+            assert_eq!(c.engine.storage, StorageTier::Compact);
+        }
+        if std::env::var("KUDU_NO_COMPACT").is_ok() {
+            assert_eq!(StorageTier::Compact.resolve(), StorageTier::Csr);
+        } else {
+            assert_eq!(StorageTier::Compact.resolve(), StorageTier::Compact);
+        }
+        assert_eq!(StorageTier::Csr.resolve(), StorageTier::Csr);
         // Comm defaults: a real in-flight window and, unless the env pins
         // the escape hatch (the CI determinism matrix sets
         // KUDU_SYNC_FETCH=1), the async message-passing path.

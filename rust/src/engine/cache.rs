@@ -18,7 +18,7 @@
 //! survives as [`StaticCache::offer`] for analyses that want it; both
 //! policies converge on the same hot set on skewed graphs.)
 
-use crate::graph::{Graph, VertexId};
+use crate::graph::{GraphStore, VertexId};
 
 /// Per-machine static cache over remote vertices' edge lists. In the
 /// simulated cluster the data itself is addressable in-process, so the
@@ -41,7 +41,12 @@ pub struct StaticCache {
 
 impl StaticCache {
     /// `budget_bytes = frac × graph CSR bytes` (paper: 5–10%).
-    pub fn new(graph: &Graph, frac: f64, degree_threshold: usize) -> Self {
+    ///
+    /// The budget is derived from *logical* CSR bytes
+    /// ([`GraphStore::csr_bytes`]), which both storage tiers report
+    /// identically — so cache membership, and with it every hit/miss
+    /// count, is bitwise tier-invariant.
+    pub fn new(graph: GraphStore<'_>, frac: f64, degree_threshold: usize) -> Self {
         let budget = (graph.csr_bytes() as f64 * frac) as u64;
         // Slot count: enough for the budget if average cached list were
         // ~64 entries, rounded up to a power of two; min 64 slots.
@@ -75,7 +80,7 @@ impl StaticCache {
     /// degree threshold is crossed, or the vertex set runs out — exactly
     /// the sequence a full degree sort would offer, without re-sorting
     /// the whole vertex set on every job.
-    pub fn prefill(graph: &Graph, frac: f64, degree_threshold: usize) -> Self {
+    pub fn prefill(graph: GraphStore<'_>, frac: f64, degree_threshold: usize) -> Self {
         let mut c = Self::new(graph, frac, degree_threshold);
         if c.full {
             return c; // zero budget
@@ -195,7 +200,7 @@ mod tests {
     #[test]
     fn hit_after_insert() {
         let g = gen::planted_hubs(500, 1000, 2, 0.5, 1);
-        let mut c = StaticCache::new(&g, 0.5, 4);
+        let mut c = StaticCache::new(GraphStore::Csr(&g), 0.5, 4);
         let hot = g.by_degree_desc()[0];
         assert!(!c.lookup(hot));
         assert!(c.offer(hot, g.degree(hot)));
@@ -207,7 +212,7 @@ mod tests {
     #[test]
     fn degree_threshold_filters() {
         let g = gen::erdos_renyi(100, 200, 2);
-        let mut c = StaticCache::new(&g, 0.5, 1000);
+        let mut c = StaticCache::new(GraphStore::Csr(&g), 0.5, 1000);
         assert!(!c.offer(0, g.degree(0)));
         assert_eq!(c.inserted, 0);
     }
@@ -215,7 +220,7 @@ mod tests {
     #[test]
     fn budget_enforced_no_eviction() {
         let g = gen::planted_hubs(300, 600, 4, 0.5, 3);
-        let mut c = StaticCache::new(&g, 0.01, 1);
+        let mut c = StaticCache::new(GraphStore::Csr(&g), 0.01, 1);
         let mut inserted = 0;
         for v in g.by_degree_desc() {
             if c.offer(v, g.degree(v)) {
@@ -231,11 +236,17 @@ mod tests {
     #[test]
     fn prefill_is_deterministic_and_hot_first() {
         let g = gen::planted_hubs(800, 2000, 4, 0.4, 7);
-        let a = StaticCache::prefill(&g, 0.2, 4);
-        let b = StaticCache::prefill(&g, 0.2, 4);
+        let a = StaticCache::prefill(GraphStore::Csr(&g), 0.2, 4);
+        let b = StaticCache::prefill(GraphStore::Csr(&g), 0.2, 4);
         assert_eq!(a.used_bytes(), b.used_bytes());
         assert_eq!(a.inserted, b.inserted);
         assert!(a.inserted > 0);
+        // The compact tier reports identical logical bytes and degrees,
+        // so it prefills the identical hot set.
+        let c = crate::graph::CompactGraph::from_graph(&g);
+        let s = StaticCache::prefill(GraphStore::Compact(&c), 0.2, 4);
+        assert_eq!(s.used_bytes(), a.used_bytes());
+        assert_eq!(s.inserted, a.inserted);
         // The hottest vertex is always resident; contains() is read-only.
         let hot = g.by_degree_desc()[0];
         assert!(a.contains(hot));

@@ -184,26 +184,52 @@ pub fn ancestor_idx(stack: &[&Chunk], level: usize, mut idx: u32, target_level: 
     idx
 }
 
-/// Resolve the edge-list slice for the embedding at `stack[level][idx]`,
-/// following at most one `Shared` hop. The graph maps Local/Cached refs
-/// to CSR slices.
-pub fn resolve_list<'a>(
-    stack: &[&'a Chunk],
-    level: usize,
-    idx: u32,
-    graph: &'a crate::graph::Graph,
-) -> &'a [VertexId] {
+/// The source of an embedding's edge list after following at most one
+/// `Shared` hop: either a graph vertex (whose adjacency the storage tier
+/// must produce) or a slice already materialised in a chunk arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ListSrc {
+    /// Adjacency of `v`, read from the graph store (`Local`/`Cached`).
+    Vertex(VertexId),
+    /// `stack[level].arena[off..off+len]` (a fetched remote copy).
+    Slice { off: u32, len: u32 },
+}
+
+/// Classify the edge list of `stack[level][idx]` without touching the
+/// graph. The storage-tier-aware caller ([`crate::engine::task`])
+/// decides how a `Vertex` source is materialised: a zero-copy CSR slice
+/// on the `Vec` tier, a pooled block decode on the compact tier.
+#[inline]
+pub fn list_src(stack: &[&Chunk], level: usize, idx: u32) -> ListSrc {
     let e = &stack[level].embs[idx as usize];
     let r = match e.list {
         ListRef::Shared(other) => stack[level].embs[other as usize].list,
         other => other,
     };
     match r {
-        ListRef::Local(v) | ListRef::Cached(v) => graph.neighbors(v),
-        ListRef::Arena { off, len } => &stack[level].arena[off as usize..(off + len) as usize],
+        ListRef::Local(v) | ListRef::Cached(v) => ListSrc::Vertex(v),
+        ListRef::Arena { off, len } => ListSrc::Slice { off, len },
         ListRef::Shared(_) => panic!("HDS chains are never created"),
         ListRef::None => panic!("resolving an inactive edge list"),
         ListRef::Pending { .. } => panic!("resolving an unfetched edge list"),
+    }
+}
+
+/// Resolve the edge-list slice for the embedding at `stack[level][idx]`,
+/// following at most one `Shared` hop. The graph maps Local/Cached refs
+/// to CSR slices. (This is the `Vec`-CSR fast path; the compact tier
+/// goes through [`list_src`] + a decode frame instead.)
+pub fn resolve_list<'a>(
+    stack: &[&'a Chunk],
+    level: usize,
+    idx: u32,
+    graph: &'a crate::graph::Graph,
+) -> &'a [VertexId] {
+    match list_src(stack, level, idx) {
+        ListSrc::Vertex(v) => graph.neighbors(v),
+        ListSrc::Slice { off, len } => {
+            &stack[level].arena[off as usize..(off + len) as usize]
+        }
     }
 }
 
@@ -356,6 +382,22 @@ mod tests {
         let s = stack(&chunks);
         assert_eq!(ancestor_idx(&s, 2, 0, 1), 1);
         assert_eq!(ancestor_idx(&s, 2, 0, 0), 0);
+    }
+
+    #[test]
+    fn list_src_classifies_without_graph() {
+        let mut c = Chunk::new(4);
+        c.arena_push(&[1, 2]);
+        c.embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Local(3)));
+        c.embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Cached(5)));
+        c.embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Arena { off: 0, len: 2 }));
+        c.embs.push(Emb::new([0; MAX_PATTERN], 0, ListRef::Shared(0)));
+        let chunks = vec![c];
+        let s = stack(&chunks);
+        assert_eq!(list_src(&s, 0, 0), ListSrc::Vertex(3));
+        assert_eq!(list_src(&s, 0, 1), ListSrc::Vertex(5));
+        assert_eq!(list_src(&s, 0, 2), ListSrc::Slice { off: 0, len: 2 });
+        assert_eq!(list_src(&s, 0, 3), ListSrc::Vertex(3), "one shared hop");
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub mod task;
 use crate::cluster::Transport;
 use crate::comm::{CommFabric, ShutdownGuard};
 use crate::config::EngineConfig;
-use crate::graph::{Graph, VertexId};
+use crate::graph::{Graph, GraphStore, VertexId};
 use crate::metrics::{ComputeModel, PatternRun, ProgramStats, RunStats, Traffic};
 use crate::par;
 use crate::plan::{MiningProgram, Plan};
@@ -90,9 +90,16 @@ impl KuduEngine {
     /// `out_sinks[pat]` machine-major in that pattern's task order.
     /// `owned` optionally supplies precomputed per-machine owned-vertex
     /// lists (the session's partition-once state).
+    ///
+    /// `graph` is the storage tier the run reads adjacency from
+    /// ([`GraphStore`]): the `Vec`-CSR tier or the compressed tier. The
+    /// tier is invisible in every contract metric — counts, traffic,
+    /// virtual time are bitwise identical either way — and surfaces only
+    /// in the diagnostics `ProgramStats::decode_s` (modelled decode cost)
+    /// and `ProgramStats::bytes_per_edge` (physical footprint).
     #[allow(clippy::too_many_arguments)]
     pub fn run_program<'g, S: EmbeddingSink + Send>(
-        graph: &'g Graph,
+        graph: GraphStore<'g>,
         program: &MiningProgram,
         cfg: &EngineConfig,
         compute: &ComputeModel,
@@ -232,6 +239,7 @@ impl KuduEngine {
         let mut machine_finish = vec![vec![0.0f64; n]; n_pats];
         let mut machine_exposed = vec![vec![0.0f64; n]; n_pats];
         let mut machine_peak = vec![vec![0u64; n]; n_pats];
+        let mut decoded_edges = 0u64;
         out_sinks.clear();
         for _ in 0..n_pats {
             out_sinks.push(Vec::new());
@@ -258,6 +266,7 @@ impl KuduEngine {
             pstats.sched_steals += steals;
             pstats.peak_live_chunks = pstats.peak_live_chunks.max(peak_live);
             pstats.root_embeddings += agg.phys_root_embeddings;
+            decoded_edges += agg.decoded_edges;
             transport.merge_ledger(&agg.phys_ledger);
         }
         for (p, run) in runs.iter_mut().enumerate() {
@@ -286,6 +295,11 @@ impl KuduEngine {
             pstats.peak_in_flight = d.peak_in_flight;
             pstats.comm_flushes = d.flushes;
         }
+        // Storage-tier diagnostics (outside the determinism contract):
+        // modelled decompression cost and physical bytes per edge.
+        pstats.decode_s =
+            decoded_edges as f64 * crate::graph::compact::DECODE_SECONDS_PER_EDGE;
+        pstats.bytes_per_edge = graph.bytes_per_edge();
         pstats.wall_s = wall_start.elapsed().as_secs_f64();
         (runs, pstats)
     }
@@ -301,6 +315,8 @@ impl KuduEngine {
         stats.comm_stall_s = pstats.comm_stall_s;
         stats.peak_in_flight = pstats.peak_in_flight;
         stats.comm_flushes = pstats.comm_flushes;
+        stats.decode_s = pstats.decode_s;
+        stats.bytes_per_edge = pstats.bytes_per_edge;
         stats
     }
 
@@ -318,7 +334,7 @@ impl KuduEngine {
         let program = MiningProgram::compile(vec![plan.clone()], true);
         let mut sinks: Vec<Vec<CountSink>> = Vec::new();
         let (runs, pstats) = Self::run_program(
-            graph,
+            GraphStore::Csr(graph),
             &program,
             cfg,
             compute,
@@ -351,7 +367,7 @@ impl KuduEngine {
         let program = MiningProgram::compile(vec![plan.clone()], true);
         let mut sinks: Vec<Vec<CountSink>> = Vec::new();
         let (runs, pstats) = Self::run_program(
-            graph,
+            GraphStore::Csr(graph),
             &program,
             cfg,
             compute,
@@ -384,7 +400,7 @@ impl KuduEngine {
         let program = MiningProgram::compile(vec![plan.clone()], true);
         let mut sinks: Vec<Vec<S>> = Vec::new();
         let (runs, pstats) = Self::run_program(
-            graph,
+            GraphStore::Csr(graph),
             &program,
             cfg,
             compute,
@@ -414,7 +430,7 @@ impl KuduEngine {
         let program = MiningProgram::compile(vec![plan.clone()], true);
         let mut sinks: Vec<Vec<S>> = Vec::new();
         let (runs, pstats) = Self::run_program(
-            graph,
+            GraphStore::Csr(graph),
             &program,
             cfg,
             compute,
@@ -468,7 +484,7 @@ mod tests {
         let mut tr = Transport::new(pg, NetModel::default());
         let mut sinks: Vec<Vec<CountSink>> = Vec::new();
         let (runs, pstats) = KuduEngine::run_program(
-            g,
+            GraphStore::Csr(g),
             &program,
             cfg,
             &ComputeModel::default(),
@@ -769,6 +785,59 @@ mod tests {
                 assert_eq!(c_on, c_off, "machines={machines}");
                 assert_deterministic_fields_eq(&on, &off, &format!("simd machines={machines}"));
             }
+        }
+    }
+
+    #[test]
+    fn compact_storage_tier_does_not_change_results() {
+        // Storage is a physical decision only: the compressed tier decodes
+        // the same neighbour lists the Vec-CSR tier slices, so every
+        // contract metric is bitwise identical across tiers. Only the
+        // excluded diagnostics (decode_s, bytes_per_edge) differ.
+        let g = gen::rmat(8, 10, 59);
+        let c = crate::graph::CompactGraph::from_graph(&g);
+        let plans: Vec<Plan> = vec![
+            graphpi_plan(&Pattern::clique(4), Induced::Edge),
+            graphpi_plan(&Pattern::cycle(4), Induced::Vertex),
+        ];
+        for machines in [1usize, 4] {
+            let cfg = EngineConfig { chunk_capacity: 128, mini_batch: 16, ..Default::default() };
+            let run = |store: GraphStore<'_>| {
+                let pg = PartitionedGraph::from_store(store, machines);
+                let mut tr = Transport::new(pg, NetModel::default());
+                let mut sinks: Vec<Vec<CountSink>> = Vec::new();
+                let program = MiningProgram::compile(plans.clone(), true);
+                let (runs, pstats) = KuduEngine::run_program(
+                    store,
+                    &program,
+                    &cfg,
+                    &ComputeModel::default(),
+                    &mut tr,
+                    None,
+                    None,
+                    |_p, _m| CountSink::default(),
+                    &mut sinks,
+                );
+                let counts: Vec<u64> =
+                    sinks.iter().map(|s| s.iter().map(|k| k.count).sum()).collect();
+                (counts, runs, pstats)
+            };
+            let (counts_csr, runs_csr, ps_csr) = run(GraphStore::Csr(&g));
+            let (counts_cmp, runs_cmp, ps_cmp) = run(GraphStore::Compact(&c));
+            assert_eq!(counts_csr, counts_cmp, "machines={machines}");
+            for (p, (a, b)) in runs_csr.iter().zip(&runs_cmp).enumerate() {
+                assert_deterministic_fields_eq(
+                    &a.stats,
+                    &b.stats,
+                    &format!("storage machines={machines} pat={p}"),
+                );
+                assert_eq!(a.traffic, b.traffic, "traffic matrix pat={p}");
+            }
+            // The diagnostics see the tier: compact decodes edges and
+            // packs them tighter than 4 bytes apiece.
+            assert_eq!(ps_csr.decode_s, 0.0);
+            assert!(ps_cmp.decode_s > 0.0, "compact tier must charge decode");
+            assert!(ps_cmp.bytes_per_edge < ps_csr.bytes_per_edge);
         }
     }
 

@@ -58,6 +58,9 @@ pub struct MachineAgg {
     pub tasks_run: Vec<u64>,
     pub phys_ledger: TrafficLedger,
     pub phys_root_embeddings: u64,
+    /// Edges physically decoded from the compact storage tier (0 on the
+    /// `Vec`-CSR tier) — a storage diagnostic, outside the contract.
+    pub decoded_edges: u64,
 }
 
 impl MachineAgg {
@@ -74,6 +77,7 @@ impl MachineAgg {
             tasks_run: vec![0; num_patterns],
             phys_ledger: TrafficLedger::new(num_machines),
             phys_root_embeddings: 0,
+            decoded_edges: 0,
         }
     }
 
@@ -91,6 +95,7 @@ impl MachineAgg {
         }
         self.phys_ledger.merge(&r.phys_ledger);
         self.phys_root_embeddings += r.phys_root_embeddings;
+        self.decoded_edges += r.decoded_edges;
     }
 }
 

@@ -63,13 +63,13 @@
 //! single-pattern frame.
 
 use super::cache::StaticCache;
-use super::chunk::{ancestor_idx, resolve_list, resolve_stored, Chunk, Emb, ListRef};
+use super::chunk::{ancestor_idx, list_src, resolve_stored, Chunk, Emb, ListRef, ListSrc};
 use super::sink::{Control, EmbeddingSink, ExtendHooks};
 use crate::cluster::{ClusterView, Timeline, TrafficLedger};
 use crate::comm::{CommFabric, FetchResponse, ResponseSlot};
 use crate::config::EngineConfig;
 use crate::exec;
-use crate::graph::{Graph, VertexId};
+use crate::graph::{CompactGraph, GraphStore, VertexId};
 use crate::metrics::ComputeModel;
 use crate::pattern::MAX_PATTERN;
 use crate::plan::{MiningProgram, NodeId, ProgramNode, Source, Step};
@@ -95,6 +95,12 @@ struct EdgeScratch {
     valid: bool,
     nsrc: usize,
     key: [(usize, usize); MAX_PATTERN],
+    /// Decode-frame generation the key was taken under: a compact-tier
+    /// decode arena that reallocated may hand a *new* list the address
+    /// of a memoized one, so a key is only trusted while the arena
+    /// allocation it pointed into is still alive (`gen` unchanged).
+    /// Always 0 on the `Vec`-CSR tier, whose slices are run-stable.
+    gen: u64,
     /// Memoized raw intersection of the source slices.
     cand: Vec<VertexId>,
     /// Work units of the memoized intersection, replayed on every hit.
@@ -102,6 +108,83 @@ struct EdgeScratch {
     /// Post-exclusion candidates (per embedding — never memoized).
     filt: Vec<VertexId>,
     tmp: Vec<VertexId>,
+}
+
+/// Frame-lifetime adjacency decode cache for the compact storage tier.
+/// Every `Local`/`Cached` vertex a frame's steps resolve is decoded
+/// exactly once into an append-only arena; repeat resolutions return
+/// the *same* slice — same pointer — which is what lets the
+/// pointer-keyed [`EdgeScratch`] memo hit across sibling embeddings
+/// just as zero-copy CSR slices do. Cleared at frame entry; pooled per
+/// level so extension never allocates in steady state.
+///
+/// Decoding is a physical cost only: it is charged to the
+/// `decoded_edges` diagnostic (surfaced as `RunStats::decode_s`), never
+/// to [`exec::Work`], so both storage tiers post bitwise-identical
+/// virtual timelines.
+#[derive(Default)]
+struct DecodeFrame {
+    /// vertex → (offset, len) into `buf`. Point lookups only (`get` /
+    /// `insert` / `clear`) — iteration order is never observed.
+    map: std::collections::HashMap<VertexId, (u32, u32)>,
+    buf: Vec<VertexId>,
+    /// Bumped whenever `buf` reallocates (see [`EdgeScratch::gen`]).
+    gen: u64,
+}
+
+impl DecodeFrame {
+    fn clear(&mut self) {
+        self.map.clear();
+        self.buf.clear();
+    }
+
+    /// Decode `v`'s adjacency into the arena unless it is already
+    /// resident. Returns the number of edges physically decoded (0 on a
+    /// cache hit) for the `decoded_edges` diagnostic.
+    fn ensure(&mut self, g: &CompactGraph, v: VertexId) -> u64 {
+        if self.map.contains_key(&v) {
+            return 0;
+        }
+        let off = self.buf.len();
+        let cap = self.buf.capacity();
+        g.neighbors_append(v, &mut self.buf);
+        if self.buf.capacity() != cap {
+            self.gen += 1;
+        }
+        let len = self.buf.len() - off;
+        self.map.insert(v, (off as u32, len as u32));
+        len as u64
+    }
+
+    /// The decoded slice of `v` (must have been [`DecodeFrame::ensure`]d
+    /// by the current frame's phase 1).
+    #[inline]
+    fn get(&self, v: VertexId) -> &[VertexId] {
+        let &(off, len) = self.map.get(&v).expect("vertex decoded in phase 1");
+        &self.buf[off as usize..(off as usize + len as usize)]
+    }
+}
+
+/// Resolve the edge list of `stack[j][a]` against the storage tier: a
+/// zero-copy CSR slice on the `Vec` tier, the frame's decoded copy on
+/// the compact tier, the chunk arena for fetched remote lists. The
+/// compact arm never decodes here — phase 1 of the frame already
+/// [`DecodeFrame::ensure`]d every vertex the frame's steps touch.
+#[inline]
+fn resolve_adj<'s>(
+    store: GraphStore<'s>,
+    dec: &'s DecodeFrame,
+    stack: &[&'s Chunk],
+    j: usize,
+    a: u32,
+) -> &'s [VertexId] {
+    match list_src(stack, j, a) {
+        ListSrc::Vertex(v) => match store {
+            GraphStore::Csr(g) => g.neighbors(v),
+            GraphStore::Compact(_) => dec.get(v),
+        },
+        ListSrc::Slice { off, len } => &stack[j].arena[off as usize..(off + len) as usize],
+    }
 }
 
 /// The sub-slice of sorted `s` inside the restriction window `[lo, hi)`;
@@ -222,7 +305,7 @@ pub enum RunTask<S> {
 /// [`TaskRunner::run_task`].
 pub struct TaskRunner<'a, 'g> {
     machine: usize,
-    graph: &'g Graph,
+    store: GraphStore<'g>,
     program: &'a MiningProgram,
     cfg: &'a EngineConfig,
     compute: ComputeModel,
@@ -248,6 +331,10 @@ pub struct TaskRunner<'a, 'g> {
     // --- physical totals of the fused execution ---
     pub phys_ledger: TrafficLedger,
     pub phys_root_embeddings: u64,
+    /// Edges physically decoded from the compact tier (frame decode
+    /// cache misses + sync-path materialisations). Diagnostic only —
+    /// surfaced as `RunStats::decode_s`, never charged as [`exec::Work`].
+    pub decoded_edges: u64,
     // --- per-task state ---
     timelines: Vec<Timeline>,
     pending_cpu: Vec<u64>,
@@ -269,6 +356,10 @@ pub struct TaskRunner<'a, 'g> {
     many: exec::MultiScratch,
     /// Per-level rows of per-child-edge extension scratch (memo + buffers).
     edge_scratch: Vec<Vec<EdgeScratch>>,
+    /// Per-level decode frames (compact tier), reused across frames.
+    decode_pool: Vec<DecodeFrame>,
+    /// Sync-path materialisation scratch for compact adjacency decodes.
+    dec_scratch: Vec<VertexId>,
     /// Per-level circulant batch buffers, reused across frames.
     batch_pool: Vec<Vec<Vec<u32>>>,
     /// Per-level flattened gate buffers, reused across frames.
@@ -281,7 +372,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         machine: usize,
-        graph: &'g Graph,
+        store: GraphStore<'g>,
         program: &'a MiningProgram,
         cfg: &'a EngineConfig,
         compute: &ComputeModel,
@@ -296,7 +387,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         let n = view.num_machines();
         TaskRunner {
             machine,
-            graph,
+            store,
             program,
             cfg,
             compute: *compute,
@@ -316,6 +407,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             tasks_run: vec![0; pats],
             phys_ledger: TrafficLedger::new(n),
             phys_root_embeddings: 0,
+            decoded_edges: 0,
             timelines: vec![Timeline::default(); pats],
             pending_cpu: vec![0; pats],
             pending_mem: vec![0; pats],
@@ -326,6 +418,8 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             emb_buf: Vec::new(),
             many: exec::MultiScratch::default(),
             edge_scratch: (0..depth).map(|_| Vec::new()).collect(),
+            decode_pool: (0..depth).map(|_| DecodeFrame::default()).collect(),
+            dec_scratch: Vec::new(),
             batch_pool: vec![Vec::new(); depth],
             gate_pool: vec![Vec::new(); depth],
             chunk_pool: Vec::new(),
@@ -695,6 +789,11 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         for es in edge_scratch.iter_mut() {
             es.valid = false;
         }
+        // Frame decode cache (compact tier): every vertex the frame's
+        // steps resolve decodes once; cleared so no decoded slice
+        // outlives the frame whose memo keys point into it.
+        let mut dec = std::mem::take(&mut self.decode_pool[level]);
+        dec.clear();
         for pos in 0..batches.len() {
             let batch = std::mem::take(&mut batches[pos]);
             if batch.is_empty() {
@@ -713,7 +812,16 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                     break;
                 }
                 for (ci, &c) in node.children.iter().enumerate() {
-                    self.extend_one(&stack, node, c, idx, &mut kids[ci], sinks, &mut edge_scratch[ci]);
+                    self.extend_one(
+                        &stack,
+                        node,
+                        c,
+                        idx,
+                        &mut kids[ci],
+                        sinks,
+                        &mut edge_scratch[ci],
+                        &mut dec,
+                    );
                     let cnode = prog.node(c);
                     if cnode.interior() && kids[ci].is_full() {
                         for &p in &cnode.cont {
@@ -735,6 +843,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         self.batch_pool[level] = batches;
         self.gate_pool[level] = gates;
         self.edge_scratch[level] = edge_scratch;
+        self.decode_pool[level] = dec;
 
         // Trailing partial child chunks: always descend in place (each is
         // the last frame of its subtree; splitting would only add
@@ -807,12 +916,18 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
     /// "receive" (copy = receive; memory work charged per list, to every
     /// pattern alive at the node).
     fn materialize_sync(&mut self, chunk: &mut Chunk, batch: &[u32], node: &ProgramNode) {
+        let store = self.store;
         for &i in batch {
             let e = chunk.embs[i as usize];
             if let ListRef::Pending { vertex, .. } = e.list {
-                let deg = self.graph.degree(vertex);
-                let nb = self.graph.neighbors(vertex);
-                let r = chunk.arena_push(nb);
+                let deg = store.degree(vertex);
+                let r = {
+                    let nb = store.neighbors_into(vertex, &mut self.dec_scratch);
+                    chunk.arena_push(nb)
+                };
+                if store.is_compact() {
+                    self.decoded_edges += deg as u64;
+                }
                 chunk.embs[i as usize].list = r;
                 let m = deg as u64 / 4 + 1;
                 for &p in &node.cont {
@@ -840,6 +955,13 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 k += 1;
                 let deg = data.len();
                 let r = chunk.arena_push(data);
+                // The owner's comm server decoded this list from its
+                // compact partition to build the payload; attribute that
+                // decode here, where the requester can count it race-free
+                // (the diagnostic is equal on the sync path by design).
+                if self.store.is_compact() {
+                    self.decoded_edges += deg as u64;
+                }
                 chunk.embs[i as usize].list = r;
                 let m = deg as u64 / 4 + 1;
                 for &p in &node.cont {
@@ -869,6 +991,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         child: &mut Chunk,
         sinks: &mut [Option<S>],
         es: &mut EdgeScratch,
+        dec: &mut DecodeFrame,
     ) {
         let prog = self.program;
         let cnode = prog.node(child_id);
@@ -878,15 +1001,39 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         let e = stack[level].embs[idx as usize];
         let vertices = e.vertices;
 
-        // --- Resolve the step's source slices (fixed stack array —
-        // MAX_PATTERN bounds the step arity — not a per-embedding Vec). ---
+        // --- Phase 1 (compact tier only): decode every vertex-sourced
+        // list this step reads — sources and exclusions — into the frame
+        // cache, so phase 2 borrows stable slices with no further arena
+        // growth. Cache hits are free; misses charge the decode
+        // diagnostic, never `Work`. ---
+        if let GraphStore::Compact(cg) = self.store {
+            for s in step.sources.iter() {
+                if let Source::Adj(j) = *s {
+                    let a = ancestor_idx(stack, level, idx, j);
+                    if let ListSrc::Vertex(v) = list_src(stack, j, a) {
+                        self.decoded_edges += dec.ensure(cg, v);
+                    }
+                }
+            }
+            for &j in &step.exclude {
+                let a = ancestor_idx(stack, level, idx, j);
+                if let ListSrc::Vertex(v) = list_src(stack, j, a) {
+                    self.decoded_edges += dec.ensure(cg, v);
+                }
+            }
+        }
+        let dec: &DecodeFrame = dec;
+
+        // --- Phase 2: resolve the step's source slices (fixed stack
+        // array — MAX_PATTERN bounds the step arity — not a
+        // per-embedding Vec). ---
         let mut srcs: [&[VertexId]; MAX_PATTERN] = [&[]; MAX_PATTERN];
         let nsrc = step.sources.len();
         for (slot, s) in srcs.iter_mut().zip(step.sources.iter()) {
             *slot = match *s {
                 Source::Adj(j) => {
                     let a = ancestor_idx(stack, level, idx, j);
-                    resolve_list(stack, j, a, self.graph)
+                    resolve_adj(self.store, dec, stack, j, a)
                 }
                 Source::Stored(j) => {
                     let a = ancestor_idx(stack, level, idx, j);
@@ -917,7 +1064,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         for (k, s) in key.iter_mut().zip(slices.iter()) {
             *k = (s.as_ptr() as usize, s.len());
         }
-        if !(es.valid && es.nsrc == nsrc && es.key == key) {
+        if !(es.valid && es.nsrc == nsrc && es.key == key && es.gen == dec.gen) {
             let w = match nsrc {
                 1 => {
                     es.cand.clear();
@@ -936,6 +1083,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             es.valid = true;
             es.nsrc = nsrc;
             es.key = key;
+            es.gen = dec.gen;
             es.work = w.0;
         }
         // Hit or miss, every pattern is charged the same units its own
@@ -966,7 +1114,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             let mut first = true;
             for &j in &step.exclude {
                 let a = ancestor_idx(stack, level, idx, j);
-                let ex = resolve_list(stack, j, a, self.graph);
+                let ex = resolve_adj(self.store, dec, stack, j, a);
                 let src: &[VertexId] = if first { &es.cand } else { &es.filt };
                 let w = exec::difference_with(self.kern, src, ex, &mut es.tmp);
                 for &p in &cnode.pats {
@@ -1022,7 +1170,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 self.emb_buf.push(0);
                 for k in start..end {
                     let v = cand[k];
-                    if dups.contains(&v) || (step.label != 0 && self.graph.label(v) != step.label)
+                    if dups.contains(&v) || (step.label != 0 && self.store.label(v) != step.label)
                     {
                         continue;
                     }
@@ -1055,7 +1203,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 let mut count = 0u64;
                 for k in start..end {
                     let v = cand[k];
-                    if self.graph.label(v) == step.label && !dups.contains(&v) {
+                    if self.store.label(v) == step.label && !dups.contains(&v) {
                         count += 1;
                     }
                 }
@@ -1068,7 +1216,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
                 // Iterate the window, skipping earlier vertices.
                 for k in start..end {
                     let v = cand[k];
-                    if dups.contains(&v) || (step.label != 0 && self.graph.label(v) != step.label)
+                    if dups.contains(&v) || (step.label != 0 && self.store.label(v) != step.label)
                     {
                         continue;
                     }
@@ -1089,7 +1237,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         for k in start..end {
             let v = cand[k];
             if (!dups.is_empty() && dups.contains(&v))
-                || (step.label != 0 && self.graph.label(v) != step.label)
+                || (step.label != 0 && self.store.label(v) != step.label)
             {
                 continue;
             }

@@ -1,0 +1,577 @@
+//! Compressed adjacency storage: the second graph tier behind
+//! [`GraphStore`](super::GraphStore).
+//!
+//! A [`CompactGraph`] stores every adjacency list as a sequence of
+//! fixed-width blocks of [`BLOCK`] vertices. Within a block the first
+//! element is absolute and the rest are gap-minus-one deltas (lists are
+//! strictly increasing, so every gap is ≥ 1 and the stored delta is
+//! `next - prev - 1`). Deltas use a Stream-VByte-style byte code: a run
+//! of 2-bit length tags packed four-per-byte up front, followed by the
+//! 1–4 little-endian payload bytes each value needs. The tag/data split
+//! is what makes the format SIMD-friendly — a decoder can look up shuffle
+//! masks per tag byte — while the scalar decoder here stays simple and
+//! portable. Decoding one block fills a `[u32; BLOCK]` scratch whose
+//! contents are byte-identical to the corresponding CSR slice, so the
+//! decoded lists feed the scalar/SIMD intersection kernels in
+//! [`crate::exec`] unchanged.
+//!
+//! Vertices spanning more than one block prefix their payload with a
+//! skip table: one `(first_vertex: u32, byte_offset: u32)` entry per
+//! block after the first. [`CompactGraph::has_edge`] binary-searches the
+//! skip table and decodes a single block, so membership tests never pay
+//! a full-list decode.
+//!
+//! The compression is performed in the *given* id space: decoded
+//! adjacency is bitwise identical to the source CSR, which is what makes
+//! the storage tier invisible to the determinism contract (counts,
+//! traffic matrices, and virtual time are bitwise equal across tiers —
+//! see `tests/sched_determinism.rs`). Degree-descending relabeling
+//! ([`relabel_by_degree`]) is a separate, explicit pre-transform: it
+//! shrinks gaps (hot vertices cluster at small ids) and improves the
+//! compression ratio, but changes vertex ids and therefore partition
+//! assignment — pattern *counts* are invariant under it, byte-level
+//! diagnostics are not.
+//!
+//! Payload bytes live in a [`Segment`]: heap-resident by default, or
+//! spilled to disk and memory-mapped ([`CompactGraph::spill_to`]) so a
+//! partition can exceed RAM.
+
+use super::segment::Segment;
+use super::{Graph, Label, VertexId};
+use std::io;
+use std::path::Path;
+
+/// Vertices per decode block. 64 keeps the per-block scratch at one
+/// cache line of tags plus 256 B of values, and bounds `has_edge` decode
+/// work to one block.
+pub const BLOCK: usize = 64;
+
+/// Modelled cost of decoding one adjacency entry (seconds). Calibrated
+/// to ~0.8 G edges/s, the throughput of a scalar byte-code decoder on
+/// the reference core of [`crate::metrics::ComputeModel`]. Decode
+/// charges feed the `decode_s` *diagnostic* only — never `Work` or
+/// virtual time, which must stay bitwise identical across storage tiers.
+pub const DECODE_SECONDS_PER_EDGE: f64 = 1.25e-9;
+
+/// An undirected simple graph with varint-delta compressed adjacency.
+///
+/// Logically identical to the [`Graph`] it was built from:
+/// `decode_graph()` reproduces the source CSR exactly. Physically it is
+/// typically 2–2.5× smaller (see `benches/storage.rs`), and its payload
+/// can be file-mapped for out-of-core operation.
+pub struct CompactGraph {
+    num_vertices: usize,
+    /// Undirected edge count (each adjacency entry stored once per
+    /// endpoint, as in CSR).
+    num_edges: usize,
+    /// Payload byte offset per vertex (`n + 1` entries). `u32` caps the
+    /// payload at 4 GiB — ample for the in-simulator datasets, and
+    /// enforced at build time.
+    voff: Vec<u32>,
+    /// Degree per vertex.
+    deg: Vec<u32>,
+    /// Skip tables + encoded blocks, heap- or mmap-backed.
+    payload: Segment,
+    labels: Option<Vec<Label>>,
+}
+
+impl CompactGraph {
+    /// Compress `g` in its existing id space. Decoded adjacency is
+    /// bitwise identical to `g`'s CSR slices.
+    pub fn from_graph(g: &Graph) -> Self {
+        let n = g.num_vertices();
+        let mut voff = Vec::with_capacity(n + 1);
+        let mut deg = Vec::with_capacity(n);
+        let mut payload: Vec<u8> = Vec::new();
+        voff.push(0u32);
+        for v in 0..n as VertexId {
+            let adj = g.neighbors(v);
+            deg.push(adj.len() as u32);
+            encode_adjacency(adj, &mut payload);
+            assert!(
+                payload.len() <= u32::MAX as usize,
+                "compact payload exceeds the 4 GiB u32 offset cap"
+            );
+            voff.push(payload.len() as u32);
+        }
+        CompactGraph {
+            num_vertices: n,
+            num_edges: g.num_edges(),
+            voff,
+            deg,
+            payload: Segment::from_vec(payload),
+            labels: g.labels.clone(),
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.deg[v as usize] as usize
+    }
+
+    /// The label of `v` (0 when the graph is unlabelled).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        self.labels.as_ref().map_or(0, |l| l[v as usize])
+    }
+
+    /// True if vertex labels are attached.
+    #[inline]
+    pub fn is_labelled(&self) -> bool {
+        self.labels.is_some()
+    }
+
+    /// Decode the full neighbour list of `v` into `out` (cleared first).
+    /// The result is bitwise identical to the CSR slice of the source
+    /// graph.
+    pub fn neighbors_into(&self, v: VertexId, out: &mut Vec<VertexId>) {
+        out.clear();
+        self.neighbors_append(v, out);
+    }
+
+    /// Decode the full neighbour list of `v` *appended* to `out` — the
+    /// arena-building variant used by the engine's frame decode cache.
+    pub fn neighbors_append(&self, v: VertexId, out: &mut Vec<VertexId>) {
+        let d = self.deg[v as usize] as usize;
+        if d == 0 {
+            return;
+        }
+        out.reserve(d);
+        let region = self.region(v);
+        let nb = d.div_ceil(BLOCK);
+        let data = &region[(nb - 1) * 8..];
+        let mut scratch = [0u32; BLOCK];
+        for i in 0..nb {
+            let start = if i == 0 { 0 } else { skip_boff(region, i) as usize };
+            let count = if i + 1 == nb { d - i * BLOCK } else { BLOCK };
+            decode_block_into(&data[start..], count, &mut scratch);
+            out.extend_from_slice(&scratch[..count]);
+        }
+    }
+
+    /// True if the (undirected) edge `(u, v)` exists. Seeks via the skip
+    /// table and decodes exactly one block of the smaller endpoint's
+    /// list.
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.adjacency_contains(a, b)
+    }
+
+    fn adjacency_contains(&self, v: VertexId, target: VertexId) -> bool {
+        let d = self.deg[v as usize] as usize;
+        if d == 0 {
+            return false;
+        }
+        let region = self.region(v);
+        let nb = d.div_ceil(BLOCK);
+        // Last block whose first element is <= target. Block 0's first
+        // element is implicit (anything below skip_first(1) lands there);
+        // blocks 1.. are bounded by the skip table.
+        let (mut lo, mut hi) = (1usize, nb);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if skip_first(region, mid) <= target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let blk = lo - 1;
+        let data = &region[(nb - 1) * 8..];
+        let start = if blk == 0 { 0 } else { skip_boff(region, blk) as usize };
+        let count = if blk + 1 == nb { d - blk * BLOCK } else { BLOCK };
+        let mut scratch = [0u32; BLOCK];
+        decode_block_into(&data[start..], count, &mut scratch);
+        scratch[..count].binary_search(&target).is_ok()
+    }
+
+    /// Decode the whole graph back to CSR. Exact inverse of
+    /// [`CompactGraph::from_graph`].
+    pub fn decode_graph(&self) -> Graph {
+        let n = self.num_vertices;
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut edges: Vec<VertexId> = Vec::with_capacity(self.num_edges * 2);
+        let mut buf = Vec::new();
+        for v in 0..n as VertexId {
+            self.neighbors_into(v, &mut buf);
+            edges.extend_from_slice(&buf);
+            offsets.push(edges.len() as u64);
+        }
+        let g = Graph::from_csr(offsets, edges);
+        match &self.labels {
+            Some(l) => g.with_labels(l.clone()),
+            None => g,
+        }
+    }
+
+    /// Physical storage footprint in bytes (offsets, degrees, payload,
+    /// labels) regardless of where the payload lives.
+    pub fn bytes(&self) -> usize {
+        self.voff.len() * std::mem::size_of::<u32>()
+            + self.deg.len() * std::mem::size_of::<u32>()
+            + self.payload.len()
+            + self.labels.as_ref().map_or(0, |l| l.len())
+    }
+
+    /// Heap-resident bytes only: a file-mapped payload counts zero (the
+    /// kernel pages it on demand), which is what bounds RSS out-of-core.
+    pub fn heap_bytes(&self) -> usize {
+        self.voff.len() * std::mem::size_of::<u32>()
+            + self.deg.len() * std::mem::size_of::<u32>()
+            + self.payload.heap_bytes()
+            + self.labels.as_ref().map_or(0, |l| l.len())
+    }
+
+    /// What the same graph costs in the CSR tier — the tier-invariant
+    /// *logical* size used for cache budgets and partition accounting,
+    /// matching [`Graph::csr_bytes`] exactly.
+    pub fn csr_bytes(&self) -> usize {
+        (self.num_vertices + 1) * std::mem::size_of::<u64>()
+            + self.num_edges * 2 * std::mem::size_of::<VertexId>()
+    }
+
+    /// Physical bytes per directed adjacency entry.
+    pub fn bytes_per_edge(&self) -> f64 {
+        let m_dir = self.num_edges * 2;
+        if m_dir == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 / m_dir as f64
+        }
+    }
+
+    /// Whether the payload is file-mapped rather than heap-resident.
+    pub fn is_mapped(&self) -> bool {
+        self.payload.is_mapped()
+    }
+
+    /// Spill the payload to `path` and replace it with a read-only file
+    /// mapping, releasing the heap copy. Returns whether the result is
+    /// actually mapped (platforms without mmap fall back to the heap and
+    /// return `false`). Adjacency contents are unchanged either way.
+    pub fn spill_to(&mut self, path: &Path) -> io::Result<bool> {
+        std::fs::write(path, self.payload.as_slice())?;
+        let seg = Segment::map_file(path)?;
+        if seg.len() != self.payload.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "spilled payload length mismatch",
+            ));
+        }
+        self.payload = seg;
+        Ok(self.payload.is_mapped())
+    }
+
+    /// Skip table + block bytes for `v`.
+    #[inline]
+    fn region(&self, v: VertexId) -> &[u8] {
+        let lo = self.voff[v as usize] as usize;
+        let hi = self.voff[v as usize + 1] as usize;
+        &self.payload.as_slice()[lo..hi]
+    }
+}
+
+/// First vertex of block `i` (`i >= 1`) from the skip table.
+#[inline]
+fn skip_first(region: &[u8], i: usize) -> u32 {
+    let e = (i - 1) * 8;
+    u32::from_le_bytes(region[e..e + 4].try_into().unwrap())
+}
+
+/// Byte offset of block `i` (`i >= 1`) relative to the block-data area.
+#[inline]
+fn skip_boff(region: &[u8], i: usize) -> u32 {
+    let e = (i - 1) * 8 + 4;
+    u32::from_le_bytes(region[e..e + 4].try_into().unwrap())
+}
+
+/// Append the skip table and encoded blocks for one adjacency list.
+fn encode_adjacency(adj: &[VertexId], out: &mut Vec<u8>) {
+    let d = adj.len();
+    if d == 0 {
+        return;
+    }
+    let nb = d.div_ceil(BLOCK);
+    let skip_base = out.len();
+    out.resize(skip_base + (nb - 1) * 8, 0);
+    let data_base = out.len();
+    for (i, chunk) in adj.chunks(BLOCK).enumerate() {
+        if i > 0 {
+            let boff = (out.len() - data_base) as u32;
+            let e = skip_base + (i - 1) * 8;
+            out[e..e + 4].copy_from_slice(&chunk[0].to_le_bytes());
+            out[e + 4..e + 8].copy_from_slice(&boff.to_le_bytes());
+        }
+        encode_block(chunk, out);
+    }
+}
+
+/// Encode one block: 2-bit length tags (four per byte), then 1–4 LE
+/// bytes per value. First value absolute, the rest gap-minus-one deltas.
+fn encode_block(vals: &[u32], out: &mut Vec<u8>) {
+    debug_assert!(!vals.is_empty() && vals.len() <= BLOCK);
+    let ntags = vals.len().div_ceil(4);
+    let tag_base = out.len();
+    out.resize(tag_base + ntags, 0);
+    let mut prev = 0u32;
+    for (j, &v) in vals.iter().enumerate() {
+        let x = if j == 0 {
+            v
+        } else {
+            debug_assert!(v > prev, "adjacency lists must be strictly increasing");
+            v - prev - 1
+        };
+        let nbytes: usize = if x < 1 << 8 {
+            1
+        } else if x < 1 << 16 {
+            2
+        } else if x < 1 << 24 {
+            3
+        } else {
+            4
+        };
+        out[tag_base + (j >> 2)] |= ((nbytes - 1) as u8) << ((j & 3) * 2);
+        out.extend_from_slice(&x.to_le_bytes()[..nbytes]);
+        prev = v;
+    }
+}
+
+/// Decode one block of `count` values from `data` into the fixed
+/// scratch. `data` starts at the block's tag bytes.
+#[inline]
+fn decode_block_into(data: &[u8], count: usize, out: &mut [u32; BLOCK]) {
+    debug_assert!(count > 0 && count <= BLOCK);
+    let ntags = count.div_ceil(4);
+    let mut p = ntags;
+    let mut prev = 0u32;
+    for j in 0..count {
+        let nbytes = ((data[j >> 2] >> ((j & 3) * 2)) & 3) as usize + 1;
+        let mut x = 0u32;
+        for (k, &b) in data[p..p + nbytes].iter().enumerate() {
+            x |= (b as u32) << (8 * k);
+        }
+        p += nbytes;
+        let val = if j == 0 { x } else { prev + 1 + x };
+        out[j] = val;
+        prev = val;
+    }
+}
+
+/// Relabel `g` so vertex ids follow decreasing degree (ties by original
+/// id, matching [`Graph::by_degree_desc`]). Returns the relabeled graph
+/// and the permutation `new_id[old_id]`.
+///
+/// Pattern counts are invariant under any id permutation (tested in
+/// `tests/proptests.rs`); byte-level diagnostics (partition assignment,
+/// traffic) are not, which is why relabeling is an explicit pre-pass
+/// rather than something the compact tier does implicitly.
+pub fn relabel_by_degree(g: &Graph) -> (Graph, Vec<VertexId>) {
+    let n = g.num_vertices();
+    let order = g.by_degree_desc();
+    let mut newid = vec![0 as VertexId; n];
+    for (rank, &v) in order.iter().enumerate() {
+        newid[v as usize] = rank as VertexId;
+    }
+    let edges: Vec<(VertexId, VertexId)> =
+        g.undirected_edges().map(|(u, v)| (newid[u as usize], newid[v as usize])).collect();
+    let mut out = Graph::from_edges(n, &edges);
+    if let Some(labels) = &g.labels {
+        let mut relabeled = vec![0 as Label; n];
+        for (v, &l) in labels.iter().enumerate() {
+            relabeled[newid[v] as usize] = l;
+        }
+        out = out.with_labels(relabeled);
+    }
+    (out, newid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn assert_round_trip(g: &Graph) {
+        let c = CompactGraph::from_graph(g);
+        assert_eq!(c.num_vertices(), g.num_vertices());
+        assert_eq!(c.num_edges(), g.num_edges());
+        assert_eq!(c.csr_bytes(), g.csr_bytes());
+        let mut buf = Vec::new();
+        for v in 0..g.num_vertices() as VertexId {
+            assert_eq!(c.degree(v), g.degree(v), "degree of {v}");
+            c.neighbors_into(v, &mut buf);
+            assert_eq!(&buf[..], g.neighbors(v), "neighbors of {v}");
+        }
+        let d = c.decode_graph();
+        for v in 0..g.num_vertices() as VertexId {
+            assert_eq!(d.neighbors(v), g.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn round_trip_small() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]);
+        assert_round_trip(&g);
+    }
+
+    #[test]
+    fn round_trip_rmat() {
+        let g = gen::rmat(9, 8, 61);
+        assert_round_trip(&g);
+    }
+
+    #[test]
+    fn round_trip_block_boundaries() {
+        // Star centres with degree straddling every block-boundary shape:
+        // one below, exactly one block, one over, two blocks, two-plus.
+        for d in [1usize, 63, 64, 65, 128, 129, 200] {
+            let edges: Vec<(VertexId, VertexId)> =
+                (1..=d as VertexId).map(|v| (0, v)).collect();
+            let g = Graph::from_edges(d + 1, &edges);
+            assert_round_trip(&g);
+            let c = CompactGraph::from_graph(&g);
+            for v in 1..=d as VertexId {
+                assert!(c.has_edge(0, v), "deg {d}: missing spoke {v}");
+                assert!(c.has_edge(v, 0), "deg {d}: missing reverse spoke {v}");
+            }
+            assert!(!c.has_edge(1, 2.min(d as VertexId)), "deg {d}: phantom edge");
+        }
+    }
+
+    #[test]
+    fn round_trip_empty_and_isolated() {
+        assert_round_trip(&Graph::from_edges(0, &[]));
+        assert_round_trip(&Graph::from_edges(5, &[]));
+        assert_round_trip(&Graph::from_edges(6, &[(2, 4)]));
+        let c = CompactGraph::from_graph(&Graph::from_edges(6, &[(2, 4)]));
+        assert!(c.has_edge(2, 4));
+        assert!(!c.has_edge(0, 1));
+        assert!(!c.has_edge(2, 5));
+    }
+
+    #[test]
+    fn has_edge_matches_csr() {
+        let g = gen::rmat(8, 6, 67);
+        let c = CompactGraph::from_graph(&g);
+        let n = g.num_vertices() as VertexId;
+        for u in (0..n).step_by(7) {
+            for v in (0..n).step_by(11) {
+                assert_eq!(c.has_edge(u, v), g.has_edge(u, v), "({u}, {v})");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_handles_max_deltas() {
+        // Codec-level: values near u32::MAX exercise 4-byte tags for both
+        // the absolute head and the gap deltas.
+        let cases: Vec<Vec<u32>> = vec![
+            vec![u32::MAX],
+            vec![0, u32::MAX - 1],
+            vec![0, 1, u32::MAX - 1],
+            vec![5],
+            (0..BLOCK as u32).collect(),                  // all-zero gaps
+            (0..BLOCK as u32).map(|i| i * 300).collect(), // 2-byte gaps
+            vec![1 << 24, (1 << 25) + 17],
+        ];
+        for vals in cases {
+            let mut bytes = Vec::new();
+            encode_block(&vals, &mut bytes);
+            let mut out = [0u32; BLOCK];
+            decode_block_into(&bytes, vals.len(), &mut out);
+            assert_eq!(&out[..vals.len()], &vals[..], "case {vals:?}");
+        }
+    }
+
+    #[test]
+    fn labels_survive_compaction() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).with_labels(vec![3, 1, 4, 1]);
+        let c = CompactGraph::from_graph(&g);
+        assert!(c.is_labelled());
+        for v in 0..4 {
+            assert_eq!(c.label(v), g.label(v));
+        }
+        let d = c.decode_graph();
+        assert!(d.is_labelled());
+        assert_eq!(d.label(2), 4);
+    }
+
+    #[test]
+    fn compaction_shrinks_rmat() {
+        let g = gen::rmat(12, 8, 71);
+        let c = CompactGraph::from_graph(&g);
+        assert!(
+            c.bytes() < c.csr_bytes() / 2 + c.num_vertices() * 8,
+            "compact {} vs csr {}",
+            c.bytes(),
+            c.csr_bytes()
+        );
+        assert!(c.bytes_per_edge() > 0.0);
+        assert_eq!(c.heap_bytes(), c.bytes());
+        assert!(!c.is_mapped());
+    }
+
+    #[test]
+    fn relabel_is_permutation_and_degree_sorted() {
+        let g = gen::rmat(8, 8, 73);
+        let (r, perm) = relabel_by_degree(&g);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..g.num_vertices() as VertexId).collect::<Vec<_>>());
+        assert_eq!(r.num_edges(), g.num_edges());
+        // New ids are degree-descending.
+        for v in 1..r.num_vertices() as VertexId {
+            assert!(r.degree(v - 1) >= r.degree(v), "relabel order broken at {v}");
+        }
+        // Edge set is preserved under the mapping.
+        for (u, v) in g.undirected_edges().take(500) {
+            assert!(r.has_edge(perm[u as usize], perm[v as usize]));
+        }
+    }
+
+    #[test]
+    fn relabel_preserves_labels() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2)])
+            .with_labels(vec![9, 8, 7, 6]);
+        let (r, perm) = relabel_by_degree(&g);
+        for v in 0..4u32 {
+            assert_eq!(r.label(perm[v as usize]), g.label(v));
+        }
+    }
+
+    #[cfg(not(miri))]
+    #[test]
+    fn spill_to_preserves_adjacency() {
+        let g = gen::rmat(9, 8, 79);
+        let mut c = CompactGraph::from_graph(&g);
+        let full = c.bytes();
+        let mut path = std::env::temp_dir();
+        path.push(format!("kudu_compact_spill_{}.seg", std::process::id()));
+        let mapped = c.spill_to(&path).unwrap();
+        assert_eq!(c.bytes(), full, "spill must not change the physical size");
+        if mapped {
+            assert!(c.is_mapped());
+            assert!(c.heap_bytes() < full, "mapped payload must leave the heap");
+        }
+        let mut buf = Vec::new();
+        for v in 0..g.num_vertices() as VertexId {
+            c.neighbors_into(v, &mut buf);
+            assert_eq!(&buf[..], g.neighbors(v));
+        }
+        drop(c);
+        std::fs::remove_file(&path).ok();
+    }
+}

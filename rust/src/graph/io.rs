@@ -1,37 +1,61 @@
 //! Edge-list file I/O: load real SNAP-format datasets when available,
 //! save/load the generated stand-ins for reproducible benchmarking.
+//!
+//! Text loads **stream**: the SNAP parser reads the file twice through a
+//! reusable line buffer (pass 1 discovers the id space, pass 2 feeds
+//! edges straight into the [`GraphBuilder`]) and never materialises the
+//! text or an intermediate edge vector — peak transient memory is one
+//! line plus the id bitmap, independent of edge count. For repeat loads,
+//! [`load_edge_list_cached`] writes a version-stamped binary sidecar
+//! (`<file>.kbin`) on first load and mmap-validates and reuses it after
+//! ([`Segment::map_file`]) — the text parse happens once per dataset,
+//! not once per run.
 
+use super::segment::Segment;
 use super::{Graph, GraphBuilder, VertexId};
 use std::io::{BufRead, BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// Stream the parseable `u v` pairs of a SNAP-format file through `f`:
+/// `#`/`%` comment lines, blank lines, and malformed tokens are skipped,
+/// one reusable line buffer, no per-line allocation.
+fn for_each_pair(path: &Path, mut f: impl FnMut(u64, u64)) -> std::io::Result<()> {
+    let file = std::fs::File::open(path)?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else { continue };
+        let (Ok(u), Ok(v)) = (a.parse::<u64>(), b.parse::<u64>()) else { continue };
+        f(u, v);
+    }
+    Ok(())
+}
 
 /// Load a whitespace-separated edge-list file (SNAP convention:
 /// `#`-prefixed comment lines, one `u v` pair per line). Vertex ids are
-/// compacted to a dense range.
+/// compacted to a dense range. Two streaming passes — the edge set is
+/// never materialised outside the builder.
 pub fn load_edge_list(path: &Path) -> std::io::Result<Graph> {
-    let file = std::fs::File::open(path)?;
-    let reader = std::io::BufReader::new(file);
-    let mut raw: Vec<(u64, u64)> = Vec::new();
-    let mut max_id = 0u64;
-    for line in reader.lines() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
-            continue;
+    // Pass 1: the occupied id space (SNAP files can be sparse).
+    let mut present: Vec<bool> = Vec::new();
+    for_each_pair(path, |u, v| {
+        let hi = u.max(v) as usize;
+        if hi >= present.len() {
+            present.resize(hi + 1, false);
         }
-        let mut it = line.split_whitespace();
-        let (Some(a), Some(b)) = (it.next(), it.next()) else { continue };
-        let (Ok(u), Ok(v)) = (a.parse::<u64>(), b.parse::<u64>()) else { continue };
-        max_id = max_id.max(u).max(v);
-        raw.push((u, v));
-    }
-    // Compact ids: SNAP files can have sparse id spaces.
-    let mut present = vec![false; (max_id + 1) as usize];
-    for &(u, v) in &raw {
         present[u as usize] = true;
         present[v as usize] = true;
-    }
-    let mut remap = vec![u32::MAX; (max_id + 1) as usize];
+    })?;
+    let mut remap = vec![u32::MAX; present.len()];
     let mut next = 0u32;
     for (id, &p) in present.iter().enumerate() {
         if p {
@@ -39,10 +63,12 @@ pub fn load_edge_list(path: &Path) -> std::io::Result<Graph> {
             next += 1;
         }
     }
+    drop(present);
+    // Pass 2: stream edges straight into the builder.
     let mut builder = GraphBuilder::new(next as usize);
-    for (u, v) in raw {
+    for_each_pair(path, |u, v| {
         builder.add_edge(remap[u as usize], remap[v as usize]);
-    }
+    })?;
     Ok(builder.add_edges(&[]).build())
 }
 
@@ -97,6 +123,112 @@ pub fn load_csr(path: &Path) -> std::io::Result<Graph> {
         pos += 4;
     }
     Ok(Graph::from_csr(offsets, edges))
+}
+
+/// `.kbin` sidecar magic ("kudu binary") — rejects arbitrary files.
+const KBIN_MAGIC: &[u8; 8] = b"KUDUKBIN";
+/// `.kbin` format version; bump on any layout change so stale sidecars
+/// from older builds are rebuilt, never misparsed.
+const KBIN_VERSION: u32 = 1;
+
+/// Sidecar path of a text dataset: `<file>.kbin` alongside the source.
+pub fn kbin_sidecar(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_owned();
+    os.push(".kbin");
+    PathBuf::from(os)
+}
+
+/// Write a graph as a version-stamped `.kbin` snapshot: magic, version,
+/// flags, vertex/arc counts, `u32` degrees, `u32` adjacency, and (when
+/// labelled) one label byte per vertex. Fixed little-endian layout, so a
+/// snapshot is portable across runs and mmap-friendly on load.
+pub fn save_kbin(g: &Graph, path: &Path) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(KBIN_MAGIC)?;
+    w.write_all(&KBIN_VERSION.to_le_bytes())?;
+    w.write_all(&(g.is_labelled() as u32).to_le_bytes())?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    let arcs: u64 = (0..g.num_vertices() as VertexId).map(|v| g.degree(v) as u64).sum();
+    w.write_all(&arcs.to_le_bytes())?;
+    for v in 0..g.num_vertices() as VertexId {
+        w.write_all(&(g.degree(v) as u32).to_le_bytes())?;
+    }
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            w.write_all(&u.to_le_bytes())?;
+        }
+    }
+    if g.is_labelled() {
+        for v in 0..g.num_vertices() as VertexId {
+            w.write_all(&[g.label(v)])?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a `.kbin` snapshot written by [`save_kbin`]. The file is mapped
+/// read-only ([`Segment::map_file`], heap fallback off unix/under Miri)
+/// and validated — wrong magic, version, or truncated payload yields
+/// `InvalidData` so callers fall back to the text parse and rewrite.
+pub fn load_kbin(path: &Path) -> std::io::Result<Graph> {
+    let seg = Segment::map_file(path)?;
+    let bytes = seg.as_slice();
+    let bad = |what: &str| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("kbin: {what}"))
+    };
+    if bytes.len() < 32 || &bytes[..8] != KBIN_MAGIC {
+        return Err(bad("bad magic"));
+    }
+    if u32::from_le_bytes(bytes[8..12].try_into().unwrap()) != KBIN_VERSION {
+        return Err(bad("version mismatch"));
+    }
+    let labelled = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) != 0;
+    let n = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    let need = 32 + n * 4 + m * 4 + if labelled { n } else { 0 };
+    if bytes.len() < need {
+        return Err(bad("truncated payload"));
+    }
+    let mut pos = 32usize;
+    let mut offsets = vec![0u64; n + 1];
+    for v in 0..n {
+        let d = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as u64;
+        offsets[v + 1] = offsets[v] + d;
+        pos += 4;
+    }
+    if offsets[n] != m as u64 {
+        return Err(bad("degree sum mismatch"));
+    }
+    let mut edges = vec![0 as VertexId; m];
+    for e in edges.iter_mut() {
+        *e = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+    }
+    let g = Graph::from_csr(offsets, edges);
+    if labelled {
+        let labels = bytes[pos..pos + n].to_vec();
+        Ok(g.with_labels(labels))
+    } else {
+        Ok(g)
+    }
+}
+
+/// [`load_edge_list`] with a binary sidecar cache: the first load of
+/// `<file>` parses the text and writes `<file>.kbin` next to it; later
+/// loads mmap-validate the sidecar and skip the text parse entirely.
+/// A sidecar that fails validation (foreign file, older format version)
+/// is rebuilt; deleting it forces a refresh after editing the source. A
+/// failure to *write* the sidecar (read-only dataset directory) is not a
+/// load failure — the parsed graph is returned regardless.
+pub fn load_edge_list_cached(path: &Path) -> std::io::Result<Graph> {
+    let sidecar = kbin_sidecar(path);
+    if let Ok(g) = load_kbin(&sidecar) {
+        return Ok(g);
+    }
+    let g = load_edge_list(path)?;
+    let _ = save_kbin(&g, &sidecar);
+    Ok(g)
 }
 
 // Heavy under Miri (full engine runs / threads / file I/O): the Miri
@@ -200,6 +332,60 @@ mod tests {
         assert_eq!(g.num_edges(), g2.num_edges());
         for v in 0..g.num_vertices() as u32 {
             assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn kbin_sidecar_written_once_and_reused() {
+        let g = gen::rmat(7, 8, 33);
+        let p = std::env::temp_dir().join("kudu_test_sidecar.txt");
+        save_edge_list(&g, &p).unwrap();
+        let sc = kbin_sidecar(&p);
+        std::fs::remove_file(&sc).ok();
+        let g1 = load_edge_list_cached(&p).unwrap();
+        assert!(sc.exists(), "first load writes the sidecar");
+        // Second load reads the sidecar (mmap path) — same graph exactly.
+        let g2 = load_edge_list_cached(&p).unwrap();
+        assert_eq!(g1.num_vertices(), g2.num_vertices());
+        for v in 0..g1.num_vertices() as VertexId {
+            assert_eq!(g1.neighbors(v), g2.neighbors(v), "vertex {v}");
+        }
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&sc).ok();
+    }
+
+    #[test]
+    fn kbin_rejects_foreign_files_and_other_versions() {
+        let p = std::env::temp_dir().join("kudu_test_bad.kbin");
+        std::fs::write(&p, b"definitely not a kbin snapshot").unwrap();
+        assert!(load_kbin(&p).is_err(), "foreign bytes rejected");
+        // Right magic, wrong version: stale sidecars rebuild, never
+        // misparse.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(KBIN_MAGIC);
+        bytes.extend_from_slice(&(KBIN_VERSION + 1).to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_kbin(&p).is_err(), "future version rejected");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn kbin_labelled_round_trip() {
+        let base = gen::erdos_renyi(120, 360, 15);
+        let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8).collect();
+        let g = base.with_labels(labels);
+        let p = std::env::temp_dir().join("kudu_test_lab.kbin");
+        save_kbin(&g, &p).unwrap();
+        let g2 = load_kbin(&p).unwrap();
+        assert!(g2.is_labelled());
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        for v in 0..g.num_vertices() as VertexId {
+            assert_eq!(g.neighbors(v), g2.neighbors(v), "vertex {v}");
+            assert_eq!(g.label(v), g2.label(v), "label {v}");
         }
         std::fs::remove_file(&p).ok();
     }

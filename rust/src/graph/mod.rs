@@ -1,16 +1,34 @@
-//! Graph substrate: CSR storage, preprocessing, generators, and I/O.
+//! Graph substrate: two storage tiers, preprocessing, generators, I/O.
 //!
-//! All engines in this crate (Kudu and the baselines) operate on the same
-//! [`Graph`] representation: an undirected simple graph in CSR format with
-//! sorted adjacency lists. Sorted lists are what makes the pattern-aware
-//! enumeration loops cheap — every extension step is a sorted-set
-//! intersection (see [`crate::exec`]).
+//! All engines in this crate (Kudu and the baselines) mine undirected
+//! simple graphs with sorted adjacency lists, stored in one of two
+//! tiers behind the [`GraphStore`] accessor seam:
+//!
+//! * [`Graph`] — plain `Vec`-backed CSR. `neighbors(v)` is a direct
+//!   slice borrow; this is the default tier and the *reference
+//!   semantics* for everything else.
+//! * [`CompactGraph`] — varint-delta block-compressed adjacency
+//!   (see [`compact`]), typically 2–2.5× smaller, optionally backed by
+//!   an mmap [`segment`] so a partition can exceed RAM. Decoding a list
+//!   reproduces the CSR slice *bitwise*, which is what extends the
+//!   determinism contract to storage: pattern counts, traffic matrices,
+//!   and virtual time are bitwise identical across tiers. Decode effort
+//!   is charged to the `decode_s` **diagnostic** only — it never enters
+//!   `Work` or virtual time.
+//!
+//! Sorted lists are what makes the pattern-aware enumeration loops
+//! cheap — every extension step is a sorted-set intersection (see
+//! [`crate::exec`]), fed identically by both tiers.
 
 pub mod builder;
+pub mod compact;
 pub mod gen;
 pub mod io;
+pub mod segment;
 
 pub use builder::GraphBuilder;
+pub use compact::{relabel_by_degree, CompactGraph};
+pub use segment::Segment;
 
 /// Vertex identifier. 32 bits is plenty for the laptop-scale stand-in
 /// datasets (the paper's largest graph, Yahoo at 1.4 B vertices, would need
@@ -134,6 +152,153 @@ impl Graph {
         let top = ((vs.len() as f64 * frac).ceil() as usize).max(1).min(vs.len());
         let covered: usize = vs[..top].iter().map(|&v| self.degree(v)).sum();
         covered as f64 / self.edges.len().max(1) as f64
+    }
+
+    /// Storage bytes per directed adjacency entry (CSR tier).
+    pub fn bytes_per_edge(&self) -> f64 {
+        if self.edges.is_empty() {
+            0.0
+        } else {
+            self.csr_bytes() as f64 / self.edges.len() as f64
+        }
+    }
+}
+
+/// The accessor seam over the two storage tiers. Everything downstream
+/// of graph construction — partitioning, the cache, the communication
+/// fabric, and the task runner — consumes a `GraphStore` instead of a
+/// concrete representation.
+///
+/// The seam is deliberately *pull-based*: callers that need an
+/// adjacency list pass a scratch buffer to [`GraphStore::neighbors_into`]
+/// and get back a slice that is bitwise identical across tiers (a
+/// zero-copy borrow for CSR, a decoded copy for compact). Degree,
+/// labels, and size accounting never decode.
+#[derive(Clone, Copy)]
+pub enum GraphStore<'g> {
+    /// `Vec`-backed CSR — the reference tier.
+    Csr(&'g Graph),
+    /// Varint-delta compressed blocks, optionally mmap-backed.
+    Compact(&'g CompactGraph),
+}
+
+impl<'g> GraphStore<'g> {
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        match self {
+            GraphStore::Csr(g) => g.num_vertices(),
+            GraphStore::Compact(c) => c.num_vertices(),
+        }
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        match self {
+            GraphStore::Csr(g) => g.num_edges(),
+            GraphStore::Compact(c) => c.num_edges(),
+        }
+    }
+
+    /// Degree of `v` — never decodes.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        match self {
+            GraphStore::Csr(g) => g.degree(v),
+            GraphStore::Compact(c) => c.degree(v),
+        }
+    }
+
+    /// The label of `v` (0 when unlabelled) — never decodes.
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        match self {
+            GraphStore::Csr(g) => g.label(v),
+            GraphStore::Compact(c) => c.label(v),
+        }
+    }
+
+    /// True if vertex labels are attached.
+    #[inline]
+    pub fn is_labelled(&self) -> bool {
+        match self {
+            GraphStore::Csr(g) => g.is_labelled(),
+            GraphStore::Compact(c) => c.is_labelled(),
+        }
+    }
+
+    /// The sorted neighbour list of `v`, bitwise identical across tiers.
+    /// CSR borrows straight from the graph and leaves `scratch` alone;
+    /// compact decodes into `scratch`. Callers must treat the returned
+    /// slice as invalidated by the next call with the same scratch.
+    #[inline]
+    pub fn neighbors_into<'s>(&self, v: VertexId, scratch: &'s mut Vec<VertexId>) -> &'s [VertexId]
+    where
+        'g: 's,
+    {
+        match self {
+            GraphStore::Csr(g) => g.neighbors(v),
+            GraphStore::Compact(c) => {
+                c.neighbors_into(v, scratch);
+                &scratch[..]
+            }
+        }
+    }
+
+    /// True if the (undirected) edge `(u, v)` exists.
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        match self {
+            GraphStore::Csr(g) => g.has_edge(u, v),
+            GraphStore::Compact(c) => c.has_edge(u, v),
+        }
+    }
+
+    /// Tier-invariant *logical* CSR size in bytes. Cache budgets and
+    /// partition accounting use this so byte-denominated decisions (and
+    /// therefore every reported bit) are identical across tiers.
+    #[inline]
+    pub fn csr_bytes(&self) -> usize {
+        match self {
+            GraphStore::Csr(g) => g.csr_bytes(),
+            GraphStore::Compact(c) => c.csr_bytes(),
+        }
+    }
+
+    /// Physical storage footprint of this tier in bytes.
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        match self {
+            GraphStore::Csr(g) => g.csr_bytes(),
+            GraphStore::Compact(c) => c.bytes(),
+        }
+    }
+
+    /// Physical bytes per directed adjacency entry — the headline
+    /// storage diagnostic (`RunStats::bytes_per_edge`).
+    #[inline]
+    pub fn bytes_per_edge(&self) -> f64 {
+        match self {
+            GraphStore::Csr(g) => g.bytes_per_edge(),
+            GraphStore::Compact(c) => c.bytes_per_edge(),
+        }
+    }
+
+    /// Whether adjacency access pays a decode (compact tier).
+    #[inline]
+    pub fn is_compact(&self) -> bool {
+        matches!(self, GraphStore::Compact(_))
+    }
+
+    /// The underlying CSR graph, when this is the CSR tier. Baseline
+    /// engines that index adjacency by reference semantics use this.
+    #[inline]
+    pub fn as_csr(&self) -> Option<&'g Graph> {
+        match self {
+            GraphStore::Csr(g) => Some(g),
+            GraphStore::Compact(_) => None,
+        }
     }
 }
 

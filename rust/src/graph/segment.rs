@@ -1,0 +1,262 @@
+//! Byte-segment storage for compact adjacency payloads: either an
+//! ordinary heap buffer or a read-only, file-backed memory mapping.
+//!
+//! The mapping path is what lets a simulated machine's partition exceed
+//! RAM: [`CompactGraph`](crate::graph::CompactGraph) payloads spilled to
+//! disk are mapped `PROT_READ`/`MAP_PRIVATE` and paged in on demand, so
+//! resident memory is bounded by the access pattern rather than the
+//! graph size. The crate carries no dependencies, so the two syscalls we
+//! need are declared by hand; on non-Unix targets (and under Miri, which
+//! cannot model `mmap`) [`Segment::map_file`] transparently falls back
+//! to reading the file onto the heap, preserving behaviour at the cost
+//! of residency.
+//!
+//! Mapped segments are immutable for their whole lifetime, which is what
+//! makes sharing them across simulated machines sound (see the `Send`/
+//! `Sync` justifications below).
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+/// A read-only byte buffer that is either heap-allocated or backed by a
+/// private file mapping.
+pub enum Segment {
+    /// Bytes owned on the heap.
+    Heap(Vec<u8>),
+    /// Bytes backed by a read-only file mapping (Unix only, not under
+    /// Miri). Dropping the segment unmaps it.
+    #[cfg(all(unix, not(miri)))]
+    Mapped(Mmap),
+}
+
+impl Segment {
+    /// Wrap an owned heap buffer.
+    pub fn from_vec(bytes: Vec<u8>) -> Self {
+        Segment::Heap(bytes)
+    }
+
+    /// Map `path` read-only. Falls back to a heap read when mapping is
+    /// unavailable (non-Unix, Miri, empty file) or fails at runtime, so
+    /// callers never need to branch on platform.
+    pub fn map_file(path: &Path) -> io::Result<Self> {
+        #[cfg(all(unix, not(miri)))]
+        {
+            let file = File::open(path)?;
+            let len = file.metadata()?.len();
+            if len > 0 && len <= usize::MAX as u64 {
+                if let Ok(map) = Mmap::map(&file, len as usize) {
+                    return Ok(Segment::Mapped(map));
+                }
+            }
+        }
+        Self::read_file(path)
+    }
+
+    /// Read `path` fully onto the heap.
+    pub fn read_file(path: &Path) -> io::Result<Self> {
+        let mut file = File::open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        Ok(Segment::Heap(bytes))
+    }
+
+    /// The underlying bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Segment::Heap(v) => v,
+            #[cfg(all(unix, not(miri)))]
+            Segment::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Total byte length.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Whether the segment holds no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes that count against heap residency: the full length for heap
+    /// segments, zero for mapped ones (the kernel pages them on demand).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Segment::Heap(v) => v.len(),
+            #[cfg(all(unix, not(miri)))]
+            Segment::Mapped(_) => 0,
+        }
+    }
+
+    /// Whether the segment is file-mapped rather than heap-resident.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Segment::Heap(_) => false,
+            #[cfg(all(unix, not(miri)))]
+            Segment::Mapped(_) => true,
+        }
+    }
+}
+
+#[cfg(all(unix, not(miri)))]
+pub use imp::Mmap;
+
+#[cfg(all(unix, not(miri)))]
+mod imp {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    // Hand-declared bindings for the two syscalls this module needs; the
+    // crate deliberately has no libc dependency. Signatures and constant
+    // values match POSIX / the Linux and macOS ABIs on both x86_64 and
+    // aarch64.
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    /// A read-only private file mapping, unmapped on drop.
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ + MAP_PRIVATE over a file we never
+    // write through this handle: the pointed-to bytes are immutable for
+    // the lifetime of the value, so moving the handle across threads and
+    // reading it concurrently are both data-race-free.
+    unsafe impl Send for Mmap {}
+    // SAFETY: as above — all access is read-only through `as_slice`, and
+    // the mapping stays valid until `Drop` runs.
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map the first `len` bytes of `file` read-only. `len` must be
+        /// non-zero (POSIX rejects zero-length mappings).
+        pub fn map(file: &File, len: usize) -> io::Result<Mmap> {
+            debug_assert!(len > 0);
+            // SAFETY: we pass a null hint, a length validated non-zero by
+            // the caller, read-only/private protection flags, and a file
+            // descriptor owned by `file` that outlives this call. The
+            // kernel either returns a fresh mapping of at least `len`
+            // bytes or MAP_FAILED, which we check for below.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+
+        /// View the mapping as a byte slice.
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: `ptr..ptr + len` is a live PROT_READ mapping
+            // established by `map` and not yet unmapped (that only
+            // happens in `Drop`), so the region is readable, initialised
+            // by the kernel, and immutable for the borrow's lifetime.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: `ptr`/`len` came from a successful mmap call and
+            // are unmapped exactly once, here. Failure is ignored: there
+            // is no recovery from a failed munmap and the address range
+            // is never touched again.
+            let rc = unsafe { munmap(self.ptr, self.len) };
+            let _ = rc;
+        }
+    }
+}
+
+#[cfg(all(test, not(miri)))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kudu_segment_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn heap_round_trip() {
+        let s = Segment::from_vec(vec![1, 2, 3]);
+        assert_eq!(s.as_slice(), &[1, 2, 3]);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+        assert_eq!(s.heap_bytes(), 3);
+        assert!(!s.is_mapped());
+    }
+
+    #[test]
+    fn map_file_round_trip() {
+        let path = tmp_path("round_trip");
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&bytes).unwrap();
+        }
+        let s = Segment::map_file(&path).unwrap();
+        assert_eq!(s.as_slice(), &bytes[..]);
+        assert_eq!(s.len(), bytes.len());
+        if s.is_mapped() {
+            assert_eq!(s.heap_bytes(), 0);
+        }
+        drop(s);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn map_empty_file_falls_back_to_heap() {
+        let path = tmp_path("empty");
+        File::create(&path).unwrap();
+        let s = Segment::map_file(&path).unwrap();
+        assert!(s.is_empty());
+        assert!(!s.is_mapped());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn map_missing_file_errors() {
+        let path = tmp_path("missing_never_created");
+        assert!(Segment::map_file(&path).is_err());
+    }
+
+    #[test]
+    fn mapped_segment_is_shareable_across_threads() {
+        let path = tmp_path("shared");
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&[7u8; 4096]).unwrap();
+        }
+        let s = Segment::map_file(&path).unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let r = &s;
+                scope.spawn(move || {
+                    assert!(r.as_slice().iter().all(|&b| b == 7));
+                });
+            }
+        });
+        drop(s);
+        std::fs::remove_file(&path).ok();
+    }
+}

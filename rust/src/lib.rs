@@ -126,9 +126,14 @@
 //! Everything a run reports — counts, per-pattern traffic matrices,
 //! virtual time — is **bitwise identical** for any host thread count
 //! ([`par`]), worker count, comm window/batch setting (including the
-//! `sync_fetch` escape hatch), and intersection-kernel tier. Wall-clock
-//! fields (`wall_s`, `comm_stall_s`) are explicitly *diagnostics*
-//! outside the contract, as are runs halted early by
+//! `sync_fetch` escape hatch), intersection-kernel tier, and **graph
+//! storage tier** ([`config::StorageTier`]: `Vec`-CSR vs the
+//! varint-delta compressed representation of [`graph::CompactGraph`],
+//! optionally mmap-backed). Wall-clock fields (`wall_s`,
+//! `comm_stall_s`) are explicitly *diagnostics* outside the contract,
+//! as are the storage-tier decode charge (`decode_s`, modelled per
+//! decoded edge and kept out of work and virtual time), the
+//! `bytes_per_edge` footprint, and runs halted early by
 //! [`session::Control::Halt`].
 //!
 //! The contract is enforced in three layers (see `EXPERIMENTS.md`
@@ -161,7 +166,11 @@
 //!
 //! * [`session`] — the public mining-session API described above.
 //! * [`graph`], [`pattern`], [`plan`], [`partition`], [`cluster`] — the
-//!   substrates: CSR graphs and generators, pattern graphs and isomorphism,
+//!   substrates: CSR graphs and generators plus the compressed storage
+//!   tier (degree-ordered relabeling, varint-delta blocks, mmap-backed
+//!   segments, `.kbin` binary sidecars — [`graph::CompactGraph`],
+//!   [`graph::Segment`], [`graph::io`]) behind the [`graph::GraphStore`]
+//!   accessor seam, pattern graphs and isomorphism,
 //!   pattern-aware matching plans (the Automine / GraphPi "code
 //!   generators") and their fusion into prefix-trie mining programs
 //!   ([`plan::program`]), 1-D partitioning, and a deterministic simulated

@@ -126,11 +126,13 @@ impl Traffic {
 /// **Determinism contract:** every field is byte-for-byte independent of
 /// host parallelism (`sim_threads`, `workers_per_machine`) and of the
 /// comm-subsystem settings (`EngineConfig::comm` window/batching/
-/// sync-fetch) *except* the execution diagnostics — `wall_s`,
-/// `sched_steals`, `peak_live_chunks`, and the comm diagnostics
-/// `comm_stall_s`, `peak_in_flight`, `comm_flushes` — which describe how
-/// the host happened to run the simulation rather than what the
-/// simulated cluster did.
+/// sync-fetch) — and of the storage tier (`EngineConfig::storage`) —
+/// *except* the execution diagnostics: `wall_s`, `sched_steals`,
+/// `peak_live_chunks`, the comm diagnostics `comm_stall_s`,
+/// `peak_in_flight`, `comm_flushes`, and the storage diagnostics
+/// `decode_s`, `bytes_per_edge`. Those describe how the host happened to
+/// run the simulation (or what the chosen representation cost/weighed)
+/// rather than what the simulated cluster did.
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
     /// Pattern embedding count(s) — the mining answer.
@@ -190,6 +192,16 @@ pub struct RunStats {
     /// *modelled* messages and is deterministic.
     /// Execution diagnostic: excluded from the determinism contract.
     pub comm_flushes: u64,
+    /// Modelled seconds spent decoding compressed adjacency (compact
+    /// storage tier only; 0 on CSR). Charged per decoded edge at
+    /// [`crate::graph::compact::DECODE_SECONDS_PER_EDGE`].
+    /// Storage diagnostic: describes what the tier *costs*, never enters
+    /// `Work` or virtual time — excluded from the determinism contract.
+    pub decode_s: f64,
+    /// Physical storage bytes per directed adjacency entry of the active
+    /// graph tier (~4.25 for CSR, ~2 for compact on rmat graphs).
+    /// Storage diagnostic: excluded from the determinism contract.
+    pub bytes_per_edge: f64,
 }
 
 impl RunStats {
@@ -217,6 +229,12 @@ impl RunStats {
         self.comm_stall_s += other.comm_stall_s;
         self.peak_in_flight = self.peak_in_flight.max(other.peak_in_flight);
         self.comm_flushes += other.comm_flushes;
+        self.decode_s += other.decode_s;
+        self.bytes_per_edge = if self.bytes_per_edge == 0.0 {
+            other.bytes_per_edge
+        } else {
+            self.bytes_per_edge.max(other.bytes_per_edge)
+        };
     }
 
     /// Communication overhead ratio (Fig 16): exposed comm / total runtime.
@@ -275,6 +293,12 @@ pub struct ProgramStats {
     pub comm_stall_s: f64,
     pub peak_in_flight: u64,
     pub comm_flushes: u64,
+    /// Storage diagnostics of the run (same semantics and same exclusion
+    /// from the determinism contract as the [`RunStats`] fields of the
+    /// same names). `decode_s` counts *physical* decodes: a frame shared
+    /// by several patterns decodes its adjacency once.
+    pub decode_s: f64,
+    pub bytes_per_edge: f64,
 }
 
 impl ProgramStats {
@@ -291,6 +315,12 @@ impl ProgramStats {
         self.comm_stall_s += other.comm_stall_s;
         self.peak_in_flight = self.peak_in_flight.max(other.peak_in_flight);
         self.comm_flushes += other.comm_flushes;
+        self.decode_s += other.decode_s;
+        self.bytes_per_edge = if self.bytes_per_edge == 0.0 {
+            other.bytes_per_edge
+        } else {
+            self.bytes_per_edge.max(other.bytes_per_edge)
+        };
     }
 }
 

@@ -6,7 +6,7 @@
 //! the table-5 harness uses [`PartitionedGraph::partition_bytes`] against a
 //! per-machine budget to demonstrate the replication gate.
 
-use crate::graph::{Graph, VertexId};
+use crate::graph::{Graph, GraphStore, VertexId};
 
 /// Hash-based vertex → machine mapping. The paper uses a hash function for
 /// balanced distribution; we use a multiplicative hash (plain modulo would
@@ -36,21 +36,32 @@ impl PartitionMap {
     }
 }
 
-/// A 1-D partitioned graph: the shared CSR plus the ownership map.
+/// A 1-D partitioned graph: the shared storage tier plus the ownership
+/// map.
 ///
 /// In the simulated cluster all partitions live in one address space; the
 /// *policy* distinction between local and remote is made by
 /// [`PartitionedGraph::is_local`], and every remote access is routed
 /// through the accounted transport in [`crate::cluster`].
+///
+/// The graph is held behind the [`GraphStore`] seam, so partitions work
+/// identically over `Vec`-CSR and compact storage. All accounting here is
+/// degree-based (never decodes), and `partition_bytes` reports *logical*
+/// CSR bytes in both tiers — byte-denominated decisions downstream stay
+/// bitwise tier-invariant.
 #[derive(Clone, Copy)]
 pub struct PartitionedGraph<'g> {
-    pub graph: &'g Graph,
+    pub store: GraphStore<'g>,
     pub map: PartitionMap,
 }
 
 impl<'g> PartitionedGraph<'g> {
     pub fn new(graph: &'g Graph, num_machines: usize) -> Self {
-        PartitionedGraph { graph, map: PartitionMap::new(num_machines) }
+        Self::from_store(GraphStore::Csr(graph), num_machines)
+    }
+
+    pub fn from_store(store: GraphStore<'g>, num_machines: usize) -> Self {
+        PartitionedGraph { store, map: PartitionMap::new(num_machines) }
     }
 
     #[inline]
@@ -66,21 +77,23 @@ impl<'g> PartitionedGraph<'g> {
     /// Vertices owned by `machine` (the start vertices of its embedding
     /// trees).
     pub fn owned_vertices(&self, machine: usize) -> Vec<VertexId> {
-        (0..self.graph.num_vertices() as VertexId)
+        (0..self.store.num_vertices() as VertexId)
             .filter(|&v| self.owner(v) == machine)
             .collect()
     }
 
-    /// CSR bytes held by `machine`: offsets + adjacency of owned vertices
-    /// (each edge with ≥1 endpoint in V_i is stored on machine i, per the
-    /// paper's O(|V|/p + |E|/p) representation).
+    /// Logical CSR bytes held by `machine`: offsets + adjacency of owned
+    /// vertices (each edge with ≥1 endpoint in V_i is stored on machine i,
+    /// per the paper's O(|V|/p + |E|/p) representation). Tier-invariant by
+    /// construction — the compact tier's physical savings are reported via
+    /// `RunStats::bytes_per_edge`, not here.
     pub fn partition_bytes(&self, machine: usize) -> usize {
         let mut edges = 0usize;
         let mut verts = 0usize;
-        for v in 0..self.graph.num_vertices() as VertexId {
+        for v in 0..self.store.num_vertices() as VertexId {
             if self.owner(v) == machine {
                 verts += 1;
-                edges += self.graph.degree(v);
+                edges += self.store.degree(v);
             }
         }
         verts * std::mem::size_of::<u64>() + edges * std::mem::size_of::<VertexId>()
@@ -144,6 +157,20 @@ mod tests {
         // Hash partitioning of a skewed graph is still vertex-balanced;
         // byte balance is looser but bounded.
         assert!(pg.balance_factor() < 3.0, "balance {}", pg.balance_factor());
+    }
+
+    #[test]
+    fn partition_accounting_is_tier_invariant() {
+        let g = gen::rmat(9, 8, 11);
+        let c = crate::graph::CompactGraph::from_graph(&g);
+        let pg = PartitionedGraph::new(&g, 4);
+        let pc = PartitionedGraph::from_store(GraphStore::Compact(&c), 4);
+        for m in 0..4 {
+            assert_eq!(pg.owned_vertices(m), pc.owned_vertices(m));
+            assert_eq!(pg.partition_bytes(m), pc.partition_bytes(m));
+        }
+        assert_eq!(pg.max_partition_bytes(), pc.max_partition_bytes());
+        assert_eq!(pg.balance_factor(), pc.balance_factor());
     }
 
     #[test]

@@ -481,6 +481,102 @@ fn prop_sharing_never_increases_traffic() {
     }
 }
 
+/// Property (storage tier): the varint-delta compressed representation
+/// round-trips every adjacency query against the CSR reference — degree,
+/// neighbor lists (via the pooled-scratch decode path), and `has_edge`
+/// probes including absent endpoints — across random graphs plus
+/// adversarial shapes: empty graphs, isolated vertices, singletons,
+/// block-boundary degrees (multiples of the 64-element decode block ± 1),
+/// and maximal-delta gaps.
+#[test]
+fn prop_compact_round_trips_csr() {
+    use kudu::graph::{CompactGraph, GraphBuilder};
+    let mut rng = Rng::new(0xC0_FFEE);
+    let mut graphs: Vec<Graph> = Vec::new();
+    for _ in 0..12 {
+        graphs.push(random_graph(&mut rng));
+    }
+    // Empty graph and a single isolated vertex.
+    graphs.push(GraphBuilder::new(0).build());
+    graphs.push(GraphBuilder::new(1).build());
+    // One vertex whose degree straddles the decode-block boundary, with
+    // maximal deltas: neighbors spread to the far end of the id space.
+    for deg in [63usize, 64, 65, 128, 129] {
+        let n = 70_000;
+        let mut b = GraphBuilder::new(n);
+        let stride = (n - 1) / deg;
+        for i in 0..deg {
+            b.add_edge(0, (1 + i * stride) as u32);
+        }
+        graphs.push(b.build());
+    }
+    let mut scratch = Vec::new();
+    let mut reference = Vec::new();
+    for (case, g) in graphs.iter().enumerate() {
+        let c = CompactGraph::from_graph(g);
+        assert_eq!(c.num_vertices(), g.num_vertices(), "case {case}: n");
+        assert_eq!(c.num_edges(), g.num_edges(), "case {case}: m");
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(c.degree(v), g.degree(v), "case {case}: degree({v})");
+            c.neighbors_into(v, &mut scratch);
+            reference.clear();
+            reference.extend_from_slice(g.neighbors(v));
+            assert_eq!(scratch, reference, "case {case}: neighbors({v})");
+        }
+        // Edge probes: every real edge plus misses around it.
+        for v in 0..g.num_vertices() as u32 {
+            for &u in g.neighbors(v) {
+                assert!(c.has_edge(v, u), "case {case}: present ({v},{u})");
+            }
+        }
+        for _ in 0..200.min(g.num_vertices() * g.num_vertices()) {
+            let v = rng.below(g.num_vertices().max(1) as u64) as u32;
+            let u = rng.below(g.num_vertices().max(1) as u64) as u32;
+            if g.num_vertices() > 0 {
+                assert_eq!(c.has_edge(v, u), g.has_edge(v, u), "case {case}: probe ({v},{u})");
+            }
+        }
+    }
+}
+
+/// Property (storage tier): degree-descending relabeling is a
+/// permutation — the relabeled graph preserves vertex and edge counts,
+/// the degree multiset, and every pattern count (counts are isomorphism
+/// invariants, so any defect in the permutation shows up here).
+#[test]
+fn prop_relabeling_preserves_counts() {
+    use kudu::graph::relabel_by_degree;
+    let mut rng = Rng::new(0x2E1A_BE1);
+    for case in 0..8 {
+        let g = random_graph(&mut rng);
+        let (r, perm) = relabel_by_degree(&g);
+        assert_eq!(r.num_vertices(), g.num_vertices(), "case {case}: n");
+        assert_eq!(r.num_edges(), g.num_edges(), "case {case}: m");
+        // perm is a bijection old-id → new-id.
+        let mut seen = vec![false; g.num_vertices()];
+        for &p in &perm {
+            assert!(!seen[p as usize], "case {case}: duplicate image {p}");
+            seen[p as usize] = true;
+        }
+        // Degrees follow the permutation and end up non-increasing.
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(r.degree(perm[v as usize]), g.degree(v), "case {case}: degree({v})");
+        }
+        for w in 1..r.num_vertices() as u32 {
+            assert!(r.degree(w - 1) >= r.degree(w), "case {case}: order at {w}");
+        }
+        for p in [Pattern::triangle(), Pattern::clique(4), Pattern::chain(3)] {
+            for induced in [Induced::Edge, Induced::Vertex] {
+                assert_eq!(
+                    count_embeddings(&r, &p, induced),
+                    count_embeddings(&g, &p, induced),
+                    "case {case}: {p:?} {induced:?}"
+                );
+            }
+        }
+    }
+}
+
 /// Property: peak chunk memory is monotone (weakly) in chunk capacity.
 #[test]
 fn prop_memory_bounded_by_capacity() {

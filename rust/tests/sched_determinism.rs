@@ -187,6 +187,46 @@ fn simd_kernel_tier_is_bitwise_invisible() {
     }
 }
 
+/// Storage tier selection (the varint-delta compressed tier vs the
+/// `Vec`-CSR reference) is a space/wall-clock decision only: every
+/// covered field is bitwise identical with either representation, across
+/// engines × apps × machine counts. Decode cost is charged to the
+/// diagnostic `decode_s` channel, never to work or virtual time. (With
+/// `KUDU_NO_COMPACT=1` in the environment both settings resolve to CSR
+/// and the assertion still must hold; with `KUDU_COMPACT_GRAPH=1` — the
+/// CI compact leg — the default tier flips and the explicit settings
+/// here still pin both sides.)
+#[test]
+fn storage_tier_is_bitwise_invisible() {
+    use kudu::config::StorageTier;
+    let g = gen::rmat(8, 8, 0x5C4E_D51D);
+    for machines in [1usize, 4] {
+        let mut cfg = RunConfig::with_machines(machines);
+        cfg.engine.chunk_capacity = 128;
+        cfg.engine.mini_batch = 16;
+        let sess = MiningSession::with_config(&g, cfg);
+        for app in [App::Tc, App::Mc(3), App::Cc(4)] {
+            for engine in ALL_ENGINES {
+                let csr = sess
+                    .job(&app)
+                    .executor(engine.executor())
+                    .storage(StorageTier::Csr)
+                    .run();
+                let compact = sess
+                    .job(&app)
+                    .executor(engine.executor())
+                    .storage(StorageTier::Compact)
+                    .run();
+                assert_bitwise_eq(
+                    &csr,
+                    &compact,
+                    &format!("storage × {} × {} × {machines}m", app.name(), engine.name()),
+                );
+            }
+        }
+    }
+}
+
 /// Per-embedding sinks (the paper's Algorithm-1 user function) flow
 /// through per-task sinks reduced in task order: a sink-based app must
 /// aggregate to identical results for any worker count.
