@@ -1,0 +1,189 @@
+//! Serving-layer bench: hundreds of concurrent mixed jobs through one
+//! resident [`MiningService`], from two client classes:
+//!
+//! * **interactive** — two clients submitting small, frequently repeated
+//!   queries (triangle count, 3-motifs). Repeats are exactly what the
+//!   cross-job result cache exists for.
+//! * **batch** — two clients flooding heavier jobs (4-cliques, 4-motifs,
+//!   and a baseline-engine run). The fair-share dispatcher must keep
+//!   their burst from starving the interactive class.
+//!
+//! Measured per class: queue-wait and end-to-end latency percentiles
+//! (p50/p99), plus the overall cache hit rate and a fairness ratio
+//! (mean interactive queue-wait ÷ mean batch queue-wait — round-robin
+//! dispatch should keep it well below 1 even though batch submits more
+//! work). Along the way every repeated job's report is asserted bitwise
+//! identical to its first occurrence — concurrency, queue order, and
+//! cache hits must never leak into results.
+//!
+//! Emits `BENCH_service.json`; numbers are recorded in EXPERIMENTS.md
+//! §Service. `KUDU_SERVICE_JOBS` scales the workload (default 200).
+
+use kudu::graph::gen;
+use kudu::metrics::percentile;
+use kudu::plan::ClientSystem;
+use kudu::service::{JobOptions, JobResult, MiningService, ServiceConfig};
+use kudu::session::{JobReport, MiningSession};
+use kudu::workloads::{App, EngineKind};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The scripted mix: (spec label, app, engine), cycled per class. Specs
+/// repeat across the run, so the same (program, config) recurs and the
+/// result cache gets a realistic duplicate stream.
+const INTERACTIVE_MIX: [(&str, App); 2] = [("tc", App::Tc), ("3-mc", App::Mc(3))];
+const BATCH_MIX: [(&str, App, EngineKind); 3] = [
+    ("4-cc", App::Cc(4), EngineKind::Kudu(ClientSystem::GraphPi)),
+    ("4-mc", App::Mc(4), EngineKind::Kudu(ClientSystem::Automine)),
+    ("tc@gthinker", App::Tc, EngineKind::GThinker),
+];
+
+fn assert_same_report(a: &JobReport, b: &JobReport, what: &str) {
+    assert_eq!(a.stats.counts, b.stats.counts, "{what}: counts");
+    assert_eq!(
+        a.stats.virtual_time_s.to_bits(),
+        b.stats.virtual_time_s.to_bits(),
+        "{what}: virtual time"
+    );
+    assert_eq!(a.stats.network_bytes, b.stats.network_bytes, "{what}: bytes");
+}
+
+fn class_stats(results: &[(String, JobResult)], class: &str) -> (Vec<f64>, Vec<f64>) {
+    let waits: Vec<f64> = results
+        .iter()
+        .filter(|(c, _)| c == class)
+        .map(|(_, r)| r.latency.queue_wait_s)
+        .collect();
+    let totals: Vec<f64> = results
+        .iter()
+        .filter(|(c, _)| c == class)
+        .map(|(_, r)| r.latency.total_s)
+        .collect();
+    (waits, totals)
+}
+
+fn main() {
+    let jobs: usize = std::env::var("KUDU_SERVICE_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let g = gen::rmat(10, 8, 77);
+    let sess = MiningSession::new(&g, 4);
+    let cfg = ServiceConfig {
+        max_concurrent_jobs: 8,
+        max_inflight_per_client: 4,
+        max_queued_per_client: jobs,
+        max_queued_total: 2 * jobs,
+        cache_capacity: 64,
+    };
+    println!(
+        "service bench: {} vertices / {} edges, 4 machines, pool {}, {} jobs",
+        g.num_vertices(),
+        g.num_edges(),
+        cfg.max_concurrent_jobs,
+        jobs
+    );
+
+    // Every job runs the engine serially (sim_threads/workers = 1): the
+    // pool provides the parallelism, so 8 concurrent jobs use ~8 host
+    // threads rather than 8 × all-cores.
+    let base = JobOptions { sim_threads: Some(1), workers_per_machine: Some(1), ..JobOptions::default() };
+
+    let t0 = Instant::now();
+    let (results, stats) = MiningService::serve(&sess, cfg, |svc| {
+        let clients = [
+            ("interactive", svc.client("interactive-0")),
+            ("interactive", svc.client("interactive-1")),
+            ("batch", svc.client("batch-0")),
+            ("batch", svc.client("batch-1")),
+        ];
+        let mut handles = Vec::with_capacity(jobs);
+        for i in 0..jobs {
+            let (class, client) = clients[i % clients.len()];
+            let (label, h) = if class == "interactive" {
+                let (label, app) = INTERACTIVE_MIX[i % INTERACTIVE_MIX.len()];
+                (label.to_string(), svc.submit(client, Arc::new(app), base).unwrap())
+            } else {
+                let (label, app, engine) = BATCH_MIX[i % BATCH_MIX.len()];
+                let opts = JobOptions { engine, ..base };
+                (label.to_string(), svc.submit(client, Arc::new(app), opts).unwrap())
+            };
+            handles.push((class.to_string(), label, h));
+        }
+        // Identical spec → bitwise identical report, whether computed
+        // fresh or served from the cache.
+        let mut first: BTreeMap<String, JobReport> = BTreeMap::new();
+        let results: Vec<(String, JobResult)> = handles
+            .into_iter()
+            .map(|(class, label, h)| {
+                let r = h.wait();
+                match first.get(&label) {
+                    Some(reference) => assert_same_report(&r.report, reference, &label),
+                    None => {
+                        first.insert(label, r.report.clone());
+                    }
+                }
+                (class, r)
+            })
+            .collect();
+        (results, svc.stats())
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    assert_eq!(stats.completed as usize, jobs, "every accepted job resolves");
+    assert!(stats.cache_hits > 0, "the duplicate stream must hit the cache");
+
+    let (iw, it) = class_stats(&results, "interactive");
+    let (bw, bt) = class_stats(&results, "batch");
+    let hit_rate =
+        stats.cache_hits as f64 / (stats.cache_hits + stats.cache_misses).max(1) as f64;
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    // Round-robin dispatch keeps the light class's waits from inheriting
+    // the heavy class's backlog; the ratio is the fairness headline.
+    let fairness = mean(&iw) / mean(&bw).max(f64::MIN_POSITIVE);
+
+    for (class, waits, totals) in [("interactive", &iw, &it), ("batch", &bw, &bt)] {
+        println!(
+            "bench service/{class}  jobs {}  queue-wait p50 {:.4}s p99 {:.4}s  \
+             end-to-end p50 {:.4}s p99 {:.4}s",
+            waits.len(),
+            percentile(waits, 0.50),
+            percentile(waits, 0.99),
+            percentile(totals, 0.50),
+            percentile(totals, 0.99),
+        );
+    }
+    println!(
+        "bench service/cache  hits {} misses {} ({:.1}% hit rate)",
+        stats.cache_hits,
+        stats.cache_misses,
+        hit_rate * 100.0
+    );
+    println!("bench service/fairness  interactive/batch mean-wait ratio {fairness:.3}");
+
+    let class_json = |name: &str, waits: &[f64], totals: &[f64]| {
+        format!(
+            "    \"{name}\": {{\"jobs\": {}, \"queue_wait_p50_s\": {}, \"queue_wait_p99_s\": {}, \
+             \"total_p50_s\": {}, \"total_p99_s\": {}}}",
+            waits.len(),
+            percentile(waits, 0.50),
+            percentile(waits, 0.99),
+            percentile(totals, 0.50),
+            percentile(totals, 0.99),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"service\",\n  \"workload\": \"mixed_rmat10_4machines\",\n  \
+         \"jobs\": {jobs},\n  \"pool\": 8,\n  \"wall_s\": {wall},\n  \
+         \"classes\": {{\n{},\n{}\n  }},\n  \
+         \"cache\": {{\"hits\": {}, \"misses\": {}, \"hit_rate\": {hit_rate}}},\n  \
+         \"fairness_wait_ratio\": {fairness},\n  \"deterministic\": true\n}}\n",
+        class_json("interactive", &iw, &it),
+        class_json("batch", &bw, &bt),
+        stats.cache_hits,
+        stats.cache_misses,
+    );
+    std::fs::write("BENCH_service.json", json).expect("write BENCH_service.json");
+    println!("wrote BENCH_service.json");
+}

@@ -1,0 +1,164 @@
+//! The serving layer end to end: one resident [`MiningService`] over one
+//! shared session, three simulated clients, mixed concurrent jobs.
+//!
+//! * **alice** submits a triangle count — and resubmits it later, which
+//!   is served from the cross-job result cache (bitwise the same report,
+//!   ~zero cost).
+//! * **bob** submits a 4-motif count, plus an exploratory gated scan he
+//!   **cancels mid-flight**: the job's own halt flag stops *its* engine
+//!   run and nothing else — every other job's report is bitwise what a
+//!   serial run produces.
+//! * **carol** submits a labelled MNI query ([`LabeledQuery`]), the
+//!   per-embedding-sink path through the service (never cached: its
+//!   results live in app-interior state, not the report).
+//!
+//! Run: `cargo run --release --example service`
+
+use kudu::graph::gen;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::service::{JobOptions, JobResult, MiningService, ServiceConfig};
+use kudu::session::{Control, ExtendHooks, GpmApp, LabeledQuery, MiningSession};
+use kudu::workloads::App;
+use kudu::VertexId;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Bob's exploratory scan: a triangle scan whose `on_match` parks until
+/// the example has cancelled the job, making "cancelled mid-flight"
+/// deterministic. Real apps would just run; cancellation lands wherever
+/// the engine happens to be.
+struct GatedScan {
+    started: AtomicBool,
+    released: AtomicBool,
+}
+
+impl ExtendHooks for GatedScan {
+    fn on_match(&self, _pat: usize, _vs: &[VertexId]) -> Control {
+        self.started.store(true, Ordering::Release);
+        while !self.released.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        Control::Continue
+    }
+}
+
+impl GpmApp for GatedScan {
+    fn name(&self) -> String {
+        "exploratory-scan".into()
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        vec![Pattern::triangle()]
+    }
+
+    fn induced(&self) -> Induced {
+        Induced::Edge
+    }
+
+    fn hooks(&self) -> Option<&dyn ExtendHooks> {
+        Some(self)
+    }
+}
+
+fn describe(name: &str, r: &JobResult) {
+    let flags = match (r.cached, r.cancelled) {
+        (true, _) => "  [cache hit]",
+        (_, true) => "  [cancelled]",
+        _ => "",
+    };
+    println!(
+        "  job {:>2} {name:<22} total {:>8}  virtual {:>9.4}s  queue-wait {:>7.4}s{flags}",
+        r.id,
+        r.report.stats.total_count(),
+        r.report.stats.virtual_time_s,
+        r.latency.queue_wait_s,
+    );
+}
+
+fn main() {
+    // A labelled graph so carol's MNI query has labels to match.
+    let base = gen::rmat(11, 10, 2024);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8 + 1).collect();
+    let g = base.with_labels(labels);
+    let sess = MiningSession::new(&g, 4);
+    println!(
+        "serving {} vertices / {} edges on 4 simulated machines\n",
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let cfg = ServiceConfig { max_concurrent_jobs: 3, ..ServiceConfig::default() };
+    MiningService::serve(&sess, cfg, |svc| {
+        let alice = svc.client("alice");
+        let bob = svc.client("bob");
+        let carol = svc.client("carol");
+
+        // Three clients, four jobs, all in flight together.
+        let tc = svc.submit(alice, Arc::new(App::Tc), JobOptions::default()).unwrap();
+        let mc = svc.submit(bob, Arc::new(App::Mc(4)), JobOptions::default()).unwrap();
+        let lq_app = Arc::new(LabeledQuery::new(
+            vec![
+                Pattern::triangle().with_labels(&[1, 2, 3]),
+                Pattern::chain(3).with_labels(&[2, 1, 2]),
+            ],
+            Induced::Edge,
+            2,
+        ));
+        let lq = svc
+            .submit(
+                carol,
+                Arc::clone(&lq_app) as Arc<dyn GpmApp + Send + Sync>,
+                JobOptions::default(),
+            )
+            .unwrap();
+        let scan_app =
+            Arc::new(GatedScan { started: AtomicBool::new(false), released: AtomicBool::new(false) });
+        let scan = svc
+            .submit(
+                bob,
+                Arc::clone(&scan_app) as Arc<dyn GpmApp + Send + Sync>,
+                JobOptions::default(),
+            )
+            .unwrap();
+
+        // Cancel bob's scan once it is demonstrably mid-run: its engine
+        // invocation observes the job-scoped halt flag and drains — its
+        // own queues only, nobody else's.
+        while !scan_app.started.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        scan.cancel();
+        scan_app.released.store(true, Ordering::Release);
+
+        println!("per-job reports:");
+        describe("alice/triangles", &tc.wait());
+        describe("bob/4-motifs", &mc.wait());
+        describe("bob/exploratory-scan", &scan.wait());
+        describe("carol/labelled-mni", &lq.wait());
+        for q in lq_app.results() {
+            println!(
+                "       carol query {}: {} embeddings, MNI support {}{}",
+                q.pattern_idx,
+                q.embeddings,
+                q.support,
+                if q.kept { "" } else { "  (below threshold, pruned)" }
+            );
+        }
+
+        // Alice asks again: same graph fingerprint, same program, same
+        // contract-shaping config — served from the result cache.
+        println!("\nalice resubmits the triangle count:");
+        describe("alice/triangles", &tc2(svc, alice));
+
+        let s = svc.stats();
+        println!(
+            "\nservice: {} submitted / {} completed / {} cancelled | cache {} hits, {} misses",
+            s.submitted, s.completed, s.cancelled, s.cache_hits, s.cache_misses
+        );
+    });
+}
+
+fn tc2(svc: &MiningService<'_, '_>, alice: kudu::service::ClientId) -> JobResult {
+    svc.submit(alice, Arc::new(App::Tc), JobOptions::default()).unwrap().wait()
+}

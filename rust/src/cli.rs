@@ -54,6 +54,17 @@ pub fn parse_engine(s: &str) -> EngineKind {
     }
 }
 
+/// Job spec for the `serve` subcommand (`APP[@ENGINE]`, e.g. `tc`,
+/// `4-mc@k-automine`) → ([`App`], [`EngineKind`]). The engine defaults
+/// to the Kudu engine with the GraphPi planner, like
+/// [`crate::service::JobOptions`].
+pub fn parse_job_spec(s: &str) -> (App, EngineKind) {
+    match s.split_once('@') {
+        Some((app, engine)) => (parse_app(app), parse_engine(engine)),
+        None => (parse_app(s), EngineKind::Kudu(ClientSystem::GraphPi)),
+    }
+}
+
 /// Pattern spec (`triangle`, `clique-K`, `chain-K`, `cycle-K`, `star-K`,
 /// `diamond`, `tailed-triangle`) → [`Pattern`].
 pub fn parse_pattern(s: &str) -> Pattern {
@@ -173,6 +184,8 @@ mod tests {
         assert_eq!(parse_app("5-cc"), App::Cc(5));
         assert_eq!(parse_engine("k-graphpi"), EngineKind::Kudu(ClientSystem::GraphPi));
         assert_eq!(parse_engine("single"), EngineKind::SingleMachine);
+        assert_eq!(parse_job_spec("tc"), (App::Tc, EngineKind::Kudu(ClientSystem::GraphPi)));
+        assert_eq!(parse_job_spec("4-mc@gthinker"), (App::Mc(4), EngineKind::GThinker));
         assert_eq!(parse_pattern("clique-4").num_vertices(), 4);
         assert!(parse_dataset("lj").is_some());
         assert!(parse_dataset("nope").is_none());

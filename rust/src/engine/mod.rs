@@ -42,9 +42,12 @@
 //! ([`sink::ExtendHooks`]): `filter` prunes partial embeddings before
 //! their subtree is explored, `on_match` sees every complete embedding
 //! and may return [`sink::Control::Halt`] to stop the whole run
-//! (existence queries, top-k). Halting runs report partial results and
-//! are excluded from the bitwise contract; hook-less runs never read the
-//! halt flag.
+//! (existence queries, top-k). The same flag serves as the job-scoped
+//! cancellation channel for [`KuduEngine::run_program_cancellable`]:
+//! each engine invocation owns its flag, so halting one job never
+//! drains another job's queues. Halting runs report partial results and
+//! are excluded from the bitwise contract; runs with neither hooks nor
+//! an external cancel flag never read the flag.
 //!
 //! Remote fetches, parking, data reuse (vertical/horizontal sharing,
 //! static cache), and NUMA modelling are unchanged from the comm and
@@ -106,6 +109,35 @@ impl KuduEngine {
         transport: &mut Transport<'g>,
         owned: Option<&[Vec<VertexId>]>,
         hooks: Option<&dyn ExtendHooks>,
+        make_sink: impl Fn(usize, usize) -> S + Sync,
+        out_sinks: &mut Vec<Vec<S>>,
+    ) -> (Vec<PatternRun>, ProgramStats) {
+        Self::run_program_cancellable(
+            graph, program, cfg, compute, transport, owned, hooks, None, make_sink, out_sinks,
+        )
+    }
+
+    /// [`KuduEngine::run_program`] with an optional **external cancel
+    /// flag**. The flag is aliased with the run's internal halt flag, so
+    /// a `Release` store of `true` from any thread stops this run — and
+    /// *only* this run — exactly as a hook returning
+    /// [`sink::Control::Halt`] would: workers drain their own queues,
+    /// parked frames are dropped, and the run returns partial results
+    /// (excluded from the bitwise determinism contract, like every
+    /// halted run). Each engine invocation owns its flag wiring, so in a
+    /// multi-job server one job's cancellation never touches another
+    /// job's queues. `None` (the batch entry points) keeps hook-less
+    /// runs entirely off the flag: they never load it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_program_cancellable<'g, S: EmbeddingSink + Send>(
+        graph: GraphStore<'g>,
+        program: &MiningProgram,
+        cfg: &EngineConfig,
+        compute: &ComputeModel,
+        transport: &mut Transport<'g>,
+        owned: Option<&[Vec<VertexId>]>,
+        hooks: Option<&dyn ExtendHooks>,
+        cancel: Option<&AtomicBool>,
         make_sink: impl Fn(usize, usize) -> S + Sync,
         out_sinks: &mut Vec<Vec<S>>,
     ) -> (Vec<PatternRun>, ProgramStats) {
@@ -187,8 +219,13 @@ impl KuduEngine {
         // A lone machine never fetches remotely, and `sync_fetch` is the
         // synchronous escape hatch — both skip the fabric entirely.
         let fabric = (n > 1 && !cfg.comm.sync_fetch).then(|| CommFabric::new(n, cfg.comm));
-        // Run-wide halt flag, raised only by hook callbacks.
+        // Job-scoped halt flag, raised by hook callbacks or (when the
+        // caller supplied one) an external canceller. Aliasing the
+        // caller's flag onto the run-local binding keeps the scoping
+        // obvious: every load/store below touches exactly this job.
         let halt = AtomicBool::new(false);
+        let halt = cancel.unwrap_or(&halt);
+        let watch_halt = hooks.is_some() || cancel.is_some();
 
         let sim_threads = par::resolve_threads(cfg.sim_threads);
         std::thread::scope(|scope| {
@@ -207,7 +244,6 @@ impl KuduEngine {
             // panic unwinds past us — so the scope's implicit join always
             // completes.
             let _shutdown = ShutdownGuard(fabric.as_ref());
-            let halt = &halt;
             par::run_unit_workers(sim_threads, workers, &scheds, |sched, slot| {
                 let runner = TaskRunner::new(
                     sched.machine,
@@ -220,6 +256,7 @@ impl KuduEngine {
                     fabric.as_ref(),
                     hooks,
                     halt,
+                    watch_halt,
                 );
                 sched.run_worker(slot, runner, &make_sink, halt);
             });

@@ -273,8 +273,12 @@ impl<S: EmbeddingSink> MachineSched<S> {
 
     /// Drop every task this worker can reach — its own deque, the
     /// overflow stack, and the parked list — decrementing `outstanding`
-    /// so the machine's other workers retire too. Only reached after a
-    /// hook raised the run's halt flag; a halting run reports partial
+    /// so the machine's other workers retire too. Only reached after the
+    /// job's halt flag was raised (by a hook, or by an external
+    /// canceller through
+    /// [`run_program_cancellable`](super::KuduEngine::run_program_cancellable));
+    /// the flag belongs to this engine invocation alone, so the drain
+    /// never touches another job's queues. A halted run reports partial
     /// results by design.
     fn drain_on_halt(&self, slot: usize, overflow: &mut Vec<Task>) {
         let mut dropped = 0usize;
@@ -320,10 +324,10 @@ impl<S: EmbeddingSink> MachineSched<S> {
         let mut idle_spins = 0u32;
         loop {
             // Acquire pairs with the Release store in the halting
-            // worker's hook dispatch (`engine/task.rs`): a worker that
-            // observes the flag also observes every sink write the
-            // halting callback made first. See `tools/audit/atomics.toml`
-            // (`halt`).
+            // worker's hook dispatch (`engine/task.rs`) or in an
+            // external canceller: a worker that observes the flag also
+            // observes every sink write the halting callback made
+            // first. See `tools/audit/atomics.toml` (`halt`).
             if halt.load(Ordering::Acquire) {
                 self.drain_on_halt(slot, &mut overflow);
                 break;

@@ -57,10 +57,13 @@
 //! **Hooks.** When the program's app installs
 //! [`ExtendHooks`], frames consult `filter` before materialising an
 //! interior child embedding and `on_match` for every complete embedding;
-//! [`Control::Halt`] raises the run's halt flag, which workers observe
+//! [`Control::Halt`] raises the job's halt flag, which workers observe
 //! per embedding and between tasks. Hooked programs are compiled without
 //! cross-pattern fusion below the root, so hook callbacks always see a
-//! single-pattern frame.
+//! single-pattern frame. The same flag doubles as the job's external
+//! cancellation channel (see [`super::KuduEngine::run_program_cancellable`]):
+//! it is scoped to one engine invocation, so halting one job never
+//! drains another job's queues.
 
 use super::cache::StaticCache;
 use super::chunk::{ancestor_idx, list_src, resolve_stored, Chunk, Emb, ListRef, ListSrc};
@@ -315,9 +318,16 @@ pub struct TaskRunner<'a, 'g> {
     comm: Option<&'a CommFabric>,
     /// The app's per-level callbacks, if any.
     hooks: Option<&'a dyn ExtendHooks>,
-    /// Run-wide halt flag ([`Control::Halt`]); only consulted when hooks
-    /// are installed, so hook-less runs stay on the bitwise contract.
+    /// Job-scoped halt flag: raised by [`Control::Halt`] hook callbacks,
+    /// or externally by the job's owner (service cancellation). The flag
+    /// belongs to exactly one engine invocation — one job — so raising
+    /// it never touches any other job's run.
     halt: &'a AtomicBool,
+    /// Whether this run consults `halt` at all: true when hooks are
+    /// installed (they may return [`Control::Halt`]) or when the caller
+    /// supplied an external cancel flag. Plain batch runs never read the
+    /// flag, so they cannot observe (or pay for) it.
+    watch_halt: bool,
     // --- per-pattern accumulators (order-free reductions) ---
     pub ledgers: Vec<TrafficLedger>,
     pub units_cpu: Vec<u64>,
@@ -381,6 +391,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         comm: Option<&'a CommFabric>,
         hooks: Option<&'a dyn ExtendHooks>,
         halt: &'a AtomicBool,
+        watch_halt: bool,
     ) -> Self {
         let depth = program.max_depth();
         let pats = program.num_patterns();
@@ -396,6 +407,7 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
             comm,
             hooks,
             halt,
+            watch_halt,
             ledgers: (0..pats).map(|_| TrafficLedger::new(n)).collect(),
             units_cpu: vec![0; pats],
             units_mem: vec![0; pats],
@@ -435,14 +447,17 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         self.chunk_pool.push(chunk);
     }
 
-    /// Whether a hook raised [`Control::Halt`]. Hook-less runs never read
-    /// the flag, so they cannot observe (or pay for) it.
+    /// Whether this job's halt flag was raised — by a hook returning
+    /// [`Control::Halt`] or by an external cancellation. Runs that
+    /// install neither never read the flag, so they cannot observe (or
+    /// pay for) it.
     #[inline]
     fn halted(&self) -> bool {
-        // Acquire pairs with the Release stores below: an observer of
-        // the flag also observes the halting callback's final sink emit.
+        // Acquire pairs with the Release stores below (and with the
+        // Release store in an external canceller): an observer of the
+        // flag also observes the halting callback's final sink emit.
         // See `tools/audit/atomics.toml` (`halt`).
-        self.hooks.is_some() && self.halt.load(Ordering::Acquire)
+        self.watch_halt && self.halt.load(Ordering::Acquire)
     }
 
     /// Execute one task. `roots` holds the machine's (label-filtered)

@@ -214,6 +214,76 @@ pub fn load_kbin(path: &Path) -> std::io::Result<Graph> {
     }
 }
 
+/// FNV-1a offset basis / prime (64-bit) — the dependency-free hash
+/// behind [`content_fingerprint`].
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a over little-endian byte chunks.
+#[derive(Clone, Copy)]
+pub(crate) struct Fnv1a(pub(crate) u64);
+
+impl Fnv1a {
+    pub(crate) fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    pub(crate) fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub(crate) fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub(crate) fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub(crate) fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// Stable content fingerprint of a graph: 64-bit FNV-1a over exactly the
+/// version-stamped byte stream [`save_kbin`] writes (magic, format
+/// version, label flag, vertex/arc counts, degrees, adjacency, labels) —
+/// computed without materialising the snapshot. Two graphs ingest to the
+/// same fingerprint iff their canonical CSR forms are identical; since
+/// [`GraphBuilder`] sorts and dedups adjacency, the same edge set in any
+/// input order fingerprints identically. Version-stamping means a future
+/// `.kbin` layout bump also retires every cached fingerprint, exactly
+/// like it retires stale sidecars.
+///
+/// This is the graph half of the result-cache key in
+/// [`crate::service::MiningService`].
+pub fn content_fingerprint(g: &Graph) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(KBIN_MAGIC);
+    h.write_u32(KBIN_VERSION);
+    h.write_u32(g.is_labelled() as u32);
+    h.write_u64(g.num_vertices() as u64);
+    let arcs: u64 = (0..g.num_vertices() as VertexId).map(|v| g.degree(v) as u64).sum();
+    h.write_u64(arcs);
+    for v in 0..g.num_vertices() as VertexId {
+        h.write_u32(g.degree(v) as u32);
+    }
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            h.write_u32(u);
+        }
+    }
+    if g.is_labelled() {
+        for v in 0..g.num_vertices() as VertexId {
+            h.write(&[g.label(v)]);
+        }
+    }
+    h.finish()
+}
+
 /// [`load_edge_list`] with a binary sidecar cache: the first load of
 /// `<file>` parses the text and writes `<file>.kbin` next to it; later
 /// loads mmap-validate the sidecar and skip the text parse entirely.
@@ -387,6 +457,57 @@ mod tests {
             assert_eq!(g.neighbors(v), g2.neighbors(v), "vertex {v}");
             assert_eq!(g.label(v), g2.label(v), "label {v}");
         }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fingerprint_ignores_edge_input_order() {
+        // Same edge set, shuffled input order: the builder canonicalises
+        // adjacency (sorted, deduped), so ingestion order is invisible
+        // to the fingerprint.
+        let edges = [(0u32, 1u32), (1, 2), (2, 0), (2, 3), (3, 0)];
+        let mut reversed = edges;
+        reversed.reverse();
+        let a = Graph::from_edges(4, &edges);
+        let b = Graph::from_edges(4, &reversed);
+        let swapped: Vec<(VertexId, VertexId)> = edges.iter().map(|&(u, v)| (v, u)).collect();
+        let c = Graph::from_edges(4, &swapped);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "reversed input order");
+        assert_eq!(a.fingerprint(), c.fingerprint(), "swapped endpoints");
+    }
+
+    #[test]
+    fn fingerprint_sees_any_differing_edge_or_label() {
+        let base = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 0)]);
+        let extra = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 0), (2, 3)]);
+        let moved = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_ne!(base.fingerprint(), extra.fingerprint(), "added edge");
+        assert_ne!(base.fingerprint(), moved.fingerprint(), "moved edge");
+        // Same topology, different vertex count (isolated tail vertex).
+        let wider = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 0)]);
+        assert_ne!(base.fingerprint(), wider.fingerprint(), "extra vertex");
+        // Labels are part of the content: labelling changes the print,
+        // and so does any single differing label.
+        let lab1 = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 0)])
+            .with_labels(vec![0, 1, 0, 1]);
+        let lab2 = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 0)])
+            .with_labels(vec![0, 1, 0, 2]);
+        assert_ne!(base.fingerprint(), lab1.fingerprint(), "labelled vs not");
+        assert_ne!(lab1.fingerprint(), lab2.fingerprint(), "one label differs");
+    }
+
+    #[test]
+    fn fingerprint_matches_hash_of_kbin_stream() {
+        // The fingerprint is *defined* as FNV-1a over the save_kbin byte
+        // stream; pin that equivalence so the two never drift.
+        let labels: Vec<u8> = (0..60).map(|v| (v % 4) as u8).collect();
+        let g = gen::erdos_renyi(60, 150, 77).with_labels(labels);
+        let p = std::env::temp_dir().join("kudu_test_fp_stream.kbin");
+        save_kbin(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let mut h = Fnv1a::new();
+        h.write(&bytes);
+        assert_eq!(g.fingerprint(), h.finish());
         std::fs::remove_file(&p).ok();
     }
 

@@ -162,6 +162,16 @@ impl Graph {
             self.csr_bytes() as f64 / self.edges.len() as f64
         }
     }
+
+    /// Stable 64-bit content fingerprint ([`io::content_fingerprint`]):
+    /// FNV-1a over the version-stamped `.kbin` byte stream of this
+    /// graph. Equal edge sets ingested in any order fingerprint
+    /// identically (adjacency is sorted and deduped at build); any
+    /// differing edge or label changes it. The graph half of the
+    /// [`crate::service::MiningService`] result-cache key.
+    pub fn fingerprint(&self) -> u64 {
+        io::content_fingerprint(self)
+    }
 }
 
 /// The accessor seam over the two storage tiers. Everything downstream

@@ -121,6 +121,25 @@
 //! the shared root scan; runs that halt report partial results and are
 //! excluded from the bitwise determinism contract.)
 //!
+//! ## Serving Kudu
+//!
+//! Batch runs build a session, run one job, and exit. The resident
+//! shape is [`service::MiningService`]: a long-running, multi-tenant
+//! job server that owns one session — graph, partitioning, storage
+//! tier, owned-root lists loaded **once** — and serves concurrent jobs
+//! from many clients. Submissions return [`service::JobHandle`]s
+//! (`wait`/`try_result`/`cancel`); a fair-share queue feeds a bounded
+//! worker pool so no client's burst starves another; admission control
+//! ([`service::ServiceConfig`]) rejects over-quota submissions with
+//! typed, deterministic errors instead of blocking; per-job
+//! cancellation rides the engine's job-scoped halt plumbing; and a
+//! result cache keyed on (graph fingerprint, program identity,
+//! contract-shaping config) serves repeated queries at ~zero cost.
+//! Because a job's report depends only on (graph, program, config),
+//! N concurrent service jobs are bitwise identical to the same N jobs
+//! run serially on a plain session (`tests/service_equivalence.rs`).
+//! See `examples/service.rs` for a three-client tour.
+//!
 //! ## Determinism contract and how it's enforced
 //!
 //! Everything a run reports — counts, per-pattern traffic matrices,
@@ -165,6 +184,9 @@
 //! `DESIGN.md`:
 //!
 //! * [`session`] — the public mining-session API described above.
+//! * [`service`] — the serving layer: a resident multi-tenant job
+//!   server over one shared session (fair-share queue, bounded pool,
+//!   admission control, per-job cancellation, cross-job result cache).
 //! * [`graph`], [`pattern`], [`plan`], [`partition`], [`cluster`] — the
 //!   substrates: CSR graphs and generators plus the compressed storage
 //!   tier (degree-ordered relabeling, varint-delta blocks, mmap-backed
@@ -224,6 +246,7 @@ pub mod partition;
 pub mod pattern;
 pub mod plan;
 pub mod runtime;
+pub mod service;
 pub mod session;
 pub mod workloads;
 
@@ -232,4 +255,5 @@ pub use engine::KuduEngine;
 pub use graph::{Graph, VertexId};
 pub use pattern::Pattern;
 pub use plan::{MiningProgram, Plan};
+pub use service::{JobHandle, JobOptions, MiningService, ServiceConfig};
 pub use session::{Control, Executor, ExtendHooks, GpmApp, MiningSession};

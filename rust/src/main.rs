@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! kudu run --graph lj --app 4-cc --engine k-graphpi --machines 8
+//! kudu serve --graph lj --machines 8 --jobs tc,4-mc@k-automine --repeat 2
 //! kudu plan --pattern clique-5 --planner graphpi
 //! kudu generate --dataset lj --out /tmp/lj.txt
 //! kudu stats --graph uk
@@ -10,15 +11,20 @@
 //!
 //! The `run` subcommand is a thin shell over the mining-session API:
 //! it opens one [`MiningSession`] and dispatches a job built from the
-//! parsed app/engine/feature flags.
+//! parsed app/engine/feature flags. `serve` opens the same session once
+//! and runs a scripted [`MiningService`] workload over it: job specs
+//! round-robin across simulated clients, repeats hit the cross-job
+//! result cache, and per-job reports print as they resolve.
 
-use kudu::cli::{parse_app, parse_dataset, parse_engine, parse_pattern, Args};
+use kudu::cli::{parse_app, parse_dataset, parse_engine, parse_job_spec, parse_pattern, Args};
 use kudu::config::RunConfig;
 use kudu::graph::{io, Graph};
 use kudu::metrics::{fmt_bytes, fmt_time};
 use kudu::pattern::brute::Induced;
 use kudu::plan::ClientSystem;
+use kudu::service::{JobOptions, MiningService, ServiceConfig};
 use kudu::session::{GpmApp, MiningSession};
+use std::sync::Arc;
 
 fn load_graph(spec: &str) -> Graph {
     if let Some(d) = parse_dataset(spec) {
@@ -33,7 +39,7 @@ fn load_graph(spec: &str) -> Graph {
 }
 
 fn usage() -> ! {
-    eprintln!("usage: kudu <run|plan|generate|stats> [flags]");
+    eprintln!("usage: kudu <run|serve|plan|generate|stats> [flags]");
     eprintln!("  run      --graph <mc|pt|lj|uk|tw|fr|rm|yh|path> --app <tc|K-mc|K-cc>");
     eprintln!("           --engine <k-automine|k-graphpi|gthinker|movingcomp|replicated|single>");
     eprintln!("           --machines N --threads N --sim-threads N (0=all cores)");
@@ -42,6 +48,10 @@ fn usage() -> ! {
     eprintln!("           [--no-cache] [--no-hds] [--no-vcs] [--sync-fetch] [--no-simd]");
     eprintln!("           [--compact-graph]  (compressed storage tier; KUDU_NO_COMPACT=1 pins CSR)");
     eprintln!("           [--serial-patterns]  (legacy one-plan-per-run; default: fused program)");
+    eprintln!("  serve    --graph <abbr|path> --machines N --pool N (concurrent jobs)");
+    eprintln!("           --jobs <spec,spec,...> (APP[@ENGINE], e.g. tc,4-mc@k-automine)");
+    eprintln!("           --clients N (specs round-robin across N clients)");
+    eprintln!("           --repeat N (submit the list N times; repeats hit the result cache)");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
     eprintln!("  generate --dataset <abbr> --out <path>");
@@ -145,6 +155,61 @@ fn main() {
                     }
                 );
             }
+        }
+        "serve" => {
+            let g = load_graph(&args.get("graph", "mc"));
+            let machines = args.get_as::<usize>("machines", 8);
+            let specs: Vec<(kudu::workloads::App, kudu::workloads::EngineKind)> = args
+                .get("jobs", "tc,4-mc,4-cc")
+                .split(',')
+                .map(|s| parse_job_spec(s.trim()))
+                .collect();
+            let clients = args.get_as::<usize>("clients", 2).max(1);
+            let repeat = args.get_as::<usize>("repeat", 1).max(1);
+            let cfg = ServiceConfig {
+                max_concurrent_jobs: args.get_as::<usize>("pool", 4),
+                ..ServiceConfig::default()
+            };
+            println!(
+                "serving {} vertices / {} edges on {} machines | pool {} | {} clients",
+                g.num_vertices(),
+                g.num_edges(),
+                machines,
+                cfg.max_concurrent_jobs,
+                clients
+            );
+            let session = MiningSession::with_config(&g, RunConfig::with_machines(machines));
+            MiningService::serve(&session, cfg, |svc| {
+                let ids: Vec<_> =
+                    (0..clients).map(|i| svc.client(&format!("client-{i}"))).collect();
+                let mut handles = Vec::new();
+                for round in 0..repeat {
+                    for (i, (app, engine)) in specs.iter().enumerate() {
+                        let client = ids[(round * specs.len() + i) % clients];
+                        let h = svc
+                            .submit(client, Arc::new(*app), JobOptions::with_engine(*engine))
+                            .expect("scripted workload stays within default quotas");
+                        handles.push((app.name(), engine.name(), client, h));
+                    }
+                }
+                for (app, engine, client, h) in handles {
+                    let r = h.wait();
+                    println!(
+                        "job {:>3} [{}] {app} @ {engine}: total {} | virtual {} | queue-wait {} {}",
+                        r.id,
+                        svc.client_name(client),
+                        r.report.stats.total_count(),
+                        fmt_time(r.report.stats.virtual_time_s),
+                        fmt_time(r.latency.queue_wait_s),
+                        if r.cached { "(cache hit)" } else { "" }
+                    );
+                }
+                let s = svc.stats();
+                println!(
+                    "service: {} submitted / {} completed | cache {} hits / {} misses",
+                    s.submitted, s.completed, s.cache_hits, s.cache_misses
+                );
+            });
         }
         "plan" => {
             let p = parse_pattern(&args.get("pattern", "triangle"));

@@ -324,6 +324,36 @@ impl ProgramStats {
     }
 }
 
+/// Per-job latency breakdown reported by the multi-tenant serving layer
+/// ([`crate::service::MiningService`]): how long the job sat admitted
+/// but queued, how long it ran on a pool worker, and the end-to-end
+/// client-visible total (`queue_wait_s + run_s`, measured independently
+/// so the two views can be cross-checked). All three are **wall-clock
+/// diagnostics** — like `RunStats::wall_s`, they are outside the bitwise
+/// determinism contract; the report a job returns stays contract-bound.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobLatency {
+    /// Submission-accepted to dequeued-by-a-worker.
+    pub queue_wait_s: f64,
+    /// Dequeued to report ready (cache hits make this ~zero).
+    pub run_s: f64,
+    /// Submission-accepted to report ready.
+    pub total_s: f64,
+}
+
+/// Nearest-rank percentile (`q` in `[0, 1]`) of an unsorted sample set;
+/// `0.0` on an empty set. Sorts a copy — these are bench/service
+/// reporting paths, not hot loops.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("latency samples are finite"));
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank - 1]
+}
+
 /// Pretty-print helpers for the table harness.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
@@ -372,6 +402,17 @@ mod tests {
         b.record(1, 0, 7);
         a.merge(&b);
         assert_eq!(a.total_bytes(), 22);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let samples = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&samples, 0.0), 1.0);
+        assert_eq!(percentile(&samples, 0.5), 3.0);
+        assert_eq!(percentile(&samples, 0.9), 5.0);
+        assert_eq!(percentile(&samples, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
     }
 
     #[test]

@@ -1,0 +1,996 @@
+//! The serving layer: a resident, multi-tenant [`MiningService`] over
+//! one shared [`MiningSession`].
+//!
+//! Everything below `service` is batch: one process builds a session,
+//! runs one [`Job`](crate::session::Job), and exits. The production
+//! shape — and the reason the engine's scheduler and comm fabric are
+//! multiplexable at all — is a long-running server that owns the loaded
+//! graph, its partitioning, and its storage tier **once**, and serves
+//! *concurrent* mining jobs from many clients:
+//!
+//! * **Submission** — [`MiningService::submit`] accepts an app (any
+//!   [`GpmApp`]) plus per-job [`JobOptions`] and returns a [`JobHandle`]
+//!   with `wait`/`try_result`/`cancel`. Handles are `Send`: clients on
+//!   other threads submit and block independently.
+//! * **Fair-share queue + bounded pool** — accepted jobs enter per-client
+//!   FIFO queues; `max_concurrent_jobs` pool workers dispatch round-robin
+//!   across clients (one client's burst cannot starve another), each job
+//!   running its compiled program through the existing per-machine
+//!   scheduler and comm fabric.
+//! * **Admission control** — per-client queue quotas, a per-client
+//!   in-flight cap, and a global queue bound, validated up front like
+//!   every other config ([`ServiceConfig::validate`]). Rejections are
+//!   deterministic, typed errors ([`AdmissionError`]), never hangs.
+//! * **Cancellation** — [`JobHandle::cancel`] raises the job's own halt
+//!   flag, threaded into the engine via
+//!   [`Job::cancel_flag`](crate::session::Job::cancel_flag). The flag is
+//!   scoped to one engine invocation, so cancelling one job never drains
+//!   another job's queues; cancelled runs report partial results and are
+//!   excluded from the bitwise contract, like every halted run.
+//! * **Result cache** — completed reports are cached under
+//!   (graph fingerprint, program identity, contract-shaping config), so
+//!   a repeated query is served at ~zero cost. The key deliberately
+//!   *excludes* the bitwise-invisible host knobs (`sim_threads`,
+//!   `workers_per_machine`, SIMD, storage tier, comm window): two jobs
+//!   differing only there are *defined* to produce identical reports, so
+//!   they share a cache line. Sink- or hook-bearing jobs are never
+//!   cached (their results live outside the report).
+//!
+//! **Determinism.** A job's report depends only on (graph, program,
+//! config) — never on queue position, pool width, or what else is
+//! running — so N concurrent service jobs are bitwise identical to the
+//! same N jobs run serially on a plain session
+//! (`tests/service_equivalence.rs`). The serving layer adds only
+//! wall-clock diagnostics ([`JobLatency`]), which are outside the
+//! contract like every other wall measurement.
+//!
+//! ```no_run
+//! use kudu::graph::gen;
+//! use kudu::service::{JobOptions, MiningService, ServiceConfig};
+//! use kudu::session::MiningSession;
+//! use kudu::workloads::App;
+//! use std::sync::Arc;
+//!
+//! let g = gen::rmat(12, 10, 42);
+//! let sess = MiningSession::new(&g, 8);
+//! MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+//!     let alice = svc.client("alice");
+//!     let h = svc.submit(alice, Arc::new(App::Tc), JobOptions::default()).unwrap();
+//!     println!("triangles: {}", h.wait().report.stats.total_count());
+//! });
+//! ```
+
+use crate::config::RunConfig;
+use crate::graph::io::Fnv1a;
+use crate::metrics::{JobLatency, ProgramStats, RunStats};
+use crate::plan::ClientSystem;
+use crate::session::{GpmApp, Job, JobReport, MiningSession};
+use crate::workloads::EngineKind;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// A degenerate [`ServiceConfig`] rejected by [`ServiceConfig::validate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceConfigError {
+    /// `max_concurrent_jobs == 0`: a pool with no workers can accept
+    /// jobs but never run one — every `wait` would hang.
+    ZeroWorkers,
+    /// `max_inflight_per_client == 0`: no client could ever get a job
+    /// dispatched, so accepted jobs would queue forever.
+    ZeroClientInflight,
+    /// `max_queued_per_client == 0`: every submission would be rejected,
+    /// making the service unusable by construction.
+    ZeroClientQueue,
+    /// `max_queued_total == 0`: same, globally.
+    ZeroTotalQueue,
+}
+
+impl std::fmt::Display for ServiceConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceConfigError::ZeroWorkers => {
+                write!(f, "max_concurrent_jobs must be >= 1 (no pool worker could ever run a job)")
+            }
+            ServiceConfigError::ZeroClientInflight => {
+                write!(f, "max_inflight_per_client must be >= 1 (no job could ever dispatch)")
+            }
+            ServiceConfigError::ZeroClientQueue => {
+                write!(f, "max_queued_per_client must be >= 1 (every submission would be rejected)")
+            }
+            ServiceConfigError::ZeroTotalQueue => {
+                write!(f, "max_queued_total must be >= 1 (every submission would be rejected)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceConfigError {}
+
+/// Admission-control knobs of a [`MiningService`], validated like
+/// [`crate::config::EngineConfig`] at the API boundary
+/// ([`MiningService::serve`] panics on a degenerate config with the
+/// error's message, never with a hang deep inside the pool).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Pool width: jobs running concurrently (each on its own pool
+    /// worker, spawning its own engine run).
+    pub max_concurrent_jobs: usize,
+    /// Per-client cap on jobs dispatched but not yet finished. A client
+    /// at the cap keeps queueing; dispatch skips it until a job retires.
+    pub max_inflight_per_client: usize,
+    /// Per-client cap on *queued* (accepted, not yet dispatched) jobs;
+    /// submissions past it are rejected with
+    /// [`AdmissionError::ClientQueueFull`].
+    pub max_queued_per_client: usize,
+    /// Global cap on queued jobs across all clients; submissions past it
+    /// are rejected with [`AdmissionError::QueueFull`].
+    pub max_queued_total: usize,
+    /// Result-cache capacity in reports; `0` disables caching. Eviction
+    /// is deterministic (smallest key first).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_concurrent_jobs: 4,
+            max_inflight_per_client: 2,
+            max_queued_per_client: 64,
+            max_queued_total: 1024,
+            cache_capacity: 128,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Reject configurations under which the service could never make
+    /// progress. `cache_capacity == 0` is legal (caching off).
+    pub fn validate(&self) -> Result<(), ServiceConfigError> {
+        if self.max_concurrent_jobs == 0 {
+            return Err(ServiceConfigError::ZeroWorkers);
+        }
+        if self.max_inflight_per_client == 0 {
+            return Err(ServiceConfigError::ZeroClientInflight);
+        }
+        if self.max_queued_per_client == 0 {
+            return Err(ServiceConfigError::ZeroClientQueue);
+        }
+        if self.max_queued_total == 0 {
+            return Err(ServiceConfigError::ZeroTotalQueue);
+        }
+        Ok(())
+    }
+}
+
+/// Why a submission was not admitted. Deterministic, typed, and
+/// observable at the moment of [`MiningService::submit`] — admission
+/// control rejects instead of blocking, so a misbehaving client sees
+/// backpressure immediately and well-behaved clients keep their quota.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The submitting client already has `cap` jobs queued.
+    ClientQueueFull { cap: usize },
+    /// The service already has `cap` jobs queued across all clients.
+    QueueFull { cap: usize },
+    /// The service is draining: `serve`'s closure returned and no new
+    /// work is accepted (every previously accepted handle still
+    /// resolves).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::ClientQueueFull { cap } => {
+                write!(f, "client queue full ({cap} jobs queued)")
+            }
+            AdmissionError::QueueFull { cap } => {
+                write!(f, "service queue full ({cap} jobs queued)")
+            }
+            AdmissionError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Per-job execution options: which engine runs the job, plus the same
+/// overrides the [`Job`] builder exposes. `None` inherits the session
+/// default. Plain data, so submissions are `Send` and options can be
+/// reused across jobs.
+#[derive(Clone, Copy, Debug)]
+pub struct JobOptions {
+    /// Executor selection ([`EngineKind::executor`]); the default is the
+    /// Kudu engine with the GraphPi planner, like [`MiningSession::job`].
+    pub engine: EngineKind,
+    /// [`Job::fused`] override.
+    pub fused: Option<bool>,
+    /// [`Job::vertical_sharing`] override.
+    pub vertical_sharing: Option<bool>,
+    /// [`Job::horizontal_sharing`] override.
+    pub horizontal_sharing: Option<bool>,
+    /// [`Job::cache_frac`] override.
+    pub cache_frac: Option<f64>,
+    /// [`Job::threads`] override (modelled compute threads).
+    pub threads: Option<usize>,
+    /// [`Job::sim_threads`] override (host threads; wall-clock only).
+    pub sim_threads: Option<usize>,
+    /// [`Job::workers_per_machine`] override (wall-clock only).
+    pub workers_per_machine: Option<usize>,
+    /// [`Job::simd`] override (wall-clock only).
+    pub simd: Option<bool>,
+    /// [`Job::storage`] override (footprint/wall-clock only).
+    pub storage: Option<crate::config::StorageTier>,
+    /// [`Job::comm_window`] override (wall-clock only).
+    pub comm_window: Option<usize>,
+    /// [`Job::sync_fetch`] override (wall-clock only).
+    pub sync_fetch: Option<bool>,
+}
+
+impl Default for JobOptions {
+    fn default() -> Self {
+        JobOptions {
+            engine: EngineKind::Kudu(ClientSystem::GraphPi),
+            fused: None,
+            vertical_sharing: None,
+            horizontal_sharing: None,
+            cache_frac: None,
+            threads: None,
+            sim_threads: None,
+            workers_per_machine: None,
+            simd: None,
+            storage: None,
+            comm_window: None,
+            sync_fetch: None,
+        }
+    }
+}
+
+impl JobOptions {
+    /// Options running on `engine` with everything else inherited.
+    pub fn with_engine(engine: EngineKind) -> Self {
+        JobOptions { engine, ..JobOptions::default() }
+    }
+
+    /// Apply these options to a freshly built [`Job`].
+    fn apply<'a, 'g>(&self, job: Job<'a, 'g>) -> Job<'a, 'g> {
+        let mut job = job.executor(self.engine.executor());
+        if let Some(v) = self.fused {
+            job = job.fused(v);
+        }
+        if let Some(v) = self.vertical_sharing {
+            job = job.vertical_sharing(v);
+        }
+        if let Some(v) = self.horizontal_sharing {
+            job = job.horizontal_sharing(v);
+        }
+        if let Some(v) = self.cache_frac {
+            job = job.cache_frac(v);
+        }
+        if let Some(v) = self.threads {
+            job = job.threads(v);
+        }
+        if let Some(v) = self.sim_threads {
+            job = job.sim_threads(v);
+        }
+        if let Some(v) = self.workers_per_machine {
+            job = job.workers_per_machine(v);
+        }
+        if let Some(v) = self.simd {
+            job = job.simd(v);
+        }
+        if let Some(v) = self.storage {
+            job = job.storage(v);
+        }
+        if let Some(v) = self.comm_window {
+            job = job.comm_window(v);
+        }
+        if let Some(v) = self.sync_fetch {
+            job = job.sync_fetch(v);
+        }
+        job
+    }
+}
+
+/// Identifier a client receives from [`MiningService::client`]; all
+/// quota accounting is per `ClientId`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClientId(usize);
+
+/// Monotone per-service job number, assigned at admission.
+pub type JobId = u64;
+
+/// Everything a finished job hands back to its owner.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: JobId,
+    pub client: ClientId,
+    /// The job's report — bitwise identical to the same job run alone on
+    /// a plain session (for uncancelled runs), whether it was computed
+    /// or served from the result cache.
+    pub report: JobReport,
+    /// Served from the cross-job result cache (nothing was mined).
+    pub cached: bool,
+    /// The cancel flag was raised. If `ran` is also true the flag landed
+    /// mid-run and `report` holds the partial results of a halted run;
+    /// otherwise the job was cancelled before it started and `report` is
+    /// empty.
+    pub cancelled: bool,
+    /// A mining run actually executed (false for cache hits and
+    /// cancelled-before-start jobs).
+    pub ran: bool,
+    /// Queue-wait / run / end-to-end wall latency (diagnostics, outside
+    /// the bitwise contract).
+    pub latency: JobLatency,
+}
+
+/// State shared between a [`JobHandle`] and the pool: the job's cancel
+/// flag and its result slot. Results are published through the
+/// `Mutex`+`Condvar` pair; the atomic carries only the cancel signal.
+struct JobShared {
+    /// Job-scoped cancel flag, aliased onto the engine's halt flag for
+    /// the duration of the run (see `tools/audit/atomics.toml`,
+    /// `cancel`).
+    cancel: AtomicBool,
+    slot: Mutex<Option<JobResult>>,
+    cv: Condvar,
+}
+
+/// Owner's view of one submitted job.
+pub struct JobHandle {
+    id: JobId,
+    shared: Arc<JobShared>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// Block until the job finishes (run, cache hit, or cancellation)
+    /// and return its result. Every accepted job finishes: the pool
+    /// drains remaining queued jobs during shutdown.
+    pub fn wait(&self) -> JobResult {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.as_ref() {
+                return r.clone();
+            }
+            slot = self.shared.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: `Some` once the job has finished.
+    pub fn try_result(&self) -> Option<JobResult> {
+        self.shared.slot.lock().unwrap().as_ref().cloned()
+    }
+
+    /// Cancel the job. Queued jobs resolve without running (empty
+    /// report); a running job observes the flag through the engine's
+    /// job-scoped halt plumbing, drains its own queues — and only its
+    /// own — and resolves with partial results. Idempotent; never
+    /// blocks.
+    pub fn cancel(&self) {
+        // Release pairs with the pool worker's (and engine workers')
+        // Acquire loads: an observer of the flag also observes
+        // everything the cancelling client wrote before cancelling.
+        self.shared.cancel.store(true, Ordering::Release);
+    }
+}
+
+/// One queued submission (everything a pool worker needs to run the job).
+struct Submission {
+    id: JobId,
+    client: ClientId,
+    app: Arc<dyn GpmApp + Send + Sync>,
+    opts: JobOptions,
+    shared: Arc<JobShared>,
+    submitted: Instant,
+}
+
+/// Per-client admission/queue state.
+struct ClientEntry {
+    name: String,
+    queue: VecDeque<Submission>,
+    inflight: usize,
+}
+
+/// Result-cache key: the three identities that pin a report bitwise.
+/// Host-visible-only knobs (sim threads, workers, SIMD, storage tier,
+/// comm window) are deliberately absent — see [`config_digest`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct CacheKey {
+    graph: u64,
+    program: u64,
+    config: u64,
+}
+
+/// Serving counters ([`MiningService::stats`]); monotone snapshots.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Everything mutable behind the service's one lock.
+struct ServiceState {
+    clients: Vec<ClientEntry>,
+    queued_total: usize,
+    next_job: JobId,
+    shutdown: bool,
+    /// Fair-share cursor: dispatch scans clients round-robin from here.
+    cursor: usize,
+    cache: BTreeMap<CacheKey, JobReport>,
+    stats: ServiceStats,
+}
+
+/// A resident multi-tenant job server over one shared [`MiningSession`]:
+/// graph, partitioning, and owned-root lists are loaded once; concurrent
+/// jobs from many clients share them through a fair-share queue and a
+/// bounded worker pool. See the [module docs](self) for the full tour.
+pub struct MiningService<'s, 'g> {
+    sess: &'s MiningSession<'g>,
+    cfg: ServiceConfig,
+    /// [`Graph::fingerprint`](crate::graph::Graph::fingerprint) of the
+    /// session graph, computed once — the graph half of every cache key.
+    graph_fp: u64,
+    state: Mutex<ServiceState>,
+    /// Workers wait here for dispatchable jobs (and for shutdown).
+    work_cv: Condvar,
+}
+
+impl<'s, 'g> MiningService<'s, 'g> {
+    /// Run a service over `sess` for the duration of `f`: validate
+    /// `cfg` (panicking on a degenerate config, like
+    /// [`Job::run_report`]), spawn `cfg.max_concurrent_jobs` pool
+    /// workers, hand `f` the service, and on return drain — no new
+    /// submissions are admitted ([`AdmissionError::ShuttingDown`]), but
+    /// every already-accepted job still runs to a result before `serve`
+    /// returns. Scoped threads keep the whole service borrow-checked
+    /// against the session; nothing escapes.
+    pub fn serve<R>(
+        sess: &'s MiningSession<'g>,
+        cfg: ServiceConfig,
+        f: impl FnOnce(&MiningService<'s, 'g>) -> R,
+    ) -> R {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid service configuration: {e}");
+        }
+        let svc = MiningService {
+            sess,
+            cfg,
+            graph_fp: sess.graph().fingerprint(),
+            state: Mutex::new(ServiceState {
+                clients: Vec::new(),
+                queued_total: 0,
+                next_job: 0,
+                shutdown: false,
+                cursor: 0,
+                cache: BTreeMap::new(),
+                stats: ServiceStats::default(),
+            }),
+            work_cv: Condvar::new(),
+        };
+        std::thread::scope(|scope| {
+            let svc = &svc;
+            for _ in 0..cfg.max_concurrent_jobs {
+                scope.spawn(move || svc.worker_loop());
+            }
+            let out = f(svc);
+            {
+                let mut state = svc.state.lock().unwrap();
+                state.shutdown = true;
+            }
+            svc.work_cv.notify_all();
+            out
+            // The scope joins the workers: they drain every queued job,
+            // then observe `shutdown` with an empty queue and retire.
+        })
+    }
+
+    /// The session this service mines on.
+    pub fn session(&self) -> &'s MiningSession<'g> {
+        self.sess
+    }
+
+    /// The admission-control configuration the service runs under.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Register (or look up) a client by name. Quotas are tracked per
+    /// returned [`ClientId`]; calling twice with one name yields the
+    /// same id.
+    pub fn client(&self, name: &str) -> ClientId {
+        let mut state = self.state.lock().unwrap();
+        if let Some(i) = state.clients.iter().position(|c| c.name == name) {
+            return ClientId(i);
+        }
+        state.clients.push(ClientEntry {
+            name: name.to_string(),
+            queue: VecDeque::new(),
+            inflight: 0,
+        });
+        ClientId(state.clients.len() - 1)
+    }
+
+    /// The display name `client` registered with.
+    pub fn client_name(&self, client: ClientId) -> String {
+        self.state.lock().unwrap().clients[client.0].name.clone()
+    }
+
+    /// Submit a job: admission control first (typed, deterministic
+    /// rejections — a full queue rejects instead of blocking), then the
+    /// job enters its client's FIFO queue and the returned [`JobHandle`]
+    /// tracks it to completion.
+    pub fn submit(
+        &self,
+        client: ClientId,
+        app: Arc<dyn GpmApp + Send + Sync>,
+        opts: JobOptions,
+    ) -> Result<JobHandle, AdmissionError> {
+        let mut state = self.state.lock().unwrap();
+        if state.shutdown {
+            state.stats.rejected += 1;
+            return Err(AdmissionError::ShuttingDown);
+        }
+        if state.clients[client.0].queue.len() >= self.cfg.max_queued_per_client {
+            state.stats.rejected += 1;
+            return Err(AdmissionError::ClientQueueFull { cap: self.cfg.max_queued_per_client });
+        }
+        if state.queued_total >= self.cfg.max_queued_total {
+            state.stats.rejected += 1;
+            return Err(AdmissionError::QueueFull { cap: self.cfg.max_queued_total });
+        }
+        let id = state.next_job;
+        state.next_job += 1;
+        let shared = Arc::new(JobShared {
+            cancel: AtomicBool::new(false),
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        // audit: wall-clock — JobLatency queue-wait diagnostic, outside
+        // the determinism contract.
+        let submitted = Instant::now();
+        state.clients[client.0].queue.push_back(Submission {
+            id,
+            client,
+            app,
+            opts,
+            shared: Arc::clone(&shared),
+            submitted,
+        });
+        state.queued_total += 1;
+        state.stats.submitted += 1;
+        drop(state);
+        self.work_cv.notify_one();
+        Ok(JobHandle { id, shared })
+    }
+
+    /// Snapshot of the serving counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Reports currently held by the result cache.
+    pub fn cache_len(&self) -> usize {
+        self.state.lock().unwrap().cache.len()
+    }
+
+    /// Fair-share dispatch: scan clients round-robin from the cursor,
+    /// skip clients at their in-flight cap, pop the first dispatchable
+    /// job, and advance the cursor past the chosen client so its next
+    /// job waits behind every other client's turn.
+    fn dispatch(state: &mut ServiceState, cfg: &ServiceConfig) -> Option<Submission> {
+        let n = state.clients.len();
+        for step in 0..n {
+            let idx = (state.cursor + step) % n;
+            if state.clients[idx].inflight >= cfg.max_inflight_per_client {
+                continue;
+            }
+            if let Some(sub) = state.clients[idx].queue.pop_front() {
+                state.clients[idx].inflight += 1;
+                state.queued_total -= 1;
+                state.cursor = (idx + 1) % n;
+                return Some(sub);
+            }
+        }
+        None
+    }
+
+    /// One pool worker: dispatch-run until shutdown with an empty queue.
+    /// Jobs queued behind a capped client are picked up when a retiring
+    /// job's notification re-runs dispatch.
+    fn worker_loop(&self) {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if let Some(sub) = Self::dispatch(&mut state, &self.cfg) {
+                drop(state);
+                self.run_one(sub);
+                state = self.state.lock().unwrap();
+                continue;
+            }
+            if state.shutdown && state.queued_total == 0 {
+                return;
+            }
+            state = self.work_cv.wait(state).unwrap();
+        }
+    }
+
+    /// Run one dispatched job to its result: pre-start cancellation
+    /// check, result-cache lookup, the mining run itself (with the job's
+    /// cancel flag threaded into the engine), cache fill, and
+    /// publication to the handle.
+    fn run_one(&self, sub: Submission) {
+        // audit: wall-clock — JobLatency run/total diagnostics, outside
+        // the determinism contract.
+        let dequeued = Instant::now();
+        let queue_wait_s = dequeued.duration_since(sub.submitted).as_secs_f64();
+        let mut report: Option<JobReport> = None;
+        let mut cached = false;
+        let mut ran = false;
+        if !sub.shared.cancel.load(Ordering::Acquire) {
+            let job = sub.opts.apply(self.sess.job(sub.app.as_ref()));
+            // Sink- and hook-bearing jobs produce results outside the
+            // report (per-embedding sinks, app-side state), so only pure
+            // counting jobs are cacheable.
+            let key = (self.cfg.cache_capacity > 0
+                && !sub.app.needs_sinks()
+                && sub.app.hooks().is_none())
+            .then(|| CacheKey {
+                graph: self.graph_fp,
+                program: program_digest(sub.app.as_ref(), &job),
+                config: config_digest(job.resolved_config()),
+            });
+            if let Some(k) = key {
+                let mut state = self.state.lock().unwrap();
+                if let Some(r) = state.cache.get(&k) {
+                    report = Some(r.clone());
+                    cached = true;
+                    state.stats.cache_hits += 1;
+                } else {
+                    state.stats.cache_misses += 1;
+                }
+            }
+            if report.is_none() {
+                let r = job.cancel_flag(&sub.shared.cancel).run_report();
+                ran = true;
+                // A halted run holds partial results — never cache it.
+                if !sub.shared.cancel.load(Ordering::Acquire) {
+                    if let Some(k) = key {
+                        let mut state = self.state.lock().unwrap();
+                        if !state.cache.contains_key(&k)
+                            && state.cache.len() >= self.cfg.cache_capacity
+                        {
+                            // Deterministic eviction: drop the smallest
+                            // key (BTreeMap order), independent of
+                            // insertion timing.
+                            let victim = *state.cache.keys().next().expect("cache is non-empty");
+                            state.cache.remove(&victim);
+                        }
+                        state.cache.insert(k, r.clone());
+                    }
+                }
+                report = Some(r);
+            }
+        }
+        let cancelled = sub.shared.cancel.load(Ordering::Acquire);
+        let report = report.unwrap_or_else(|| JobReport {
+            stats: RunStats::default(),
+            patterns: Vec::new(),
+            program: ProgramStats::default(),
+        });
+        // audit: wall-clock — JobLatency run/total diagnostics, outside
+        // the determinism contract.
+        let done = Instant::now();
+        let latency = JobLatency {
+            queue_wait_s,
+            run_s: done.duration_since(dequeued).as_secs_f64(),
+            total_s: done.duration_since(sub.submitted).as_secs_f64(),
+        };
+        let result =
+            JobResult { id: sub.id, client: sub.client, report, cached, cancelled, ran, latency };
+        {
+            let mut slot = sub.shared.slot.lock().unwrap();
+            *slot = Some(result);
+        }
+        sub.shared.cv.notify_all();
+        {
+            let mut state = self.state.lock().unwrap();
+            state.clients[sub.client.0].inflight -= 1;
+            state.stats.completed += 1;
+            if cancelled {
+                state.stats.cancelled += 1;
+            }
+        }
+        // A retired job may unblock a capped client's queued jobs, or be
+        // the last thing a draining worker was waiting on.
+        self.work_cv.notify_all();
+    }
+}
+
+/// Program identity half of the cache key: FNV-1a over the app's name,
+/// the executor and planner, the fusion mode, and the *exact* per-pattern
+/// plans the job would execute ([`Job::compiled_plans`] →
+/// [`Plan::describe`](crate::plan::Plan::describe), which spells out
+/// pattern edges, embedding semantics, symmetry restrictions, and the
+/// extension order). Two jobs collide only when they would compile the
+/// same program for the same execution model — which is exactly when
+/// their reports are defined to be bitwise identical.
+fn program_digest(app: &dyn GpmApp, job: &Job<'_, '_>) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(app.name().as_bytes());
+    h.write(job.executor_name().as_bytes());
+    h.write(job.planner().name().as_bytes());
+    h.write_u32(job.is_fused() as u32);
+    let plans = job.compiled_plans();
+    h.write_u64(plans.len() as u64);
+    for plan in &plans {
+        h.write(plan.describe().as_bytes());
+    }
+    h.finish()
+}
+
+/// Config half of the cache key: FNV-1a over every knob that shapes the
+/// bitwise contract — machine count, modelled threads/NUMA, sharing
+/// toggles, cache sizing, chunking and task-split budgets, and the
+/// net/compute cost models. Deliberately **excluded** are the knobs the
+/// determinism contract pins as bitwise-invisible (host `sim_threads` /
+/// `workers_per_machine`, SIMD tier, storage tier, and the comm
+/// window/batching/sync-fetch settings): jobs differing only there share
+/// a cache line because their reports are *defined* — and pinned by
+/// `tests/sched_determinism.rs`, `tests/comm_equivalence.rs`, and the CI
+/// determinism matrix — to be identical.
+fn config_digest(cfg: &RunConfig) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(cfg.num_machines as u64);
+    let e = &cfg.engine;
+    h.write_u64(e.chunk_capacity as u64);
+    h.write_u64(e.mini_batch as u64);
+    h.write_u32(e.vertical_sharing as u32);
+    h.write_u32(e.horizontal_sharing as u32);
+    h.write_u64(e.cache_frac.to_bits());
+    h.write_u64(e.cache_degree_threshold as u64);
+    h.write_u64(e.sockets as u64);
+    h.write_u32(e.numa_aware as u32);
+    h.write_u64(e.threads as u64);
+    h.write_u64(e.task_split_levels as u64);
+    h.write_u64(e.task_split_width as u64);
+    h.write_u64(e.max_live_chunks as u64);
+    h.write_u64(cfg.net.latency_s.to_bits());
+    h.write_u64(cfg.net.bandwidth_bps.to_bits());
+    h.write_u64(cfg.compute.seconds_per_unit.to_bits());
+    h.write_u64(cfg.compute.per_embedding_overhead_units);
+    h.write_u64(cfg.compute.numa_remote_penalty.to_bits());
+    h.finish()
+}
+
+// Heavy under Miri (full engine runs / scoped threads): the Miri leg
+// covers the light per-module tests and the protocol types.
+#[cfg(all(test, not(miri)))]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::brute::Induced;
+    use crate::pattern::Pattern;
+    use crate::session::{Control, ExtendHooks};
+    use crate::workloads::App;
+    use crate::VertexId;
+
+    #[test]
+    fn config_validation_rejects_degenerate_knobs() {
+        let ok = ServiceConfig::default();
+        assert!(ok.validate().is_ok());
+        let c = ServiceConfig { max_concurrent_jobs: 0, ..ok };
+        assert_eq!(c.validate(), Err(ServiceConfigError::ZeroWorkers));
+        let c = ServiceConfig { max_inflight_per_client: 0, ..ok };
+        assert_eq!(c.validate(), Err(ServiceConfigError::ZeroClientInflight));
+        let c = ServiceConfig { max_queued_per_client: 0, ..ok };
+        assert_eq!(c.validate(), Err(ServiceConfigError::ZeroClientQueue));
+        let c = ServiceConfig { max_queued_total: 0, ..ok };
+        assert_eq!(c.validate(), Err(ServiceConfigError::ZeroTotalQueue));
+        // Caching off is a legal configuration, not a degenerate one.
+        let c = ServiceConfig { cache_capacity: 0, ..ok };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid service configuration")]
+    fn serve_panics_on_invalid_config() {
+        let g = gen::rmat(6, 6, 1);
+        let sess = MiningSession::new(&g, 2);
+        let cfg = ServiceConfig { max_concurrent_jobs: 0, ..ServiceConfig::default() };
+        MiningService::serve(&sess, cfg, |_| {});
+    }
+
+    #[test]
+    fn client_registry_is_stable() {
+        let g = gen::rmat(6, 6, 2);
+        let sess = MiningSession::new(&g, 2);
+        MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let a = svc.client("alice");
+            let b = svc.client("bob");
+            assert_ne!(a, b);
+            assert_eq!(a, svc.client("alice"));
+            assert_eq!(svc.client_name(b), "bob");
+        });
+    }
+
+    #[test]
+    fn service_job_matches_plain_session_run() {
+        let g = gen::rmat(9, 8, 7);
+        let sess = MiningSession::new(&g, 4);
+        let serial = sess.job(&App::Tc).run_report();
+        let served = MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let c = svc.client("solo");
+            svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap().wait()
+        });
+        assert!(!served.cancelled);
+        assert!(served.ran);
+        assert_eq!(served.report.stats.counts, serial.stats.counts);
+        assert_eq!(
+            served.report.stats.virtual_time_s.to_bits(),
+            serial.stats.virtual_time_s.to_bits()
+        );
+        assert_eq!(served.report.patterns.len(), serial.patterns.len());
+    }
+
+    #[test]
+    fn repeated_query_hits_the_cache_with_an_identical_report() {
+        let g = gen::rmat(9, 8, 13);
+        let sess = MiningSession::new(&g, 4);
+        MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let c = svc.client("repeat");
+            let first =
+                svc.submit(c, Arc::new(App::Mc(3)), JobOptions::default()).unwrap().wait();
+            let second =
+                svc.submit(c, Arc::new(App::Mc(3)), JobOptions::default()).unwrap().wait();
+            assert!(!first.cached && first.ran);
+            assert!(second.cached && !second.ran, "resubmission must be served from cache");
+            assert_eq!(first.report.stats.counts, second.report.stats.counts);
+            assert_eq!(
+                first.report.stats.virtual_time_s.to_bits(),
+                second.report.stats.virtual_time_s.to_bits()
+            );
+            // Host-only knobs are outside the key: a sim_threads=1
+            // resubmission shares the same cache line.
+            let opts = JobOptions { sim_threads: Some(1), ..JobOptions::default() };
+            let third = svc.submit(c, Arc::new(App::Mc(3)), opts).unwrap().wait();
+            assert!(third.cached, "bitwise-invisible knobs must not split the cache key");
+            let stats = svc.stats();
+            assert_eq!(stats.cache_hits, 2);
+            assert_eq!(stats.cache_misses, 1);
+        });
+    }
+
+    /// Hook app that parks the pool worker running it until released —
+    /// the deterministic way to pin queue state in admission tests.
+    struct GateApp {
+        started: AtomicBool,
+        go: AtomicBool,
+    }
+
+    impl ExtendHooks for GateApp {
+        fn on_match(&self, _pat: usize, _vs: &[VertexId]) -> Control {
+            self.started.store(true, Ordering::Release);
+            while !self.go.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            Control::Continue
+        }
+    }
+
+    impl GpmApp for GateApp {
+        fn name(&self) -> String {
+            "gate".into()
+        }
+
+        fn patterns(&self) -> Vec<Pattern> {
+            vec![Pattern::triangle()]
+        }
+
+        fn induced(&self) -> Induced {
+            Induced::Edge
+        }
+
+        fn hooks(&self) -> Option<&dyn ExtendHooks> {
+            Some(self)
+        }
+    }
+
+    #[test]
+    fn quota_rejections_are_deterministic() {
+        // A graph guaranteed to contain triangles so the gate engages.
+        let g = gen::planted_hubs(200, 800, 4, 0.3, 5);
+        let sess = MiningSession::new(&g, 2);
+        let cfg = ServiceConfig {
+            max_concurrent_jobs: 1,
+            max_inflight_per_client: 1,
+            max_queued_per_client: 2,
+            max_queued_total: 3,
+            cache_capacity: 0,
+        };
+        MiningService::serve(&sess, cfg, |svc| {
+            let a = svc.client("a");
+            let b = svc.client("b");
+            let gate = Arc::new(GateApp { started: AtomicBool::new(false), go: AtomicBool::new(false) });
+            let running =
+                svc.submit(a, Arc::clone(&gate) as Arc<dyn GpmApp + Send + Sync>, JobOptions::default()).unwrap();
+            while !gate.started.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            // The only worker is parked inside the gate job: queue state
+            // below is fully deterministic.
+            let _q1 = svc.submit(a, Arc::new(App::Tc), JobOptions::default()).unwrap();
+            let _q2 = svc.submit(a, Arc::new(App::Tc), JobOptions::default()).unwrap();
+            assert_eq!(
+                svc.submit(a, Arc::new(App::Tc), JobOptions::default()).err(),
+                Some(AdmissionError::ClientQueueFull { cap: 2 }),
+                "third queued job of one client must be rejected"
+            );
+            let _q3 = svc.submit(b, Arc::new(App::Tc), JobOptions::default()).unwrap();
+            assert_eq!(
+                svc.submit(b, Arc::new(App::Tc), JobOptions::default()).err(),
+                Some(AdmissionError::QueueFull { cap: 3 }),
+                "fourth queued job overall must be rejected"
+            );
+            assert_eq!(svc.stats().rejected, 2);
+            gate.go.store(true, Ordering::Release);
+            let done = running.wait();
+            assert!(done.ran && !done.cancelled);
+        });
+    }
+
+    #[test]
+    fn cancelled_before_start_resolves_empty() {
+        let g = gen::planted_hubs(200, 800, 4, 0.3, 6);
+        let sess = MiningSession::new(&g, 2);
+        let cfg = ServiceConfig {
+            max_concurrent_jobs: 1,
+            max_inflight_per_client: 1,
+            max_queued_per_client: 4,
+            max_queued_total: 8,
+            cache_capacity: 0,
+        };
+        MiningService::serve(&sess, cfg, |svc| {
+            let c = svc.client("c");
+            let gate = Arc::new(GateApp { started: AtomicBool::new(false), go: AtomicBool::new(false) });
+            let running =
+                svc.submit(c, Arc::clone(&gate) as Arc<dyn GpmApp + Send + Sync>, JobOptions::default()).unwrap();
+            while !gate.started.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            let doomed = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap();
+            doomed.cancel();
+            gate.go.store(true, Ordering::Release);
+            let r = doomed.wait();
+            assert!(r.cancelled && !r.ran && !r.cached);
+            assert_eq!(r.report.stats.total_count(), 0, "cancelled-before-start is empty");
+            let _ = running.wait();
+            assert_eq!(svc.stats().cancelled, 1);
+        });
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_jobs_then_rejects() {
+        let g = gen::rmat(8, 8, 9);
+        let sess = MiningSession::new(&g, 2);
+        let cfg = ServiceConfig { max_concurrent_jobs: 2, ..ServiceConfig::default() };
+        let handles = MiningService::serve(&sess, cfg, |svc| {
+            let c = svc.client("burst");
+            (0..6)
+                .map(|_| svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap())
+                .collect::<Vec<_>>()
+        });
+        // serve returned: every accepted handle must already be resolved.
+        for h in &handles {
+            assert!(h.try_result().is_some(), "job {} left unresolved by shutdown", h.id());
+        }
+    }
+}

@@ -60,6 +60,7 @@ use crate::pattern::brute::Induced;
 use crate::pattern::Pattern;
 use crate::plan::{ClientSystem, MiningProgram, Plan};
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -181,6 +182,11 @@ pub struct ProgramCtx<'s, 'g> {
     pub roots: &'s [Vec<VertexId>],
     /// The app's per-level callbacks, if any.
     pub hooks: Option<&'s dyn ExtendHooks>,
+    /// Job-scoped external cancel flag ([`Job::cancel_flag`]): a
+    /// `Release` store of `true` stops this job's execution — and only
+    /// this job's — via the engine's halt plumbing. `None` for plain
+    /// batch jobs, which never read any flag.
+    pub cancel: Option<&'s AtomicBool>,
 }
 
 /// An execution model that can mine a compiled [`MiningProgram`] over
@@ -269,6 +275,14 @@ fn run_plans_serially(
     let mut patterns = Vec::with_capacity(ctx.program.num_patterns());
     let mut program = ProgramStats::default();
     for (i, plan) in ctx.program.plans().iter().enumerate() {
+        // The baselines run each plan to completion (their execution
+        // models predate the halt plumbing), so external cancellation
+        // takes effect at plan granularity: stop before the next plan.
+        // Like every halted run, the partial result is excluded from
+        // the bitwise contract.
+        if ctx.cancel.map_or(false, |c| c.load(Ordering::Acquire)) {
+            break;
+        }
         let (mut stats, traffic) = run_plan(plan);
         // Wall is a whole-job quantity, reported once (see Job::run).
         stats.wall_s = 0.0;
@@ -300,7 +314,7 @@ impl Executor for KuduExec {
     fn run_program(&self, ctx: &ProgramCtx<'_, '_>) -> ProgramOutcome {
         let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
         let mut sinks: Vec<Vec<CountSink>> = Vec::new();
-        let (runs, program) = KuduEngine::run_program(
+        let (runs, program) = KuduEngine::run_program_cancellable(
             ctx.store,
             ctx.program,
             &ctx.cfg.engine,
@@ -308,6 +322,7 @@ impl Executor for KuduExec {
             &mut tr,
             Some(ctx.roots),
             ctx.hooks,
+            ctx.cancel,
             |_p, _m| CountSink::default(),
             &mut sinks,
         );
@@ -338,7 +353,7 @@ impl Executor for KuduExec {
     ) -> ProgramOutcome {
         let mut tr = Transport::new(ctx.pg, ctx.cfg.net);
         let mut sinks: Vec<Vec<BoxSink>> = Vec::new();
-        let (runs, program) = KuduEngine::run_program(
+        let (runs, program) = KuduEngine::run_program_cancellable(
             ctx.store,
             ctx.program,
             &ctx.cfg.engine,
@@ -346,6 +361,7 @@ impl Executor for KuduExec {
             &mut tr,
             Some(ctx.roots),
             ctx.hooks,
+            ctx.cancel,
             make_sink,
             &mut sinks,
         );
@@ -515,13 +531,17 @@ impl<'g> MiningSession<'g> {
             exec: Box::new(KuduExec { client: ClientSystem::GraphPi }),
             cfg: self.cfg.clone(),
             fused: true,
+            cancel: None,
         }
     }
 }
 
 /// Everything one job run reports: the app-aggregated statistics, the
 /// per-pattern views (stats + traffic matrix) the aggregation consumed,
-/// and the physical totals of the program execution.
+/// and the physical totals of the program execution. `Clone` so a
+/// multi-tenant server ([`crate::service::MiningService`]) can hand the
+/// same cached report to any number of clients.
+#[derive(Clone, Debug)]
 pub struct JobReport {
     pub stats: RunStats,
     /// Per-pattern (stats, traffic matrix) in pattern order — the fused
@@ -539,6 +559,7 @@ pub struct Job<'a, 'g> {
     exec: Box<dyn Executor>,
     cfg: RunConfig,
     fused: bool,
+    cancel: Option<&'a AtomicBool>,
 }
 
 impl<'a, 'g> Job<'a, 'g> {
@@ -677,6 +698,62 @@ impl<'a, 'g> Job<'a, 'g> {
         self
     }
 
+    /// Install an external cancel flag for this job. A `Release` store
+    /// of `true` from any thread stops the job — and only this job —
+    /// through the engine's halt plumbing ([`Control::Halt`]): workers
+    /// drain their own queues and the job reports partial results
+    /// (excluded from the bitwise contract, like every halted run).
+    /// Baseline executors observe the flag at plan granularity. This is
+    /// the mechanism behind [`crate::service::JobHandle::cancel`].
+    pub fn cancel_flag(mut self, cancel: &'a AtomicBool) -> Self {
+        self.cancel = Some(cancel);
+        self
+    }
+
+    /// The job's resolved configuration (session config + overrides so
+    /// far). Multi-tenant servers read this to key result caches on the
+    /// contract-shaping knobs.
+    pub fn resolved_config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Whether the job will compile one fused program ([`Job::fused`]).
+    pub fn is_fused(&self) -> bool {
+        self.fused
+    }
+
+    /// The executor's display name.
+    pub fn executor_name(&self) -> String {
+        self.exec.name()
+    }
+
+    /// The client system whose planner compiles this job's plans.
+    pub fn planner(&self) -> ClientSystem {
+        self.exec.client()
+    }
+
+    /// Compile the app's patterns into the exact per-pattern [`Plan`]s
+    /// this job would execute (planner + vertical-sharing toggle
+    /// applied), without running anything. [`Plan::describe`] over the
+    /// result is a stable textual identity for the job's program — the
+    /// result-cache key material of [`crate::service::MiningService`].
+    pub fn compiled_plans(&self) -> Vec<Plan> {
+        let induced = self.app.induced();
+        let client = self.exec.client();
+        self.app
+            .patterns()
+            .iter()
+            .map(|p| {
+                let plan = client.plan(p, induced);
+                if self.cfg.engine.vertical_sharing {
+                    plan
+                } else {
+                    plan.without_vertical_sharing()
+                }
+            })
+            .collect()
+    }
+
     /// NUMA sockets per machine (`1` disables NUMA modelling).
     pub fn sockets(mut self, sockets: usize) -> Self {
         self.cfg.engine.sockets = sockets;
@@ -716,6 +793,7 @@ impl<'a, 'g> Job<'a, 'g> {
             pg: PartitionedGraph::from_store(store, self.cfg.num_machines),
             roots: &self.sess.roots,
             hooks: mapped.as_ref().map(|m| m as &dyn ExtendHooks),
+            cancel: self.cancel,
         };
         let mut out = if self.app.needs_sinks() {
             self.exec.run_program_with_sinks(&ctx, &|p, m| self.app.unit_sink(idx_map[p], m))
@@ -743,8 +821,6 @@ impl<'a, 'g> Job<'a, 'g> {
             panic!("invalid job configuration: {e}");
         }
         let patterns = self.app.patterns();
-        let induced = self.app.induced();
-        let client = self.exec.client();
         let hooks = self.app.hooks();
         assert!(
             !self.app.needs_sinks() || self.exec.supports_sinks(),
@@ -767,17 +843,7 @@ impl<'a, 'g> Job<'a, 'g> {
             stats.wall_s = wall_start.elapsed().as_secs_f64();
             return JobReport { stats, patterns: Vec::new(), program: ProgramStats::default() };
         }
-        let plans: Vec<Plan> = patterns
-            .iter()
-            .map(|p| {
-                let plan = client.plan(p, induced);
-                if self.cfg.engine.vertical_sharing {
-                    plan
-                } else {
-                    plan.without_vertical_sharing()
-                }
-            })
-            .collect();
+        let plans = self.compiled_plans();
         // Resolve the storage tier once per job: a compact-tier job
         // compresses the session graph here (job-local, built once) and
         // every program execution of the job reads through it.

@@ -1,0 +1,322 @@
+//! Equivalence suite for the serving layer: N concurrent jobs through a
+//! [`MiningService`] — mixed engines and apps, per-embedding-sink apps
+//! ([`LabeledQuery`]), and a cancelled job in the mix — must report
+//! results **bitwise identical** to the same jobs run serially on a
+//! plain [`MiningSession`]. Queue position, pool width, fair-share
+//! order, and what else is running are execution details; the report is
+//! a pure function of (graph, program, config).
+//!
+//! Also here: cache-hit identity (a resubmission served from the result
+//! cache is bitwise the report the first run computed, including across
+//! bitwise-invisible host knobs), deterministic quota rejections, and
+//! the `Send` compile checks for the handle types.
+
+// Full-cluster concurrent sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
+use kudu::graph::gen;
+use kudu::metrics::RunStats;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::ClientSystem;
+use kudu::service::{
+    AdmissionError, JobOptions, JobResult, MiningService, ServiceConfig, ServiceStats,
+};
+use kudu::session::{
+    Control, ExtendHooks, GpmApp, JobReport, LabeledQuery, MiningSession, QueryResult,
+};
+use kudu::workloads::{App, EngineKind};
+use kudu::VertexId;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn assert_bitwise_eq(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.work_units, b.work_units, "{what}: work_units");
+    assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits(), "{what}: virtual time");
+    assert_eq!(a.exposed_comm_s.to_bits(), b.exposed_comm_s.to_bits(), "{what}: exposed comm");
+    assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+    assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+}
+
+/// Full-report comparison: merged stats, then every per-pattern
+/// attribution — stats bitwise and traffic matrix cell for cell.
+fn assert_report_eq(a: &JobReport, b: &JobReport, what: &str) {
+    assert_bitwise_eq(&a.stats, &b.stats, what);
+    assert_eq!(a.patterns.len(), b.patterns.len(), "{what}: pattern count");
+    for (i, ((sa, ta), (sb, tb))) in a.patterns.iter().zip(&b.patterns).enumerate() {
+        assert_bitwise_eq(sa, sb, &format!("{what}: pattern {i}"));
+        assert_eq!(ta, tb, "{what}: pattern {i} traffic");
+    }
+    assert_eq!(
+        a.program.root_scans, b.program.root_scans,
+        "{what}: program root scans"
+    );
+}
+
+/// The counting half of the mixed workload: engines × apps. The
+/// per-embedding-sink member ([`LabeledQuery`]) is handled concretely in
+/// the test so its interior results stay reachable.
+fn mixed_jobs() -> Vec<(&'static str, EngineKind, App)> {
+    vec![
+        ("tc@k-graphpi", EngineKind::Kudu(ClientSystem::GraphPi), App::Tc),
+        ("3-mc@k-automine", EngineKind::Kudu(ClientSystem::Automine), App::Mc(3)),
+        ("4-cc@k-graphpi", EngineKind::Kudu(ClientSystem::GraphPi), App::Cc(4)),
+        ("tc@gthinker", EngineKind::GThinker, App::Tc),
+        ("tc@movingcomp", EngineKind::MovingComp, App::Tc),
+        ("3-mc@replicated", EngineKind::Replicated, App::Mc(3)),
+        ("tc@single", EngineKind::SingleMachine, App::Tc),
+    ]
+}
+
+/// The sink-app member of the mix: labelled MNI queries whose results
+/// land in app-interior state, exercising the `needs_sinks` (and
+/// therefore cache-ineligible) path through the service.
+fn make_labeled_query() -> LabeledQuery {
+    LabeledQuery::new(
+        vec![Pattern::triangle().with_labels(&[1, 2, 3]), Pattern::chain(3).with_labels(&[2, 1, 2])],
+        Induced::Edge,
+        1,
+    )
+}
+
+/// The shared test graph: labelled so the [`LabeledQuery`] member of the
+/// mix is meaningful; unlabelled patterns ignore the labels, and both
+/// sides of every comparison mine the same graph either way.
+fn test_graph() -> kudu::Graph {
+    let base = gen::erdos_renyi(120, 600, 907);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8 + 1).collect();
+    base.with_labels(labels)
+}
+
+#[test]
+fn concurrent_mixed_jobs_bitwise_equal_serial_runs() {
+    let g = test_graph();
+    let sess = MiningSession::new(&g, 4);
+
+    // Serial baseline: each job alone on the plain session, in order.
+    // The LabeledQuery gets its own instance per side so interior result
+    // state never crosses between baseline and service runs.
+    let jobs = mixed_jobs();
+    let serial: Vec<JobReport> = jobs
+        .iter()
+        .map(|(_, engine, app)| sess.job(app).executor(engine.executor()).run_report())
+        .collect();
+    let serial_lq_app = make_labeled_query();
+    let serial_lq_report = sess.job(&serial_lq_app).run_report();
+    let serial_lq = serial_lq_app.results();
+
+    // Service run: all jobs in flight at once across three clients, with
+    // caching off so every job actually mines.
+    let cfg = ServiceConfig {
+        max_concurrent_jobs: 4,
+        max_inflight_per_client: 4,
+        max_queued_per_client: 16,
+        max_queued_total: 64,
+        cache_capacity: 0,
+    };
+    let (served, lq_result, served_lq): (Vec<JobResult>, JobResult, Vec<QueryResult>) =
+        MiningService::serve(&sess, cfg, |svc| {
+            let clients = ["alice", "bob", "carol"].map(|n| svc.client(n));
+            let lq_app = Arc::new(make_labeled_query());
+            let lq_handle = svc
+                .submit(
+                    clients[0],
+                    Arc::clone(&lq_app) as Arc<dyn GpmApp + Send + Sync>,
+                    JobOptions::default(),
+                )
+                .unwrap();
+            let handles: Vec<_> = jobs
+                .iter()
+                .enumerate()
+                .map(|(i, (_, engine, app))| {
+                    svc.submit(
+                        clients[i % clients.len()],
+                        Arc::new(*app),
+                        JobOptions::with_engine(*engine),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let served = handles.into_iter().map(|h| h.wait()).collect();
+            let lq_result = lq_handle.wait();
+            (served, lq_result, lq_app.results())
+        });
+
+    for (((label, _, _), serial_report), result) in jobs.iter().zip(&serial).zip(&served) {
+        assert!(!result.cancelled, "{label}: not cancelled");
+        assert!(result.ran && !result.cached, "{label}: actually mined");
+        assert_report_eq(&result.report, serial_report, label);
+    }
+    assert!(lq_result.ran && !lq_result.cached, "lq: sink apps never hit the cache");
+    assert_report_eq(&lq_result.report, &serial_lq_report, "lq@k-graphpi");
+    assert_eq!(serial_lq.len(), served_lq.len(), "lq: query result count");
+    for (qa, qb) in serial_lq.iter().zip(&served_lq) {
+        assert_eq!(qa.pattern_idx, qb.pattern_idx, "lq: query idx");
+        assert_eq!(qa.embeddings, qb.embeddings, "lq: query embeddings");
+        assert_eq!(qa.support, qb.support, "lq: query support");
+        assert_eq!(qa.kept, qb.kept, "lq: query kept");
+    }
+}
+
+#[test]
+fn cancelled_job_in_the_mix_never_perturbs_its_neighbours() {
+    let g = test_graph();
+    let sess = MiningSession::new(&g, 4);
+    let serial_tc = sess.job(&App::Tc).run_report();
+    let serial_mc = sess.job(&App::Mc(3)).run_report();
+
+    let cfg = ServiceConfig {
+        max_concurrent_jobs: 2,
+        max_inflight_per_client: 2,
+        max_queued_per_client: 8,
+        max_queued_total: 16,
+        cache_capacity: 0,
+    };
+    MiningService::serve(&sess, cfg, |svc| {
+        let c = svc.client("mixed");
+        let gate = Arc::new(Gate::default());
+        // The gated job occupies one pool worker; two clean jobs run and
+        // queue around it.
+        let doomed =
+            svc.submit(c, Arc::clone(&gate) as Arc<dyn GpmApp + Send + Sync>, JobOptions::default())
+                .unwrap();
+        let tc = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap();
+        let mc = svc.submit(c, Arc::new(App::Mc(3)), JobOptions::default()).unwrap();
+        while !gate.started.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        // Cancel the gated job mid-run, then release it: its engine run
+        // observes the job-scoped halt flag and drains — its own queues
+        // only.
+        doomed.cancel();
+        gate.go.store(true, Ordering::Release);
+        let d = doomed.wait();
+        assert!(d.cancelled && d.ran, "gated job is cancelled mid-run");
+        // The neighbours are bitwise untouched by the cancellation.
+        assert_bitwise_eq(&tc.wait().report.stats, &serial_tc.stats, "tc beside cancelled job");
+        assert_bitwise_eq(&mc.wait().report.stats, &serial_mc.stats, "mc beside cancelled job");
+    });
+}
+
+/// Hook app that parks its first match until released — pins pool and
+/// queue state deterministically for the cancellation and quota tests.
+#[derive(Default)]
+struct Gate {
+    started: AtomicBool,
+    go: AtomicBool,
+}
+
+impl ExtendHooks for Gate {
+    fn on_match(&self, _pat: usize, _vs: &[VertexId]) -> Control {
+        self.started.store(true, Ordering::Release);
+        while !self.go.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        Control::Continue
+    }
+}
+
+impl GpmApp for Gate {
+    fn name(&self) -> String {
+        "gate".into()
+    }
+
+    fn patterns(&self) -> Vec<Pattern> {
+        vec![Pattern::triangle()]
+    }
+
+    fn induced(&self) -> Induced {
+        Induced::Edge
+    }
+
+    fn hooks(&self) -> Option<&dyn ExtendHooks> {
+        Some(self)
+    }
+}
+
+#[test]
+fn cache_hit_is_bitwise_the_first_run_even_across_host_knobs() {
+    let g = test_graph();
+    let sess = MiningSession::new(&g, 4);
+    MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+        let c = svc.client("repeat");
+        let first = svc.submit(c, Arc::new(App::Cc(4)), JobOptions::default()).unwrap().wait();
+        assert!(first.ran && !first.cached);
+        // Identical resubmission: served from cache, bitwise the same
+        // report.
+        let again = svc.submit(c, Arc::new(App::Cc(4)), JobOptions::default()).unwrap().wait();
+        assert!(again.cached && !again.ran);
+        assert_report_eq(&again.report, &first.report, "cached resubmission");
+        // Host-only knobs (here sim_threads) are bitwise-invisible by
+        // the determinism contract, so they are outside the cache key:
+        // still a hit, still the same report.
+        let opts = JobOptions { sim_threads: Some(1), ..JobOptions::default() };
+        let host = svc.submit(c, Arc::new(App::Cc(4)), opts).unwrap().wait();
+        assert!(host.cached, "host knobs must not split the cache key");
+        assert_report_eq(&host.report, &first.report, "cache hit across sim_threads");
+        // A genuinely different program misses.
+        let other = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap().wait();
+        assert!(!other.cached && other.ran);
+        let s: ServiceStats = svc.stats();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 2);
+    });
+}
+
+#[test]
+fn quota_rejections_are_deterministic_under_load() {
+    let g = test_graph();
+    let sess = MiningSession::new(&g, 2);
+    let cfg = ServiceConfig {
+        max_concurrent_jobs: 1,
+        max_inflight_per_client: 1,
+        max_queued_per_client: 2,
+        max_queued_total: 3,
+        cache_capacity: 0,
+    };
+    MiningService::serve(&sess, cfg, |svc| {
+        let a = svc.client("a");
+        let b = svc.client("b");
+        let gate = Arc::new(Gate::default());
+        let running =
+            svc.submit(a, Arc::clone(&gate) as Arc<dyn GpmApp + Send + Sync>, JobOptions::default())
+                .unwrap();
+        while !gate.started.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        // The single pool worker is parked in the gate: every admission
+        // decision below is a pure function of the quota state.
+        let _a1 = svc.submit(a, Arc::new(App::Tc), JobOptions::default()).unwrap();
+        let _a2 = svc.submit(a, Arc::new(App::Tc), JobOptions::default()).unwrap();
+        assert_eq!(
+            svc.submit(a, Arc::new(App::Tc), JobOptions::default()).err(),
+            Some(AdmissionError::ClientQueueFull { cap: 2 })
+        );
+        let _b1 = svc.submit(b, Arc::new(App::Tc), JobOptions::default()).unwrap();
+        assert_eq!(
+            svc.submit(b, Arc::new(App::Tc), JobOptions::default()).err(),
+            Some(AdmissionError::QueueFull { cap: 3 })
+        );
+        assert_eq!(svc.stats().rejected, 2);
+        gate.go.store(true, Ordering::Release);
+        assert!(!running.wait().cancelled);
+    });
+}
+
+// ---- Send compile checks for the handle types. ----
+
+#[test]
+fn service_types_are_send() {
+    fn assert_send<T: Send>() {}
+    fn assert_sync<T: Sync>() {}
+    assert_send::<kudu::service::JobHandle>();
+    assert_send::<JobResult>();
+    assert_send::<JobOptions>();
+    assert_sync::<MiningService<'static, 'static>>();
+}

@@ -48,6 +48,7 @@ const CLOCK_SITES: &[(&str, &str)] = &[
     ("baselines/moving_comp.rs", "RunStats::wall_s"),
     ("baselines/single_machine.rs", "RunStats::wall_s"),
     ("comm/mod.rs", "RunStats::comm_stall_s"),
+    ("service/mod.rs", "JobLatency queue-wait/run/total diagnostics"),
 ];
 
 fn accounted(rel: &str) -> bool {
@@ -55,7 +56,7 @@ fn accounted(rel: &str) -> bool {
 }
 
 fn atomic_scope(rel: &str) -> bool {
-    accounted(rel) || rel == "par.rs"
+    accounted(rel) || rel == "par.rs" || rel.starts_with("service/")
 }
 
 fn ident_byte(b: u8) -> bool {
