@@ -1,0 +1,183 @@
+//! Delta-layer bench: incremental pattern maintenance versus
+//! from-scratch re-mining across insertion batch sizes.
+//!
+//! For each batch fraction (0.1%, 1%, 5% of |E|) the bench ingests a
+//! batch of absent edges into a [`DeltaGraph`] overlay and measures
+//!
+//! * **incremental** — [`delta::maintain`] wall time, in both modes
+//!   (edge-anchored sweep and frontier difference), and
+//! * **scratch** — a full mining job over the materialised evolved
+//!   graph,
+//!
+//! for triangle counting and 4-clique counting together. Along the way
+//! the folded running totals are asserted equal to the scratch counts —
+//! the speedup is only worth reporting if the answers are identical.
+//!
+//! The headline is the 1% row: the acceptance target recorded in
+//! EXPERIMENTS.md §Delta is incremental ≤ 0.2× scratch there (the
+//! anchored sweep scales with the embeddings touching the batch, not
+//! with |G|). Emits `BENCH_delta.json`. `KUDU_DELTA_SCALE` (default 10)
+//! and `KUDU_DELTA_MACHINES` (default 4) scale the workload.
+
+use kudu::config::RunConfig;
+use kudu::delta::maintain::{maintain, MaintainMode};
+use kudu::delta::DeltaGraph;
+use kudu::graph::gen::{self, Rng};
+use kudu::graph::{Graph, VertexId};
+use kudu::session::MiningSession;
+use kudu::workloads::App;
+use std::time::Instant;
+
+/// Sample `want` distinct absent edges (no self-loops, not in `g`),
+/// seeded — the batch is a pure function of (graph, seed).
+fn absent_edges(g: &Graph, want: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    let mut rng = Rng::new(seed);
+    let n = g.num_vertices() as u64;
+    let mut out: Vec<(VertexId, VertexId)> = Vec::with_capacity(want);
+    while out.len() < want {
+        let u = rng.below(n) as VertexId;
+        let v = rng.below(n) as VertexId;
+        let (u, v) = if u < v { (u, v) } else { (v, u) };
+        if u == v || g.has_edge(u, v) || out.contains(&(u, v)) {
+            continue;
+        }
+        out.push((u, v));
+    }
+    out
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    frac: f64,
+    batch: usize,
+    inc_anchored_s: f64,
+    inc_frontier_s: f64,
+    scratch_s: f64,
+    anchored_work: u64,
+}
+
+fn main() {
+    let scale = env_usize("KUDU_DELTA_SCALE", 10);
+    let machines = env_usize("KUDU_DELTA_MACHINES", 4);
+    let g = gen::rmat(scale, 8, 0xDE17A);
+    let apps = [App::Tc, App::Cc(4)];
+    let patterns: Vec<kudu::pattern::Pattern> =
+        apps.iter().flat_map(|a| kudu::session::GpmApp::patterns(a)).collect();
+    let induced = kudu::pattern::brute::Induced::Edge;
+    println!(
+        "delta bench: {} vertices / {} edges, {} machines, patterns: triangle + 4-clique",
+        g.num_vertices(),
+        g.num_edges(),
+        machines
+    );
+
+    // Pre-ingest baseline counts (the totals the deltas fold onto).
+    let sess = MiningSession::new(&g, machines);
+    let base_counts: Vec<u64> = apps
+        .iter()
+        .flat_map(|a| {
+            let r = sess.job(a).run_report();
+            r.patterns.iter().map(|(s, _)| s.total_count()).collect::<Vec<_>>()
+        })
+        .collect();
+
+    let cfg = RunConfig::with_machines(machines);
+    let mut rows: Vec<Row> = Vec::new();
+    for (i, frac) in [0.001f64, 0.01, 0.05].into_iter().enumerate() {
+        let batch = ((g.num_edges() as f64 * frac) as usize).max(1);
+        let edges = absent_edges(&g, batch, 0xBA7C + i as u64);
+        let old = DeltaGraph::from_graph(g.clone());
+        let mut dg = old.clone();
+        let applied = dg.ingest(&edges).expect("absent in-range edges");
+        assert_eq!(applied.edges.len(), batch, "batch applies in full");
+
+        let t = Instant::now();
+        let rep_a =
+            maintain(&old, &applied.edges, &patterns, induced, MaintainMode::Anchored, &cfg);
+        let inc_anchored_s = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let rep_f =
+            maintain(&old, &applied.edges, &patterns, induced, MaintainMode::Frontier, &cfg);
+        let inc_frontier_s = t.elapsed().as_secs_f64();
+        assert_eq!(rep_a.deltas, rep_f.deltas, "modes agree at {frac}");
+
+        let evolved = dg.materialize();
+        let t = Instant::now();
+        let esess = MiningSession::new(&evolved, machines);
+        let scratch_counts: Vec<u64> = apps
+            .iter()
+            .flat_map(|a| {
+                let r = esess.job(a).run_report();
+                r.patterns.iter().map(|(s, _)| s.total_count()).collect::<Vec<_>>()
+            })
+            .collect();
+        let scratch_s = t.elapsed().as_secs_f64();
+
+        // Correctness gate: folded totals == from-scratch totals.
+        let folded: Vec<u64> = base_counts
+            .iter()
+            .zip(&rep_a.deltas)
+            .map(|(&c, &d)| (c as i64 + d) as u64)
+            .collect();
+        assert_eq!(folded, scratch_counts, "incremental != scratch at {frac}");
+
+        println!(
+            "bench delta/batch={batch} ({:.1}% of E)  incremental anchored {:.4}s \
+             frontier {:.4}s  scratch {:.4}s  ratio {:.3}",
+            frac * 100.0,
+            inc_anchored_s,
+            inc_frontier_s,
+            scratch_s,
+            inc_anchored_s / scratch_s.max(f64::MIN_POSITIVE),
+        );
+        rows.push(Row {
+            frac,
+            batch,
+            inc_anchored_s,
+            inc_frontier_s,
+            scratch_s,
+            anchored_work: rep_a.work,
+        });
+    }
+
+    // Sanity floor (the 0.2× acceptance line is recorded from the
+    // default-scale run in EXPERIMENTS.md; CI smoke runs may be noisy):
+    // incremental must at least beat scratch at the 1% batch.
+    let one_pct = &rows[1];
+    assert!(
+        one_pct.inc_anchored_s < one_pct.scratch_s,
+        "anchored maintenance slower than scratch at 1% batch \
+         ({:.4}s vs {:.4}s)",
+        one_pct.inc_anchored_s,
+        one_pct.scratch_s
+    );
+
+    let row_json = |r: &Row| {
+        format!(
+            "    {{\"frac\": {}, \"batch_edges\": {}, \"incremental_anchored_s\": {}, \
+             \"incremental_frontier_s\": {}, \"scratch_s\": {}, \"ratio_anchored\": {}, \
+             \"ratio_frontier\": {}, \"anchored_work\": {}}}",
+            r.frac,
+            r.batch,
+            r.inc_anchored_s,
+            r.inc_frontier_s,
+            r.scratch_s,
+            r.inc_anchored_s / r.scratch_s.max(f64::MIN_POSITIVE),
+            r.inc_frontier_s / r.scratch_s.max(f64::MIN_POSITIVE),
+            r.anchored_work,
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"delta\",\n  \"workload\": \"rmat{scale}_tc+4cc_{machines}machines\",\n  \
+         \"vertices\": {},\n  \"edges\": {},\n  \"target_ratio_at_1pct\": 0.2,\n  \
+         \"rows\": [\n{}\n  ],\n  \"deterministic\": true\n}}\n",
+        g.num_vertices(),
+        g.num_edges(),
+        rows.iter().map(row_json).collect::<Vec<_>>().join(",\n"),
+    );
+    std::fs::write("BENCH_delta.json", json).expect("write BENCH_delta.json");
+    println!("wrote BENCH_delta.json");
+}

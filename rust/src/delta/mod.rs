@@ -1,0 +1,545 @@
+//! Evolving-graph delta layer: batched edge insertions over the static
+//! storage tiers, plus incremental pattern maintenance.
+//!
+//! Real traffic is a graph that changes — edges arrive, counts must stay
+//! fresh. This module keeps the static tiers ([`crate::graph::Graph`],
+//! [`crate::graph::CompactGraph`]) immutable and layers mutation on top:
+//!
+//! * [`DeltaGraph`] — a per-machine overlay of **sorted insertion
+//!   buffers** over an immutable base graph. Adjacency reads merge the
+//!   base slice with the vertex's overlay list on the fly; vertices with
+//!   an empty overlay stay zero-copy. The overlay plugs into the
+//!   [`crate::graph::GraphStore`] seam as a third tier
+//!   (`GraphStore::Delta`), so the Kudu engine mines an evolving graph
+//!   unchanged — and bitwise identically to mining the materialised
+//!   final graph. [`DeltaGraph::compacted`] deterministically merges the
+//!   overlay into a fresh base CSR (the LSM-style compaction step),
+//!   preserving the version fingerprint.
+//! * [`anchor`] — the edge-anchored enumeration entry point: count the
+//!   pattern maps pinned to one graph edge (or non-edge), the unit of
+//!   incremental maintenance. Per-edge double counting is avoided by a
+//!   last-arrival discipline over the sorted batch rather than by plan
+//!   restrictions (see the module docs).
+//! * [`maintain`] — per-batch count maintenance in two modes:
+//!   [`maintain::MaintainMode::Anchored`] sweeps the applied batch with
+//!   the anchored counter (work proportional to *affected* embeddings,
+//!   the DwarvesGraph property), and
+//!   [`maintain::MaintainMode::Frontier`] reroots the compiled
+//!   [`crate::plan::MiningProgram`] at the delta frontier — a BFS ball
+//!   around the batch endpoints — and differences two engine runs
+//!   (old vs new overlay) over identical root sets.
+//!
+//! The serving half — [`crate::service::MiningService::ingest`] and
+//! standing-query subscriptions whose sinks receive per-batch count
+//! deltas — lives in [`crate::service`].
+//!
+//! **Determinism.** An applied batch is canonicalised (undirected,
+//! deduped, already-present edges dropped, sorted) before it touches the
+//! overlay or the fingerprint chain, so any ingest order of the same
+//! edge multiset produces the same overlay, the same version
+//! fingerprint, and the same maintenance deltas.
+
+pub mod anchor;
+pub mod maintain;
+
+use crate::graph::io::Fnv1a;
+use crate::graph::{Graph, Label, VertexId};
+use std::fmt;
+use std::sync::Arc;
+
+/// Error applying a batch to a [`DeltaGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaError {
+    /// An edge endpoint is outside the graph's fixed vertex universe.
+    /// The session's partitioning and root lists are functions of the
+    /// vertex count, so growing it mid-session is rejected rather than
+    /// silently corrupting ownership.
+    VertexOutOfRange { vertex: VertexId, num_vertices: usize },
+}
+
+impl fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeltaError::VertexOutOfRange { vertex, num_vertices } => write!(
+                f,
+                "edge endpoint {vertex} outside the vertex universe (num_vertices = \
+                 {num_vertices}); the delta layer inserts edges, not vertices"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+/// Outcome of one applied insertion batch.
+#[derive(Clone, Debug)]
+pub struct AppliedBatch {
+    /// The canonical applied edges: undirected `(u, v)` with `u < v`,
+    /// sorted, deduped, with already-present edges removed. This is the
+    /// exact batch the fingerprint chain hashed and the batch
+    /// maintenance ([`maintain`]) must sweep.
+    pub edges: Vec<(VertexId, VertexId)>,
+    /// Submitted edges dropped as duplicates — within the batch or
+    /// already present in the graph.
+    pub duplicates: usize,
+    /// Submitted self-loops dropped (the engines mine simple graphs).
+    pub self_loops: usize,
+    /// Version counter after this batch (unchanged if `edges` is empty).
+    pub version: u64,
+    /// Version fingerprint after this batch (unchanged if `edges` is
+    /// empty).
+    pub fingerprint: u64,
+}
+
+/// A mutable overlay of sorted insertion buffers over an immutable base
+/// graph.
+///
+/// Reads present the union adjacency: `N(v)` is the sorted merge of the
+/// base CSR slice and the vertex's overlay list. The overlay never
+/// stores an arc the base already has, so the merge is a disjoint
+/// two-way merge and degrees are exact sums. Vertices without overlay
+/// entries — the overwhelming majority under realistic batch sizes —
+/// return the base slice zero-copy ([`DeltaGraph::base_slice`]), which
+/// is what keeps the engine's hot loops at static-tier speed.
+///
+/// The **version fingerprint** ([`DeltaGraph::fingerprint`]) chains the
+/// base graph's content fingerprint through every applied batch:
+/// `fp₀ = base.fingerprint()`, `fpᵢ₊₁ = FNV-1a(fpᵢ, batchᵢ)`. It
+/// changes on every non-empty applied batch and is preserved by
+/// [`DeltaGraph::compacted`], so result caches keyed on it can never
+/// serve pre-ingest counts for a post-ingest graph (or rebuild cache
+/// state across a compaction that changed nothing logically).
+#[derive(Clone)]
+pub struct DeltaGraph {
+    base: Arc<Graph>,
+    /// Per-vertex sorted insertion lists, disjoint from the base
+    /// adjacency. `overlay[v]` is empty for untouched vertices.
+    overlay: Vec<Vec<VertexId>>,
+    /// Sorted list of vertices with a non-empty overlay — the delta
+    /// frontier.
+    touched: Vec<VertexId>,
+    /// Total directed overlay entries (2 per inserted undirected edge).
+    overlay_arcs: usize,
+    version: u64,
+    fp: u64,
+}
+
+/// Disjoint sorted two-way merge, appended to `out` (not cleared).
+fn merge_append(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    out.reserve(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] < b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+impl DeltaGraph {
+    /// Open an overlay over `base` with an empty delta. The version
+    /// fingerprint starts at the base graph's content fingerprint.
+    pub fn new(base: Arc<Graph>) -> Self {
+        let n = base.num_vertices();
+        let fp = base.fingerprint();
+        DeltaGraph { base, overlay: vec![Vec::new(); n], touched: Vec::new(), overlay_arcs: 0, version: 0, fp }
+    }
+
+    /// Convenience: wrap an owned graph.
+    pub fn from_graph(g: Graph) -> Self {
+        Self::new(Arc::new(g))
+    }
+
+    /// The immutable base graph under the overlay.
+    pub fn base(&self) -> &Arc<Graph> {
+        &self.base
+    }
+
+    /// Number of applied (non-empty) batches since the base snapshot
+    /// this overlay chain started from.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The chained version fingerprint (see the type docs). Equal to
+    /// `base.fingerprint()` while the chain is empty.
+    pub fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+
+    /// Sorted vertices with a non-empty overlay — the delta frontier.
+    pub fn touched(&self) -> &[VertexId] {
+        &self.touched
+    }
+
+    /// Directed overlay entries (2 per inserted undirected edge).
+    pub fn overlay_arcs(&self) -> usize {
+        self.overlay_arcs
+    }
+
+    /// True when the overlay holds no insertions (reads are pure base).
+    pub fn is_clean(&self) -> bool {
+        self.overlay_arcs == 0
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.base.num_vertices()
+    }
+
+    /// Undirected edges: base plus applied insertions.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.base.num_edges() + self.overlay_arcs / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.base.degree(v) + self.overlay[v as usize].len()
+    }
+
+    /// Labels live on the base (the delta layer inserts edges, not
+    /// vertices).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        self.base.label(v)
+    }
+
+    #[inline]
+    pub fn is_labelled(&self) -> bool {
+        self.base.is_labelled()
+    }
+
+    /// The base CSR slice for `v` when its overlay is empty — the
+    /// zero-copy fast path. `None` means the caller must merge
+    /// ([`DeltaGraph::neighbors_into`]).
+    #[inline]
+    pub fn base_slice(&self, v: VertexId) -> Option<&[VertexId]> {
+        if self.overlay[v as usize].is_empty() {
+            Some(self.base.neighbors(v))
+        } else {
+            None
+        }
+    }
+
+    /// The sorted merged neighbour list of `v`: zero-copy base slice for
+    /// untouched vertices, merged into `scratch` otherwise. Same calling
+    /// convention as [`crate::graph::GraphStore::neighbors_into`].
+    #[inline]
+    pub fn neighbors_into<'a, 's>(&'a self, v: VertexId, scratch: &'s mut Vec<VertexId>) -> &'s [VertexId]
+    where
+        'a: 's,
+    {
+        match self.base_slice(v) {
+            Some(s) => s,
+            None => {
+                scratch.clear();
+                merge_append(self.base.neighbors(v), &self.overlay[v as usize], scratch);
+                &scratch[..]
+            }
+        }
+    }
+
+    /// Append the sorted merged neighbour list of `v` to `out` (no
+    /// clear) — the decode-arena entry point used by the engine's
+    /// [`crate::engine::task`] frame pool.
+    pub fn neighbors_append(&self, v: VertexId, out: &mut Vec<VertexId>) {
+        merge_append(self.base.neighbors(v), &self.overlay[v as usize], out);
+    }
+
+    /// True if the (undirected) edge `(u, v)` exists in base or overlay.
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.base.has_edge(u, v) || self.overlay[u as usize].binary_search(&v).is_ok()
+    }
+
+    /// Tier-invariant *logical* CSR size in bytes — exactly what the
+    /// materialised final graph would report, so byte-denominated
+    /// decisions (cache budgets, partition accounting) are bitwise
+    /// identical across the delta and static tiers.
+    pub fn csr_bytes(&self) -> usize {
+        self.base.csr_bytes() + self.overlay_arcs * std::mem::size_of::<VertexId>()
+    }
+
+    /// Physical footprint: base CSR plus overlay buffers and headers.
+    pub fn bytes(&self) -> usize {
+        self.base.csr_bytes()
+            + self.overlay_arcs * std::mem::size_of::<VertexId>()
+            + self.touched.len() * std::mem::size_of::<Vec<VertexId>>()
+    }
+
+    /// Physical bytes per directed adjacency entry.
+    pub fn bytes_per_edge(&self) -> f64 {
+        let arcs = 2 * self.num_edges();
+        if arcs == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 / arcs as f64
+        }
+    }
+
+    /// Apply a batch of undirected edge insertions.
+    ///
+    /// The batch is canonicalised first — self-loops dropped, endpoints
+    /// ordered `u < v`, sorted, deduped, already-present edges dropped —
+    /// so any submission order of the same edge multiset produces the
+    /// same overlay state, version, and fingerprint. An endpoint outside
+    /// the vertex universe rejects the whole batch (atomically: nothing
+    /// is applied). A batch that canonicalises to empty leaves version
+    /// and fingerprint unchanged.
+    pub fn ingest(&mut self, edges: &[(VertexId, VertexId)]) -> Result<AppliedBatch, DeltaError> {
+        let n = self.num_vertices();
+        let mut batch = Vec::with_capacity(edges.len());
+        let mut self_loops = 0usize;
+        for &(u, v) in edges {
+            for w in [u, v] {
+                if w as usize >= n {
+                    return Err(DeltaError::VertexOutOfRange { vertex: w, num_vertices: n });
+                }
+            }
+            if u == v {
+                self_loops += 1;
+                continue;
+            }
+            batch.push(if u < v { (u, v) } else { (v, u) });
+        }
+        batch.sort_unstable();
+        let submitted = batch.len();
+        batch.dedup();
+        batch.retain(|&(u, v)| !self.has_edge(u, v));
+        let duplicates = submitted - batch.len();
+        for &(u, v) in &batch {
+            self.insert_arc(u, v);
+            self.insert_arc(v, u);
+            self.overlay_arcs += 2;
+        }
+        if !batch.is_empty() {
+            self.version += 1;
+            let mut h = Fnv1a::new();
+            h.write_u64(self.fp);
+            h.write_u64(batch.len() as u64);
+            for &(u, v) in &batch {
+                h.write_u32(u);
+                h.write_u32(v);
+            }
+            self.fp = h.finish();
+        }
+        Ok(AppliedBatch {
+            edges: batch,
+            duplicates,
+            self_loops,
+            version: self.version,
+            fingerprint: self.fp,
+        })
+    }
+
+    fn insert_arc(&mut self, u: VertexId, v: VertexId) {
+        let list = &mut self.overlay[u as usize];
+        if list.is_empty() {
+            if let Err(i) = self.touched.binary_search(&u) {
+                self.touched.insert(i, u);
+            }
+        }
+        if let Err(i) = list.binary_search(&v) {
+            list.insert(i, v);
+        }
+    }
+
+    /// Materialise the union graph as a fresh CSR [`Graph`] (labels
+    /// carried over). The result is exactly the graph a from-scratch
+    /// build over base-plus-applied-edges produces.
+    pub fn materialize(&self) -> Graph {
+        let n = self.num_vertices();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut edges = Vec::with_capacity(2 * self.num_edges());
+        for v in 0..n as VertexId {
+            let extra = &self.overlay[v as usize];
+            if extra.is_empty() {
+                edges.extend_from_slice(self.base.neighbors(v));
+            } else {
+                merge_append(self.base.neighbors(v), extra, &mut edges);
+            }
+            offsets.push(edges.len() as u64);
+        }
+        let g = Graph::from_csr(offsets, edges);
+        if self.base.is_labelled() {
+            g.with_labels((0..n as VertexId).map(|v| self.base.label(v)).collect())
+        } else {
+            g
+        }
+    }
+
+    /// Deterministic compaction: merge the overlay into a fresh base CSR
+    /// and return an overlay-free `DeltaGraph` over it. The version
+    /// counter and fingerprint are **preserved** — compaction changes
+    /// the physical layout, never the logical graph, exactly like the
+    /// static storage tiers.
+    pub fn compacted(&self) -> DeltaGraph {
+        DeltaGraph {
+            base: Arc::new(self.materialize()),
+            overlay: vec![Vec::new(); self.num_vertices()],
+            touched: Vec::new(),
+            overlay_arcs: 0,
+            version: self.version,
+            fp: self.fp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn base() -> Arc<Graph> {
+        // Square 0-1-2-3 plus diagonal 0-2, two spare vertices.
+        Arc::new(Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]))
+    }
+
+    #[test]
+    fn clean_overlay_is_transparent() {
+        let d = DeltaGraph::new(base());
+        assert!(d.is_clean());
+        assert_eq!(d.num_edges(), 5);
+        assert_eq!(d.degree(0), 3);
+        assert_eq!(d.base_slice(0).unwrap(), &[1, 2, 3]);
+        assert_eq!(d.fingerprint(), base().fingerprint());
+        assert_eq!(d.version(), 0);
+    }
+
+    #[test]
+    fn ingest_merges_sorted() {
+        let mut d = DeltaGraph::new(base());
+        let b = d.ingest(&[(4, 1), (1, 3)]).unwrap();
+        assert_eq!(b.edges, vec![(1, 3), (1, 4)]);
+        assert_eq!(d.num_edges(), 7);
+        assert_eq!(d.degree(1), 4);
+        assert!(d.base_slice(1).is_none());
+        let mut scratch = Vec::new();
+        assert_eq!(d.neighbors_into(1, &mut scratch), &[0, 2, 3, 4]);
+        assert_eq!(d.neighbors_into(4, &mut scratch), &[1]);
+        // Untouched vertices stay zero-copy.
+        assert_eq!(d.base_slice(0).unwrap(), &[1, 2, 3]);
+        assert!(d.has_edge(3, 1) && d.has_edge(1, 4) && !d.has_edge(2, 4));
+        assert_eq!(d.touched(), &[1, 3, 4]);
+    }
+
+    #[test]
+    fn canonicalisation_drops_dups_loops_present() {
+        let mut d = DeltaGraph::new(base());
+        let b = d.ingest(&[(1, 3), (3, 1), (2, 2), (0, 1), (1, 3)]).unwrap();
+        assert_eq!(b.edges, vec![(1, 3)]);
+        assert_eq!(b.duplicates, 3, "reversed dup, repeat, already-present (0,1)");
+        assert_eq!(b.self_loops, 1);
+        assert_eq!(d.num_edges(), 6);
+    }
+
+    #[test]
+    fn out_of_range_rejects_atomically() {
+        let mut d = DeltaGraph::new(base());
+        let err = d.ingest(&[(1, 3), (0, 6)]).unwrap_err();
+        assert_eq!(err, DeltaError::VertexOutOfRange { vertex: 6, num_vertices: 6 });
+        assert!(d.is_clean(), "rejected batch applies nothing");
+        assert_eq!(d.version(), 0);
+    }
+
+    #[test]
+    fn fingerprint_chains_and_empty_batch_is_identity() {
+        let mut d = DeltaGraph::new(base());
+        let fp0 = d.fingerprint();
+        let b1 = d.ingest(&[(1, 3)]).unwrap();
+        assert_ne!(b1.fingerprint, fp0);
+        assert_eq!(b1.version, 1);
+        // A batch that canonicalises to empty changes nothing.
+        let b2 = d.ingest(&[(1, 3), (2, 2)]).unwrap();
+        assert!(b2.edges.is_empty());
+        assert_eq!(b2.fingerprint, b1.fingerprint);
+        assert_eq!(b2.version, 1);
+        // Same edge multiset in any order → same fingerprint.
+        let mut d2 = DeltaGraph::new(base());
+        let c = d2.ingest(&[(3, 1)]).unwrap();
+        assert_eq!(c.fingerprint, b1.fingerprint);
+    }
+
+    #[test]
+    fn ingest_order_within_chain_matters_but_batch_order_does_not() {
+        // One batch {e1, e2} fingerprints identically regardless of
+        // submission order; two single-edge batches chain differently.
+        let (mut a, mut b, mut c) = (DeltaGraph::new(base()), DeltaGraph::new(base()), DeltaGraph::new(base()));
+        a.ingest(&[(1, 3), (1, 4)]).unwrap();
+        b.ingest(&[(4, 1), (3, 1)]).unwrap();
+        c.ingest(&[(1, 3)]).unwrap();
+        c.ingest(&[(1, 4)]).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn materialize_equals_scratch_build() {
+        let g = gen::rmat(8, 6, 11);
+        let n = g.num_vertices();
+        let mut edges: Vec<(VertexId, VertexId)> = g.undirected_edges().collect();
+        let mut d = DeltaGraph::from_graph(g);
+        // Insert a pseudo-random spray of new edges in two batches.
+        let mut rng = gen::Rng::new(0xD31A);
+        let mut extra = Vec::new();
+        for _ in 0..200 {
+            extra.push((rng.below(n as u64) as VertexId, rng.below(n as u64) as VertexId));
+        }
+        let (first, second) = extra.split_at(120);
+        for batch in [first, second] {
+            let applied = d.ingest(batch).unwrap();
+            edges.extend(applied.edges);
+        }
+        let scratch = Graph::from_edges(n, &edges);
+        let m = d.materialize();
+        assert_eq!(m.num_edges(), scratch.num_edges());
+        for v in 0..n as VertexId {
+            assert_eq!(m.neighbors(v), scratch.neighbors(v), "vertex {v}");
+        }
+        assert_eq!(m.fingerprint(), scratch.fingerprint());
+        // Logical CSR bytes match the materialised graph exactly.
+        assert_eq!(d.csr_bytes(), m.csr_bytes());
+    }
+
+    #[test]
+    fn compaction_preserves_version_and_fingerprint() {
+        let mut d = DeltaGraph::new(base());
+        d.ingest(&[(1, 3), (4, 5)]).unwrap();
+        let c = d.compacted();
+        assert!(c.is_clean());
+        assert_eq!(c.version(), d.version());
+        assert_eq!(c.fingerprint(), d.fingerprint());
+        assert_eq!(c.num_edges(), d.num_edges());
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        for v in 0..d.num_vertices() as VertexId {
+            assert_eq!(c.neighbors_into(v, &mut s1), d.neighbors_into(v, &mut s2));
+        }
+        // The chain continues across compaction: the next batch hashes
+        // on top of the preserved fingerprint.
+        let mut d2 = d.clone();
+        let mut c2 = c;
+        let x = d2.ingest(&[(0, 4)]).unwrap();
+        let y = c2.ingest(&[(0, 4)]).unwrap();
+        assert_eq!(x.fingerprint, y.fingerprint);
+    }
+
+    #[test]
+    fn labels_survive_materialisation() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2)]).with_labels(vec![1, 2, 1, 2]);
+        let mut d = DeltaGraph::from_graph(g);
+        d.ingest(&[(2, 3)]).unwrap();
+        assert_eq!(d.label(1), 2);
+        let m = d.materialize();
+        assert!(m.is_labelled());
+        assert_eq!(m.label(3), 2);
+        assert_eq!(m.neighbors(2), &[1, 3]);
+    }
+}

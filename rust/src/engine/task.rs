@@ -159,6 +159,26 @@ impl DecodeFrame {
         len as u64
     }
 
+    /// Delta-tier analogue of [`DecodeFrame::ensure`]: merge `v`'s
+    /// base-plus-overlay list into the arena once per frame. Only
+    /// overlay-touched vertices land here (untouched vertices resolve
+    /// zero-copy base slices in [`resolve_adj`]); the merge is read-side
+    /// composition, not a decode, so nothing is charged to
+    /// `decoded_edges`.
+    fn ensure_delta(&mut self, d: &crate::delta::DeltaGraph, v: VertexId) {
+        if d.base_slice(v).is_some() || self.map.contains_key(&v) {
+            return;
+        }
+        let off = self.buf.len();
+        let cap = self.buf.capacity();
+        d.neighbors_append(v, &mut self.buf);
+        if self.buf.capacity() != cap {
+            self.gen += 1;
+        }
+        let len = self.buf.len() - off;
+        self.map.insert(v, (off as u32, len as u32));
+    }
+
     /// The decoded slice of `v` (must have been [`DecodeFrame::ensure`]d
     /// by the current frame's phase 1).
     #[inline]
@@ -185,6 +205,13 @@ fn resolve_adj<'s>(
         ListSrc::Vertex(v) => match store {
             GraphStore::Csr(g) => g.neighbors(v),
             GraphStore::Compact(_) => dec.get(v),
+            // Delta tier: untouched vertices borrow the base CSR slice
+            // zero-copy; overlay-touched ones were merged into the frame
+            // arena by phase 1.
+            GraphStore::Delta(d) => match d.base_slice(v) {
+                Some(s) => s,
+                None => dec.get(v),
+            },
         },
         ListSrc::Slice { off, len } => &stack[j].arena[off as usize..(off + len) as usize],
     }
@@ -1021,21 +1048,44 @@ impl<'a, 'g> TaskRunner<'a, 'g> {
         // cache, so phase 2 borrows stable slices with no further arena
         // growth. Cache hits are free; misses charge the decode
         // diagnostic, never `Work`. ---
-        if let GraphStore::Compact(cg) = self.store {
-            for s in step.sources.iter() {
-                if let Source::Adj(j) = *s {
+        match self.store {
+            GraphStore::Compact(cg) => {
+                for s in step.sources.iter() {
+                    if let Source::Adj(j) = *s {
+                        let a = ancestor_idx(stack, level, idx, j);
+                        if let ListSrc::Vertex(v) = list_src(stack, j, a) {
+                            self.decoded_edges += dec.ensure(cg, v);
+                        }
+                    }
+                }
+                for &j in &step.exclude {
                     let a = ancestor_idx(stack, level, idx, j);
                     if let ListSrc::Vertex(v) = list_src(stack, j, a) {
                         self.decoded_edges += dec.ensure(cg, v);
                     }
                 }
             }
-            for &j in &step.exclude {
-                let a = ancestor_idx(stack, level, idx, j);
-                if let ListSrc::Vertex(v) = list_src(stack, j, a) {
-                    self.decoded_edges += dec.ensure(cg, v);
+            // Delta tier: merge overlay-touched vertex lists into the
+            // frame arena (no decode charge — the merge is read-side
+            // composition of two resident sorted lists, not a
+            // decompression).
+            GraphStore::Delta(dg) => {
+                for s in step.sources.iter() {
+                    if let Source::Adj(j) = *s {
+                        let a = ancestor_idx(stack, level, idx, j);
+                        if let ListSrc::Vertex(v) = list_src(stack, j, a) {
+                            dec.ensure_delta(dg, v);
+                        }
+                    }
+                }
+                for &j in &step.exclude {
+                    let a = ancestor_idx(stack, level, idx, j);
+                    if let ListSrc::Vertex(v) = list_src(stack, j, a) {
+                        dec.ensure_delta(dg, v);
+                    }
                 }
             }
+            GraphStore::Csr(_) => {}
         }
         let dec: &DecodeFrame = dec;
 

@@ -174,7 +174,7 @@ impl Graph {
     }
 }
 
-/// The accessor seam over the two storage tiers. Everything downstream
+/// The accessor seam over the storage tiers. Everything downstream
 /// of graph construction — partitioning, the cache, the communication
 /// fabric, and the task runner — consumes a `GraphStore` instead of a
 /// concrete representation.
@@ -182,14 +182,19 @@ impl Graph {
 /// The seam is deliberately *pull-based*: callers that need an
 /// adjacency list pass a scratch buffer to [`GraphStore::neighbors_into`]
 /// and get back a slice that is bitwise identical across tiers (a
-/// zero-copy borrow for CSR, a decoded copy for compact). Degree,
-/// labels, and size accounting never decode.
+/// zero-copy borrow for CSR, a decoded copy for compact, a merged copy
+/// for delta — zero-copy again for delta vertices without overlay
+/// entries). Degree, labels, and size accounting never decode.
 #[derive(Clone, Copy)]
 pub enum GraphStore<'g> {
     /// `Vec`-backed CSR — the reference tier.
     Csr(&'g Graph),
     /// Varint-delta compressed blocks, optionally mmap-backed.
     Compact(&'g CompactGraph),
+    /// Evolving-graph overlay: an immutable base plus sorted insertion
+    /// buffers ([`crate::delta::DeltaGraph`]). Mining over this tier is
+    /// bitwise identical to mining the materialised final graph.
+    Delta(&'g crate::delta::DeltaGraph),
 }
 
 impl<'g> GraphStore<'g> {
@@ -199,6 +204,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.num_vertices(),
             GraphStore::Compact(c) => c.num_vertices(),
+            GraphStore::Delta(d) => d.num_vertices(),
         }
     }
 
@@ -208,6 +214,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.num_edges(),
             GraphStore::Compact(c) => c.num_edges(),
+            GraphStore::Delta(d) => d.num_edges(),
         }
     }
 
@@ -217,6 +224,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.degree(v),
             GraphStore::Compact(c) => c.degree(v),
+            GraphStore::Delta(d) => d.degree(v),
         }
     }
 
@@ -226,6 +234,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.label(v),
             GraphStore::Compact(c) => c.label(v),
+            GraphStore::Delta(d) => d.label(v),
         }
     }
 
@@ -235,6 +244,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.is_labelled(),
             GraphStore::Compact(c) => c.is_labelled(),
+            GraphStore::Delta(d) => d.is_labelled(),
         }
     }
 
@@ -253,6 +263,7 @@ impl<'g> GraphStore<'g> {
                 c.neighbors_into(v, scratch);
                 &scratch[..]
             }
+            GraphStore::Delta(d) => d.neighbors_into(v, scratch),
         }
     }
 
@@ -262,6 +273,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.has_edge(u, v),
             GraphStore::Compact(c) => c.has_edge(u, v),
+            GraphStore::Delta(d) => d.has_edge(u, v),
         }
     }
 
@@ -273,6 +285,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.csr_bytes(),
             GraphStore::Compact(c) => c.csr_bytes(),
+            GraphStore::Delta(d) => d.csr_bytes(),
         }
     }
 
@@ -282,6 +295,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.csr_bytes(),
             GraphStore::Compact(c) => c.bytes(),
+            GraphStore::Delta(d) => d.bytes(),
         }
     }
 
@@ -292,6 +306,7 @@ impl<'g> GraphStore<'g> {
         match self {
             GraphStore::Csr(g) => g.bytes_per_edge(),
             GraphStore::Compact(c) => c.bytes_per_edge(),
+            GraphStore::Delta(d) => d.bytes_per_edge(),
         }
     }
 
@@ -307,7 +322,7 @@ impl<'g> GraphStore<'g> {
     pub fn as_csr(&self) -> Option<&'g Graph> {
         match self {
             GraphStore::Csr(g) => Some(g),
-            GraphStore::Compact(_) => None,
+            GraphStore::Compact(_) | GraphStore::Delta(_) => None,
         }
     }
 }

@@ -140,6 +140,29 @@
 //! run serially on a plain session (`tests/service_equivalence.rs`).
 //! See `examples/service.rs` for a three-client tour.
 //!
+//! ## Evolving graphs
+//!
+//! Real traffic is a graph that changes. The [`delta`] layer keeps the
+//! static storage tiers immutable and layers batched edge insertion on
+//! top: [`delta::DeltaGraph`] is an overlay of sorted insertion buffers
+//! over a base graph, plugged into the [`graph::GraphStore`] seam as a
+//! third tier (`GraphStore::Delta`) — so the engine mines an evolving
+//! graph unchanged, bitwise identically to mining the materialised
+//! final graph, and [`session::Job::delta`] points any job at an
+//! overlay. `DeltaGraph::compacted` deterministically merges the
+//! overlay into a fresh base CSR, preserving the chained **version
+//! fingerprint** that re-keys result caches on every applied batch.
+//! Counts stay fresh *incrementally*: [`delta::maintain`] computes
+//! exact per-batch count deltas either by an edge-anchored last-arrival
+//! sweep ([`delta::anchor`], work proportional to embeddings touching
+//! the batch) or by rerooting the compiled program at the delta
+//! frontier and differencing two engine runs. The serving layer closes
+//! the loop: [`service::MiningService::ingest`] applies a batch and
+//! pushes per-batch count deltas to every standing query registered
+//! with [`service::MiningService::subscribe`]. See
+//! `examples/evolving.rs` for a standing 4-motif query over a streamed
+//! edge file.
+//!
 //! ## Determinism contract and how it's enforced
 //!
 //! Everything a run reports — counts, per-pattern traffic matrices,
@@ -148,7 +171,8 @@
 //! `sync_fetch` escape hatch), intersection-kernel tier, and **graph
 //! storage tier** ([`config::StorageTier`]: `Vec`-CSR vs the
 //! varint-delta compressed representation of [`graph::CompactGraph`],
-//! optionally mmap-backed). Wall-clock fields (`wall_s`,
+//! optionally mmap-backed — and the [`delta::DeltaGraph`] overlay,
+//! whose jobs are bitwise identical to the materialised graph's). Wall-clock fields (`wall_s`,
 //! `comm_stall_s`) are explicitly *diagnostics* outside the contract,
 //! as are the storage-tier decode charge (`decode_s`, modelled per
 //! decoded edge and kept out of work and virtual time), the
@@ -197,6 +221,10 @@
 //!   generators") and their fusion into prefix-trie mining programs
 //!   ([`plan::program`]), 1-D partitioning, and a deterministic simulated
 //!   cluster with an accounted transport.
+//! * [`delta`] — the evolving-graph layer: the [`delta::DeltaGraph`]
+//!   insertion overlay behind `GraphStore::Delta`, deterministic
+//!   compaction, chained version fingerprints, and incremental pattern
+//!   maintenance ([`delta::anchor`], [`delta::maintain`]).
 //! * [`comm`] — the message-passing communication subsystem: typed
 //!   `FetchRequest`/`FetchResponse` (and embedding-shipping) wire
 //!   messages between per-machine mailboxes, aggregated into
@@ -236,6 +264,7 @@ pub mod cli;
 pub mod cluster;
 pub mod comm;
 pub mod config;
+pub mod delta;
 pub mod engine;
 pub mod exec;
 pub mod graph;

@@ -22,7 +22,7 @@ use kudu::graph::{io, Graph};
 use kudu::metrics::{fmt_bytes, fmt_time};
 use kudu::pattern::brute::Induced;
 use kudu::plan::ClientSystem;
-use kudu::service::{JobOptions, MiningService, ServiceConfig};
+use kudu::service::{JobOptions, MiningService, ServiceConfig, SubscribeOptions};
 use kudu::session::{GpmApp, MiningSession};
 use std::sync::Arc;
 
@@ -36,6 +36,27 @@ fn load_graph(spec: &str) -> Graph {
         io::load_edge_list_cached(std::path::Path::new(spec))
             .unwrap_or_else(|e| panic!("cannot load graph '{spec}': {e}"))
     }
+}
+
+/// Raw `u v` pairs from an edge file (whitespace-separated, `#` comments
+/// skipped) — the ingest replay wants the stream as-is, duplicates and
+/// all, so the service's canonicalisation is what dedupes.
+fn load_edge_pairs(path: &str) -> Vec<(u32, u32)> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read edge file '{path}': {e}"));
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|l| {
+            let mut it = l
+                .split_whitespace()
+                .map(|t| t.parse::<u32>().unwrap_or_else(|_| panic!("bad vertex id in '{l}'")));
+            match (it.next(), it.next()) {
+                (Some(u), Some(v)) => (u, v),
+                _ => panic!("edge line needs two vertex ids: '{l}'"),
+            }
+        })
+        .collect()
 }
 
 fn usage() -> ! {
@@ -52,6 +73,8 @@ fn usage() -> ! {
     eprintln!("           --jobs <spec,spec,...> (APP[@ENGINE], e.g. tc,4-mc@k-automine)");
     eprintln!("           --clients N (specs round-robin across N clients)");
     eprintln!("           --repeat N (submit the list N times; repeats hit the result cache)");
+    eprintln!("           --subscribe <spec,...> (standing queries; one count delta per batch)");
+    eprintln!("           --ingest <edge-file> --ingest-batch N (batched evolving-graph replay)");
     eprintln!("  plan     --pattern <triangle|clique-K|chain-K|cycle-K|star-K|diamond>");
     eprintln!("           --planner <automine|graphpi> [--vertex-induced]");
     eprintln!("  generate --dataset <abbr> --out <path>");
@@ -182,6 +205,32 @@ fn main() {
             MiningService::serve(&session, cfg, |svc| {
                 let ids: Vec<_> =
                     (0..clients).map(|i| svc.client(&format!("client-{i}"))).collect();
+                // Standing queries register before anything else so their
+                // baselines cover the pristine graph and every replayed
+                // batch below reaches them as a count delta.
+                let sub_spec = args.get("subscribe", "");
+                let subs: Vec<_> = sub_spec
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| {
+                        let (app, engine) = parse_job_spec(s);
+                        let h = svc
+                            .subscribe(
+                                ids[0],
+                                Arc::new(app),
+                                SubscribeOptions { engine, ..SubscribeOptions::default() },
+                            )
+                            .expect("standing queries are pure counting apps");
+                        println!(
+                            "subscribed {} @ {} (baseline {:?})",
+                            app.name(),
+                            engine.name(),
+                            h.initial_counts()
+                        );
+                        (app.name(), h)
+                    })
+                    .collect();
                 let mut handles = Vec::new();
                 for round in 0..repeat {
                     for (i, (app, engine)) in specs.iter().enumerate() {
@@ -204,11 +253,54 @@ fn main() {
                         if r.cached { "(cache hit)" } else { "" }
                     );
                 }
+                // Batched replay of an edge file into the served graph:
+                // each batch routes to its partition owners, advances the
+                // versioned fingerprint (so cached pre-ingest reports can
+                // never be served again), and delivers one exact count
+                // delta to every standing query.
+                let ingest_path = args.get("ingest", "");
+                if !ingest_path.is_empty() {
+                    let batch = args.get_as::<usize>("ingest-batch", 64).max(1);
+                    let edges = load_edge_pairs(&ingest_path);
+                    println!(
+                        "replaying {} edges from {ingest_path} in batches of {batch}",
+                        edges.len()
+                    );
+                    for chunk in edges.chunks(batch) {
+                        match svc.ingest(chunk) {
+                            Ok(r) => {
+                                println!(
+                                    "ingest {:>3}: +{} edges ({} dup, {} self-loop) \
+                                     fingerprint {:016x}",
+                                    r.epoch, r.applied, r.duplicates, r.self_loops, r.fingerprint
+                                );
+                                for (name, h) in &subs {
+                                    if let Some(u) = h.next() {
+                                        println!(
+                                            "  {name}: deltas {:?} -> totals {:?}",
+                                            u.deltas, u.counts
+                                        );
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("ingest rejected (batch unapplied): {e}");
+                                break;
+                            }
+                        }
+                    }
+                }
                 let s = svc.stats();
                 println!(
                     "service: {} submitted / {} completed | cache {} hits / {} misses",
                     s.submitted, s.completed, s.cache_hits, s.cache_misses
                 );
+                if s.ingests > 0 {
+                    println!(
+                        "evolving: {} batches applied | {} updates to {} subscription(s)",
+                        s.ingests, s.updates_delivered, s.subscriptions
+                    );
+                }
             });
         }
         "plan" => {

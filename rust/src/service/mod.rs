@@ -34,7 +34,19 @@
 //!   `workers_per_machine`, SIMD, storage tier, comm window): two jobs
 //!   differing only there are *defined* to produce identical reports, so
 //!   they share a cache line. Sink- or hook-bearing jobs are never
-//!   cached (their results live outside the report).
+//!   cached (their results live outside the report). The graph half of
+//!   the key is the *versioned* fingerprint — chained forward by every
+//!   applied ingest batch — so a post-ingest resubmission can never be
+//!   served a pre-ingest report.
+//! * **Evolving graphs** — [`MiningService::ingest`] applies a batch of
+//!   edge insertions as a [`DeltaGraph`] overlay over the session graph
+//!   (the base stays immutable; jobs over the overlay run through
+//!   `GraphStore::Delta`, or over an eagerly materialised CSR for the
+//!   baseline executors), and [`MiningService::subscribe`] registers a
+//!   **standing query**: each applied batch pushes a
+//!   [`SubscriptionUpdate`] — exact per-pattern count deltas computed
+//!   *incrementally* ([`crate::delta::maintain`]), plus the running
+//!   totals — to every subscriber's [`SubscriptionHandle`].
 //!
 //! **Determinism.** A job's report depends only on (graph, program,
 //! config) — never on queue position, pool width, or what else is
@@ -61,13 +73,16 @@
 //! ```
 
 use crate::config::RunConfig;
+use crate::delta::maintain::{maintain, MaintainMode};
+use crate::delta::{DeltaError, DeltaGraph};
 use crate::graph::io::Fnv1a;
+use crate::graph::{Graph, VertexId};
 use crate::metrics::{JobLatency, ProgramStats, RunStats};
 use crate::plan::ClientSystem;
 use crate::session::{GpmApp, Job, JobReport, MiningSession};
 use crate::workloads::EngineKind;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -195,6 +210,234 @@ impl std::fmt::Display for AdmissionError {
 }
 
 impl std::error::Error for AdmissionError {}
+
+/// Why an [`MiningService::ingest`] batch was not applied. The batch is
+/// rejected atomically — no prefix of it lands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IngestError {
+    /// The overlay rejected the batch ([`DeltaError`], e.g. an endpoint
+    /// outside the session graph's vertex set).
+    Delta(DeltaError),
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::Delta(e) => write!(f, "ingest rejected: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// Why a [`MiningService::subscribe`] registration was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubscribeError {
+    /// The app installs per-embedding sinks; a standing query's results
+    /// are count deltas, which sinks live outside of.
+    SinkApp,
+    /// The app installs extend hooks; hooked runs are outside the
+    /// bitwise contract, so their counts cannot be maintained
+    /// incrementally.
+    HookApp,
+}
+
+impl std::fmt::Display for SubscribeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubscribeError::SinkApp => {
+                write!(f, "sink-bearing apps cannot subscribe (results live outside counts)")
+            }
+            SubscribeError::HookApp => {
+                write!(f, "hook-bearing apps cannot subscribe (hooked runs are uncountable)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubscribeError {}
+
+/// Per-subscription options for [`MiningService::subscribe`].
+#[derive(Clone, Copy, Debug)]
+pub struct SubscribeOptions {
+    /// How per-batch count deltas are computed
+    /// ([`crate::delta::maintain`]); both modes are exact and bitwise
+    /// identical — `Anchored` scales with the embeddings touching the
+    /// batch, `Frontier` reuses the compiled engine over the delta
+    /// frontier.
+    pub mode: MaintainMode,
+    /// Executor for the *initial* count (the subscription baseline);
+    /// defaults to the Kudu engine, like every job.
+    pub engine: EngineKind,
+}
+
+impl Default for SubscribeOptions {
+    fn default() -> Self {
+        SubscribeOptions {
+            mode: MaintainMode::Anchored,
+            engine: EngineKind::Kudu(ClientSystem::GraphPi),
+        }
+    }
+}
+
+/// One result delta a standing query receives per applied ingest batch
+/// (zero-delta batches included — an update is the *acknowledgement*
+/// that the subscriber's counts are current through `fingerprint`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubscriptionUpdate {
+    /// The subscription this update belongs to.
+    pub subscription: u64,
+    /// Service-wide ingest epoch (monotone, 1-based).
+    pub epoch: u64,
+    /// Overlay version after the batch ([`DeltaGraph::version`]).
+    pub version: u64,
+    /// Versioned graph fingerprint after the batch — the same value that
+    /// keys the result cache, so a subscriber can correlate updates with
+    /// job reports.
+    pub fingerprint: u64,
+    /// Canonicalised edges this batch actually inserted.
+    pub applied: usize,
+    /// Exact per-pattern count deltas of the batch (negative deltas are
+    /// possible under vertex-induced semantics: a new edge can destroy
+    /// embeddings).
+    pub deltas: Vec<i64>,
+    /// Per-pattern running totals after the batch — always equal to a
+    /// from-scratch count over the evolved graph
+    /// (`tests/delta_equivalence.rs`).
+    pub counts: Vec<u64>,
+}
+
+/// Update queue shared between a [`SubscriptionHandle`] and the ingest
+/// path. The `closed` flag lives under the same mutex as the queue (not
+/// an atomic): it is only ever read together with the queue contents.
+struct SubShared {
+    queue: Mutex<SubQueue>,
+    cv: Condvar,
+}
+
+struct SubQueue {
+    updates: VecDeque<SubscriptionUpdate>,
+    closed: bool,
+}
+
+impl SubShared {
+    fn push(&self, u: SubscriptionUpdate) {
+        let mut q = self.queue.lock().unwrap();
+        if !q.closed {
+            q.updates.push_back(u);
+        }
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        self.queue.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Subscriber's view of one standing query: a queue of per-batch
+/// [`SubscriptionUpdate`]s. `Send`, so a client thread can block on
+/// `next` while others ingest.
+pub struct SubscriptionHandle {
+    id: u64,
+    initial: Vec<u64>,
+    shared: Arc<SubShared>,
+}
+
+impl SubscriptionHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The per-pattern counts at subscription time (the baseline the
+    /// deltas accumulate onto).
+    pub fn initial_counts(&self) -> &[u64] {
+        &self.initial
+    }
+
+    /// Block until the next applied batch's update (or `None` once the
+    /// service has shut down and the queue is drained).
+    pub fn next(&self) -> Option<SubscriptionUpdate> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(u) = q.updates.pop_front() {
+                return Some(u);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.shared.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking poll for the next update.
+    pub fn try_next(&self) -> Option<SubscriptionUpdate> {
+        self.shared.queue.lock().unwrap().updates.pop_front()
+    }
+}
+
+/// Service-side state of one standing query.
+struct Subscription {
+    id: u64,
+    app: Arc<dyn GpmApp + Send + Sync>,
+    mode: MaintainMode,
+    /// Running per-pattern totals, folded forward by each batch's deltas.
+    counts: Vec<u64>,
+    shared: Arc<SubShared>,
+}
+
+/// What one applied ingest batch reports back to the caller.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    /// Service-wide ingest epoch (monotone, 1-based).
+    pub epoch: u64,
+    /// Overlay version after the batch.
+    pub version: u64,
+    /// Versioned graph fingerprint after the batch (the new cache key).
+    pub fingerprint: u64,
+    /// Canonicalised edges actually inserted.
+    pub applied: usize,
+    /// Edges dropped as duplicates (within the batch or already present).
+    pub duplicates: usize,
+    /// Self-loops dropped.
+    pub self_loops: usize,
+    /// Applied edges routed to each machine's partition (an edge lands on
+    /// the owner of both endpoints — 1-D partitioning stores every edge
+    /// with ≥1 owned endpoint locally).
+    pub per_machine: Vec<usize>,
+    /// Standing queries that received this batch's update.
+    pub subscribers: usize,
+}
+
+/// Evolving-graph state behind its own lock: the current overlay, its
+/// eager materialisation (for executors that read the static CSR
+/// directly), and the standing-query registry. Separate from
+/// `ServiceState` so job dispatch never contends with a long ingest.
+struct EvolvingState {
+    /// The session graph cloned into an `Arc` at first use — the
+    /// immutable base every overlay generation shares.
+    base: Option<Arc<Graph>>,
+    /// Current overlay; `None` while the graph is pristine.
+    delta: Option<Arc<DeltaGraph>>,
+    /// Eager CSR materialisation of `delta` (same mining answer, needed
+    /// by the baseline executors, which predate the store seam).
+    materialized: Option<Arc<Graph>>,
+    /// Versioned fingerprint of the *current* graph (base fingerprint
+    /// while pristine; chained forward by each applied batch).
+    fingerprint: u64,
+    subs: Vec<Subscription>,
+    next_sub: u64,
+}
+
+/// Snapshot of the evolved graph a job runs against (taken under the
+/// evolving lock, used outside it — the `Arc`s pin the generation even
+/// if further batches land mid-run).
+struct EvSnapshot {
+    delta: Arc<DeltaGraph>,
+    materialized: Arc<Graph>,
+    fingerprint: u64,
+}
 
 /// Per-job execution options: which engine runs the job, plus the same
 /// overrides the [`Job`] builder exposes. `None` inherits the session
@@ -416,6 +659,12 @@ pub struct ServiceStats {
     pub rejected: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Ingest batches applied ([`MiningService::ingest`]).
+    pub ingests: u64,
+    /// Standing queries ever registered ([`MiningService::subscribe`]).
+    pub subscriptions: u64,
+    /// Per-batch updates delivered across all subscriptions.
+    pub updates_delivered: u64,
 }
 
 /// Everything mutable behind the service's one lock.
@@ -438,11 +687,24 @@ pub struct MiningService<'s, 'g> {
     sess: &'s MiningSession<'g>,
     cfg: ServiceConfig,
     /// [`Graph::fingerprint`](crate::graph::Graph::fingerprint) of the
-    /// session graph, computed once — the graph half of every cache key.
+    /// *base* session graph, computed once. While the graph is pristine
+    /// this is the graph half of every cache key; after the first
+    /// applied batch the evolving state's chained fingerprint takes
+    /// over, so stale reports can never be served post-ingest.
     graph_fp: u64,
     state: Mutex<ServiceState>,
     /// Workers wait here for dispatchable jobs (and for shutdown).
     work_cv: Condvar,
+    /// Evolving-graph state (overlay + subscriptions), behind its own
+    /// lock — see [`EvolvingState`].
+    evolving: Mutex<EvolvingState>,
+    /// Serialises [`MiningService::ingest`] callers: batches apply one
+    /// at a time, in gate-acquisition order (coordination atomic, see
+    /// `tools/audit/atomics.toml`).
+    ingest_gate: AtomicBool,
+    /// Monotone count of applied batches (diagnostic; the authoritative
+    /// per-generation identity is the chained fingerprint).
+    epoch: AtomicU64,
 }
 
 impl<'s, 'g> MiningService<'s, 'g> {
@@ -462,10 +724,11 @@ impl<'s, 'g> MiningService<'s, 'g> {
         if let Err(e) = cfg.validate() {
             panic!("invalid service configuration: {e}");
         }
+        let graph_fp = sess.graph().fingerprint();
         let svc = MiningService {
             sess,
             cfg,
-            graph_fp: sess.graph().fingerprint(),
+            graph_fp,
             state: Mutex::new(ServiceState {
                 clients: Vec::new(),
                 queued_total: 0,
@@ -476,6 +739,16 @@ impl<'s, 'g> MiningService<'s, 'g> {
                 stats: ServiceStats::default(),
             }),
             work_cv: Condvar::new(),
+            evolving: Mutex::new(EvolvingState {
+                base: None,
+                delta: None,
+                materialized: None,
+                fingerprint: graph_fp,
+                subs: Vec::new(),
+                next_sub: 0,
+            }),
+            ingest_gate: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
         };
         std::thread::scope(|scope| {
             let svc = &svc;
@@ -486,6 +759,14 @@ impl<'s, 'g> MiningService<'s, 'g> {
             {
                 let mut state = svc.state.lock().unwrap();
                 state.shutdown = true;
+            }
+            // Close every standing query: blocked `next` calls observe
+            // the drained queue and return `None`.
+            {
+                let mut ev = svc.evolving.lock().unwrap();
+                for sub in ev.subs.drain(..) {
+                    sub.shared.close();
+                }
             }
             svc.work_cv.notify_all();
             out
@@ -583,6 +864,224 @@ impl<'s, 'g> MiningService<'s, 'g> {
         self.state.lock().unwrap().cache.len()
     }
 
+    /// The versioned fingerprint of the graph jobs currently run against:
+    /// the base fingerprint while pristine, chained forward by every
+    /// applied batch. This is the graph half of the result-cache key.
+    pub fn current_fingerprint(&self) -> u64 {
+        self.evolving.lock().unwrap().fingerprint
+    }
+
+    /// Applied-batch count so far (0 while pristine).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the evolved-graph generation a job should run against
+    /// (`None` while the graph is pristine).
+    fn snapshot(&self) -> Option<EvSnapshot> {
+        let ev = self.evolving.lock().unwrap();
+        ev.delta.as_ref().map(|d| EvSnapshot {
+            delta: Arc::clone(d),
+            materialized: Arc::clone(
+                ev.materialized.as_ref().expect("materialized tracks delta"),
+            ),
+            fingerprint: ev.fingerprint,
+        })
+    }
+
+    /// Run `app` to a fresh report over the current graph generation.
+    /// Store-reading executors mine the overlay in place
+    /// ([`Job::delta`](crate::session::Job::delta), through
+    /// `GraphStore::Delta`); the baseline executors — which read the
+    /// static CSR directly — get a job-local session over the eager
+    /// materialisation. Both are bitwise identical
+    /// (`tests/delta_equivalence.rs`).
+    fn run_fresh(
+        &self,
+        app: &dyn GpmApp,
+        opts: &JobOptions,
+        snap: Option<&EvSnapshot>,
+        cancel: Option<&AtomicBool>,
+    ) -> JobReport {
+        match snap {
+            None => {
+                let mut job = opts.apply(self.sess.job(app));
+                if let Some(c) = cancel {
+                    job = job.cancel_flag(c);
+                }
+                job.run_report()
+            }
+            Some(s) if opts.engine.executor().uses_store() => {
+                let mut job = opts.apply(self.sess.job(app)).delta(&s.delta);
+                if let Some(c) = cancel {
+                    job = job.cancel_flag(c);
+                }
+                job.run_report()
+            }
+            Some(s) => {
+                let local =
+                    MiningSession::with_config(&s.materialized, self.sess.config().clone());
+                let mut job = opts.apply(local.job(app));
+                if let Some(c) = cancel {
+                    job = job.cancel_flag(c);
+                }
+                job.run_report()
+            }
+        }
+    }
+
+    /// Apply a batch of undirected edge insertions to the served graph
+    /// and push one [`SubscriptionUpdate`] — exact per-pattern count
+    /// deltas, computed incrementally — to every standing query.
+    ///
+    /// The batch is canonicalised ([`DeltaGraph::ingest`]: self-loops
+    /// and duplicates dropped, out-of-range endpoints reject the whole
+    /// batch atomically) and applied as one overlay generation; the
+    /// versioned fingerprint chains forward, so result-cache lookups
+    /// after this call can never be served a pre-ingest report. Batches
+    /// with nothing net-new still deliver (zero-delta) updates — the
+    /// acknowledgement that subscribers are current. Jobs already
+    /// running keep their generation (their `Arc` snapshot pins it);
+    /// jobs dispatched after `ingest` returns see the new graph.
+    ///
+    /// Concurrent `ingest` callers are serialised by the ingest gate;
+    /// batches apply one at a time, in gate-acquisition order.
+    pub fn ingest(&self, edges: &[(VertexId, VertexId)]) -> Result<IngestReport, IngestError> {
+        // Exclusive ingest section: batches must apply one at a time
+        // (the maintenance below reads the pre-batch overlay). Acquire
+        // pairs with the Release store below, so the winner observes the
+        // previous batch's full effects.
+        while self
+            .ingest_gate
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            std::thread::yield_now();
+        }
+        let out = self.ingest_locked(edges);
+        self.ingest_gate.store(false, Ordering::Release);
+        out
+    }
+
+    /// The ingest body, run under the gate.
+    fn ingest_locked(&self, edges: &[(VertexId, VertexId)]) -> Result<IngestReport, IngestError> {
+        // Pre-batch overlay (cloned out of the lock so maintenance never
+        // holds it): the graph the standing queries' counts are current
+        // through.
+        let old: DeltaGraph = {
+            let mut ev = self.evolving.lock().unwrap();
+            if ev.base.is_none() {
+                ev.base = Some(Arc::new(self.sess.graph().clone()));
+            }
+            match &ev.delta {
+                Some(d) => (**d).clone(),
+                None => DeltaGraph::new(Arc::clone(ev.base.as_ref().unwrap())),
+            }
+        };
+        let mut new = old.clone();
+        let applied = new.ingest(edges).map_err(IngestError::Delta)?;
+        let per_machine: Vec<usize> = self
+            .sess
+            .partitioned()
+            .map
+            .route_edges(&applied.edges)
+            .iter()
+            .map(|m| m.len())
+            .collect();
+        let materialized = Arc::new(new.materialize());
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        // Incremental maintenance per standing query, against the
+        // pre-batch overlay — exact deltas, work proportional to the
+        // batch's frontier, not the graph.
+        let cfg = self.sess.config().clone();
+        let mut ev = self.evolving.lock().unwrap();
+        let mut delivered = 0usize;
+        for sub in ev.subs.iter_mut() {
+            let patterns = sub.app.patterns();
+            let rep = maintain(&old, &applied.edges, &patterns, sub.app.induced(), sub.mode, &cfg);
+            for (c, d) in sub.counts.iter_mut().zip(&rep.deltas) {
+                *c = (*c as i64 + d) as u64;
+            }
+            sub.shared.push(SubscriptionUpdate {
+                subscription: sub.id,
+                epoch,
+                version: applied.version,
+                fingerprint: applied.fingerprint,
+                applied: applied.edges.len(),
+                deltas: rep.deltas,
+                counts: sub.counts.clone(),
+            });
+            delivered += 1;
+        }
+        ev.delta = Some(Arc::new(new));
+        ev.materialized = Some(materialized);
+        ev.fingerprint = applied.fingerprint;
+        drop(ev);
+        {
+            let mut state = self.state.lock().unwrap();
+            state.stats.ingests += 1;
+            state.stats.updates_delivered += delivered as u64;
+        }
+        Ok(IngestReport {
+            epoch,
+            version: applied.version,
+            fingerprint: applied.fingerprint,
+            applied: applied.edges.len(),
+            duplicates: applied.duplicates,
+            self_loops: applied.self_loops,
+            per_machine,
+            subscribers: delivered,
+        })
+    }
+
+    /// Register a standing query: run `app` once for its baseline counts
+    /// over the current graph generation, then deliver one
+    /// [`SubscriptionUpdate`] per applied batch to the returned handle
+    /// until shutdown. Sink- and hook-bearing apps are rejected — a
+    /// standing query's results are per-pattern counts.
+    pub fn subscribe(
+        &self,
+        _client: ClientId,
+        app: Arc<dyn GpmApp + Send + Sync>,
+        opts: SubscribeOptions,
+    ) -> Result<SubscriptionHandle, SubscribeError> {
+        if app.needs_sinks() {
+            return Err(SubscribeError::SinkApp);
+        }
+        if app.hooks().is_some() {
+            return Err(SubscribeError::HookApp);
+        }
+        let job_opts = JobOptions::with_engine(opts.engine);
+        // Registration is atomic with respect to ingest: the baseline
+        // count and the registry insert happen under the evolving lock,
+        // so no batch can land between them (a subscriber never misses
+        // or double-counts a batch).
+        let mut ev = self.evolving.lock().unwrap();
+        let snap = ev.delta.as_ref().map(|d| EvSnapshot {
+            delta: Arc::clone(d),
+            materialized: Arc::clone(ev.materialized.as_ref().expect("materialized tracks delta")),
+            fingerprint: ev.fingerprint,
+        });
+        let report = self.run_fresh(app.as_ref(), &job_opts, snap.as_ref(), None);
+        let counts: Vec<u64> = report.patterns.iter().map(|(s, _)| s.total_count()).collect();
+        let id = ev.next_sub;
+        ev.next_sub += 1;
+        let shared = Arc::new(SubShared {
+            queue: Mutex::new(SubQueue { updates: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        });
+        ev.subs.push(Subscription {
+            id,
+            app,
+            mode: opts.mode,
+            counts: counts.clone(),
+            shared: Arc::clone(&shared),
+        });
+        drop(ev);
+        self.state.lock().unwrap().stats.subscriptions += 1;
+        Ok(SubscriptionHandle { id, initial: counts, shared })
+    }
+
     /// Fair-share dispatch: scan clients round-robin from the cursor,
     /// skip clients at their in-flight cap, pop the first dispatchable
     /// job, and advance the cursor past the chosen client so its next
@@ -636,7 +1135,15 @@ impl<'s, 'g> MiningService<'s, 'g> {
         let mut cached = false;
         let mut ran = false;
         if !sub.shared.cancel.load(Ordering::Acquire) {
-            let job = sub.opts.apply(self.sess.job(sub.app.as_ref()));
+            // Pin the graph generation this job runs against. The cache
+            // key's graph half is the generation's *versioned*
+            // fingerprint, so a post-ingest resubmission always misses
+            // and re-mines over the evolved graph.
+            let snap = self.snapshot();
+            let graph_fp = snap.as_ref().map_or(self.graph_fp, |s| s.fingerprint);
+            // Digest probe: plans and resolved config are independent of
+            // which session the job eventually executes on.
+            let probe = sub.opts.apply(self.sess.job(sub.app.as_ref()));
             // Sink- and hook-bearing jobs produce results outside the
             // report (per-embedding sinks, app-side state), so only pure
             // counting jobs are cacheable.
@@ -644,10 +1151,11 @@ impl<'s, 'g> MiningService<'s, 'g> {
                 && !sub.app.needs_sinks()
                 && sub.app.hooks().is_none())
             .then(|| CacheKey {
-                graph: self.graph_fp,
-                program: program_digest(sub.app.as_ref(), &job),
-                config: config_digest(job.resolved_config()),
+                graph: graph_fp,
+                program: program_digest(sub.app.as_ref(), &probe),
+                config: config_digest(probe.resolved_config()),
             });
+            drop(probe);
             if let Some(k) = key {
                 let mut state = self.state.lock().unwrap();
                 if let Some(r) = state.cache.get(&k) {
@@ -659,7 +1167,12 @@ impl<'s, 'g> MiningService<'s, 'g> {
                 }
             }
             if report.is_none() {
-                let r = job.cancel_flag(&sub.shared.cancel).run_report();
+                let r = self.run_fresh(
+                    sub.app.as_ref(),
+                    &sub.opts,
+                    snap.as_ref(),
+                    Some(&sub.shared.cancel),
+                );
                 ran = true;
                 // A halted run holds partial results — never cache it.
                 if !sub.shared.cancel.load(Ordering::Acquire) {
@@ -974,6 +1487,150 @@ mod tests {
             assert_eq!(r.report.stats.total_count(), 0, "cancelled-before-start is empty");
             let _ = running.wait();
             assert_eq!(svc.stats().cancelled, 1);
+        });
+    }
+
+    /// First `n` vertex pairs absent from `g` — a batch guaranteed to
+    /// apply in full.
+    fn absent_edges(g: &crate::graph::Graph, n: usize) -> Vec<(VertexId, VertexId)> {
+        let mut out = Vec::new();
+        let nv = g.num_vertices() as VertexId;
+        'outer: for u in 0..nv {
+            for v in (u + 1)..nv {
+                if !g.has_edge(u, v) {
+                    out.push((u, v));
+                    if out.len() == n {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert_eq!(out.len(), n, "graph too dense for the requested batch");
+        out
+    }
+
+    #[test]
+    fn ingest_invalidates_cache_and_serves_fresh_counts() {
+        let g = gen::rmat(8, 8, 21);
+        let sess = MiningSession::new(&g, 2);
+        let batch = absent_edges(&g, 6);
+        MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let c = svc.client("evolve");
+            let first = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap().wait();
+            assert!(first.ran && !first.cached);
+            let warm = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap().wait();
+            assert!(warm.cached, "pre-ingest resubmission hits the cache");
+            let before_fp = svc.current_fingerprint();
+            let rep = svc.ingest(&batch).unwrap();
+            assert_eq!(rep.epoch, 1);
+            assert_eq!(rep.applied, batch.len());
+            assert_ne!(rep.fingerprint, before_fp, "applied batch must re-key the cache");
+            assert_eq!(svc.current_fingerprint(), rep.fingerprint);
+            assert_eq!(rep.per_machine.len(), 2);
+            // Post-ingest resubmission: must miss and re-mine.
+            let fresh = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap().wait();
+            assert!(fresh.ran && !fresh.cached, "post-ingest lookup must never serve stale");
+            // …to exactly the from-scratch counts over the evolved graph.
+            let mut dg = DeltaGraph::from_graph(g.clone());
+            dg.ingest(&batch).unwrap();
+            let evolved = dg.materialize();
+            let scratch = MiningSession::new(&evolved, 2).job(&App::Tc).run();
+            assert_eq!(fresh.report.stats.counts, scratch.counts);
+            // The evolved generation is itself cacheable.
+            let again = svc.submit(c, Arc::new(App::Tc), JobOptions::default()).unwrap().wait();
+            assert!(again.cached);
+            assert_eq!(again.report.stats.counts, scratch.counts);
+        });
+    }
+
+    #[test]
+    fn subscriptions_deliver_exact_per_batch_deltas() {
+        let g = gen::erdos_renyi(60, 140, 33);
+        let sess = MiningSession::new(&g, 2);
+        let edges = absent_edges(&g, 9);
+        let sub = MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let c = svc.client("watcher");
+            let sub = svc.subscribe(c, Arc::new(App::Tc), SubscribeOptions::default()).unwrap();
+            let base = sess.job(&App::Tc).run();
+            assert_eq!(sub.initial_counts(), &[base.total_count()]);
+            let mut dg = DeltaGraph::from_graph(g.clone());
+            let mut running = base.total_count() as i64;
+            for (i, batch) in edges.chunks(3).enumerate() {
+                let rep = svc.ingest(batch).unwrap();
+                let upd = sub.next().expect("one update per applied batch");
+                assert_eq!(upd.epoch, i as u64 + 1);
+                assert_eq!(upd.fingerprint, rep.fingerprint);
+                assert_eq!(upd.applied, batch.len());
+                dg.ingest(batch).unwrap();
+                let evolved = dg.materialize();
+                let scratch = MiningSession::new(&evolved, 2).job(&App::Tc).run();
+                running += upd.deltas[0];
+                assert_eq!(upd.counts, vec![running as u64], "totals fold the deltas");
+                assert_eq!(upd.counts, vec![scratch.total_count()], "incremental == scratch");
+            }
+            assert!(sub.try_next().is_none(), "exactly one update per batch");
+            assert_eq!(svc.stats().ingests, 3);
+            assert_eq!(svc.stats().updates_delivered, 3);
+            sub
+        });
+        // serve returned: the subscription is closed and drains to None.
+        assert!(sub.next().is_none());
+    }
+
+    /// Minimal sink-bearing app (the default `unit_sink` suffices).
+    struct SinkyApp;
+
+    impl GpmApp for SinkyApp {
+        fn name(&self) -> String {
+            "sinky".into()
+        }
+
+        fn patterns(&self) -> Vec<Pattern> {
+            vec![Pattern::triangle()]
+        }
+
+        fn induced(&self) -> Induced {
+            Induced::Edge
+        }
+
+        fn needs_sinks(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn subscribe_rejects_sink_and_hook_apps() {
+        let g = gen::rmat(6, 6, 3);
+        let sess = MiningSession::new(&g, 2);
+        MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let c = svc.client("rejectee");
+            assert_eq!(
+                svc.subscribe(c, Arc::new(SinkyApp), SubscribeOptions::default()).err(),
+                Some(SubscribeError::SinkApp)
+            );
+            let gate =
+                Arc::new(GateApp { started: AtomicBool::new(false), go: AtomicBool::new(false) });
+            assert_eq!(
+                svc.subscribe(c, gate, SubscribeOptions::default()).err(),
+                Some(SubscribeError::HookApp)
+            );
+        });
+    }
+
+    #[test]
+    fn rejected_ingest_changes_nothing() {
+        let g = gen::rmat(7, 6, 5);
+        let sess = MiningSession::new(&g, 2);
+        let n = g.num_vertices() as VertexId;
+        MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+            let c = svc.client("oops");
+            let sub = svc.subscribe(c, Arc::new(App::Tc), SubscribeOptions::default()).unwrap();
+            let fp = svc.current_fingerprint();
+            let err = svc.ingest(&[(0, 1), (2, n)]).unwrap_err();
+            assert!(matches!(err, IngestError::Delta(_)));
+            assert_eq!(svc.current_fingerprint(), fp, "rejected batch is atomic");
+            assert_eq!(svc.epoch(), 0);
+            assert!(sub.try_next().is_none(), "no update for a rejected batch");
         });
     }
 

@@ -51,6 +51,7 @@
 use crate::baselines::{GThinker, MovingComputation, Replicated, SingleMachine};
 use crate::cluster::Transport;
 use crate::config::{RunConfig, StorageTier};
+use crate::delta::DeltaGraph;
 use crate::engine::sink::{AppSink, BoxSink, CountSink, EmbeddingSink};
 use crate::engine::KuduEngine;
 use crate::graph::{CompactGraph, Graph, GraphStore, VertexId};
@@ -223,6 +224,16 @@ pub trait Executor: Send + Sync {
         false
     }
 
+    /// Whether the executor reads adjacency through [`ProgramCtx::store`]
+    /// (the tier seam) rather than [`ProgramCtx::graph`] directly. The
+    /// baselines predate the seam and interpret plans over the `Vec`-CSR
+    /// graph — fine for the static tiers (both views agree), but a
+    /// [`Job::delta`] overlay exists *only* behind the seam, so delta
+    /// jobs require a store-reading executor.
+    fn uses_store(&self) -> bool {
+        false
+    }
+
     /// Mine every pattern of the program, feeding each embedding through
     /// per-unit sinks from `make_sink(pattern_idx, machine)`. Outcomes
     /// carry the finished sinks in unit order and `counts` = sum of sink
@@ -343,6 +354,10 @@ impl Executor for KuduExec {
     }
 
     fn supports_hooks(&self) -> bool {
+        true
+    }
+
+    fn uses_store(&self) -> bool {
         true
     }
 
@@ -532,6 +547,7 @@ impl<'g> MiningSession<'g> {
             cfg: self.cfg.clone(),
             fused: true,
             cancel: None,
+            delta: None,
         }
     }
 }
@@ -560,6 +576,7 @@ pub struct Job<'a, 'g> {
     cfg: RunConfig,
     fused: bool,
     cancel: Option<&'a AtomicBool>,
+    delta: Option<&'a DeltaGraph>,
 }
 
 impl<'a, 'g> Job<'a, 'g> {
@@ -649,6 +666,22 @@ impl<'a, 'g> Job<'a, 'g> {
     /// environment force-disables the compact tier regardless.
     pub fn storage(mut self, tier: StorageTier) -> Self {
         self.cfg.engine.storage = tier;
+        self
+    }
+
+    /// Mine over an evolving-graph overlay ([`crate::delta::DeltaGraph`])
+    /// instead of the session's static graph. The overlay's base must be
+    /// the session graph (same vertex set — ingest never adds vertices),
+    /// so the session's partition-once ownership map and owned-root lists
+    /// apply unchanged. The delta tier takes precedence over
+    /// [`Job::storage`]: the overlay *is* the storage tier for this job,
+    /// and the report is bitwise identical to running the same job over
+    /// [`crate::delta::DeltaGraph::materialize`] — pinned by
+    /// `tests/delta_equivalence.rs`. Requires a store-reading executor
+    /// ([`Executor::uses_store`]); the baselines read the static CSR
+    /// directly and would silently miss overlay edges.
+    pub fn delta(mut self, delta: &'a DeltaGraph) -> Self {
+        self.delta = Some(delta);
         self
     }
 
@@ -846,14 +879,31 @@ impl<'a, 'g> Job<'a, 'g> {
         let plans = self.compiled_plans();
         // Resolve the storage tier once per job: a compact-tier job
         // compresses the session graph here (job-local, built once) and
-        // every program execution of the job reads through it.
-        let compact: Option<CompactGraph> = match self.cfg.engine.storage.resolve() {
-            StorageTier::Compact => Some(CompactGraph::from_graph(self.sess.graph)),
-            StorageTier::Csr => None,
+        // every program execution of the job reads through it. A delta
+        // overlay takes precedence over the static tiers — the overlay
+        // *is* this job's graph, and compressing the stale base instead
+        // would silently drop the ingested edges.
+        let compact: Option<CompactGraph> = match (self.delta, self.cfg.engine.storage.resolve()) {
+            (None, StorageTier::Compact) => Some(CompactGraph::from_graph(self.sess.graph)),
+            _ => None,
         };
-        let store = match &compact {
-            Some(c) => GraphStore::Compact(c),
-            None => GraphStore::Csr(self.sess.graph),
+        let store = match (self.delta, &compact) {
+            (Some(d), _) => {
+                assert!(
+                    self.exec.uses_store(),
+                    "job mines a delta overlay but executor '{}' reads the static CSR \
+                     directly and would miss the ingested edges",
+                    self.exec.name()
+                );
+                assert!(
+                    d.num_vertices() == self.sess.graph.num_vertices(),
+                    "delta overlay vertex set must match the session graph \
+                     (the session's partitioning and root lists are reused)"
+                );
+                GraphStore::Delta(d)
+            }
+            (None, Some(c)) => GraphStore::Compact(c),
+            (None, None) => GraphStore::Csr(self.sess.graph),
         };
         let outcome = if self.fused {
             let idx_map: Vec<usize> = (0..plans.len()).collect();

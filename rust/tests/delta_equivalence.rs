@@ -1,0 +1,339 @@
+//! Equivalence suite for the evolving-graph delta layer.
+//!
+//! The contract under test: mining an evolved graph **incrementally** —
+//! through a [`DeltaGraph`] overlay (`GraphStore::Delta`) or through
+//! per-batch maintenance deltas ([`kudu::delta::maintain`]) — reports
+//! results **bitwise identical** to mining the materialised final graph
+//! from scratch. Counts, traffic matrices, and virtual time; across
+//! machine counts {1, 2, 4, 8}, both planners, both maintenance modes,
+//! sink apps, compaction mid-stream, and every engine a standing query
+//! can baseline on. Plus the serving-layer half: post-ingest cache
+//! lookups can never serve a pre-ingest report.
+
+// Full-cluster sweeps — far too slow under Miri.
+#![cfg(not(miri))]
+
+use kudu::delta::maintain::MaintainMode;
+use kudu::delta::DeltaGraph;
+use kudu::graph::{gen, Graph};
+use kudu::metrics::RunStats;
+use kudu::pattern::brute::Induced;
+use kudu::pattern::Pattern;
+use kudu::plan::ClientSystem;
+use kudu::service::{JobOptions, MiningService, ServiceConfig, SubscribeOptions};
+use kudu::session::{JobReport, LabeledQuery, MiningSession};
+use kudu::workloads::{App, EngineKind};
+use kudu::VertexId;
+use std::sync::Arc;
+
+fn assert_bitwise_eq(a: &RunStats, b: &RunStats, what: &str) {
+    assert_eq!(a.counts, b.counts, "{what}: counts");
+    assert_eq!(a.work_units, b.work_units, "{what}: work_units");
+    assert_eq!(a.embeddings_created, b.embeddings_created, "{what}: embeddings");
+    assert_eq!(a.network_bytes, b.network_bytes, "{what}: bytes");
+    assert_eq!(a.network_messages, b.network_messages, "{what}: messages");
+    assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits(), "{what}: virtual time");
+    assert_eq!(a.exposed_comm_s.to_bits(), b.exposed_comm_s.to_bits(), "{what}: exposed comm");
+    assert_eq!(a.peak_embedding_bytes, b.peak_embedding_bytes, "{what}: peak bytes");
+    assert_eq!(a.numa_remote_accesses, b.numa_remote_accesses, "{what}: numa");
+    assert_eq!(a.cache_hits, b.cache_hits, "{what}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{what}: cache misses");
+}
+
+fn assert_report_eq(a: &JobReport, b: &JobReport, what: &str) {
+    assert_bitwise_eq(&a.stats, &b.stats, what);
+    assert_eq!(a.patterns.len(), b.patterns.len(), "{what}: pattern count");
+    for (i, ((sa, ta), (sb, tb))) in a.patterns.iter().zip(&b.patterns).enumerate() {
+        assert_bitwise_eq(sa, sb, &format!("{what}: pattern {i}"));
+        assert_eq!(ta, tb, "{what}: pattern {i} traffic");
+    }
+    assert_eq!(
+        a.program.root_scans, b.program.root_scans,
+        "{what}: program root scans"
+    );
+}
+
+/// First `n` vertex pairs absent from `g`, offset so successive calls
+/// with different `skip`s produce disjoint batches.
+fn absent_edges(g: &Graph, skip: usize, n: usize) -> Vec<(VertexId, VertexId)> {
+    let mut out = Vec::new();
+    let mut seen = 0usize;
+    let nv = g.num_vertices() as VertexId;
+    'outer: for u in 0..nv {
+        for v in (u + 1)..nv {
+            if !g.has_edge(u, v) {
+                seen += 1;
+                if seen > skip {
+                    out.push((u, v));
+                    if out.len() == n {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(out.len(), n, "graph too dense for the requested batch");
+    out
+}
+
+fn test_graph() -> Graph {
+    let base = gen::rmat(9, 8, 1203);
+    let labels: Vec<u8> = (0..base.num_vertices()).map(|v| (v % 3) as u8 + 1).collect();
+    base.with_labels(labels)
+}
+
+const MACHINES: &[usize] = &[1, 2, 4, 8];
+
+/// A `GraphStore::Delta` job over the base session is bitwise identical
+/// to the same job over the materialised final graph, across machine
+/// counts, planners, and counting apps.
+#[test]
+fn delta_overlay_job_bitwise_equals_materialized_job() {
+    let g = test_graph();
+    let mut dg = DeltaGraph::from_graph(g.clone());
+    for skip in [0, 40, 80] {
+        dg.ingest(&absent_edges(&g, skip, 40)).unwrap();
+    }
+    let evolved = dg.materialize();
+    for &m in MACHINES {
+        let sess = MiningSession::new(&g, m);
+        let esess = MiningSession::new(&evolved, m);
+        for client in [ClientSystem::GraphPi, ClientSystem::Automine] {
+            for app in [App::Tc, App::Mc(3), App::Cc(4)] {
+                let what = format!("{app:?} @ {client:?} m={m}");
+                let overlay = sess.job(&app).client(client).delta(&dg).run_report();
+                let scratch = esess.job(&app).client(client).run_report();
+                assert_report_eq(&overlay, &scratch, &what);
+            }
+        }
+    }
+}
+
+/// Per-embedding sink apps run over the overlay too: a labelled MNI
+/// query over `GraphStore::Delta` reports the same embeddings, supports,
+/// and keep decisions as over the materialised graph.
+#[test]
+fn sink_app_over_overlay_matches_materialized() {
+    let g = test_graph();
+    let mut dg = DeltaGraph::from_graph(g.clone());
+    dg.ingest(&absent_edges(&g, 0, 60)).unwrap();
+    let evolved = dg.materialize();
+    let patterns = vec![
+        Pattern::triangle().with_labels(&[1, 2, 3]),
+        Pattern::chain(3).with_labels(&[2, 1, 2]),
+    ];
+    let sess = MiningSession::new(&g, 4);
+    let esess = MiningSession::new(&evolved, 4);
+    let over_app = LabeledQuery::new(patterns.clone(), Induced::Edge, 1);
+    let over = sess.job(&over_app).delta(&dg).run_report();
+    let scratch_app = LabeledQuery::new(patterns, Induced::Edge, 1);
+    let scratch = esess.job(&scratch_app).run_report();
+    assert_report_eq(&over, &scratch, "labelled MNI query over overlay");
+    let (a, b) = (over_app.results(), scratch_app.results());
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.pattern_idx, rb.pattern_idx);
+        assert_eq!(ra.embeddings, rb.embeddings, "pattern {} embeddings", ra.pattern_idx);
+        assert_eq!(ra.support, rb.support, "pattern {} support", ra.pattern_idx);
+        assert_eq!(ra.kept, rb.kept, "pattern {} keep decision", ra.pattern_idx);
+    }
+}
+
+/// Baseline executors cannot read the overlay seam: a delta job on a
+/// baseline must fail loudly instead of silently mining the stale base.
+#[test]
+#[should_panic(expected = "delta overlay")]
+fn delta_job_on_a_baseline_executor_panics() {
+    let g = gen::rmat(7, 6, 5);
+    let mut dg = DeltaGraph::from_graph(g.clone());
+    dg.ingest(&absent_edges(&g, 0, 4)).unwrap();
+    let sess = MiningSession::new(&g, 2);
+    let _ = sess
+        .job(&App::Tc)
+        .executor(EngineKind::GThinker.executor())
+        .delta(&dg)
+        .run_report();
+}
+
+/// Standing queries stay exact through a multi-batch insertion stream,
+/// for both maintenance modes and across machine counts — and the two
+/// modes deliver bitwise-identical update streams.
+#[test]
+fn subscription_counts_equal_scratch_for_both_modes_and_all_machine_counts() {
+    let g = test_graph();
+    let batches: Vec<Vec<(VertexId, VertexId)>> =
+        [0usize, 25, 50].iter().map(|&s| absent_edges(&g, s, 25)).collect();
+    // Scratch truth per prefix of the stream.
+    let mut scratch_counts: Vec<Vec<u64>> = Vec::new();
+    {
+        let mut dg = DeltaGraph::from_graph(g.clone());
+        for b in &batches {
+            dg.ingest(b).unwrap();
+            let evolved = dg.materialize();
+            let sess = MiningSession::new(&evolved, 4);
+            let rep = sess.job(&App::Mc(3)).run_report();
+            scratch_counts.push(rep.patterns.iter().map(|(s, _)| s.total_count()).collect());
+        }
+    }
+    for &m in MACHINES {
+        let mut streams: Vec<Vec<Vec<u64>>> = Vec::new();
+        for mode in [MaintainMode::Anchored, MaintainMode::Frontier] {
+            let sess = MiningSession::new(&g, m);
+            let stream = MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+                let c = svc.client("w");
+                let sub = svc
+                    .subscribe(c, Arc::new(App::Mc(3)), SubscribeOptions { mode, ..Default::default() })
+                    .unwrap();
+                let mut out = Vec::new();
+                for b in &batches {
+                    svc.ingest(b).unwrap();
+                    out.push(sub.next().expect("one update per batch").counts);
+                }
+                out
+            });
+            assert_eq!(
+                stream, scratch_counts,
+                "incremental != scratch for {mode:?} at m={m}"
+            );
+            streams.push(stream);
+        }
+        assert_eq!(streams[0], streams[1], "modes disagree at m={m}");
+    }
+}
+
+/// Standing queries baseline on any engine: all six executors subscribe
+/// to the same stream and every update stream is identical — including a
+/// subscriber registered mid-stream (its baseline runs over the evolved
+/// graph, through a materialised local session for the baselines).
+#[test]
+fn subscriptions_across_all_engines_agree() {
+    let g = test_graph();
+    let engines: Vec<(&str, EngineKind)> = vec![
+        ("k-graphpi", EngineKind::Kudu(ClientSystem::GraphPi)),
+        ("k-automine", EngineKind::Kudu(ClientSystem::Automine)),
+        ("gthinker", EngineKind::GThinker),
+        ("movingcomp", EngineKind::MovingComp),
+        ("replicated", EngineKind::Replicated),
+        ("single", EngineKind::SingleMachine),
+    ];
+    let b1 = absent_edges(&g, 0, 30);
+    let b2 = absent_edges(&g, 30, 30);
+    let sess = MiningSession::new(&g, 4);
+    MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+        let c = svc.client("engines");
+        let subs: Vec<_> = engines
+            .iter()
+            .map(|(_, e)| {
+                svc.subscribe(
+                    c,
+                    Arc::new(App::Tc),
+                    SubscribeOptions { engine: *e, ..Default::default() },
+                )
+                .unwrap()
+            })
+            .collect();
+        let first = subs[0].initial_counts().to_vec();
+        for ((name, _), sub) in engines.iter().zip(&subs) {
+            assert_eq!(sub.initial_counts(), &first[..], "{name}: initial counts");
+        }
+        svc.ingest(&b1).unwrap();
+        let updates: Vec<_> = subs.iter().map(|s| s.next().unwrap()).collect();
+        for ((name, _), u) in engines.iter().zip(&updates) {
+            assert_eq!(u.deltas, updates[0].deltas, "{name}: deltas");
+            assert_eq!(u.counts, updates[0].counts, "{name}: counts");
+        }
+        // Mid-stream subscriber: every engine's baseline over the
+        // *evolved* graph must agree with the running totals.
+        for (name, e) in &engines {
+            let late = svc
+                .subscribe(
+                    c,
+                    Arc::new(App::Tc),
+                    SubscribeOptions { engine: *e, ..Default::default() },
+                )
+                .unwrap();
+            assert_eq!(
+                late.initial_counts(),
+                &updates[0].counts[..],
+                "{name}: mid-stream baseline must see the evolved graph"
+            );
+        }
+        svc.ingest(&b2).unwrap();
+        let again: Vec<_> = subs.iter().map(|s| s.next().unwrap()).collect();
+        for ((name, _), u) in engines.iter().zip(&again) {
+            assert_eq!(u.counts, again[0].counts, "{name}: counts after batch 2");
+        }
+    });
+}
+
+/// Compacting the overlay mid-stream — merging the insertion buffers
+/// into a fresh base CSR — changes no observable: fingerprints keep
+/// chaining identically, jobs report bitwise-identical results, and
+/// subsequent batches land identically.
+#[test]
+fn compaction_mid_stream_is_invisible() {
+    let g = test_graph();
+    let b1 = absent_edges(&g, 0, 40);
+    let b2 = absent_edges(&g, 40, 40);
+    let mut plain = DeltaGraph::from_graph(g.clone());
+    plain.ingest(&b1).unwrap();
+    let mut compacted = plain.compacted();
+    assert_eq!(compacted.fingerprint(), plain.fingerprint(), "compaction preserves identity");
+    assert_eq!(compacted.version(), plain.version());
+    assert_eq!(compacted.overlay_arcs(), 0, "compaction empties the overlay");
+    plain.ingest(&b2).unwrap();
+    compacted.ingest(&b2).unwrap();
+    assert_eq!(compacted.fingerprint(), plain.fingerprint(), "chains continue identically");
+    let sess = MiningSession::new(&g, 4);
+    for app in [App::Tc, App::Mc(3)] {
+        let what = format!("{app:?} plain-vs-compacted");
+        let a = sess.job(&app).delta(&plain).run_report();
+        let b = sess.job(&app).delta(&compacted).run_report();
+        assert_report_eq(&a, &b, &what);
+    }
+}
+
+/// The serving-layer acceptance bit: once a batch lands, a resubmission
+/// of a pre-ingest query must re-mine (the versioned fingerprint re-keys
+/// the cache) and report the evolved graph's counts — for the Kudu
+/// engine (overlay path) and the baselines (materialised path) alike.
+#[test]
+fn post_ingest_resubmission_never_serves_stale_counts() {
+    let g = test_graph();
+    let batch = absent_edges(&g, 0, 50);
+    let mut dg = DeltaGraph::from_graph(g.clone());
+    dg.ingest(&batch).unwrap();
+    let evolved = dg.materialize();
+    let esess = MiningSession::new(&evolved, 4);
+    let engines: Vec<EngineKind> = vec![
+        EngineKind::Kudu(ClientSystem::GraphPi),
+        EngineKind::GThinker,
+        EngineKind::SingleMachine,
+    ];
+    let sess = MiningSession::new(&g, 4);
+    MiningService::serve(&sess, ServiceConfig::default(), |svc| {
+        let c = svc.client("resubmit");
+        let before: Vec<_> = engines
+            .iter()
+            .map(|&e| svc.submit(c, Arc::new(App::Tc), JobOptions::with_engine(e)).unwrap().wait())
+            .collect();
+        // Warm the cache, then ingest.
+        for &e in &engines {
+            let warm =
+                svc.submit(c, Arc::new(App::Tc), JobOptions::with_engine(e)).unwrap().wait();
+            assert!(warm.cached, "pre-ingest resubmission hits the cache");
+        }
+        svc.ingest(&batch).unwrap();
+        for (&e, pre) in engines.iter().zip(&before) {
+            let scratch = esess.job(&App::Tc).executor(e.executor()).run_report();
+            let post =
+                svc.submit(c, Arc::new(App::Tc), JobOptions::with_engine(e)).unwrap().wait();
+            assert!(post.ran && !post.cached, "{e:?}: post-ingest lookup served stale cache");
+            assert_eq!(
+                post.report.stats.counts, scratch.stats.counts,
+                "{e:?}: post-ingest counts must match the evolved graph"
+            );
+            assert_eq!(pre.report.stats.counts.len(), post.report.stats.counts.len());
+        }
+    });
+}

@@ -577,6 +577,96 @@ fn prop_relabeling_preserves_counts() {
     }
 }
 
+/// Property (delta layer): incremental maintenance over randomized
+/// insertion sweeps equals from-scratch counting, bitwise. Raw batches
+/// mix fresh edges, already-present edges, in-batch duplicates, and
+/// self-loops; batch sizes vary; both maintenance modes run under
+/// machine counts {1, 2, 4, 8} and must produce identical deltas; the
+/// folded running totals must equal the brute-force oracle over the
+/// materialised graph after every batch. The overlay store itself is
+/// checked the same way: a `GraphStore::Delta` job reports bitwise the
+/// counts of a from-scratch job over the materialised graph at every
+/// machine count.
+#[test]
+fn prop_incremental_equals_scratch() {
+    use kudu::config::RunConfig;
+    use kudu::delta::maintain::{maintain, MaintainMode};
+    use kudu::delta::DeltaGraph;
+    use kudu::session::MiningSession;
+    use kudu::workloads::App;
+
+    let mut rng = Rng::new(0xDE17A);
+    let patterns = vec![Pattern::triangle(), Pattern::chain(3), Pattern::clique(4)];
+    for round in 0..5 {
+        let n = 18 + rng.below(22) as usize;
+        let m = n + rng.below(3 * n as u64) as usize;
+        let g = gen::erdos_renyi(n, m, rng.next_u64());
+        let induced = if rng.below(2) == 0 { Induced::Edge } else { Induced::Vertex };
+        let mut dg = DeltaGraph::from_graph(g.clone());
+        let mut running: Vec<i64> =
+            patterns.iter().map(|p| count_embeddings(&g, p, induced) as i64).collect();
+        let sweeps = 2 + rng.below(3);
+        for batch_no in 0..sweeps {
+            // Raw batch: random endpoints, so self-loops, edges already in
+            // the (evolving) graph, and repeated pairs all occur; plus a
+            // verbatim in-batch duplicate every other batch.
+            let len = 1 + rng.below(10) as usize;
+            let mut edges: Vec<(u32, u32)> = (0..len)
+                .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+                .collect();
+            if rng.below(2) == 0 {
+                edges.push(edges[0]);
+            }
+            let old = dg.clone();
+            let applied = dg.ingest(&edges).expect("in-range batch");
+            let what = format!("round {round} batch {batch_no} ({induced:?})");
+            let mut deltas: Option<Vec<i64>> = None;
+            for machines in [1usize, 2, 4, 8] {
+                let cfg = RunConfig::with_machines(machines);
+                for mode in [MaintainMode::Anchored, MaintainMode::Frontier] {
+                    let rep = maintain(&old, &applied.edges, &patterns, induced, mode, &cfg);
+                    if deltas.is_none() {
+                        deltas = Some(rep.deltas);
+                    } else {
+                        assert_eq!(
+                            deltas.as_ref(),
+                            Some(&rep.deltas),
+                            "{what}: {mode:?} at m={machines} disagrees"
+                        );
+                    }
+                }
+            }
+            for (r, d) in running.iter_mut().zip(deltas.expect("at least one mode ran")) {
+                *r += d;
+            }
+            let evolved = dg.materialize();
+            let scratch: Vec<i64> =
+                patterns.iter().map(|p| count_embeddings(&evolved, p, induced) as i64).collect();
+            assert_eq!(running, scratch, "{what}: incremental != scratch");
+        }
+        // The overlay store end-to-end: delta job == materialised job,
+        // bitwise, at every machine count.
+        let evolved = dg.materialize();
+        for machines in [1usize, 2, 4, 8] {
+            let sess = MiningSession::new(&g, machines);
+            let esess = MiningSession::new(&evolved, machines);
+            for app in [App::Tc, App::Mc(3)] {
+                let a = sess.job(&app).delta(&dg).run_report();
+                let b = esess.job(&app).run_report();
+                assert_eq!(
+                    a.stats.counts, b.stats.counts,
+                    "round {round} m={machines} {app:?}: overlay != scratch"
+                );
+                assert_eq!(
+                    a.stats.virtual_time_s.to_bits(),
+                    b.stats.virtual_time_s.to_bits(),
+                    "round {round} m={machines} {app:?}: virtual time"
+                );
+            }
+        }
+    }
+}
+
 /// Property: peak chunk memory is monotone (weakly) in chunk capacity.
 #[test]
 fn prop_memory_bounded_by_capacity() {

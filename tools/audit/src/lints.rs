@@ -35,7 +35,7 @@ impl fmt::Display for Violation {
 
 /// Modules where iteration order and atomic protocols are part of the
 /// bitwise determinism contract (virtual time + results accounting).
-const ACCOUNTED: &[&str] = &["engine/", "comm/", "exec/", "plan/", "baselines/"];
+const ACCOUNTED: &[&str] = &["engine/", "comm/", "exec/", "plan/", "baselines/", "delta/"];
 
 /// Files whose wall-clock reads feed registered diagnostics. Everything
 /// else in the tree is virtual-time-pure by contract.
